@@ -1,0 +1,64 @@
+"""Figure 9 reproduction: compression factor / insert / random access / training
+across compressors on the TPC-C-like tables (§6.1 setting, CPU-scaled sizes)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.oltp import tpcc
+from repro.oltp.store import BlitzStore, RamanStore, UncompressedStore, ZstdStore
+
+
+def run(n_rows: int = 6000, n_access: int = 1500, zipf_a: float = 1.1,
+        correlation: bool = False) -> List[Dict]:
+    out = []
+    for tname, (schema, gen) in tpcc.TABLES.items():
+        rows = gen(n_rows)
+        raw = tpcc.row_bytes(rows)
+        rng = np.random.default_rng(7)
+        # YCSB-C style Zipfian point reads
+        ranks = (rng.zipf(zipf_a, size=4 * n_access) - 1)
+        ranks = ranks[ranks < n_rows][:n_access].astype(int)
+        for cls in (UncompressedStore, ZstdStore, RamanStore, BlitzStore):
+            kw = {}
+            if cls is BlitzStore:
+                kw["correlation"] = correlation
+            t0 = time.perf_counter()
+            store = cls(schema, rows[:n_rows // 2], **kw)
+            t_train = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            for r in rows:
+                store.insert(r)
+            t_insert = (time.perf_counter() - t0) / n_rows
+            t0 = time.perf_counter()
+            for i in ranks:
+                store.get(int(i))
+            t_access = (time.perf_counter() - t0) / len(ranks)
+            factor = raw / max(store.nbytes, 1)
+            out.append({
+                "table": tname, "compressor": store.name,
+                "factor": round(factor, 2),
+                "insert_us": round(1e6 * t_insert, 1),
+                "access_us": round(1e6 * t_access, 1),
+                "train_s": round(t_train, 3),
+                "model_bytes": getattr(store, "model_bytes", 0),
+            })
+    return out
+
+
+def main(quick: bool = True):
+    rows = run(n_rows=3000 if quick else 20000,
+               n_access=600 if quick else 5000)
+    for r in rows:
+        print(f"fig9_{r['table']}_{r['compressor']},"
+              f"{r['access_us']},factor={r['factor']}"
+              f";insert_us={r['insert_us']};train_s={r['train_s']}"
+              f";model_B={r['model_bytes']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

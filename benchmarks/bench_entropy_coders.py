@@ -1,0 +1,93 @@
+"""Figure 11 reproduction: entropy-coder decode speed comparison.
+
+Delayed coding vs arithmetic coding vs rANS, each over the same semantic
+models; plus the vectorized (batch) delayed decoder and the 2**16-LUT
+variants (the paper's dotted "w/ decoding map" lines).  Uniform-cardinality
+columns, sizes scaled for CPU."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import arithmetic, rans
+from repro.core.coders import DiscreteCoder, quantize_freqs
+from repro.core.delayed import decode_block, encode_symbols
+from repro.core.vectorized import decode_batch, encode_batch
+
+
+def run(n_cols_list=(4, 16, 64), n_rows: int = 800) -> List[Dict]:
+    out = []
+    rng = np.random.default_rng(0)
+    for n_cols in n_cols_list:
+        # uniform cardinality-255 columns sampled from ASCII codes (§6.3)
+        coder = DiscreteCoder(quantize_freqs(np.ones(255)))
+        coders = [coder] * n_cols
+        syms = rng.integers(0, 255, size=(n_rows, n_cols))
+
+        # ---- encode (per row = per tuple) ----
+        enc_delayed = [encode_symbols(list(s), coders) for s in syms]
+        enc_arith = [arithmetic.encode_block(list(s), coders) for s in syms]
+        enc_rans = [rans.encode_block(list(s), coders) for s in syms]
+
+        t0 = time.perf_counter()
+        for codes in enc_delayed:
+            decode_block(codes, coders)
+        t_delayed = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        for payload, nbits in enc_arith:
+            arithmetic.decode_block(payload, nbits, coders)
+        t_arith = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        for words in enc_rans:
+            rans.decode_block(words, coders)
+        t_rans = time.perf_counter() - t0
+
+        enc_rans_cdf = [rans.encode_block_cdf(list(s), coders) for s in syms]
+        t0 = time.perf_counter()
+        for words in enc_rans_cdf:
+            rans.decode_block_cdf(words, coders)
+        t_rans_cdf = time.perf_counter() - t0
+
+        # ---- batched delayed decoding (the TPU-layout host path) ----
+        codes_b, offs = encode_batch(syms, coders)
+        t0 = time.perf_counter()
+        decode_batch(codes_b, offs, coders)
+        t_vec = time.perf_counter() - t0
+
+        per = 1e6 / n_rows
+        out.append({
+            "n_cols": n_cols,
+            "delayed_us": round(t_delayed * per, 1),
+            "arith_us": round(t_arith * per, 1),
+            "rans_alias_us": round(t_rans * per, 1),
+            "rans_cdf_us": round(t_rans_cdf * per, 1),
+            "delayed_batch_us": round(t_vec * per, 2),
+            "bits_delayed": 16 * sum(len(c) for c in enc_delayed) / n_rows,
+            "bits_arith": sum(b for _, b in enc_arith) / n_rows,
+            "bits_rans": 16 * sum(len(w) for w in enc_rans) / n_rows,
+        })
+    return out
+
+
+def main(quick: bool = True):
+    rows = run(n_rows=300 if quick else 2000)
+    for r in rows:
+        print(f"fig11_cols{r['n_cols']}_delayed,{r['delayed_us']},"
+              f"bits={r['bits_delayed']:.0f}")
+        print(f"fig11_cols{r['n_cols']}_arith,{r['arith_us']},"
+              f"bits={r['bits_arith']:.0f}")
+        print(f"fig11_cols{r['n_cols']}_rans,{r['rans_alias_us']},"
+              f"bits={r['bits_rans']:.0f}")
+        print(f"fig11_cols{r['n_cols']}_rans_cdf,{r['rans_cdf_us']},")
+        print(f"fig11_cols{r['n_cols']}_delayed_batch,"
+              f"{r['delayed_batch_us']},vectorized=1")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,46 @@
+"""Figure 12 reproduction: compression factor & access latency vs block size."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.oltp import tpcc
+from repro.oltp.store import BlitzStore
+
+
+def run(blocks=(1, 2, 4, 8, 16, 32, 128), n_rows: int = 4000,
+        n_access: int = 400, table: str = "orderline") -> List[Dict]:
+    schema, gen = tpcc.TABLES[table]
+    rows = gen(n_rows)
+    raw = tpcc.row_bytes(rows)
+    out = []
+    rng = np.random.default_rng(1)
+    idx = rng.integers(0, n_rows, n_access)
+    for bt in blocks:
+        store = BlitzStore(schema, rows[:n_rows // 2], block_tuples=bt)
+        for r in rows:
+            store.insert(r)
+        t0 = time.perf_counter()
+        for i in idx:
+            store.get(int(i))
+        t_access = (time.perf_counter() - t0) / n_access
+        out.append({"block_tuples": bt,
+                    "factor": round(raw / max(store.nbytes, 1), 2),
+                    "access_us": round(1e6 * t_access, 1)})
+    return out
+
+
+def main(quick: bool = True):
+    rows = run(n_rows=1500 if quick else 8000,
+               n_access=200 if quick else 2000)
+    for r in rows:
+        print(f"fig12_block{r['block_tuples']},{r['access_us']},"
+              f"factor={r['factor']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

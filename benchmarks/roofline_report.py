@@ -1,0 +1,83 @@
+"""Roofline report generator: renders EXPERIMENTS.md §Dry-run/§Roofline tables
+from the dry-run artifacts in results/dryrun/."""
+
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+
+def load(results_dir: str = "results/dryrun") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(f"{results_dir}/*.json")):
+        recs.append(json.loads(pathlib.Path(f).read_text()))
+    return recs
+
+
+def table(recs: List[Dict], mesh: str = "pod16x16",
+          layout_suffix: str = "") -> str:
+    lines = [
+        "| arch | shape | bottleneck | t_comp (s) | t_mem (s) | t_coll (s) "
+        "| useful FLOPs | HBM GB/dev | wire GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        cell = r["cell"]
+        parts = cell.split("__")
+        if parts[2] != mesh:
+            continue
+        if (len(parts) > 3) != bool(layout_suffix):
+            continue
+        if layout_suffix and parts[3] != layout_suffix:
+            continue
+        rf = r["roofline"]
+        mem_gb = (r["memory"].get("temp_size_in_bytes", 0)
+                  + r["memory"].get("argument_size_in_bytes", 0)) / 1e9
+        lines.append(
+            f"| {rf['arch']} | {rf['shape']} | **{rf['bottleneck']}** "
+            f"| {rf['t_compute']:.3f} | {rf['t_memory']:.3f} "
+            f"| {rf['t_collective']:.3f} | {rf['useful_flops_frac']:.2f} "
+            f"| {mem_gb:.1f} | {rf['wire_gbytes_per_chip']:.1f} |")
+    return "\n".join(lines)
+
+
+def skips(recs: List[Dict]) -> str:
+    lines = []
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"- `{r['cell']}`: {r['reason']}")
+    return "\n".join(sorted(set(lines)))
+
+
+def summary(recs: List[Dict]) -> Dict[str, int]:
+    out = {"ok": 0, "skipped": 0, "error": 0}
+    for r in recs:
+        out[r.get("status", "error")] = out.get(r.get("status", "error"), 0) + 1
+    return out
+
+
+def main(quick: bool = True):
+    recs = load()
+    s = summary(recs)
+    print(f"roofline_cells,0,ok={s['ok']};skipped={s['skipped']}"
+          f";error={s['error']}")
+    worst = None
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        tot = rf["t_compute"] + rf["t_memory"] + rf["t_collective"]
+        frac = rf["t_compute"] / tot if tot else 0
+        if worst is None or frac < worst[1]:
+            worst = (r["cell"], frac)
+    if worst:
+        print(f"roofline_worst_compute_frac,0,{worst[0]}={worst[1]:.3f}")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

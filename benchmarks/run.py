@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract).  ``--full``
+uses paper-scale row counts; the default is CPU-quick.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from benchmarks import (bench_archive, bench_compression,
+                            bench_entropy_coders, bench_fastpath,
+                            bench_framework, bench_granularity,
+                            bench_sampling, roofline_report)
+
+    benches = {
+        "compression": bench_compression,     # Fig 9
+        "sampling": bench_sampling,           # Fig 10
+        "entropy": bench_entropy_coders,      # Fig 11
+        "granularity": bench_granularity,     # Fig 12
+        "fastpath": bench_fastpath,           # Fig 13
+        "archive": bench_archive,             # App F / Table 3
+        "framework": bench_framework,         # beyond-paper integrations
+        "roofline": roofline_report,          # §Dry-run/§Roofline artifacts
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, mod in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod.main(quick=quick)
+            print(f"bench_{name}_wall,{1e6*(time.time()-t0):.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            print(f"bench_{name}_wall,0,ERROR={type(e).__name__}:{e}")
+            raise
+
+
+if __name__ == "__main__":
+    main()

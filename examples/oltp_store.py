@@ -1,0 +1,52 @@
+"""OLTP scenario (paper §6/§7): an in-memory row store under a YCSB-style
+mixed workload, comparing Blitzcrank against zstd / Raman / uncompressed,
+with the §6.5 LRU fast path for read-modify-write transactions.
+
+Run:  PYTHONPATH=src python examples/oltp_store.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.oltp import tpcc
+from repro.oltp.store import (BlitzStore, LRUFastPath, RamanStore,
+                              UncompressedStore, ZstdStore)
+
+
+def main(n_rows=4000, n_reads=1500, n_rmw=500):
+    schema, gen = tpcc.TABLES["customer"]
+    rows = gen(n_rows)
+    raw = tpcc.row_bytes(rows)
+    rng = np.random.default_rng(0)
+    zipf_keys = (rng.zipf(1.2, 8 * n_reads) - 1)
+    zipf_keys = zipf_keys[zipf_keys < n_rows]
+
+    print(f"{'store':12s} {'factor':>7s} {'read us':>9s} {'rmw us':>9s} "
+          f"{'hit%':>6s}")
+    for cls in (UncompressedStore, ZstdStore, RamanStore, BlitzStore):
+        store = cls(schema, rows[: n_rows // 2])
+        for r in rows:
+            store.insert(r)
+
+        t0 = time.perf_counter()
+        for i in zipf_keys[:n_reads]:
+            store.get(int(i))
+        t_read = (time.perf_counter() - t0) / n_reads
+
+        fp = LRUFastPath(store, capacity=256)
+        t0 = time.perf_counter()
+        for i in zipf_keys[n_reads:n_reads + n_rmw]:
+            fp.read_modify_write(int(i),
+                                 lambda r: r.update(c_balance=r["c_balance"] + 1))
+        t_rmw = (time.perf_counter() - t0) / n_rmw
+        hit = fp.hits / max(fp.hits + fp.misses, 1)
+        print(f"{store.name:12s} {raw / store.nbytes:7.2f} "
+              f"{1e6 * t_read:9.1f} {1e6 * t_rmw:9.1f} {100 * hit:6.1f}")
+
+    print("\nBlitzcrank: highest factor; the fast path absorbs Zipfian "
+          "updates (paper Fig. 13).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Fault-tolerant training demo: crash injection, checkpoint restart,
+compressed checkpoints, compressed example store, and the step watchdog.
+
+Run:  PYTHONPATH=src python examples/resilient_training.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.data.pipeline import (CompressedExampleStore, SyntheticLM,
+                                 batches_from_store)
+from repro.launch.mesh import make_host_mesh
+from repro.models.config import ShapeConfig
+from repro.train.fault_tolerance import run_with_restarts
+from repro.train.loop import Trainer, TrainerConfig
+
+
+def main():
+    arch = "phi4-mini-3.8b"
+    cfg = reduced_config(arch)
+    shape = ShapeConfig("demo", seq_len=48, global_batch=8, kind="train")
+
+    # --- Blitzcrank-compressed host example store feeding the pipeline ---
+    lm = SyntheticLM(cfg.vocab, shape.seq_len, shape.global_batch, seed=0)
+    store = CompressedExampleStore(lm.batch(0)["tokens"], vocab=cfg.vocab)
+    for s in range(16):
+        store.extend(lm.batch(s)["tokens"])
+    print(f"example store: {len(store)} rows, "
+          f"{store.nbytes / 1024:.0f} KiB vs raw "
+          f"{store.raw_nbytes() / 1024:.0f} KiB "
+          f"({store.raw_nbytes() / store.nbytes:.2f}x)")
+
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainerConfig(arch=arch, steps=24, ckpt_dir=d, ckpt_every=8,
+                           log_every=6, watchdog_s=300.0, compress_ckpt=True)
+        mesh = make_host_mesh()
+
+        def attempt(i):
+            tr = Trainer(tc, mesh, cfg=cfg, shape=shape,
+                         data=batches_from_store(store, shape.global_batch,
+                                                 seed=1))
+            # crash mid-run on the first attempt; resume from step-16 ckpt
+            tr.run(resume=True, fail_at_step=18 if i == 0 else None)
+            attempt.log = tr.metrics_log
+            return True
+
+        rep = run_with_restarts(attempt, max_restarts=2)
+        print(f"completed={rep.completed} after {rep.restarts} restart(s); "
+              f"errors caught: {rep.errors}")
+        for m in attempt.log:
+            print(f"  step {m['step']:3d}  loss {m['loss']:.3f}  "
+                  f"lr {m['lr']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end driver: serve a small LM with batched requests (deliverable b).
+
+Builds a reduced gemma2-family model, trains it briefly on the synthetic
+Markov stream so generations are non-trivial, then serves a request batch:
+prefill -> greedy decode with the paged KV cache (write tail + flushes),
+offloading cold KV pages to the Blitzcrank-compressed host store — the
+paper's larger-than-memory flow (§7.2) at serving time.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import reduced_config
+from repro.launch.mesh import make_host_mesh
+from repro.models.config import ShapeConfig
+from repro.serve.engine import Engine
+from repro.train.loop import Trainer, TrainerConfig
+
+
+def main():
+    arch = "gemma2-9b"
+    cfg = reduced_config(arch)
+
+    # --- brief training so the model predicts the synthetic Markov shift ---
+    shape = ShapeConfig("serve-demo", seq_len=64, global_batch=8, kind="train")
+    tc = TrainerConfig(arch=arch, steps=60, log_every=20)
+    tr = Trainer(tc, make_host_mesh(), cfg=cfg, shape=shape)
+    out = tr.run(resume=False)
+    print("train:", [f"step {m['step']}: loss {m['loss']:.2f}"
+                     for m in tr.metrics_log])
+
+    # --- serve a batch of requests ---
+    eng = Engine(cfg, out["params"], max_len=128, donate=False)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, min(cfg.vocab, 32768), size=(8, 24)).astype(np.int32)
+    t0 = time.perf_counter()
+    res = eng.generate(prompts, max_new=48, temperature=0.0)
+    dt = time.perf_counter() - t0
+    toks = 8 * 48
+    print(f"served 8 requests x 48 tokens in {dt:.2f}s "
+          f"({1e3 * dt / toks:.1f} ms/token on CPU)")
+    print("sample continuation:", res.tokens[0][:16].tolist())
+
+    # --- offload the KV cache to the compressed host store (§7.2 flow) ---
+    _, state = eng.prefill(jax.numpy.asarray(prompts))
+    store = eng.offload_kv(state, page_tokens=8)
+    print(f"KV offload: {len(store.pages)} pages, "
+          f"{store.nbytes / 1024:.0f} KiB compressed vs "
+          f"{store.raw_nbytes() / 1024:.0f} KiB raw "
+          f"({store.raw_nbytes() / max(store.nbytes, 1):.2f}x)")
+    k, v = store.get(0, 0)
+    print(f"random page fetch OK: page(0,0) -> {k.shape}")
+
+
+if __name__ == "__main__":
+    main()

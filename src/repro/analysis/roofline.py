@@ -1,0 +1,197 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh) cell, in seconds (TPU v5e targets):
+
+    compute    = HLO_FLOPs / (chips × 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes / (chips × 819e9 B/s HBM)
+    collective = Σ per-op cost(bytes, algorithm) / 49.5e9 B/s per-link ICI
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (whole-program totals);
+collective bytes are parsed from the *partitioned* HLO text — XLA's
+cost analysis does not attribute collective traffic.  Per-op wire cost uses
+ring-algorithm accounting on the per-device (post-SPMD) shapes:
+
+    all-gather:         out_bytes - in_bytes   received per device
+    reduce-scatter:     in_bytes - out_bytes
+    all-reduce:         2 × (N-1)/N × bytes
+    all-to-all:         (N-1)/N × bytes
+    collective-permute: bytes
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e hardware constants (task statement)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape like ``bf16[16,1024]`` (1 for scalars)."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _result_shapes(line: str) -> List[str]:
+    """Shapes on the LHS of an HLO instruction line."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return []
+    rhs = lhs[1].strip()
+    # result type precedes the op name: `bf16[8,128]{1,0} all-gather(...)`
+    m = re.match(r"\(?([^()]*?)\)?\s*(%?[\w-]+)\(", rhs)
+    if not m:
+        return []
+    types = m.group(1)
+    return re.findall(r"\w+\[[\d,]*\]", types)
+
+
+def _operand_shapes(line: str) -> List[str]:
+    """Shapes of the operands (inside the call parens)."""
+    m = re.search(r"\(([^)]*)\)", line.split(" = ", 1)[1])
+    if not m:
+        return []
+    return re.findall(r"\w+\[[\d,]*\]", m.group(1))
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [ngroups, group_size]
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    wire_bytes: Dict[str, float]     # per-device bytes on the wire
+    total_wire_bytes: float
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    wire: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        stripped = line.strip()
+        kind = None
+        for k in _COLLECTIVE_KINDS:
+            if re.search(rf"[\s(]({k}(-start|-done)?)\(", " " + stripped):
+                kind = k
+                start_done = f"{k}-done" in stripped
+                break
+        if kind is None or f"{kind}-done" in stripped:
+            continue  # count -start once, skip -done
+        n = _group_size(stripped, default_group)
+        outs = sum(_shape_bytes(s) for s in _result_shapes(stripped))
+        ins = sum(_shape_bytes(s) for s in _operand_shapes(stripped))
+        if kind == "all-gather":
+            b = max(outs - ins, 0)
+        elif kind == "reduce-scatter":
+            b = max(ins - outs, 0)
+        elif kind == "all-reduce":
+            b = 2.0 * (n - 1) / max(n, 1) * ins
+        elif kind == "all-to-all":
+            b = (n - 1) / max(n, 1) * ins
+        else:  # collective-permute
+            b = ins
+        counts[kind] = counts.get(kind, 0) + 1
+        wire[kind] = wire.get(kind, 0.0) + b
+    return CollectiveStats(counts=counts, wire_bytes=wire,
+                           total_wire_bytes=sum(wire.values()))
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float            # whole-program
+    hlo_gbytes: float            # whole-program HBM traffic
+    wire_gbytes_per_chip: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_gflops: float          # 6*N*D (or 6*N_active*D)
+    useful_flops_frac: float     # model/hlo
+    collectives: Dict
+    bytes_per_device: Optional[float] = None
+    peak_memory_per_device: Optional[float] = None
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(arch: str, shape_name: str, mesh_name: str, chips: int,
+            cost: Dict, hlo_text: str, model_flops: float,
+            memory_stats: Optional[Dict] = None) -> Roofline:
+    """All totals are per-device: the compiled module is the SPMD program
+    for one device, and the trip-count-aware analyzer (analysis.hlo) walks
+    it with while-loop multipliers (XLA's cost_analysis counts loop bodies
+    once — verified in tests)."""
+    from .hlo import analyze_hlo
+    st = analyze_hlo(hlo_text, default_group=chips)
+    flops = st.flops            # per-device
+    byts = st.bytes_accessed    # per-device
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = st.collective_wire_bytes / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    model_per_chip = model_flops / chips
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_gflops=flops / 1e9, hlo_gbytes=byts / 1e9,
+        wire_gbytes_per_chip=st.collective_wire_bytes / 1e9,
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        bottleneck=max(terms, key=terms.get),
+        model_gflops=model_flops / 1e9,
+        useful_flops_frac=(model_per_chip / flops) if flops else 0.0,
+        collectives={"counts": st.collective_counts,
+                     "wire_bytes": st.collective_bytes,
+                     "total_wire_bytes": st.collective_wire_bytes,
+                     "trip_counts": st.trip_counts},
+        bytes_per_device=(memory_stats or {}).get("bytes_per_device"),
+        peak_memory_per_device=(memory_stats or {}).get("peak"),
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference forward passes
+    (per step for decode: D = global_batch tokens)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,66 @@
+"""Architecture registry: ``get_config(arch_id)`` + reduced smoke configs."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.models.config import (EncoderConfig, ModelConfig, MoEConfig,
+                                 SHAPES, SHAPES_BY_NAME, ShapeConfig,
+                                 SSMConfig, shape_applies)
+
+from . import (deepseek_moe_16b, gemma2_9b, hymba_1p5b, internvl2_26b,
+               nemotron_4_15b, phi3_mini_3p8b, phi3p5_moe_42b,
+               phi4_mini_3p8b, whisper_tiny, xlstm_1p3b)
+
+_REGISTRY: Dict[str, ModelConfig] = {
+    "phi4-mini-3.8b": phi4_mini_3p8b.CONFIG,
+    "gemma2-9b": gemma2_9b.CONFIG,
+    "phi3-mini-3.8b": phi3_mini_3p8b.CONFIG,
+    "nemotron-4-15b": nemotron_4_15b.CONFIG,
+    "deepseek-moe-16b": deepseek_moe_16b.CONFIG,
+    "phi3.5-moe-42b-a6.6b": phi3p5_moe_42b.CONFIG,
+    "whisper-tiny": whisper_tiny.CONFIG,
+    "internvl2-26b": internvl2_26b.CONFIG,
+    "xlstm-1.3b": xlstm_1p3b.CONFIG,
+    "hymba-1.5b": hymba_1p5b.CONFIG,
+}
+
+ARCH_IDS = tuple(_REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch]
+
+
+def reduced_config(arch: str) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests (shapes/NaN checks)."""
+    cfg = get_config(arch)
+    small: Dict = dict(
+        n_layers=2 if cfg.family != "ssm" else 8,   # keep one sLSTM group
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, 4 // cfg.q_per_kv) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_head=16,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab=512,
+        window=16,
+    )
+    if cfg.moe is not None:
+        small["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=2, d_expert=64,
+            first_k_dense=min(cfg.moe.first_k_dense, 1))
+    if cfg.ssm is not None:
+        small["ssm"] = dataclasses.replace(cfg.ssm, d_state=4, chunk=8)
+    if cfg.encoder is not None:
+        small["encoder"] = EncoderConfig(n_layers=2, n_ctx=16)
+    if cfg.n_prefix:
+        small["n_prefix"] = 4
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **small)
+
+
+__all__ = ["ARCH_IDS", "get_config", "reduced_config", "ModelConfig",
+           "MoEConfig", "SSMConfig", "EncoderConfig", "ShapeConfig",
+           "SHAPES", "SHAPES_BY_NAME", "shape_applies"]

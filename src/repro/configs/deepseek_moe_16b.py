@@ -1,0 +1,27 @@
+"""deepseek-moe-16b [arXiv:2401.06066; hf] — fine-grained MoE.
+
+28L d_model=2048 16H (GQA kv=16) expert d_ff=1408 vocab=102400,
+2 shared + 64 routed experts, top-6, first layer dense (d_ff=10944).
+"""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=10944,          # the dense first layer's FFN width
+    vocab=102400,
+    d_head=128,
+    act="swiglu",
+    moe=MoEConfig(
+        n_experts=64,
+        top_k=6,
+        n_shared=2,
+        d_expert=1408,
+        first_k_dense=1,
+    ),
+)

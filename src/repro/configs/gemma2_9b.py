@@ -1,0 +1,26 @@
+"""gemma2-9b [arXiv:2408.00118; hf] — dense GQA, local/global alternating.
+
+42L d_model=3584 16H (GQA kv=8) d_ff=14336 vocab=256000 — alternating
+sliding-window (4096) and global attention, attention/final logit softcaps.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    family="dense",
+    n_layers=42,
+    d_model=3584,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=256000,
+    d_head=256,
+    act="swiglu",
+    attn_pattern="local_global",
+    window=4096,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    tie_embeddings=True,
+    embed_scale=True,
+)

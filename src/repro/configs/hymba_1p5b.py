@@ -1,0 +1,25 @@
+"""hymba-1.5b [arXiv:2411.13676; hf] — hybrid: parallel attention + mamba.
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504, ssm_state=16, vocab=32001 —
+each block runs attention heads and mamba (selective-SSM) heads in parallel
+and averages their (normalized) outputs.  Sliding-window attention except at
+the first/middle/last layers, so long_500k decode applies.
+"""
+
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab=32001,
+    d_head=64,
+    act="swiglu",
+    attn_pattern="local_mostly",
+    window=1024,
+    ssm=SSMConfig(kind="mamba", d_state=16),
+)

@@ -1,0 +1,23 @@
+"""internvl2-26b [arXiv:2404.16821; hf] — VLM: InternViT + InternLM2 backbone.
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553.  The InternViT
+vision frontend is a STUB: ``input_specs()`` provides precomputed patch
+embeddings occupying the first ``n_prefix`` sequence positions.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=92553,
+    d_head=128,
+    act="swiglu",
+    frontend="vision",
+    n_prefix=256,  # ViT patch embeddings per image tile
+)

@@ -1,0 +1,23 @@
+"""whisper-tiny [arXiv:2212.04356; unverified] — encoder-decoder (audio).
+
+4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865 — enc-dec; the conv audio
+frontend is a STUB: ``input_specs()`` provides precomputed frame embeddings
+(B, 1500, 384), per the task statement.
+"""
+
+from repro.models.config import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab=51865,
+    d_head=64,
+    act="gelu",
+    encoder=EncoderConfig(n_layers=4, n_ctx=1500),
+    frontend="audio",
+)

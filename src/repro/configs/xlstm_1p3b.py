@@ -1,0 +1,22 @@
+"""xlstm-1.3b [arXiv:2405.04517; unverified] — sLSTM + mLSTM blocks.
+
+48L d_model=2048 4H (kv=4) d_ff=0 vocab=50304 — xLSTM[7:1]: every 8th block
+is sLSTM (scalar memory, scan), the rest mLSTM (matrix memory, chunkwise
+parallel).  Sub-quadratic: runs the long_500k decode shape.
+"""
+
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,              # xLSTM blocks carry their own up-projection
+    vocab=50304,
+    d_head=512,
+    act="gelu",
+    ssm=SSMConfig(kind="xlstm", mlstm_per_slstm=7, chunk=256),
+)

@@ -1,0 +1,30 @@
+"""Blitzcrank core: semantic models + delayed coding (the paper's contribution).
+
+Public API:
+  * coders:      DiscreteCoder, UniformCoder, quantize_freqs
+  * delayed:     encode_block / decode_block / BlockDecoder / Slot
+  * vectorized:  encode_batch / decode_batch / decode_select
+  * models:      CategoricalModel, NumericModel, StringModel, ...
+  * blitzcrank:  ColumnSpec, TableCodec, CompressedTable
+  * baselines:   arithmetic, rans, huffman
+"""
+
+from .coders import DiscreteCoder, UniformCoder, quantize_freqs, TOTAL
+from .delayed import (BlockDecoder, Slot, decode_block, encode_block,
+                      encode_symbols, LAMBDA_DEFAULT)
+from .vectorized import decode_batch, decode_select, encode_batch
+from .models import (BlockEncoder, ByteMarkov, CategoricalModel,
+                     ConditionalCategoricalModel, NumericModel, StringModel,
+                     TimeSeriesModel)
+from .blitzcrank import ColumnSpec, CompressedTable, FitStats, TableCodec
+from .structure import learn_order
+
+__all__ = [
+    "DiscreteCoder", "UniformCoder", "quantize_freqs", "TOTAL",
+    "BlockDecoder", "Slot", "decode_block", "encode_block", "encode_symbols",
+    "LAMBDA_DEFAULT", "decode_batch", "decode_select", "encode_batch",
+    "BlockEncoder", "ByteMarkov", "CategoricalModel",
+    "ConditionalCategoricalModel", "NumericModel", "StringModel",
+    "TimeSeriesModel", "ColumnSpec", "CompressedTable", "FitStats",
+    "TableCodec", "learn_order",
+]

@@ -1,0 +1,85 @@
+"""Integer-probability arithmetic coding (Appendix A baseline).
+
+The paper's baseline coder: 16-bit integer probabilities, interval-product
+state updates, and O(log N) binary-search decode (the complexity delayed
+coding removes).  Blocks in the OLTP setting are single tuples (a few hundred
+bits), so this reference keeps the interval product in exact big-int
+arithmetic — functionally identical to App. A's early-bit-emission variant
+(which exists to bound the *working precision*, not to change the output
+length by more than the final-rounding bit or two).
+
+Encode returns the shortest dyadic fraction inside the final interval
+(§2.1); sizes are therefore entropy-optimal per block up to ~2 bits.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .coders import TOTAL, TOTAL_BITS, DiscreteCoder, UniformCoder
+
+
+def _cdf_bounds(coder, sym: int) -> Tuple[int, int]:
+    """Contiguous [L, R) of a symbol (arithmetic coding needs the CDF layout)."""
+    if isinstance(coder, UniformCoder):
+        lo = -((-sym * TOTAL) // coder.G)
+        hi = -((-(sym + 1) * TOTAL) // coder.G)
+        return lo, hi
+    cdf = coder.cdf
+    return int(cdf[sym]), int(cdf[sym + 1])
+
+
+def encode_block(syms: Sequence[int], coders: Sequence) -> Tuple[bytes, int]:
+    """Arithmetic-encode one block; returns (payload bytes, exact bit length)."""
+    low = 0      # big-int numerator of the interval low end
+    rng = 1      # numerator of the interval width
+    den_bits = 0  # denominator = 2**den_bits
+    for sym, coder in zip(syms, coders):
+        l, r = _cdf_bounds(coder, sym)
+        low = (low << TOTAL_BITS) + rng * l
+        rng = rng * (r - l)
+        den_bits += TOTAL_BITS
+    # choose the dyadic fraction with the fewest bits in [low, low+rng)
+    hi = low + rng
+    nbits = 0
+    while nbits <= den_bits:
+        # smallest multiple of 2**(den_bits-nbits) that is >= low
+        step = 1 << (den_bits - nbits)
+        q = -((-low) // step)  # ceil division
+        if q * step < hi:
+            code = q
+            break
+        nbits += 1
+    else:  # pragma: no cover - rng >= 1 guarantees termination
+        raise RuntimeError("no dyadic point found")
+    payload = int(code).to_bytes((nbits + 7) // 8 or 1, "big")
+    return payload, nbits
+
+
+def decode_block(payload: bytes, nbits: int, coders: Sequence) -> List[int]:
+    """Mirror of :func:`encode_block`; binary-searches the CDF per symbol."""
+    code = int.from_bytes(payload, "big") if payload else 0
+    den_bits = TOTAL_BITS * len(coders)
+    value = code << (den_bits - nbits)  # align to full precision
+    low = 0      # full-precision numerator (scale 2**den_bits)
+    rng = 1      # width in units of 2**unit_bits
+    unit_bits = den_bits
+    out: List[int] = []
+    for coder in coders:
+        unit_bits -= TOTAL_BITS
+        unit = 1 << unit_bits
+        # 16-bit position of `value` inside the current interval
+        target = (value - low) // (rng * unit)
+        if isinstance(coder, UniformCoder):
+            sym = (target * coder.G) >> TOTAL_BITS
+            l, r = _cdf_bounds(coder, sym)
+        else:
+            cdf = coder.cdf  # O(log N) binary search: the paper's complaint
+            sym = int(np.searchsorted(cdf, target, side="right")) - 1
+            l, r = int(cdf[sym]), int(cdf[sym + 1])
+        out.append(int(sym))
+        low += rng * l * unit
+        rng = rng * (r - l)
+    return out

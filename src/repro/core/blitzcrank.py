@@ -1,0 +1,221 @@
+"""The Blitzcrank facade (§3): Semantic Learner + Attribute Encoder + Tuple
+Encoder wired together for relational rows.
+
+``TableCodec.fit`` is the Semantic Learner: (1) structure-learn a column
+ordering + conditional models on a random sample, (2) scan the full data to
+fit accurate per-column semantic models.  ``compress_block`` /
+``decompress_block`` are the Attribute Encoder (value <-> intervals) feeding
+the Tuple Encoder (delayed coding).  ``CompressedTable`` is the in-memory
+store with per-block random access (default granularity: 1 tuple, §6.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import delayed
+from .coders import TOTAL_BITS
+from .delayed import BlockDecoder
+from .models import (BlockEncoder, CategoricalModel, ConditionalCategoricalModel,
+                     NumericModel, StringModel, TimeSeriesModel)
+from .structure import discretize_column, learn_order
+
+
+@dataclasses.dataclass
+class ColumnSpec:
+    name: str
+    kind: str                    # 'cat' | 'int' | 'float' | 'str' | 'ts'
+    precision: float = 1.0       # for 'float' (absolute precision p, §4.2)
+    buckets: int = 512           # level-1 bucket budget T
+
+
+@dataclasses.dataclass
+class FitStats:
+    structuring_s: float = 0.0
+    generation_s: float = 0.0
+    sample_rows: int = 0
+    order: Tuple[str, ...] = ()
+    parents: Dict[str, Optional[str]] = dataclasses.field(default_factory=dict)
+
+
+class TableCodec:
+    """Compresses/decompresses rows (dicts or tuples in schema order)."""
+
+    def __init__(self, schema: Sequence[ColumnSpec], models: Dict[str, Any],
+                 order: List[str], stats: FitStats,
+                 block_tuples: int = 1, lam: int = delayed.LAMBDA_DEFAULT):
+        self.schema = list(schema)
+        self.by_name = {c.name: c for c in self.schema}
+        self.models = models
+        self.order = order
+        self.stats = stats
+        self.block_tuples = block_tuples
+        self.lam = lam
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def fit(cls, rows: Sequence[Dict[str, Any]], schema: Sequence[ColumnSpec],
+            correlation: bool = False, sample: int = 1 << 15,
+            block_tuples: int = 1, seed: int = 0,
+            lam: int = delayed.LAMBDA_DEFAULT) -> "TableCodec":
+        rng = np.random.default_rng(seed)
+        n = len(rows)
+        stats = FitStats()
+        idx = rng.choice(n, size=min(sample, n), replace=False)
+        sample_rows = [rows[i] for i in idx]
+        stats.sample_rows = len(sample_rows)
+
+        # ---- Semantic Learner step 1: structure learning on the sample ----
+        t0 = time.perf_counter()
+        order = [c.name for c in schema]
+        parents: Dict[str, Optional[str]] = {c.name: None for c in schema}
+        if correlation:
+            disc: Dict[str, List] = {}
+            for c in schema:
+                col = [r[c.name] for r in sample_rows]
+                d = discretize_column(col, c.kind)
+                if d is not None and c.kind in ("cat", "int", "str"):
+                    disc[c.name] = d
+            if disc:
+                sub_order, sub_parents = learn_order(disc, len(sample_rows))
+                rest = [c.name for c in schema if c.name not in disc]
+                order = sub_order + rest
+                parents.update(sub_parents)
+        stats.structuring_s = time.perf_counter() - t0
+        stats.order = tuple(order)
+        stats.parents = dict(parents)
+
+        # ---- Semantic Learner step 2: model generation on the full scan ----
+        t0 = time.perf_counter()
+        models: Dict[str, Any] = {}
+        for c in schema:
+            col = [r[c.name] for r in rows]
+            parent = parents.get(c.name)
+            if parent is not None and c.kind in ("cat", "int", "str"):
+                pairs = [(r[parent], r[c.name]) for r in rows]
+                models[c.name] = ConditionalCategoricalModel(pairs, parent)
+            elif c.kind == "cat":
+                models[c.name] = CategoricalModel(col)
+            elif c.kind == "int":
+                # small-cardinality ints behave better as categorical
+                card = len(set(col[:4096]))
+                if card <= 256 and len(set(col)) <= 4096:
+                    models[c.name] = CategoricalModel(col)
+                else:
+                    models[c.name] = NumericModel(col, precision=1,
+                                                  T=c.buckets, integer=True)
+            elif c.kind == "float":
+                models[c.name] = NumericModel(col, precision=c.precision,
+                                              T=c.buckets)
+            elif c.kind == "ts":
+                models[c.name] = TimeSeriesModel(col, precision=c.precision,
+                                                 T=c.buckets)
+            elif c.kind == "str":
+                models[c.name] = StringModel(col, block_tuples=block_tuples)
+            else:
+                raise ValueError(f"unknown column kind {c.kind}")
+        stats.generation_s = time.perf_counter() - t0
+        return cls(schema, models, order, stats, block_tuples, lam)
+
+    # ------------------------------------------------------------------
+    def _reset_block_state(self) -> None:
+        for m in self.models.values():
+            if hasattr(m, "reset_block"):
+                m.reset_block()
+
+    def compress_block(self, rows: Sequence[Dict[str, Any]]) -> np.ndarray:
+        """Compress a block of rows into a uint16 code array."""
+        self._reset_block_state()
+        enc = BlockEncoder()
+        for r in rows:
+            ctx: Dict[str, Any] = {}
+            for name in self.order:
+                self.models[name].encode_value(r[name], enc, ctx)
+                ctx[name] = r[name]
+        codes = delayed.encode_block(enc.slots, self.lam)
+        return np.asarray(codes, dtype=np.uint16)
+
+    def decompress_block(self, codes: np.ndarray, n_rows: int
+                         ) -> List[Dict[str, Any]]:
+        self._reset_block_state()
+        dec = BlockDecoder(codes.tolist() if isinstance(codes, np.ndarray)
+                           else codes, self.lam)
+        out = []
+        for _ in range(n_rows):
+            ctx: Dict[str, Any] = {}
+            for name in self.order:
+                ctx[name] = self.models[name].decode_value(dec, ctx)
+            out.append(ctx)
+        return out
+
+    # ------------------------------------------------------------------
+    def model_bytes(self) -> int:
+        return sum(m.model_bytes() for m in self.models.values())
+
+    def est_row_bits(self, row: Dict[str, Any]) -> float:
+        return sum(self.models[n].est_bits(row[n]) for n in self.order
+                   if hasattr(self.models[n], "est_bits"))
+
+
+class CompressedTable:
+    """In-memory compressed row store with per-block random access (§6.1).
+
+    Tuples are grouped into blocks of ``codec.block_tuples`` (default 1);
+    blocks live in one growing uint16 arena addressed by a block offset
+    index — the storage layout Blitzcrank sits above in Silo.
+    """
+
+    def __init__(self, codec: TableCodec, capacity_hint: int = 1 << 16):
+        self.codec = codec
+        self.arena = np.zeros(capacity_hint, dtype=np.uint16)
+        self.used = 0
+        self.block_offsets: List[int] = [0]
+        self.block_rows: List[int] = []
+        self._pending: List[Dict[str, Any]] = []
+
+    def _append_codes(self, codes: np.ndarray) -> None:
+        need = self.used + codes.size
+        if need > self.arena.size:
+            new = np.zeros(max(need, 2 * self.arena.size), dtype=np.uint16)
+            new[:self.used] = self.arena[:self.used]
+            self.arena = new
+        self.arena[self.used:need] = codes
+        self.used = need
+
+    def append(self, row: Dict[str, Any]) -> None:
+        self._pending.append(row)
+        if len(self._pending) >= self.codec.block_tuples:
+            self.flush()
+
+    def flush(self) -> None:
+        if not self._pending:
+            return
+        codes = self.codec.compress_block(self._pending)
+        self._append_codes(codes)
+        self.block_offsets.append(self.used)
+        self.block_rows.append(len(self._pending))
+        self._pending = []
+
+    def __len__(self) -> int:
+        return sum(self.block_rows) + len(self._pending)
+
+    def get(self, i: int) -> Dict[str, Any]:
+        """Random access: decompress the block containing row ``i``."""
+        bt = self.codec.block_tuples
+        b = i // bt  # blocks are fixed-size except the trailing pending rows
+        if b < len(self.block_rows):
+            codes = self.arena[self.block_offsets[b]:self.block_offsets[b + 1]]
+            return self.codec.decompress_block(codes, self.block_rows[b])[i % bt]
+        return self._pending[i - bt * len(self.block_rows)]
+
+    def get_block(self, b: int) -> List[Dict[str, Any]]:
+        codes = self.arena[self.block_offsets[b]:self.block_offsets[b + 1]]
+        return self.codec.decompress_block(codes, self.block_rows[b])
+
+    @property
+    def nbytes(self) -> int:
+        return self.used * 2 + 8 * len(self.block_offsets)

@@ -1,0 +1,360 @@
+"""Integer-probability coders: the paper's 16-bit interval machinery (§5.1).
+
+A probability is a 16-bit integer ``U`` logically representing ``U / 2**16``
+(§5.1).  Every slot of a tuple is coded by one of two primitive coders:
+
+* :class:`DiscreteCoder` — a categorical distribution whose code space
+  ``[0, 2**16)`` is laid out by the alias-method decomposition of Theorem 1 /
+  Appendix C, giving O(1) ``inv_translate`` (code -> symbol) with no binary
+  search.  Because the alias layout scatters a symbol's code options across
+  buckets, symbols own *non-continuous* interval unions (§5.6); the coder
+  exposes the option-index mapping ``a <-> code`` both ways.
+* :class:`UniformCoder` — an exactly-uniform G-ary distribution used for the
+  second quantization level of the numeric model (§4.2) and for raw-payload
+  escapes.  Both directions are closed-form (no tables).
+
+All arithmetic is exact integer arithmetic; invariants are asserted in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+TOTAL_BITS = 16
+TOTAL = 1 << TOTAL_BITS  # 2**16: the fixed code-space size (§5.1)
+
+
+# ---------------------------------------------------------------------------
+# Frequency quantization
+# ---------------------------------------------------------------------------
+
+def quantize_freqs(counts: np.ndarray, total: int = TOTAL) -> np.ndarray:
+    """Quantize raw counts to integer frequencies summing exactly to ``total``.
+
+    Every symbol with a nonzero count receives frequency >= 1 so that it stays
+    encodable (the paper keeps all seen symbols in the model).  Uses the
+    largest-remainder method, then repairs the sum by adjusting the largest
+    entries (never dropping an entry below 1).
+    """
+    counts = np.asarray(counts, dtype=np.float64)
+    n = counts.size
+    if n == 0:
+        raise ValueError("empty distribution")
+    if n > total:
+        raise ValueError(f"more than {total} symbols in one model")
+    s = counts.sum()
+    if s <= 0:
+        counts = np.ones(n, dtype=np.float64)
+        s = float(n)
+    ideal = counts / s * total
+    k = np.floor(ideal).astype(np.int64)
+    k = np.maximum(k, 1)
+    # Largest-remainder distribution of the leftover mass.
+    diff = int(total - k.sum())
+    if diff > 0:
+        order = np.argsort(-(ideal - k))
+        bump, rem = divmod(diff, n)
+        k += bump
+        k[order[:rem]] += 1
+    elif diff < 0:
+        # Took too much (due to the >=1 floor): remove from the largest.
+        order = np.argsort(-k)
+        i = 0
+        while diff < 0:
+            j = order[i % n]
+            take = min(int(k[j]) - 1, -diff)
+            if take > 0:
+                k[j] -= take
+                diff += take
+            i += 1
+            if i > 4 * n and diff < 0:  # pragma: no cover - defensive
+                raise RuntimeError("cannot quantize distribution")
+    assert int(k.sum()) == total and (k >= 1).all()
+    return k.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Alias decomposition (Theorem 1 / Appendix C)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AliasTables:
+    """Dense alias-layout tables for a categorical distribution.
+
+    Decode-side (Algorithm 6): for code ``c``, bucket ``P = c >> (16 - m)``;
+    if the low bits are below ``threshold[P]`` the symbol is ``sym_u[P]`` with
+    option index ``a = c - ja[P]``, else ``sym_v[P]`` with ``a = c - jb[P]``.
+
+    Encode-side: CSR arrays mapping (symbol, option index a) -> code.
+    ``seg_off[s]:seg_off[s+1]`` are the segment rows of symbol ``s``;
+    ``seg_cum`` holds cumulative option counts (per symbol) at segment starts;
+    ``seg_start`` the code-space start of each segment.
+    """
+
+    m_bits: int                 # bucket index uses the top m bits of the code
+    k_of: np.ndarray            # uint32[n]  option count per symbol
+    threshold: np.ndarray       # uint32[M]  a_P (size of the u-part)
+    sym_u: np.ndarray           # int32[M]
+    sym_v: np.ndarray           # int32[M]
+    ja: np.ndarray              # int64[M]   a = code - ja[P]   (u branch)
+    jb: np.ndarray              # int64[M]   a = code - jb[P]   (v branch)
+    seg_off: np.ndarray         # int32[n+1] CSR offsets per symbol
+    seg_cum: np.ndarray         # int64[nseg] cumulative option count
+    seg_start: np.ndarray       # int64[nseg] code-space start of segment
+
+    @property
+    def n_symbols(self) -> int:
+        return int(self.k_of.size)
+
+    @property
+    def n_buckets(self) -> int:
+        return int(self.threshold.size)
+
+
+def build_alias(k: np.ndarray) -> AliasTables:
+    """Decompose integer frequencies (sum=2**16) into M=2**m equal buckets.
+
+    Exactly Appendix C: each bucket of width ``W = 2**(16-m)`` is split between
+    at most two symbols.  Returns dense tables for O(1) decode and CSR encode.
+    """
+    k = np.asarray(k, dtype=np.int64)
+    n = k.size
+    assert int(k.sum()) == TOTAL, "frequencies must sum to 2**16"
+    assert (k >= 1).all()
+    m = max(0, int(np.ceil(np.log2(n))))
+    M = 1 << m
+    W = TOTAL >> m  # bucket width
+
+    rem = k.astype(np.int64).copy()
+    small = [i for i in range(n) if rem[i] < W]
+    large = [i for i in range(n) if rem[i] >= W]
+
+    threshold = np.zeros(M, dtype=np.int64)
+    sym_u = np.zeros(M, dtype=np.int64)
+    sym_v = np.zeros(M, dtype=np.int64)
+
+    for p in range(M):
+        if small:
+            # Invariant: elems_left <= buckets_left, so the average remaining
+            # mass is >= W; hence a large element always exists alongside a
+            # small one (this is the induction of Theorem 1 / Appendix C).
+            s = small.pop()
+            a = int(rem[s])
+            rem[s] = 0
+            l = large.pop()
+            threshold[p], sym_u[p], sym_v[p] = a, s, l
+            rem[l] -= (W - a)
+        else:
+            l = large.pop()
+            threshold[p], sym_u[p], sym_v[p] = 0, l, l
+            rem[l] -= W
+        if rem[l] < 0:  # pragma: no cover - defensive
+            raise RuntimeError("alias decomposition went negative")
+        if rem[l] > 0:
+            (small if rem[l] < W else large).append(int(l))
+    assert not small and not large and (rem == 0).all(), "mass not consumed"
+
+    # ---- assemble per-symbol segments in canonical (bucket, part) order ----
+    # part 0 = u-side [P*W, P*W + a_P); part 1 = v-side [P*W + a_P, (P+1)*W)
+    segs_by_sym: list[list[Tuple[int, int]]] = [[] for _ in range(n)]
+    for p in range(M):
+        a = int(threshold[p])
+        if a > 0:
+            segs_by_sym[int(sym_u[p])].append((p * W, a))
+        if W - a > 0:
+            segs_by_sym[int(sym_v[p])].append((p * W + a, W - a))
+
+    seg_off = np.zeros(n + 1, dtype=np.int64)
+    seg_cum_l, seg_start_l = [], []
+    ja = np.zeros(M, dtype=np.int64)
+    jb = np.zeros(M, dtype=np.int64)
+    cum_of = np.zeros(n, dtype=np.int64)
+    # Walk buckets again to fill ja/jb with running per-symbol cumulative
+    # counts (Algorithm 6's precomputed constants): a = code - (start - cum).
+    for p in range(M):
+        a = int(threshold[p])
+        u, v = int(sym_u[p]), int(sym_v[p])
+        if a > 0:
+            ja[p] = p * W - cum_of[u]
+            cum_of[u] += a
+        else:
+            ja[p] = p * W  # unused branch (threshold 0 -> never taken)
+        if W - a > 0:
+            jb[p] = (p * W + a) - cum_of[v]
+            cum_of[v] += W - a
+        else:
+            jb[p] = p * W + a
+    assert (cum_of == k).all()
+
+    for s in range(n):
+        seg_off[s + 1] = seg_off[s] + len(segs_by_sym[s])
+        c = 0
+        for (start, ln) in segs_by_sym[s]:
+            seg_cum_l.append(c)
+            seg_start_l.append(start)
+            c += ln
+        assert c == int(k[s])
+
+    return AliasTables(
+        m_bits=m,
+        k_of=k.astype(np.uint32),
+        threshold=threshold.astype(np.uint32),
+        sym_u=sym_u.astype(np.int32),
+        sym_v=sym_v.astype(np.int32),
+        ja=ja,
+        jb=jb,
+        seg_off=seg_off.astype(np.int32),
+        seg_cum=np.asarray(seg_cum_l, dtype=np.int64),
+        seg_start=np.asarray(seg_start_l, dtype=np.int64),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Primitive coders
+# ---------------------------------------------------------------------------
+
+class DiscreteCoder:
+    """Categorical coder with O(1) decode via the alias layout (§4.1, §5.6).
+
+    ``inv_translate(code) -> (sym, a, k)`` and ``code_for(sym, a) -> code``
+    are exact inverses over the option-index ``a`` in ``[0, k(sym))``.
+    """
+
+    __slots__ = ("tables", "_cdf", "_lut_sym", "_lut_a")
+
+    def __init__(self, quantized: np.ndarray):
+        self.tables = build_alias(quantized)
+        self._cdf = None
+        self._lut_sym = None
+        self._lut_a = None
+
+    # -- scalar API (reference path) -------------------------------------
+    def k(self, sym: int) -> int:
+        return int(self.tables.k_of[sym])
+
+    def inv_translate(self, code: int) -> Tuple[int, int, int]:
+        t = self.tables
+        shift = TOTAL_BITS - t.m_bits
+        p = code >> shift
+        low = code & ((1 << shift) - 1)
+        if low < int(t.threshold[p]):
+            sym = int(t.sym_u[p])
+            a = code - int(t.ja[p])
+        else:
+            sym = int(t.sym_v[p])
+            a = code - int(t.jb[p])
+        return sym, a, int(t.k_of[sym])
+
+    def code_for(self, sym: int, a: int) -> int:
+        t = self.tables
+        lo, hi = int(t.seg_off[sym]), int(t.seg_off[sym + 1])
+        # Find the segment row containing option ``a``: tiny linear scan
+        # (symbols own very few segments; binary search for the pathological).
+        if hi - lo <= 8:
+            r = lo
+            for r2 in range(lo, hi):
+                if int(t.seg_cum[r2]) <= a:
+                    r = r2
+                else:
+                    break
+        else:
+            r = lo + int(np.searchsorted(t.seg_cum[lo:hi], a, side="right")) - 1
+        return int(t.seg_start[r]) + (a - int(t.seg_cum[r]))
+
+    # -- vectorized API ---------------------------------------------------
+    def inv_translate_batch(self, codes: np.ndarray):
+        t = self.tables
+        codes = np.asarray(codes, dtype=np.int64)
+        shift = TOTAL_BITS - t.m_bits
+        p = codes >> shift
+        low = codes & ((1 << shift) - 1)
+        hit_u = low < t.threshold[p].astype(np.int64)
+        sym = np.where(hit_u, t.sym_u[p], t.sym_v[p]).astype(np.int64)
+        a = codes - np.where(hit_u, t.ja[p], t.jb[p])
+        return sym, a, t.k_of[sym].astype(np.int64)
+
+    def code_for_batch(self, syms: np.ndarray, a: np.ndarray) -> np.ndarray:
+        t = self.tables
+        syms = np.asarray(syms, dtype=np.int64)
+        a = np.asarray(a, dtype=np.int64)
+        out = np.empty(syms.shape, dtype=np.int64)
+        # Per-symbol segment search, vectorized over the (few) segment rows.
+        lo = t.seg_off[syms].astype(np.int64)
+        hi = t.seg_off[syms + 1].astype(np.int64)
+        max_rows = int((hi - lo).max()) if syms.size else 0
+        row = lo.copy()
+        for d in range(1, max_rows):
+            cand = lo + d
+            ok = (cand < hi) & (t.seg_cum[np.minimum(cand, len(t.seg_cum) - 1)] <= a)
+            row = np.where(ok, cand, row)
+        out = t.seg_start[row] + (a - t.seg_cum[row])
+        return out
+
+    # -- CDF layout (for the arithmetic/rANS baselines which need
+    #    contiguous intervals) ------------------------------------------
+    @property
+    def cdf(self) -> np.ndarray:
+        if self._cdf is None:
+            self._cdf = np.concatenate(
+                [[0], np.cumsum(self.tables.k_of.astype(np.int64))])
+        return self._cdf
+
+    # -- direct 2**16 LUT (the "decoding map" variant of Fig 11) ---------
+    def build_lut(self):
+        if self._lut_sym is None:
+            codes = np.arange(TOTAL, dtype=np.int64)
+            sym, a, _ = self.inv_translate_batch(codes)
+            self._lut_sym = sym.astype(np.int32)
+            self._lut_a = a.astype(np.int64)
+        return self._lut_sym, self._lut_a
+
+    def entropy_bits(self) -> float:
+        p = self.tables.k_of.astype(np.float64) / TOTAL
+        return float(-(p * np.log2(p)).sum())
+
+
+class UniformCoder:
+    """Exactly-uniform G-ary coder; closed-form in both directions.
+
+    Segment ``j`` owns codes ``{c : (c*G) >> 16 == j}``, i.e.
+    ``[ceil(j*2^16/G), ceil((j+1)*2^16/G))``.  Used for the second-level
+    quantization of the numeric model (§4.2) and raw escape payloads.
+    """
+
+    __slots__ = ("G",)
+
+    def __init__(self, G: int):
+        if not (1 <= G <= TOTAL):
+            raise ValueError(f"uniform coder arity out of range: {G}")
+        self.G = int(G)
+
+    def _lo(self, j: int) -> int:
+        return -((-j * TOTAL) // self.G)  # ceil(j*2^16/G)
+
+    def k(self, j: int) -> int:
+        return self._lo(j + 1) - self._lo(j)
+
+    def inv_translate(self, code: int) -> Tuple[int, int, int]:
+        j = (code * self.G) >> TOTAL_BITS
+        lo = self._lo(j)
+        return j, code - lo, self._lo(j + 1) - lo
+
+    def code_for(self, j: int, a: int) -> int:
+        return self._lo(j) + a
+
+    def inv_translate_batch(self, codes: np.ndarray):
+        codes = np.asarray(codes, dtype=np.int64)
+        j = (codes * self.G) >> TOTAL_BITS
+        lo = -((-j * TOTAL) // self.G)
+        hi = -((-(j + 1) * TOTAL) // self.G)
+        return j, codes - lo, hi - lo
+
+    def code_for_batch(self, j: np.ndarray, a: np.ndarray) -> np.ndarray:
+        j = np.asarray(j, dtype=np.int64)
+        return -((-j * TOTAL) // self.G) + np.asarray(a, dtype=np.int64)
+
+    def entropy_bits(self) -> float:
+        return float(np.log2(self.G))

@@ -1,0 +1,147 @@
+"""Delayed coding (§5, Algorithms 4 & 5): fixed-length near-entropy coding.
+
+Every slot (interval) is encoded with a full 16-bit code, but an interval of
+length ``k`` has ``k`` admissible codes, and the *choice among them* is a
+mixed-radix digit that carries the codes of later, "marked" (virtual) slots.
+
+Encode = two passes over a block of slots:
+  1. *Marking* (Alg. 4 step 1): a slot is virtual iff the option counter has
+     reached ``lam`` (default 2**16) — its 16-bit code will be stored in the
+     option choices of the preceding slots, then the counter gives back 16
+     bits of capacity.
+  2. *Filling* (Alg. 4 step 2): walk slots from the end, peeling mixed-radix
+     digits ``a = data % k`` off the pending virtual payload and emitting
+     ``code_for(sym, a)``; virtual slots push their code into ``data`` instead
+     of the physical stream.
+
+Decode (Alg. 5) is a single forward pass: fetch a 16-bit code (from the
+stream, or from the virtual accumulator when ``V_size`` crossed ``lam``),
+O(1)-inv-translate it, and fold its option digit back into ``V_info``.
+
+This module is the *reference* (tuple-at-a-time, exact Python ints).
+``repro.core.vectorized`` holds the batched numpy codec and
+``repro.kernels.delayed_decode`` the Pallas TPU kernel; both are verified
+against this implementation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, List, Sequence, Tuple
+
+from .coders import TOTAL, TOTAL_BITS
+
+LAMBDA_DEFAULT = TOTAL  # random-access mode (§5.7); archive mode uses larger
+
+
+@dataclasses.dataclass
+class Slot:
+    """One interval to encode: option count ``k`` and the symbol's code map.
+
+    ``code_for(a)`` must return the ``a``-th admissible 16-bit code of the
+    symbol (0 <= a < k); non-continuous option sets (§5.6) are handled by the
+    coder's own option-index mapping.
+    """
+
+    k: int
+    code_for: Callable[[int], int]
+
+
+def encode_block(slots: Sequence[Slot], lam: int = LAMBDA_DEFAULT) -> List[int]:
+    """Encode one block of slots into a list of 16-bit codes (Algorithm 4)."""
+    if lam < TOTAL:
+        raise ValueError("lambda must be >= 2**16 (Theorem 2)")
+    s = len(slots)
+    # ---- step 1: mark -------------------------------------------------
+    virtual = [False] * s
+    size = 1
+    for i, sl in enumerate(slots):
+        if size >= lam:
+            virtual[i] = True
+            size >>= TOTAL_BITS
+        if not (1 <= sl.k <= TOTAL):
+            raise ValueError(f"slot {i}: bad option count {sl.k}")
+        size *= sl.k
+    # ---- step 2: fill from the end ------------------------------------
+    data = 0
+    out_rev: List[int] = []
+    for i in range(s - 1, -1, -1):
+        k = slots[i].k
+        a = data % k
+        data //= k
+        c = slots[i].code_for(a)
+        assert 0 <= c < TOTAL
+        if virtual[i]:
+            data = (data << TOTAL_BITS) + c
+        else:
+            out_rev.append(c)
+    assert data == 0, "virtual payload not fully consumed (uniqueness, App. D)"
+    return out_rev[::-1]
+
+
+class BlockDecoder:
+    """Streaming decoder for one block (Algorithm 5).
+
+    The caller drives it coder-by-coder because slot coders can depend on
+    previously decoded symbols (composite models, structure learning):
+
+        dec = BlockDecoder(codes)
+        sym = dec.next_symbol(coder)   # repeatedly, with the right coder
+    """
+
+    __slots__ = ("codes", "pos", "v_info", "v_size", "pending", "lam")
+
+    def __init__(self, codes: Sequence[int], lam: int = LAMBDA_DEFAULT):
+        self.codes = codes
+        self.pos = 0
+        self.v_info = 0
+        self.v_size = 1
+        self.pending = -1  # next virtual code, if any
+        self.lam = lam
+
+    def next_symbol(self, coder) -> int:
+        if self.pending >= 0:
+            code = self.pending
+            self.pending = -1
+        else:
+            code = self.codes[self.pos]
+            self.pos += 1
+        sym, a, k = coder.inv_translate(code)
+        self.v_info = self.v_info * k + a
+        self.v_size = self.v_size * k
+        if self.v_size >= self.lam:
+            self.pending = self.v_info & (TOTAL - 1)
+            self.v_info >>= TOTAL_BITS
+            self.v_size >>= TOTAL_BITS
+        return sym
+
+    def codes_consumed(self) -> int:
+        return self.pos
+
+
+def decode_block(codes: Sequence[int], coders: Sequence, lam: int = LAMBDA_DEFAULT
+                 ) -> Tuple[List[int], int]:
+    """Decode a fixed, known sequence of slot coders. Returns (symbols, used)."""
+    dec = BlockDecoder(codes, lam)
+    syms = [dec.next_symbol(c) for c in coders]
+    return syms, dec.codes_consumed()
+
+
+def encode_symbols(syms: Sequence[int], coders: Sequence,
+                   lam: int = LAMBDA_DEFAULT) -> List[int]:
+    """Convenience: encode a symbol per coder (fixed-slot blocks)."""
+    slots = [Slot(k=c.k(sym),
+                  code_for=(lambda a, c=c, sym=sym: c.code_for(sym, a)))
+             for sym, c in zip(syms, coders)]
+    return encode_block(slots, lam)
+
+
+def wasted_bits(slots_k: Sequence[int], lam: int = LAMBDA_DEFAULT) -> float:
+    """Bits wasted by a block = log2 of the final option counter (§5.7)."""
+    import math
+    size = 1
+    for k in slots_k:
+        if size >= lam:
+            size >>= TOTAL_BITS
+        size *= k
+    return math.log2(size)

@@ -1,0 +1,147 @@
+"""Canonical Huffman coding — the Raman-style static-dictionary baseline (§6).
+
+Raman & Swart concatenate per-column Huffman codes into variable-length
+tuples.  We reproduce the essential behaviour the paper measures against:
+variable-length codes (slower, branchier decode), a *static* dictionary (no
+unseen-value support without an escape), and near-entropy-per-symbol sizes on
+low-entropy columns (where it beats fixed 16-bit delayed codes, Fig. 9).
+
+Codes are canonical (sorted by length then symbol), decoded MSB-first with
+the first-code/offset table — O(max_len) per symbol.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+MAX_LEN = 32
+
+
+class BitWriter:
+    __slots__ = ("buf", "acc", "nbits")
+
+    def __init__(self):
+        self.buf = bytearray()
+        self.acc = 0
+        self.nbits = 0
+
+    def write(self, value: int, length: int) -> None:
+        self.acc = (self.acc << length) | (value & ((1 << length) - 1))
+        self.nbits += length
+        while self.nbits >= 8:
+            self.nbits -= 8
+            self.buf.append((self.acc >> self.nbits) & 0xFF)
+        self.acc &= (1 << self.nbits) - 1
+
+    def getvalue(self) -> Tuple[bytes, int]:
+        total_bits = len(self.buf) * 8 + self.nbits
+        if self.nbits:
+            tail = (self.acc << (8 - self.nbits)) & 0xFF
+            return bytes(self.buf) + bytes([tail]), total_bits
+        return bytes(self.buf), total_bits
+
+
+class BitReader:
+    __slots__ = ("data", "pos")
+
+    def __init__(self, data: bytes, bit_offset: int = 0):
+        self.data = data
+        self.pos = bit_offset
+
+    def peek(self, length: int) -> int:
+        out = 0
+        for i in range(length):
+            p = self.pos + i
+            bit = (self.data[p >> 3] >> (7 - (p & 7))) & 1 if (p >> 3) < len(self.data) else 0
+            out = (out << 1) | bit
+        return out
+
+    def skip(self, length: int) -> None:
+        self.pos += length
+
+
+class HuffmanCode:
+    """Canonical Huffman code for one column."""
+
+    def __init__(self, counts: np.ndarray):
+        counts = np.asarray(counts, dtype=np.float64)
+        n = counts.size
+        if n == 1:
+            lengths = np.array([1])
+        else:
+            # package-merge-free: plain Huffman then clamp (clamping is rare)
+            heap = [(float(max(c, 1e-9)), i, None) for i, c in enumerate(counts)]
+            heapq.heapify(heap)
+            forest = {}
+            nxt = n
+            while len(heap) > 1:
+                a = heapq.heappop(heap)
+                b = heapq.heappop(heap)
+                forest[nxt] = (a[1], b[1])
+                heapq.heappush(heap, (a[0] + b[0], nxt, None))
+                nxt += 1
+            lengths = np.zeros(n, dtype=np.int64)
+            stack = [(heap[0][1], 0)]
+            while stack:
+                node, d = stack.pop()
+                if node < n:
+                    lengths[node] = max(d, 1)
+                else:
+                    l, r = forest[node]
+                    stack.append((l, d + 1))
+                    stack.append((r, d + 1))
+            lengths = np.minimum(lengths, MAX_LEN)
+            # repair Kraft inequality if clamping broke it
+            while (2.0 ** (-lengths.astype(np.float64))).sum() > 1.0:
+                lengths[np.argmin(lengths)] += 1
+        self.lengths = lengths
+        # canonical assignment
+        order = np.lexsort((np.arange(n), lengths))
+        codes = np.zeros(n, dtype=np.int64)
+        code = 0
+        prev_len = int(lengths[order[0]])
+        for idx in order:
+            L = int(lengths[idx])
+            code <<= (L - prev_len)
+            codes[idx] = code
+            code += 1
+            prev_len = L
+        self.codes = codes
+        # decode tables: for each length, first canonical code and base index
+        self.order = order
+        max_l = int(lengths.max())
+        self.first_code = np.full(max_l + 2, 1 << 62, dtype=np.int64)
+        self.base_index = np.zeros(max_l + 2, dtype=np.int64)
+        pos = 0
+        for L in range(1, max_l + 1):
+            sel = lengths[order] == L
+            cnt = int(sel.sum())
+            if cnt:
+                self.first_code[L] = int(codes[order[pos]])
+                self.base_index[L] = pos
+            pos += cnt
+        self.max_len = max_l
+
+    def encode(self, sym: int, bw: BitWriter) -> None:
+        bw.write(int(self.codes[sym]), int(self.lengths[sym]))
+
+    def decode(self, br: BitReader) -> int:
+        window = br.peek(self.max_len)
+        for L in range(1, self.max_len + 1):
+            prefix = window >> (self.max_len - L)
+            fc = int(self.first_code[L])
+            if fc <= prefix:
+                nxt = int(self.first_code[L + 1]) << 1 if L < self.max_len else 1 << 62
+                # count of codes at this length bounds prefix - fc
+                idx = int(self.base_index[L]) + (prefix - fc)
+                if idx < len(self.order) and int(self.lengths[self.order[idx]]) == L \
+                        and int(self.codes[self.order[idx]]) == prefix:
+                    br.skip(L)
+                    return int(self.order[idx])
+        raise ValueError("bad Huffman stream")
+
+    def mean_bits(self, probs: np.ndarray) -> float:
+        return float((probs * self.lengths).sum())

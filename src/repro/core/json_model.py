@@ -1,0 +1,164 @@
+"""JSON node model (Appendix E.1): semantic compression of JSON collections.
+
+Each node of the (learned) JSON schema tree carries:
+  * an *existence* model (2-ary categorical) when the node is optional,
+  * a *type* model (categorical over the types observed at this path),
+  * per-type attribute models (categorical for strings/bools, two-level
+    numeric for ints/floats),
+  * sub-models for objects (children by key) and arrays (length model +
+    element model).
+
+Objects that deviate from the learned schema escape gracefully (unseen keys
+are carried through a categorical escape with their JSON text), preserving
+the semantic-model property that unseen data stays encodable.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional, Sequence
+
+from .delayed import BlockDecoder
+from .models import BlockEncoder, CategoricalModel, NumericModel
+
+_TYPES = ("null", "bool", "int", "float", "str", "object", "array")
+
+
+def _type_of(v: Any) -> str:
+    if v is None:
+        return "null"
+    if isinstance(v, bool):
+        return "bool"
+    if isinstance(v, int):
+        return "int"
+    if isinstance(v, float):
+        return "float"
+    if isinstance(v, str):
+        return "str"
+    if isinstance(v, dict):
+        return "object"
+    return "array"
+
+
+class JsonNodeModel:
+    """Model for one schema-tree node, built from sample values at the path."""
+
+    def __init__(self, values: Sequence[Any], present: int, total: int):
+        self.optional = present < total
+        if self.optional:
+            self.exist = CategoricalModel(
+                [True] * max(present, 1) + [False] * max(total - present, 1))
+        types = [_type_of(v) for v in values] or ["null"]
+        self.type_model = CategoricalModel(types)
+        self.by_type: Dict[str, Any] = {}
+        for t in set(types):
+            tv = [v for v in values if _type_of(v) == t]
+            if t == "bool":
+                self.by_type[t] = CategoricalModel([bool(v) for v in tv])
+            elif t == "int":
+                self.by_type[t] = NumericModel([int(v) for v in tv],
+                                               precision=1, integer=True)
+            elif t == "float":
+                self.by_type[t] = NumericModel([float(v) for v in tv],
+                                               precision=1e-6)
+            elif t == "str":
+                self.by_type[t] = CategoricalModel([str(v) for v in tv])
+            elif t == "object":
+                keys: Dict[str, List[Any]] = {}
+                for obj in tv:
+                    for k2, v2 in obj.items():
+                        keys.setdefault(k2, []).append(v2)
+                self.by_type[t] = {
+                    k2: JsonNodeModel(vals, present=len(vals), total=len(tv))
+                    for k2, vals in sorted(keys.items())}
+                self._known_keys = CategoricalModel(
+                    [k2 for obj in tv for k2 in obj] or [""])
+            elif t == "array":
+                lens = [len(v) for v in tv]
+                self.by_type[t] = (
+                    NumericModel(lens or [0], precision=1, integer=True),
+                    JsonNodeModel([x for v in tv for x in v],
+                                  present=1, total=1))
+
+    # ------------------------------------------------------------------
+    def encode(self, v: Any, enc: BlockEncoder, present: bool = True) -> None:
+        if self.optional:
+            self.exist.encode_value(bool(present), enc)
+            if not present:
+                return
+        t = _type_of(v)
+        self.type_model.encode_value(t, enc)
+        m = self.by_type.get(t)
+        if t == "null" or m is None:
+            if m is None:  # type unseen at fit: escape via the type model's
+                # categorical escape already emitted the tag; carry JSON text
+                CategoricalModel([""]).encode_value(json.dumps(v), enc)
+            return
+        if t in ("bool", "int", "float", "str"):
+            m.encode_value(v if t != "bool" else bool(v), enc)
+        elif t == "object":
+            for k2, child in m.items():
+                child.encode(v.get(k2), enc, present=(k2 in v))
+            # unseen keys escape as (key, json) pairs, count-prefixed
+            extra = [k2 for k2 in v if k2 not in m]
+            cnt = NumericModel([0], precision=1, integer=True)
+            cnt.encode_value(len(extra), enc)
+            for k2 in extra:
+                self._known_keys.encode_value(k2, enc)
+                CategoricalModel([""]).encode_value(json.dumps(v[k2]), enc)
+        else:  # array
+            len_m, item_m = m
+            len_m.encode_value(len(v), enc)
+            for x in v:
+                item_m.encode(x, enc)
+
+    def decode(self, dec: BlockDecoder) -> Any:
+        if self.optional:
+            if not self.exist.decode_value(dec):
+                return _MISSING
+        t = self.type_model.decode_value(dec)
+        m = self.by_type.get(t)
+        if t == "null":
+            return None
+        if m is None:
+            return json.loads(CategoricalModel([""]).decode_value(dec))
+        if t in ("bool", "int", "float", "str"):
+            return m.decode_value(dec)
+        if t == "object":
+            out = {}
+            for k2, child in m.items():
+                got = child.decode(dec)
+                if got is not _MISSING:
+                    out[k2] = got
+            cnt = NumericModel([0], precision=1, integer=True)
+            for _ in range(cnt.decode_value(dec)):
+                k2 = self._known_keys.decode_value(dec)
+                out[k2] = json.loads(CategoricalModel([""]).decode_value(dec))
+            return out
+        len_m, item_m = m
+        return [item_m.decode(dec) for _ in range(len_m.decode_value(dec))]
+
+
+class _Missing:
+    __slots__ = ()
+
+
+_MISSING = _Missing()
+
+
+class JsonCodec:
+    """Collection-level facade: fit on sample objects, encode/decode each."""
+
+    def __init__(self, samples: Sequence[Any]):
+        self.root = JsonNodeModel(list(samples), present=len(samples),
+                                  total=len(samples))
+
+    def encode(self, obj: Any):
+        from . import delayed
+        enc = BlockEncoder()
+        self.root.encode(obj, enc)
+        return delayed.encode_block(enc.slots)
+
+    def decode(self, codes) -> Any:
+        dec = BlockDecoder(list(codes))
+        return self.root.decode(dec)

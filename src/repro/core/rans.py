@@ -1,0 +1,101 @@
+"""rANS baseline (the paper's §6.3 ANS/FSE comparison point).
+
+Standard range-ANS with 16-bit stream renormalization over the same 16-bit
+integer probabilities as delayed coding.  A notable property: rANS only needs
+a bijection ``slot <-> (symbol, option a in [0, k))`` over the 2**16 code
+space — so Blitzcrank's alias layout (O(1) inverse) plugs in directly, and we
+also provide the contiguous-CDF + binary-search variant (the classic
+implementation) so benchmarks can separate layout effects from coder effects,
+mirroring the solid/dotted lines of Figure 11.
+
+State invariant: x in [2**16, 2**32) between symbols; streamed words are 16
+bits.  Encoding walks the block in reverse (LIFO), decoding forward.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .coders import TOTAL, TOTAL_BITS, DiscreteCoder, UniformCoder
+
+_LOW = TOTAL          # 2**16
+_MASK = TOTAL - 1
+
+
+def encode_block(syms: Sequence[int], coders: Sequence) -> List[int]:
+    """Encode one block; returns the 16-bit word stream (decode order)."""
+    x = _LOW
+    words: List[int] = []
+    for sym, coder in zip(reversed(syms), list(coders)[::-1]):
+        k = coder.k(sym)
+        # renormalize so the decoder's lower-bound invariant holds
+        while x >= (k << TOTAL_BITS):
+            words.append(x & _MASK)
+            x >>= TOTAL_BITS
+        x = ((x // k) << TOTAL_BITS) | coder.code_for(sym, x % k)
+    words.append(x & _MASK)
+    words.append((x >> TOTAL_BITS) & _MASK)
+    return words[::-1]
+
+
+def decode_block(words: Sequence[int], coders: Sequence) -> Tuple[List[int], int]:
+    """Decode; returns (symbols, words consumed)."""
+    x = (words[0] << TOTAL_BITS) | words[1]
+    pos = 2
+    out: List[int] = []
+    for coder in coders:
+        slot = x & _MASK
+        sym, a, k = coder.inv_translate(slot)  # O(1) via the alias layout
+        out.append(sym)
+        x = k * (x >> TOTAL_BITS) + a
+        while x < _LOW:
+            x = (x << TOTAL_BITS) | words[pos]
+            pos += 1
+    return out, pos
+
+
+def decode_block_cdf(words: Sequence[int], coders: Sequence) -> Tuple[List[int], int]:
+    """Classic rANS decode: binary search in the contiguous CDF (O(log N))."""
+    x = (words[0] << TOTAL_BITS) | words[1]
+    pos = 2
+    out: List[int] = []
+    for coder in coders:
+        slot = x & _MASK
+        if isinstance(coder, UniformCoder):
+            sym = (slot * coder.G) >> TOTAL_BITS
+            lo = -((-sym * TOTAL) // coder.G)
+            hi = -((-(sym + 1) * TOTAL) // coder.G)
+            a, k = slot - lo, hi - lo
+        else:
+            cdf = coder.cdf
+            sym = int(np.searchsorted(cdf, slot, side="right")) - 1
+            a, k = slot - int(cdf[sym]), int(cdf[sym + 1] - cdf[sym])
+        out.append(int(sym))
+        x = k * (x >> TOTAL_BITS) + a
+        while x < _LOW:
+            x = (x << TOTAL_BITS) | words[pos]
+            pos += 1
+    return out, pos
+
+
+def encode_block_cdf(syms: Sequence[int], coders: Sequence) -> List[int]:
+    """Encoder paired with :func:`decode_block_cdf` (contiguous layout)."""
+    x = _LOW
+    words: List[int] = []
+    for sym, coder in zip(reversed(syms), list(coders)[::-1]):
+        if isinstance(coder, UniformCoder):
+            lo = -((-sym * TOTAL) // coder.G)
+            hi = -((-(sym + 1) * TOTAL) // coder.G)
+            L, k = lo, hi - lo
+        else:
+            cdf = coder.cdf
+            L, k = int(cdf[sym]), int(cdf[sym + 1] - cdf[sym])
+        while x >= (k << TOTAL_BITS):
+            words.append(x & _MASK)
+            x >>= TOTAL_BITS
+        x = ((x // k) << TOTAL_BITS) | (L + x % k)
+    words.append(x & _MASK)
+    words.append((x >> TOTAL_BITS) & _MASK)
+    return words[::-1]

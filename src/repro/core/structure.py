@@ -1,0 +1,93 @@
+"""Structure learning (§2.2, §3): greedy Bayesian-network column ordering.
+
+Determining the optimal ordering is NP-hard; following the paper (and Squish)
+we greedily append the column whose best (single-parent) conditional model
+minimizes the estimated compressed size given the columns already ordered.
+Learning runs on a random sample (default 2**15 rows, §6.2).
+
+Only categorical-like columns (categorical values, or numeric level-1 bucket
+ids) participate as parents; a conditional model is kept only when it beats
+the marginal by a margin that covers its own storage cost.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import Counter, defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def _entropy(counter: Counter, total: int) -> float:
+    h = 0.0
+    for c in counter.values():
+        p = c / total
+        h -= p * math.log2(p)
+    return h
+
+
+def discretize_column(values: Sequence, kind: str, max_card: int = 4096
+                      ) -> Optional[List]:
+    """Map a column to discrete ids for dependency estimation (or None)."""
+    if kind in ("cat", "int", "str"):
+        ids = list(values)
+    elif kind == "float":
+        v = np.asarray(values, dtype=np.float64)
+        lo, hi = float(v.min()), float(v.max())
+        if hi <= lo:
+            return None
+        ids = np.minimum(((v - lo) / (hi - lo) * 256).astype(np.int64), 255).tolist()
+    else:
+        return None
+    if len(set(ids)) > max_card:
+        return None
+    return ids
+
+
+def learn_order(columns: Dict[str, List], n_rows: int,
+                model_cost_weight: float = 16.0
+                ) -> Tuple[List[str], Dict[str, Optional[str]]]:
+    """Greedy ordering; returns (order, parent-of map).
+
+    ``columns``: name -> discretized ids (same length).  Columns that could
+    not be discretized should be omitted; they are appended unconditioned.
+    """
+    names = list(columns)
+    marginal_h = {c: _entropy(Counter(columns[c]), n_rows) for c in names}
+    cond_h: Dict[Tuple[str, str], float] = {}
+
+    def get_cond(child: str, parent: str) -> float:
+        key = (child, parent)
+        if key not in cond_h:
+            groups: Dict = defaultdict(Counter)
+            for pv, cv in zip(columns[parent], columns[child]):
+                groups[pv][cv] += 1
+            h = 0.0
+            distinct = 0
+            for pv, cnt in groups.items():
+                tot = sum(cnt.values())
+                h += tot / n_rows * _entropy(cnt, tot)
+                distinct += len(cnt)
+            # charge an approximate model cost (bits per table entry)
+            h += model_cost_weight * distinct / n_rows
+            cond_h[key] = h
+        return cond_h[key]
+
+    order: List[str] = []
+    parents: Dict[str, Optional[str]] = {}
+    remaining = set(names)
+    while remaining:
+        best_c, best_bits, best_p = None, None, None
+        for c in sorted(remaining):
+            bits, parent = marginal_h[c], None
+            for p in order:
+                hb = get_cond(c, p)
+                if hb < bits * 0.95:  # must beat the marginal meaningfully
+                    bits, parent = hb, p
+            if best_bits is None or bits < best_bits:
+                best_c, best_bits, best_p = c, bits, parent
+        order.append(best_c)
+        parents[best_c] = best_p
+        remaining.discard(best_c)
+    return order, parents

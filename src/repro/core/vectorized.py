@@ -1,0 +1,138 @@
+"""Batched delayed coding over fixed-slot schemas (numpy, exact).
+
+The paper decodes one tuple at a time on a CPU; the TPU-native restructuring
+(DESIGN.md §2) observes that the virtual-bits chain is sequential only
+*within* a tuple and vectorizes *across* tuples.  This module is the host-side
+(numpy) version of that layout and the oracle for the Pallas kernels:
+
+* every tuple has the same ``S`` slots (a fixed tabular schema);
+* slot ``s`` of all tuples is coded by the same coder (Discrete/Uniform);
+* the compressed store is a ragged CSR pair ``(codes uint16[], offsets[N+1])``.
+
+All arithmetic is uint64 and exact; invariants (counter < 2**32) are the
+paper's (§5.1) and are asserted here.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .coders import TOTAL, TOTAL_BITS, DiscreteCoder, UniformCoder
+from .delayed import LAMBDA_DEFAULT
+
+_U64 = np.uint64
+_MASK16 = _U64(TOTAL - 1)
+_SH16 = _U64(TOTAL_BITS)
+
+
+def _k_of_batch(coder, syms: np.ndarray) -> np.ndarray:
+    if isinstance(coder, UniformCoder):
+        j = syms.astype(np.int64)
+        lo = -((-j * TOTAL) // coder.G)
+        hi = -((-(j + 1) * TOTAL) // coder.G)
+        return (hi - lo).astype(np.int64)
+    if isinstance(coder, DiscreteCoder):
+        return coder.tables.k_of[syms].astype(np.int64)
+    return np.array([coder.k(int(s)) for s in syms], dtype=np.int64)
+
+
+def encode_batch(syms: np.ndarray, coders: Sequence,
+                 lam: int = LAMBDA_DEFAULT) -> Tuple[np.ndarray, np.ndarray]:
+    """Encode ``syms[N, S]`` -> (codes uint16 flat, offsets int64[N+1]).
+
+    Vectorized Algorithm 4 across the N tuples.
+    """
+    syms = np.asarray(syms)
+    N, S = syms.shape
+    assert len(coders) == S
+    lam64 = _U64(lam)
+
+    # k[t, s]: option count of the chosen symbol in slot s.
+    k = np.empty((N, S), dtype=np.int64)
+    for s, c in enumerate(coders):
+        k[:, s] = _k_of_batch(c, syms[:, s])
+
+    # ---- step 1: mark (forward) ---------------------------------------
+    virt = np.zeros((N, S), dtype=bool)
+    size = np.ones(N, dtype=_U64)
+    for s in range(S):
+        hit = size >= lam64
+        virt[:, s] = hit
+        size = np.where(hit, size >> _SH16, size)
+        size = size * k[:, s].astype(_U64)
+    # invariant (§5.1): counter < 2**32 always
+    assert (size < _U64(1) << _U64(32)).all()
+
+    # ---- step 2: fill (backward) --------------------------------------
+    data = np.zeros(N, dtype=_U64)
+    codes_buf = np.zeros((N, S), dtype=np.uint16)
+    for s in range(S - 1, -1, -1):
+        ks = k[:, s].astype(_U64)
+        a = data % ks
+        data = data // ks
+        c = coders[s].code_for_batch(syms[:, s], a.astype(np.int64)).astype(_U64)
+        v = virt[:, s]
+        data = np.where(v, (data << _SH16) + c, data)
+        codes_buf[:, s] = c.astype(np.uint16)
+    assert (data == 0).all(), "virtual payload not consumed (App. D uniqueness)"
+
+    phys = ~virt
+    counts = phys.sum(axis=1)
+    offsets = np.zeros(N + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    codes = codes_buf[phys]  # row-major -> slot-ascending per tuple
+    return codes, offsets
+
+
+def decode_batch(codes: np.ndarray, offsets: np.ndarray, coders: Sequence,
+                 n_tuples: int | None = None, lam: int = LAMBDA_DEFAULT
+                 ) -> np.ndarray:
+    """Decode the CSR store back to ``syms[N, S]`` (vectorized Algorithm 5)."""
+    codes = np.asarray(codes, dtype=np.uint16)
+    offsets = np.asarray(offsets, dtype=np.int64)
+    N = (offsets.size - 1) if n_tuples is None else n_tuples
+    S = len(coders)
+    lam64 = _U64(lam)
+
+    syms = np.empty((N, S), dtype=np.int64)
+    cursor = offsets[:N].copy()
+    v_info = np.zeros(N, dtype=_U64)
+    v_size = np.ones(N, dtype=_U64)
+    pending = np.zeros(N, dtype=bool)
+    pend_code = np.zeros(N, dtype=_U64)
+    for s in range(S):
+        stream_code = codes[np.minimum(cursor, codes.size - 1)].astype(_U64)
+        code = np.where(pending, pend_code, stream_code)
+        cursor = cursor + (~pending)
+        sym, a, k = coders[s].inv_translate_batch(code.astype(np.int64))
+        syms[:, s] = sym
+        v_info = v_info * k.astype(_U64) + a.astype(_U64)
+        v_size = v_size * k.astype(_U64)
+        pending = v_size >= lam64
+        pend_code = v_info & _MASK16
+        v_info = np.where(pending, v_info >> _SH16, v_info)
+        v_size = np.where(pending, v_size >> _SH16, v_size)
+    if n_tuples is None:
+        assert (cursor == offsets[1:]).all(), "stream misalignment"
+    return syms
+
+
+def decode_select(codes: np.ndarray, offsets: np.ndarray, coders: Sequence,
+                  rows: np.ndarray, lam: int = LAMBDA_DEFAULT) -> np.ndarray:
+    """Random-access decode of a subset of tuples (the paper's point query).
+
+    Gathers each selected tuple's code run (lengths vary, padded to the max)
+    and runs the batched decoder on the gathered block.
+    """
+    rows = np.asarray(rows, dtype=np.int64)
+    starts = offsets[rows]
+    lens = offsets[rows + 1] - starts
+    L = int(lens.max()) if rows.size else 0
+    idx = starts[:, None] + np.arange(L)[None, :]
+    idx = np.minimum(idx, codes.size - 1)
+    block = codes[idx]  # [R, L]
+    flat = block.reshape(-1)
+    offs = np.arange(rows.size + 1, dtype=np.int64) * L
+    return decode_batch(flat, offs, coders, n_tuples=rows.size, lam=lam)

@@ -1,0 +1,114 @@
+"""Data pipeline: deterministic synthetic LM stream + compressed host store.
+
+* :class:`SyntheticLM` — Zipf-distributed tokens with order-1 Markov
+  structure (so models actually learn and compression has signal), generated
+  *deterministically per (seed, step)* — resume after restart replays the
+  exact batch sequence with no state files.
+* :class:`CompressedExampleStore` — the paper's OLTP analogue on the
+  training side (DESIGN.md §3.1): examples live Blitzcrank-compressed in
+  host memory (token ids = categorical columns via the vectorized codec);
+  the loader decompresses per batch.  Unseen token patterns stay encodable
+  (semantic models, not static dictionaries).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.core.coders import DiscreteCoder, quantize_freqs
+from repro.core.vectorized import decode_select, encode_batch
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        v = min(self.vocab, 32768)
+        self._v = v
+        base = 1.0 / np.arange(1, v + 1) ** self.zipf_a
+        self._p = base / base.sum()
+        # order-1 structure: each token biases the next towards t+1 mod v
+        self._shift = rng.integers(1, 64)
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, step))
+        B, S = self.global_batch, self.seq_len
+        toks = rng.choice(self._v, size=(B, S), p=self._p)
+        # Markov overlay: with prob .5 next token = prev + shift (learnable)
+        mask = rng.random((B, S)) < 0.5
+        toks[:, 1:] = np.where(mask[:, 1:],
+                               (toks[:, :-1] + self._shift) % self._v,
+                               toks[:, 1:])
+        labels = np.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+        return {"tokens": toks.astype(np.int32),
+                "labels": labels.astype(np.int32)}
+
+    def batches(self, start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+        step = start_step
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class CompressedExampleStore:
+    """Blitzcrank-compressed in-memory example store with random access.
+
+    Each example = one row of ``seq_len`` token columns; each column gets a
+    categorical model fitted on a sample (semantic: unseen ids escape).
+    """
+
+    def __init__(self, sample_tokens: np.ndarray, vocab: int,
+                 col_group: int = 1):
+        # fit one shared model per column-position group from the sample
+        S = sample_tokens.shape[1]
+        counts = np.bincount(sample_tokens.reshape(-1), minlength=vocab)
+        counts = counts.astype(np.float64) + 1e-3
+        self.coder = DiscreteCoder(quantize_freqs(counts))
+        self.S = S
+        self.coders = [self.coder] * S
+        self._codes = np.zeros(0, np.uint16)
+        self._offsets = np.zeros(1, np.int64)
+
+    def extend(self, tokens: np.ndarray) -> None:
+        codes, offsets = encode_batch(tokens.astype(np.int64), self.coders)
+        base = self._offsets[-1]
+        self._codes = np.concatenate([self._codes, codes])
+        self._offsets = np.concatenate(
+            [self._offsets, offsets[1:] + base])
+
+    def __len__(self) -> int:
+        return self._offsets.size - 1
+
+    def get_rows(self, rows: np.ndarray) -> np.ndarray:
+        return decode_select(self._codes, self._offsets, self.coders,
+                             rows).astype(np.int32)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self._codes.nbytes + self._offsets.nbytes)
+
+    def raw_nbytes(self, itemsize: int = 4) -> int:
+        return len(self) * self.S * itemsize
+
+
+def batches_from_store(store: CompressedExampleStore, batch: int,
+                       seed: int = 0, start_step: int = 0
+                       ) -> Iterator[Dict[str, np.ndarray]]:
+    step = start_step
+    n = len(store)
+    while True:
+        rng = np.random.default_rng((seed, step))
+        rows = rng.integers(0, n, batch)
+        toks = store.get_rows(rows)
+        labels = np.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+        yield {"tokens": toks, "labels": labels.astype(np.int32)}
+        step += 1

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: batched delayed-coding decode (Algorithm 5).
+
+The paper's CPU decoder is a scalar loop; the TPU restructuring
+(DESIGN.md §2) observes the virtual-bits chain is sequential only *within*
+a tuple, so a VMEM tile holds a block of tuples and the kernel unrolls the
+slot chain across the whole tile:
+
+* the mixed-radix accumulator update ``V_info = V_info*k + a`` needs no
+  division and stays < 2**32 (paper §5.1 invariant), so uint32 lane
+  arithmetic is *exact*;
+* per-slot alias-table lookups are one-hot × table matmuls (MXU);
+* the "read from stream or virtual bits" choice is a select; the stream
+  cursor advance is a masked add, and the cursor read is a row-wise
+  one-hot dot (no gathers anywhere).
+
+Inputs are the dense per-tuple layout produced by the host encoder
+(``codes_dense[T, S]``, left-justified).  Tables: float32[S, M, 7].
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TOTAL_BITS = 16
+LAM = 1 << 16  # python literal; materialized inside the kernel
+BLOCK_T = 256
+
+
+def _delayed_kernel(m_bits: Tuple[int, ...], codes_ref, tables_ref, out_ref):
+    codes = codes_ref[...]                                  # [BT, S] int32
+    BT, S = codes.shape
+    tables = tables_ref[...]                                # [S, M, 7] f32
+    M = tables.shape[1]
+
+    v_info = jnp.zeros((BT,), jnp.uint32)
+    v_size = jnp.ones((BT,), jnp.uint32)
+    pending = jnp.zeros((BT,), bool)
+    pend_code = jnp.zeros((BT,), jnp.int32)
+    cursor = jnp.zeros((BT,), jnp.int32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
+
+    syms = []
+    for s in range(S):
+        # stream read: row-wise one-hot dot against the cursor (no gather)
+        sel = (cursor[:, None] == cols).astype(jnp.int32)
+        stream = jnp.sum(codes * sel, axis=1)
+        code = jnp.where(pending, pend_code, stream)
+        cursor = cursor + jnp.where(pending, 0, 1)
+
+        # alias lookup via one-hot matmul (exact in f32)
+        shift = TOTAL_BITS - m_bits[s]
+        p = code >> shift
+        low = code & ((1 << shift) - 1)
+        onehot = (p[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (1, M), 1)).astype(jnp.float32)
+        rows = jnp.dot(onehot, tables[s],
+                       preferred_element_type=jnp.float32)
+        hit = low < rows[:, 0].astype(jnp.int32)
+        sym = jnp.where(hit, rows[:, 1], rows[:, 2]).astype(jnp.int32)
+        a = code - jnp.where(hit, rows[:, 3], rows[:, 4]).astype(jnp.int32)
+        k = jnp.where(hit, rows[:, 5], rows[:, 6]).astype(jnp.uint32)
+        syms.append(sym)
+
+        # division-free mixed-radix update (uint32-exact, §5.1)
+        v_info = v_info * k + a.astype(jnp.uint32)
+        v_size = v_size * k
+        pending = v_size >= jnp.uint32(LAM)
+        pend_code = (v_info & jnp.uint32(0xFFFF)).astype(jnp.int32)
+        v_info = jnp.where(pending, v_info >> 16, v_info)
+        v_size = jnp.where(pending, v_size >> 16, v_size)
+
+    out_ref[...] = jnp.stack(syms, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("m_bits", "interpret"))
+def delayed_decode(codes_dense: jax.Array, tables: jax.Array,
+                   m_bits: Tuple[int, ...], interpret: bool = True
+                   ) -> jax.Array:
+    """codes int32[T, S] + tables f32[S, M, 7] -> syms int32[T, S]."""
+    T, S = codes_dense.shape
+    n_blocks = -(-T // BLOCK_T)
+    padded = n_blocks * BLOCK_T
+    codes_p = jnp.pad(codes_dense.astype(jnp.int32),
+                      ((0, padded - T), (0, 0)))
+    M = tables.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_delayed_kernel, tuple(m_bits)),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_T, S), lambda i: (i, 0)),
+            pl.BlockSpec((S, M, 7), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_T, S), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, S), jnp.int32),
+        interpret=interpret,
+    )(codes_p, tables)
+    return out[:T]

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only (TPU v5e
+is the compile *target*); on real TPUs callers pass ``interpret=False``.
+Helpers convert host-side coder objects into the dense device table layout.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coders import DiscreteCoder
+from . import ref as ref_lib
+from .alias_decode import alias_decode
+from .delayed_decode import delayed_decode
+from .flash_prefill import flash_prefill_attention
+from .kv_attention import kv_attention_int8
+
+__all__ = ["alias_decode", "delayed_decode", "kv_attention_int8",
+           "flash_prefill_attention", "pack_slot_tables", "dense_codes"]
+
+
+def pack_slot_tables(coders: Sequence[DiscreteCoder]
+                     ) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+    """Stack per-slot alias tables into [S, M_max, 7] (padded) + m_bits."""
+    tabs: List[np.ndarray] = []
+    mbits: List[int] = []
+    for c in coders:
+        t, m = ref_lib.pack_tables(c)
+        tabs.append(np.asarray(t))
+        mbits.append(m)
+    M = max(t.shape[0] for t in tabs)
+    out = np.zeros((len(tabs), M, 7), np.float32)
+    for i, t in enumerate(tabs):
+        out[i, :t.shape[0]] = t
+    return jnp.asarray(out), tuple(mbits)
+
+
+def dense_codes(codes: np.ndarray, offsets: np.ndarray, n_slots: int
+                ) -> np.ndarray:
+    """CSR (codes, offsets) -> dense [T, S] int32, left-justified."""
+    T = offsets.size - 1
+    out = np.zeros((T, n_slots), np.int32)
+    lens = (offsets[1:] - offsets[:-1]).astype(np.int64)
+    cols = np.arange(n_slots)[None, :]
+    mask = cols < lens[:, None]
+    idx = offsets[:-1, None] + np.minimum(cols, np.maximum(lens[:, None] - 1, 0))
+    out = np.where(mask, codes[idx], 0).astype(np.int32)
+    return out

@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+These mirror the numpy host codecs in :mod:`repro.core` but stay inside jnp
+so they can be jit-compiled and compared against kernel outputs on any
+backend.  Tests sweep shapes/dtypes and assert allclose/exact-equal between
+``kernels.ops`` and these references.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+TOTAL_BITS = 16
+TOTAL = 1 << TOTAL_BITS
+
+
+def pack_tables(coder) -> Tuple[jnp.ndarray, int]:
+    """Bucket-major decode table of a DiscreteCoder: [M, 7] float32.
+
+    Columns: threshold, sym_u, sym_v, ja, jb, k_u, k_v.  All magnitudes are
+    < 2**18, hence exactly representable in float32 (MXU-friendly one-hot
+    matmul lookups).
+    """
+    import numpy as np
+    t = coder.tables
+    k_u = t.k_of[t.sym_u].astype(np.int64)
+    k_v = t.k_of[t.sym_v].astype(np.int64)
+    tab = np.stack([t.threshold.astype(np.int64), t.sym_u, t.sym_v,
+                    t.ja, t.jb, k_u, k_v], axis=1).astype(np.float32)
+    return jnp.asarray(tab), int(t.m_bits)
+
+
+def alias_decode_ref(codes: jax.Array, table: jax.Array, m_bits: int
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """codes int32[N] -> (sym, a, k) int32 — Algorithm 6 / Inv-Translate."""
+    codes = codes.astype(jnp.int32)
+    shift = TOTAL_BITS - m_bits
+    p = codes >> shift
+    low = codes & ((1 << shift) - 1)
+    row = table[p]  # gather in the reference; one-hot matmul in the kernel
+    hit = low < row[:, 0].astype(jnp.int32)
+    sym = jnp.where(hit, row[:, 1], row[:, 2]).astype(jnp.int32)
+    a = codes - jnp.where(hit, row[:, 3], row[:, 4]).astype(jnp.int32)
+    k = jnp.where(hit, row[:, 5], row[:, 6]).astype(jnp.int32)
+    return sym, a, k
+
+
+def delayed_decode_ref(codes_dense: jax.Array, tables: jax.Array,
+                       m_bits: Tuple[int, ...]) -> jax.Array:
+    """Batched delayed decoding (Algorithm 5), division-free uint32 math.
+
+    codes_dense: int32[T, S] physical codes, left-justified per tuple.
+    tables: float32[S, M, 7] per-slot alias tables (padded to max M).
+    Returns syms int32[T, S].
+    """
+    T, S = codes_dense.shape
+    v_info = jnp.zeros((T,), jnp.uint32)
+    v_size = jnp.ones((T,), jnp.uint32)
+    pending = jnp.zeros((T,), bool)
+    pend_code = jnp.zeros((T,), jnp.int32)
+    cursor = jnp.zeros((T,), jnp.int32)
+    out = []
+    lam = jnp.uint32(TOTAL)
+    for s in range(S):
+        stream = jnp.take_along_axis(codes_dense, cursor[:, None],
+                                     axis=1)[:, 0]
+        code = jnp.where(pending, pend_code, stream)
+        cursor = cursor + jnp.where(pending, 0, 1)
+        sym, a, k = alias_decode_ref(code, tables[s], m_bits[s])
+        out.append(sym)
+        ku = k.astype(jnp.uint32)
+        v_info = v_info * ku + a.astype(jnp.uint32)   # exact: result < 2**32
+        v_size = v_size * ku
+        pending = v_size >= lam
+        pend_code = (v_info & jnp.uint32(0xFFFF)).astype(jnp.int32)
+        v_info = jnp.where(pending, v_info >> 16, v_info)
+        v_size = jnp.where(pending, v_size >> 16, v_size)
+    return jnp.stack(out, axis=1)
+
+
+def twolevel_dequant_ref(bucket: jax.Array, digit: jax.Array, vmin: float,
+                         p: float, G: int) -> jax.Array:
+    """Two-level numeric reconstruction (§4.2): v = vmin + (i*G + j + .5)p."""
+    q = bucket.astype(jnp.float32) * G + digit.astype(jnp.float32)
+    return vmin + (q + 0.5) * p
+
+
+def kv_attention_int8_ref(q: jax.Array, kq: jax.Array, vq: jax.Array,
+                          k_scale: jax.Array, v_scale: jax.Array,
+                          length: jax.Array) -> jax.Array:
+    """Decode attention over int8-quantized KV with per-(token, head) scales.
+
+    q: [B, H, D] (bf16/f32); kq/vq: int8[B, S, K, D];
+    k_scale/v_scale: f32[B, S, K]; length: [] valid cache length.
+    Returns [B, H, D] float32.
+    """
+    B, H, D = q.shape
+    _, S, K, _ = kq.shape
+    G = H // K
+    kf = kq.astype(jnp.float32) * k_scale[..., None]
+    vf = vq.astype(jnp.float32) * v_scale[..., None]
+    qf = q.reshape(B, K, G, D).astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, kf)
+    valid = jnp.arange(S) < length
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, vf)
+    return o.reshape(B, H, D)

@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh).
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 host-platform placeholder devices.
+
+For every runnable cell this driver:
+  1. builds the jitted step (train / prefill / decode) with full in/out
+     shardings on the requested mesh,
+  2. ``.lower().compile()`` — success proves the distribution config is
+     coherent (shardings consistent, collectives supported, memory fits),
+  3. records ``memory_analysis()`` + ``cost_analysis()`` + the collective
+     schedule parsed from the partitioned HLO into a per-cell JSON artifact
+     consumed by EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.analysis import roofline as rf
+from repro.configs import ARCH_IDS, SHAPES, SHAPES_BY_NAME, get_config, shape_applies
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, lower_cell
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             save_hlo: bool = False, layout: str = "tp", cfg=None) -> dict:
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = cfg or get_config(arch)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    if layout != "tp":
+        cell_id += f"__{layout}"
+    ok, why = shape_applies(cfg, shape)
+    if not ok:
+        rec = {"cell": cell_id, "status": "skipped", "reason": why}
+        (out_dir / f"{cell_id}.json").write_text(json.dumps(rec, indent=2))
+        print(f"[skip] {cell_id}: {why}")
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    try:
+        cell = build_cell(arch, shape, mesh, cfg=cfg, layout=layout)
+        with mesh:
+            lowered = lower_cell(cell)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        mem_stats = {}
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "alias_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    mem_stats[attr] = int(v)
+            live = (mem_stats.get("argument_size_in_bytes", 0)
+                    + mem_stats.get("temp_size_in_bytes", 0)
+                    + mem_stats.get("output_size_in_bytes", 0)
+                    - mem_stats.get("alias_size_in_bytes", 0))
+            mem_stats["bytes_per_device"] = live
+            mem_stats["peak"] = live
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        roof = rf.analyze(arch, shape_name, mesh_name, chips, cost, hlo,
+                          rf.model_flops_for(cfg, shape), mem_stats)
+        rec = {
+            "cell": cell_id, "status": "ok",
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "chips": chips,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "memory": mem_stats,
+            "cost": {k: cost.get(k) for k in
+                     ("flops", "bytes accessed", "transcendentals")
+                     if k in cost},
+            "roofline": roof.to_json(),
+        }
+        if save_hlo:
+            (out_dir / f"{cell_id}.hlo.txt").write_text(hlo)
+        print(f"[ok]   {cell_id}: lower {t_lower:.0f}s compile {t_compile:.0f}s "
+              f"flops/dev={roof.hlo_gflops:.0f}G "
+              f"bottleneck={roof.bottleneck}")
+    except Exception as e:  # noqa: BLE001 - record the failure, keep sweeping
+        rec = {"cell": cell_id, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-4000:]}
+        print(f"[FAIL] {cell_id}: {type(e).__name__}: {e}")
+    (out_dir / f"{cell_id}.json").write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--layout", default="tp", choices=["tp", "cp", "fsdp", "kvq", "noFSDP"])
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_fail = n_skip = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+                suffix = "" if args.layout == "tp" else f"__{args.layout}"
+                art = out_dir / f"{arch}__{shape}__{mesh_name}{suffix}.json"
+                if args.skip_existing and art.exists():
+                    rec = json.loads(art.read_text())
+                    if rec.get("status") in ("ok", "skipped"):
+                        continue
+                rec = run_cell(arch, shape, multi_pod, out_dir,
+                               save_hlo=args.save_hlo, layout=args.layout)
+                s = rec["status"]
+                n_ok += s == "ok"
+                n_fail += s == "error"
+                n_skip += s == "skipped"
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

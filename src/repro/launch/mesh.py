@@ -1,0 +1,21 @@
+"""Production meshes.  Defined as functions so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax call).
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e-256 pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips across DCN.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1-device mesh for CPU smoke runs (same code path, no sharding)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,196 @@
+"""Step builders + abstract input specs for every (arch × shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation).  ``build_cell`` assembles the jitted step
+with in/out shardings for a given mesh — used by the multi-pod dry-run, the
+trainer and the benchmarks alike.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.dist import partitioning as parts
+from repro.dist.sharding import ShardingRules, use_rules
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.train import optimizer as opt_lib
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract batch for one cell (the modality frontends are stubs)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    specs: Dict[str, Any] = {}
+    s_text = S
+    if cfg.family == "vlm" and cfg.n_prefix:
+        s_text = S - cfg.n_prefix
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_prefix, cfg.d_model), bf16)
+    if cfg.family == "audio":
+        specs["encoder_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder.n_ctx, cfg.encoder.d_model or cfg.d_model), bf16)
+    specs["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, s_text), i32)
+    return specs
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: tfm.init_params(cfg, k), key)
+
+
+def abstract_opt_state(params_shape):
+    return jax.eval_shape(opt_lib.init, params_shape)
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: tfm.init_decode_state(cfg, shape.global_batch, shape.seq_len))
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_lib.OptimizerConfig):
+    def train_step(params, opt_state, batch):
+        def loss_of(p):
+            return tfm.loss_fn(p, cfg, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(params)
+        new_params, new_opt, om = opt_lib.apply(opt_cfg, params, grads,
+                                                opt_state)
+        return new_params, new_opt, {"loss": loss, **metrics, **om}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        h, _ = tfm.forward(params, cfg, batch["tokens"],
+                           prefix_embeds=batch.get("prefix_embeds"),
+                           encoder_frames=batch.get("encoder_frames"))
+        return tfm.unembed(params, cfg, h[:, -1:])
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, state, batch):
+        return tfm.decode_step(params, cfg, state, batch["tokens"])
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly (mesh + shardings + jit)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    rules: ShardingRules
+    jitted: Any
+    args: Tuple[Any, ...]        # abstract args for .lower()
+    kind: str
+
+
+def rules_for(mesh, shape: ShapeConfig, layout: str = "tp") -> ShardingRules:
+    """Layouts:
+      'tp'  — baseline: Megatron-style TP over 'model' + DP/FSDP over 'data'
+      'cp'  — beyond-paper: context parallelism over 'model' (activations
+              sequence-sharded; no per-layer TP all-reduces; weights FSDP) —
+              motivated by the v5e napkin math in EXPERIMENTS.md §Perf.
+      'fsdp' — beyond-paper: batch over every mesh axis (1 row/device),
+              parameters fully sharded, per-layer weight gathers (ZeRO-3).
+    """
+    overrides = {}
+    if shape.kind == "decode":
+        # flash-decoding SP: shard the KV-cache sequence over 'model'
+        overrides["kv_seq"] = "model"
+        if layout == "noFSDP":
+            # serving holds weights TP-sharded only: no per-layer FSDP
+            # gathers in the step (§Perf iteration 3)
+            overrides["embed_p"] = None
+    if layout == "cp" and shape.kind in ("train", "prefill"):
+        overrides.update({
+            "heads": None, "kv_heads": None, "ff": None,
+            "seq": "model", "act_seq": "model",
+        })
+    if layout == "fsdp" and shape.kind in ("train", "prefill"):
+        axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+        overrides.update({
+            "batch": axes, "heads": None, "kv_heads": None, "ff": None,
+            "vocab": None, "embed_p": ("data", "model"),
+        })
+    return ShardingRules(mesh, overrides)
+
+
+def build_cell(arch: str, shape: ShapeConfig, mesh,
+               opt_cfg: Optional[opt_lib.OptimizerConfig] = None,
+               cfg: Optional[ModelConfig] = None,
+               layout: str = "tp") -> Cell:
+    cfg = cfg or get_config(arch)
+    rules = rules_for(mesh, shape, layout)
+    batch = input_specs(cfg, shape)
+    p_shape = abstract_params(cfg)
+    p_shard = parts.param_shardings(rules, p_shape)
+    b_shard = parts.batch_shardings(rules, batch)
+    rep = parts.replicated(rules)
+
+    with use_rules(rules):
+        if shape.kind == "train":
+            opt_cfg = opt_cfg or opt_lib.OptimizerConfig()
+            o_shape = abstract_opt_state(p_shape)
+            o_shard = opt_lib.OptState(
+                step=rep,
+                m=parts.param_shardings(rules, o_shape.m),
+                v=parts.param_shardings(rules, o_shape.v))
+            fn = make_train_step(cfg, opt_cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard,
+                               jax.tree.map(lambda _: rep, {
+                                   "loss": 0, "xent": 0, "aux": 0,
+                                   "tokens": 0, "grad_norm": 0, "lr": 0})),
+                donate_argnums=(0, 1))
+            args = (p_shape, o_shape, batch)
+        elif shape.kind == "prefill":
+            fn = make_prefill_step(cfg)
+            logits_shape = (shape.global_batch, 1, cfg.vocab)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard, b_shard),
+                out_shardings=rules.sharding(logits_shape, "batch", None,
+                                             "vocab"))
+            args = (p_shape, batch)
+        else:  # decode
+            s_shape = abstract_decode_state(cfg, shape)
+            s_shard = parts.state_shardings(rules, s_shape)
+            fn = make_decode_step(cfg)
+            logits_shape = (shape.global_batch, 1, cfg.vocab)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard, s_shard, b_shard),
+                out_shardings=(rules.sharding(logits_shape, "batch", None,
+                                              "vocab"), s_shard),
+                donate_argnums=(1,))
+            args = (p_shape, s_shape, batch)
+    return Cell(cfg=cfg, shape=shape, rules=rules, jitted=jitted,
+                args=args, kind=shape.kind)
+
+
+def lower_cell(cell: Cell):
+    with use_rules(cell.rules):
+        return cell.jitted.lower(*cell.args)

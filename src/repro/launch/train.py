@@ -1,0 +1,70 @@
+"""Training launcher.
+
+CPU smoke (reduced config, host mesh):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-9b --smoke \\
+      --steps 50 --ckpt-dir /tmp/ckpt
+
+Pod-scale configuration (on a real v5e pod this process runs per host; here
+the same flags drive the dry-run meshes):
+  PYTHONPATH=src python -m repro.launch.train --arch nemotron-4-15b \\
+      --shape train_4k --layout cp --dry-run
+"""
+
+import argparse
+import dataclasses
+import json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--layout", default="tp", choices=["tp", "cp", "fsdp"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny shape on the host mesh")
+    ap.add_argument("--compress-ckpt", action="store_true")
+    ap.add_argument("--watchdog-s", type=float, default=0.0)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile only (production mesh)")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        import pathlib
+        from repro.launch.dryrun import run_cell
+        out = pathlib.Path("results/dryrun")
+        out.mkdir(parents=True, exist_ok=True)
+        rec = run_cell(args.arch, args.shape, False, out, layout=args.layout)
+        print(json.dumps(rec.get("roofline", rec), indent=2, default=str))
+        return
+
+    from repro.configs import reduced_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.config import ShapeConfig
+    from repro.train.loop import Trainer, TrainerConfig
+
+    tc = TrainerConfig(arch=args.arch, shape=args.shape, steps=args.steps,
+                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                       layout=args.layout, compress_ckpt=args.compress_ckpt,
+                       watchdog_s=args.watchdog_s)
+    cfg = shape = mesh = None
+    if args.smoke:
+        cfg = reduced_config(args.arch)
+        shape = ShapeConfig("smoke", seq_len=64, global_batch=8, kind="train")
+        mesh = make_host_mesh()
+    else:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+    tr = Trainer(tc, mesh, cfg=cfg, shape=shape)
+    out = tr.run(resume=True)
+    for m in tr.metrics_log:
+        print(json.dumps(m))
+    print(f"done: {out['steps_done']} steps in {out['wall_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,174 @@
+"""Model configuration: one dataclass describes every supported family.
+
+Families: dense decoder LMs (GQA/RoPE), MoE, encoder-decoder (whisper),
+VLM (stub frontend + dense LM), SSM (xLSTM) and hybrid (attention ∥ SSM).
+A config is pure data; ``repro.models.transformer`` interprets it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int              # routed experts
+    top_k: int
+    n_shared: int = 0           # always-on shared experts (DeepSeekMoE)
+    d_expert: int = 0           # expert FFN width (0 -> use d_ff)
+    capacity_factor: float = 1.25
+    first_k_dense: int = 0      # leading dense layers (DeepSeekMoE uses 1)
+    aux_loss_weight: float = 0.01
+    quantize_dispatch: bool = False  # int8 expert all-to-all (§Perf)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    kind: str = "mamba"          # 'mamba' (hymba) | 'xlstm'
+    d_state: int = 16
+    conv_width: int = 4          # depthwise conv in mamba blocks (stub: 1x1)
+    mlstm_per_slstm: int = 7     # xLSTM [7:1] block ratio
+    chunk: int = 256             # chunkwise-parallel scan length
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    n_layers: int
+    n_ctx: int                   # encoder positions (whisper-tiny: 1500)
+    d_model: int = 0             # 0 -> same as decoder
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | audio | vlm | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0              # 0 -> d_model // n_heads
+    act: str = "swiglu"          # swiglu | relu2 | gelu
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    embed_scale: bool = False    # gemma-style sqrt(d_model) embedding scale
+
+    # attention pattern
+    attn_pattern: str = "global"  # global | local_global | local_mostly
+    window: int = 4096            # sliding-window size for local layers
+    attn_softcap: float = 0.0     # gemma2 attention logit softcap
+    final_softcap: float = 0.0    # gemma2 final logit softcap
+
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    frontend: Optional[str] = None   # 'audio' | 'vision' (stub embeddings)
+    n_prefix: int = 0                # frontend embedding positions in the seq
+
+    # substrate knobs (overridable per run)
+    dtype: str = "bfloat16"
+    remat: str = "block"             # none | block | full
+    scan_layers: bool = True
+    decode_tail: int = 256           # replicated KV write-tail length
+    kv_quant: bool = False           # int8 semantic KV pages (§Perf)
+    attn_f32_scores: bool = True     # f32 score chunks (False: bf16, §Perf)
+    attn_q_block: int = 1024         # chunked-attention query tile
+    attn_kv_chunk: int = 1024        # chunked-attention KV tile
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def layer_is_local(self, i: int) -> bool:
+        if self.attn_pattern == "local_global":
+            return i % 2 == 0
+        if self.attn_pattern == "local_mostly":
+            # hymba: global attention only at first / middle / last layer
+            return i not in (0, self.n_layers // 2, self.n_layers - 1)
+        return False
+
+    def sub_quadratic(self) -> bool:
+        """Whether long-context decode (500k) is supported (DESIGN.md §6)."""
+        return self.family in ("ssm", "hybrid")
+
+    def has_decoder(self) -> bool:
+        return True  # every assigned arch has an autoregressive decoder
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, L = self.d_model, self.n_layers
+        hd = self.head_dim
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        if self.act == "swiglu":
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        per_layer = attn + mlp + 2 * d
+        total = emb + L * per_layer
+        if self.moe is not None:
+            de = self.moe.d_expert or self.d_ff
+            ff_mult = 3 if self.act == "swiglu" else 2
+            expert = ff_mult * d * de
+            n_moe = L - self.moe.first_k_dense
+            total = emb + L * (attn + 2 * d) + \
+                self.moe.first_k_dense * mlp + \
+                n_moe * ((self.moe.n_experts + self.moe.n_shared) * expert +
+                         d * self.moe.n_experts)
+        if self.family == "ssm":
+            # xLSTM blocks replace attn+mlp with gated recurrent projections
+            total = emb + L * (8 * d * d // 2 + 2 * d)
+        if self.family == "hybrid" and self.ssm is not None:
+            total += L * (2 * d * self.ssm.d_state + d)
+        if self.encoder is not None:
+            enc_d = self.encoder.d_model or d
+            total += self.encoder.n_layers * (4 * enc_d * enc_d + 2 * enc_d * self.d_ff)
+            total += L * (2 * d * hd * self.n_kv_heads + d * hd * self.n_heads)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active (per-token) parameters — MoE uses top_k + shared experts."""
+        if self.moe is None:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        hd = self.head_dim
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        de = self.moe.d_expert or self.d_ff
+        ff_mult = 3 if self.act == "swiglu" else 2
+        active_ff = (self.moe.top_k + self.moe.n_shared) * ff_mult * d * de
+        return int(emb + L * (attn + 2 * d + active_ff +
+                              d * self.moe.n_experts))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applies(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether a (arch, shape) cell runs, and why not if skipped."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic():
+        return False, "long_500k needs sub-quadratic attention (DESIGN.md §6)"
+    return True, ""

@@ -1,0 +1,374 @@
+"""Core layers: RMSNorm, RoPE, chunked (flash-style) attention, MLPs.
+
+Attention never materializes the [S, S] score matrix: queries are processed
+in blocks and keys/values are scanned in chunks with an online softmax
+(Rabe–Staats / FlashAttention schedule), which is also the natural TPU
+formulation (VMEM-sized tiles).  Local (sliding-window), global, causal and
+cross attention all share one code path, with masks computed from position
+arithmetic per (q-block, kv-chunk) tile — never stored whole.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+_NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angle = positions[..., :, None, None].astype(jnp.float32) * freq  # [..,S,1,half]
+    cos, sin = jnp.cos(angle), jnp.sin(angle)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+# ---------------------------------------------------------------------------
+# Chunked attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    causal: bool = True
+    logit_cap: float = 0.0
+    q_block: int = 1024
+    kv_chunk: int = 1024
+    f32_scores: bool = True   # False: bf16 score/prob chunks (§Perf — halves
+    #                           the S²-sized HBM traffic; max/sum stay f32)
+
+
+def _tile_mask(q_pos, k_pos, spec: AttnSpec, kv_len_valid,
+               window) -> jax.Array:
+    """[bq, bk] mask for one tile, from position arithmetic only.
+
+    ``window`` may be a *traced* scalar (per-layer data inside a scanned
+    stack: local layers pass their window, global layers a huge value), or
+    None to skip window masking statically.
+    """
+    m = k_pos[None, :] < kv_len_valid
+    if spec.causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_positions: jax.Array, spec: AttnSpec,
+                      window=None,
+                      kv_len_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Online-softmax attention.
+
+    q: [B, Sq, H, D]; k/v: [B, Sk, K, D] with H = G*K (GQA).
+    q_positions: [Sq] absolute positions of the queries (decode offsets).
+    window: optional (possibly traced) sliding-window size.
+    kv_len_valid: number of valid KV entries (decode caches), default Sk.
+    Returns [B, Sq, H, D].
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    scale = D ** -0.5
+    qb = min(spec.q_block, Sq)
+    kc = min(spec.kv_chunk, Sk)
+    n_qb = -(-Sq // qb)
+    n_kc = -(-Sk // kc)
+    if kv_len_valid is None:
+        kv_len_valid = jnp.int32(Sk)
+
+    # pad Sq / Sk to multiples of the tiles
+    q = jnp.pad(q, ((0, 0), (0, n_qb * qb - Sq), (0, 0), (0, 0)))
+    qp = jnp.pad(q_positions, (0, n_qb * qb - Sq))
+    k = jnp.pad(k, ((0, 0), (0, n_kc * kc - Sk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, n_kc * kc - Sk), (0, 0), (0, 0)))
+
+    # [B, n_qb, qb, K, G, D] query tiles grouped per kv head
+    qt = q.reshape(B, n_qb, qb, K, G, D)
+    qpt = qp.reshape(n_qb, qb)
+    kt = k.reshape(B, n_kc, kc, K, D)
+    vt = v.reshape(B, n_kc, kc, K, D)
+
+    def q_tile(qi, q_pos_tile):
+        """qi: [B, qb, K, G, D]; returns [B, qb, K, G, D]."""
+        acc0 = jnp.zeros((B, qb, K, G, D), jnp.float32)
+        m0 = jnp.full((B, qb, K, G), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qb, K, G), jnp.float32)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            kc_i, vc_i, kidx = inp
+            k_pos = kidx * kc + jnp.arange(kc)
+            mask = _tile_mask(q_pos_tile, k_pos, spec, kv_len_valid, window)
+            if spec.f32_scores:
+                s = jnp.einsum("bqkgd,bckd->bqkgc", qi.astype(jnp.float32),
+                               kc_i.astype(jnp.float32)) * scale
+                s = softcap(s, spec.logit_cap)
+                s = jnp.where(mask[None, :, None, None, :], s, _NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                pv = jnp.einsum("bqkgc,bckd->bqkgd", p,
+                                vc_i.astype(jnp.float32))
+                l_add = p.sum(axis=-1)
+            else:
+                # bf16 score chunks end-to-end: the only S²-sized buffers
+                # (s, p) are bf16; reductions accumulate f32 on the fly.
+                s = jnp.einsum("bqkgd,bckd->bqkgc",
+                               (qi.astype(jnp.float32) * scale
+                                ).astype(jnp.bfloat16),
+                               kc_i.astype(jnp.bfloat16),
+                               preferred_element_type=jnp.bfloat16)
+                s = softcap(s, spec.logit_cap)
+                s = jnp.where(mask[None, :, None, None, :], s,
+                              jnp.bfloat16(_NEG_INF))
+                m_new = jnp.maximum(m, s.max(axis=-1).astype(jnp.float32))
+                p = jnp.exp(s.astype(jnp.float32) - m_new[..., None]
+                            ).astype(jnp.bfloat16)
+                pv = jnp.einsum("bqkgc,bckd->bqkgd", p,
+                                vc_i.astype(jnp.bfloat16),
+                                preferred_element_type=jnp.float32)
+                l_add = jnp.sum(p, axis=-1, dtype=jnp.float32)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + l_add
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l), None
+
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.moveaxis(kt, 1, 0), jnp.moveaxis(vt, 1, 0),
+             jnp.arange(n_kc)))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = jax.lax.map(lambda args: q_tile(*args),
+                      (jnp.moveaxis(qt, 1, 0), qpt))   # [n_qb, B, qb, K, G, D]
+    out = jnp.moveaxis(out, 0, 1).reshape(B, n_qb * qb, H, D)
+    return out[:, :Sq].astype(v.dtype)
+
+
+def _partial_decode_attn(q4, k, v, k_pos, position, spec: AttnSpec,
+                         window, valid_extra=None):
+    """Unnormalized online-softmax piece over one KV buffer.
+
+    q4: [B, K, G, D] (pre-scaled); k/v: [B, S, K, D] (any dtype; int8 KV is
+    dequantized by the caller folding scales into q or p).
+    Returns (m [B,K,G], l [B,K,G], acc [B,K,G,D]) in float32.
+    """
+    s = jnp.einsum("bkgd,bskd->bkgs", q4, k.astype(jnp.float32))
+    s = softcap(s, spec.logit_cap)
+    valid = k_pos <= position
+    if window is not None:
+        valid &= k_pos > position - window
+    valid = valid[None, None, None, :]
+    if valid_extra is not None:
+        valid &= valid_extra[None, None, None, :]
+    s = jnp.where(valid, s, _NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid, p, 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return m, l, acc
+
+
+def merge_partial_attn(parts):
+    """Combine (m, l, acc) pieces into the final [B, K, G, D] output."""
+    m = parts[0][0]
+    for p in parts[1:]:
+        m = jnp.maximum(m, p[0])
+    l_tot = 0.0
+    acc_tot = 0.0
+    for (mi, li, acci) in parts:
+        c = jnp.exp(mi - m)
+        l_tot = l_tot + li * c
+        acc_tot = acc_tot + acci * c[..., None]
+    return acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]
+
+
+def decode_attention_paged(q: jax.Array, k_pages, v_pages, k_tail, v_tail,
+                           position: jax.Array, base: jax.Array,
+                           spec: AttnSpec, window=None) -> jax.Array:
+    """Decode attention over (sequence-sharded pages, replicated tail).
+
+    The single-token write lands in the small replicated tail; pages are
+    immutable between flushes, so no sharded in-place update appears in the
+    step (the GSPMD full-rematerialization trap, EXPERIMENTS.md §Perf).
+    Pages hold positions [0, base); the tail holds [base, base+T).
+    """
+    B, _, H, D = q.shape
+    K = k_pages.shape[2]
+    G = H // K
+    q4 = q.reshape(B, K, G, D).astype(jnp.float32) * (D ** -0.5)
+    S = k_pages.shape[1]
+    page_pos = jnp.arange(S)
+    in_pages = page_pos < base
+    mp, lp, accp = _partial_decode_attn(
+        q4, k_pages, v_pages, page_pos, position, spec, window, in_pages)
+    T = k_tail.shape[1]
+    tail_pos = base + jnp.arange(T)
+    mt, lt, acct = _partial_decode_attn(
+        q4, k_tail, v_tail, tail_pos, position, spec, window)
+    o = merge_partial_attn([(mp, lp, accp), (mt, lt, acct)])
+    return o.reshape(B, 1, H, D).astype(v_tail.dtype)
+
+
+def _partial_decode_attn_quant(q4, kq, ks, vq, vs, k_pos, position,
+                               spec: AttnSpec, window, valid_extra=None):
+    """int8-KV variant: scales folded into scores/probabilities in-flight.
+
+    Pages dequantize to bf16 (not f32 — halves the conversion-buffer HBM
+    traffic, §Perf iteration 4); accumulation stays f32 via
+    preferred_element_type.
+    """
+    s = jnp.einsum("bkgd,bskd->bkgs", q4.astype(jnp.bfloat16),
+                   kq.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    s = s * jnp.moveaxis(ks, 1, 2)[:, :, None, :]      # [B,K,1,S]
+    s = softcap(s, spec.logit_cap)
+    valid = k_pos <= position
+    if window is not None:
+        valid &= k_pos > position - window
+    valid = valid[None, None, None, :]
+    if valid_extra is not None:
+        valid &= valid_extra[None, None, None, :]
+    s = jnp.where(valid, s, _NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid, p, 0.0)
+    l = p.sum(axis=-1)
+    pv = p * jnp.moveaxis(vs, 1, 2)[:, :, None, :]
+    acc = jnp.einsum("bkgs,bskd->bkgd", pv.astype(jnp.bfloat16),
+                     vq.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def decode_attention_paged_quant(q, kq_pages, ks_pages, vq_pages, vs_pages,
+                                 k_tail, v_tail, position, base,
+                                 spec: AttnSpec, window=None) -> jax.Array:
+    """Paged decode attention with int8 semantically-quantized pages.
+
+    Page HBM traffic halves (int8 + per-(token, head) scales vs bf16); the
+    hot tail stays bf16 so the running write path is unchanged.
+    """
+    B, _, H, D = q.shape
+    K = kq_pages.shape[2]
+    G = H // K
+    q4 = q.reshape(B, K, G, D).astype(jnp.float32) * (D ** -0.5)
+    S = kq_pages.shape[1]
+    page_pos = jnp.arange(S)
+    in_pages = page_pos < base
+    mp, lp, accp = _partial_decode_attn_quant(
+        q4, kq_pages, ks_pages, vq_pages, vs_pages, page_pos, position, spec,
+        window, in_pages)
+    T = k_tail.shape[1]
+    tail_pos = base + jnp.arange(T)
+    mt, lt, acct = _partial_decode_attn(
+        q4, k_tail, v_tail, tail_pos, position, spec, window)
+    o = merge_partial_attn([(mp, lp, accp), (mt, lt, acct)])
+    return o.reshape(B, 1, H, D).astype(v_tail.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     position: jax.Array, spec: AttnSpec,
+                     window=None) -> jax.Array:
+    """Single-token attention over a KV cache.
+
+    q: [B, 1, H, D]; caches: [B, S, K, D]; position: [] current index.
+    ``window`` may be traced per-layer data (see chunked_attention).
+    """
+    B, _, H, D = q.shape
+    _, S, K, _ = k_cache.shape
+    G = H // K
+    qf = q.reshape(B, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32)) * (D ** -0.5)
+    s = softcap(s, spec.logit_cap)
+    k_pos = jnp.arange(S)
+    valid = k_pos <= position
+    if window is not None:
+        valid &= k_pos > position - window
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_apply(p, x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+        h = jax.nn.silu(g) * h
+    elif act == "relu2":
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+        h = jnp.square(jax.nn.relu(h))
+    else:  # gelu
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = (2.0 / d_model) ** 0.5
+    s_out = (2.0 / d_ff) ** 0.5
+    p = {"wi": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+         "wo": jax.random.normal(k2, (d_ff, d_model), dtype) * s_out}
+    if act == "swiglu":
+        p["wg"] = jax.random.normal(k3, (d_model, d_ff), dtype) * s_in
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Attention parameter block
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = (1.0 / d) ** 0.5
+    so = (1.0 / (H * hd)) ** 0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, H, hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, K, hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, K, hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (H, hd, d), dtype) * so,
+    }
+
+
+def attn_project_qkv(p, x: jax.Array, positions, theta: float,
+                     use_rope: bool = True):
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"])
+    k = jnp.einsum("bsd,dkx->bskx", x, p["wk"])
+    v = jnp.einsum("bsd,dkx->bskx", x, p["wv"])
+    if use_rope:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    return q, k, v
+
+
+def attn_output(p, o: jax.Array) -> jax.Array:
+    return jnp.einsum("bshx,hxd->bsd", o, p["wo"])

@@ -1,0 +1,294 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and a mamba-style selective SSM.
+
+All recurrences are expressed so that training uses parallel-friendly forms
+(chunkwise scan for mLSTM, associative scan for mamba, lax.scan for sLSTM)
+and decoding uses O(1) single-step updates with an explicit carried state —
+the state plays the role of the KV cache for these families.
+
+mLSTM (matrix memory, exponentially gated, arXiv:2405.04517):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t q_t / max(|n_t . q_t|, 1)
+with the log-domain stabilizer m_t.  sLSTM keeps scalar cell states with
+exponential gating and a per-head recurrent connection.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    s = (1.0 / d) ** 0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, H, hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, H, hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, H, hd), dtype) * s,
+        "wi": jax.random.normal(ks[3], (d, H), jnp.float32) * s,  # input gate
+        "wf": jax.random.normal(ks[4], (d, H), jnp.float32) * s,  # forget gate
+        "wo": jax.random.normal(ks[5], (H, hd, d), dtype) * s,
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),  # forget-open init
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, log_i, chunk: int):
+    """Chunkwise-parallel mLSTM.
+
+    q,k,v: [B, S, H, D]; log_f/log_i: [B, S, H] (log-domain gates).
+    Returns h: [B, S, H, D].
+    """
+    B, S, H, D = q.shape
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+
+    def rs(x):  # [B, S, ...] -> [nc, B, chunk, ...]
+        return jnp.moveaxis(x.reshape(B, nc, chunk, *x.shape[2:]), 1, 0)
+
+    qc, kc_, vc, fc, ic = map(rs, (q, k, v, log_f, log_i))
+    scale = D ** -0.5
+
+    def step(carry, inp):
+        C, n, m = carry                    # [B,H,D,D], [B,H,D], [B,H]
+        qi, ki, vi, lf, li = inp           # [B,chunk,H,*]
+        csum_f = jnp.cumsum(lf, axis=1)    # within-chunk cumulative log-forget
+        total_f = csum_f[:, -1]            # [B,H]
+        # log weight of intra-chunk contribution t<-s: csum_f[t]-csum_f[s]+li[s]
+        log_D = (csum_f[:, :, None, :] - csum_f[:, None, :, :]
+                 + li[:, None, :, :])                       # [B,t,s,H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        log_D = jnp.where(tri[None, :, :, None], log_D, -1e30)
+        # inter-chunk weight for state carried in: csum_f[t] + m
+        log_carry = csum_f + m[:, None, :]                  # [B,t,H]
+        m_new = jnp.maximum(log_D.max(axis=2), log_carry)   # [B,t,H]
+        Dmat = jnp.exp(log_D - m_new[:, :, None, :])        # [B,t,s,H]
+        wcar = jnp.exp(log_carry - m_new)                   # [B,t,H]
+
+        s_qk = jnp.einsum("bthd,bshd->btsh", qi.astype(jnp.float32),
+                          ki.astype(jnp.float32)) * scale
+        intra = jnp.einsum("btsh,btsh,bshd->bthd", s_qk, Dmat,
+                           vi.astype(jnp.float32))
+        inter = jnp.einsum("bthd,bhde->bthe", qi.astype(jnp.float32),
+                           C) * scale
+        num = intra + inter * wcar[..., None]
+        den_intra = jnp.einsum("btsh,btsh->bth", s_qk, Dmat)
+        den_inter = jnp.einsum("bthd,bhd->bth", qi.astype(jnp.float32),
+                               n) * scale
+        den = den_intra + den_inter * wcar
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+        # update carried state to end of chunk
+        m_next = jnp.maximum(total_f + m, (total_f[:, None] - csum_f
+                                           + li).max(axis=1))
+        w_old = jnp.exp(total_f + m - m_next)               # [B,H]
+        wk = jnp.exp(total_f[:, None] - csum_f + li - m_next[:, None])  # [B,s,H]
+        C = C * w_old[..., None, None] + jnp.einsum(
+            "bshd,bshe,bsh->bhde", ki.astype(jnp.float32),
+            vi.astype(jnp.float32), wk)
+        n = n * w_old[..., None] + jnp.einsum(
+            "bshd,bsh->bhd", ki.astype(jnp.float32), wk)
+        return (C, n, m_next), h
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (Cf, nf, mf), hs = jax.lax.scan(step, (C0, n0, m0), (qc, kc_, vc, fc, ic))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, nc * chunk, H, D)
+    return h[:, :S], {"C": Cf, "n": nf, "m": mf}
+
+
+def mlstm_apply(p, x: jax.Array, cfg: ModelConfig, return_state=False):
+    """Training/prefill form. x: [B, S, d] -> [B, S, d] (+ final state)."""
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"])
+    k = jnp.einsum("bsd,dhx->bshx", x, p["wk"])
+    v = jnp.einsum("bsd,dhx->bshx", x, p["wv"])
+    xf = x.astype(jnp.float32)
+    log_i = jnp.einsum("bsd,dh->bsh", xf, p["wi"])
+    log_f = jax.nn.log_sigmoid(jnp.einsum("bsd,dh->bsh", xf, p["wf"])
+                               + p["f_bias"])
+    h, state = _mlstm_chunk_scan(q, k, v, log_f, log_i, cfg.ssm.chunk)
+    out = jnp.einsum("bshx,hxd->bsd", h.astype(x.dtype), p["wo"])
+    if return_state:
+        return out, state
+    return out
+
+
+def mlstm_decode_init(cfg: ModelConfig, B: int) -> dict:
+    H, D = cfg.n_heads, cfg.head_dim
+    return {"C": jnp.zeros((B, H, D, D), jnp.float32),
+            "n": jnp.zeros((B, H, D), jnp.float32),
+            "m": jnp.full((B, H), -1e30, jnp.float32)}
+
+
+def mlstm_decode_step(p, x: jax.Array, state: dict, cfg: ModelConfig):
+    """x: [B, 1, d] -> (y [B, 1, d], new state).  O(1) per token."""
+    B = x.shape[0]
+    D = cfg.head_dim
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"])[:, 0]
+    k = jnp.einsum("bsd,dhx->bshx", x, p["wk"])[:, 0]
+    v = jnp.einsum("bsd,dhx->bshx", x, p["wv"])[:, 0]
+    xf = x.astype(jnp.float32)[:, 0]
+    log_i = jnp.einsum("bd,dh->bh", xf, p["wi"])
+    log_f = jax.nn.log_sigmoid(jnp.einsum("bd,dh->bh", xf, p["wf"])
+                               + p["f_bias"])
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    w_old = jnp.exp(log_f + state["m"] - m_new)
+    w_in = jnp.exp(log_i - m_new)
+    C = state["C"] * w_old[..., None, None] + jnp.einsum(
+        "bhd,bhe,bh->bhde", k.astype(jnp.float32), v.astype(jnp.float32), w_in)
+    n = state["n"] * w_old[..., None] + k.astype(jnp.float32) * w_in[..., None]
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.einsum("bhd,bhd->bh", qf, n)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    y = jnp.einsum("bhx,hxd->bd", h.astype(x.dtype), p["wo"])[:, None]
+    return y, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 3)
+    s = (1.0 / d) ** 0.5
+    return {
+        # fused [z, i, f, o] input projections
+        "w_in": jax.random.normal(ks[0], (d, 4, H, hd), jnp.float32) * s,
+        # per-head recurrent matrices (block-diagonal overall)
+        "r": jax.random.normal(ks[1], (4, H, hd, hd), jnp.float32) * s,
+        "f_bias": jnp.full((H, hd), 3.0, jnp.float32),
+        "wo": jax.random.normal(ks[2], (d, d), dtype) * s,
+    }
+
+
+def slstm_state_init(cfg: ModelConfig, B: int) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    z = jnp.zeros((B, H, hd), jnp.float32)
+    return {"c": z, "n": z, "m": z - 1e30, "h": z}
+
+
+def _slstm_cell(p, zifo, state):
+    """zifo: [B, 4, H, hd] pre-activations (input part only)."""
+    rec = jnp.einsum("bhd,ghde->bghe", state["h"], p["r"])
+    z_t, i_t, f_t, o_t = [zifo[:, g] + rec[:, g] for g in range(4)]
+    f_t = f_t + p["f_bias"]
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + state["m"], i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(log_f + state["m"] - m_new)
+    c = f_p * state["c"] + i_p * jnp.tanh(z_t)
+    n = f_p * state["n"] + i_p
+    h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "m": m_new, "h": h}
+
+
+def slstm_apply(p, x: jax.Array, cfg: ModelConfig, return_state=False):
+    """x: [B, S, d]; sequential scan over time (no parallel form exists)."""
+    B, S, d = x.shape
+    zifo = jnp.einsum("bsd,dghe->bsghe", x.astype(jnp.float32), p["w_in"])
+
+    def step(state, z_t):
+        st = _slstm_cell(p, z_t, state)
+        return st, st["h"]
+
+    fin, hs = jax.lax.scan(step, slstm_state_init(cfg, B),
+                           jnp.moveaxis(zifo, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d)
+    out = jnp.einsum("bsd,de->bse", h.astype(x.dtype), p["wo"])
+    if return_state:
+        return out, fin
+    return out
+
+
+def slstm_decode_step(p, x: jax.Array, state: dict, cfg: ModelConfig):
+    zifo = jnp.einsum("bd,dghe->bghe", x[:, 0].astype(jnp.float32), p["w_in"])
+    st = _slstm_cell(p, zifo, state)
+    B = x.shape[0]
+    h = st["h"].reshape(B, 1, cfg.d_model)
+    return jnp.einsum("bsd,de->bse", h.astype(x.dtype), p["wo"]), st
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM head group (hymba)
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    N = cfg.ssm.d_state
+    ks = jax.random.split(key, 5)
+    s = (1.0 / d) ** 0.5
+    return {
+        "w_x": jax.random.normal(ks[0], (d, d), dtype) * s,
+        "w_dt": jax.random.normal(ks[1], (d,), jnp.float32) * s,
+        "dt_bias": jnp.full((d,), -4.0, jnp.float32),
+        "w_B": jax.random.normal(ks[2], (d, N), jnp.float32) * s,
+        "w_C": jax.random.normal(ks[3], (d, N), jnp.float32) * s,
+        "log_A": jnp.log(jnp.linspace(1.0, float(N), N, dtype=jnp.float32)),
+        "w_out": jax.random.normal(ks[4], (d, d), dtype) * s,
+    }
+
+
+def mamba_apply(p, x: jax.Array, cfg: ModelConfig, return_state=False):
+    """Selective SSM via associative scan. x: [B, S, d] -> [B, S, d]."""
+    from repro.dist.sharding import ax
+    xf = x.astype(jnp.float32)
+    u = jnp.einsum("bsd,de->bse", x, p["w_x"]).astype(jnp.float32)
+    dt = jax.nn.softplus(xf * p["w_dt"] + p["dt_bias"])      # [B,S,d]
+    Bm = jnp.einsum("bsd,dn->bsn", xf, p["w_B"])             # [B,S,N]
+    Cm = jnp.einsum("bsd,dn->bsn", xf, p["w_C"])             # [B,S,N]
+    A = -jnp.exp(p["log_A"])                                  # [N]
+    # h_t = a_t * h_{t-1} + b_t ;  a_t = exp(dt*A), b_t = dt*B*u
+    # [B,S,d,N] intermediates shard d over 'model' (they dominate memory)
+    a = ax(jnp.exp(dt[..., None] * A), "batch", "seq", "model", None)
+    b = ax((dt * u)[..., None] * Bm[:, :, None, :],
+           "batch", "seq", "model", None)
+
+    def combine(x1, x2):
+        a1, b1 = x1
+        a2, b2 = x2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cm)
+    out = jnp.einsum("bsd,de->bse", y.astype(x.dtype), p["w_out"])
+    if return_state:
+        return out, h[:, -1]
+    return out
+
+
+def mamba_state_init(cfg: ModelConfig, B: int) -> jax.Array:
+    return jnp.zeros((B, cfg.d_model, cfg.ssm.d_state), jnp.float32)
+
+
+def mamba_decode_step(p, x: jax.Array, h: jax.Array, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)[:, 0]
+    u = jnp.einsum("bd,de->be", x[:, 0], p["w_x"]).astype(jnp.float32)
+    dt = jax.nn.softplus(xf * p["w_dt"] + p["dt_bias"])
+    Bm = jnp.einsum("bd,dn->bn", xf, p["w_B"])
+    Cm = jnp.einsum("bd,dn->bn", xf, p["w_C"])
+    A = -jnp.exp(p["log_A"])
+    a = jnp.exp(dt[..., None] * A)
+    h = h * a + (dt * u)[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm)
+    y = jnp.einsum("bd,de->be", y.astype(x.dtype), p["w_out"])
+    return y[:, None], h

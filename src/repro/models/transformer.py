@@ -1,0 +1,655 @@
+"""Model assembly: init / forward / loss / prefill / decode for all families.
+
+One interpreter for the ``ModelConfig`` data: dense GQA decoders, MoE,
+encoder-decoder (whisper), VLM (stub prefix embeddings), xLSTM stacks and
+hybrid attention∥SSM blocks.  Layers are stacked and scanned
+(``lax.scan``) so the compiled HLO is O(1) in depth; per-layer
+heterogeneity (local/global windows, MoE-vs-dense) is data, not control
+flow.  Sharding is expressed through logical-axis annotations
+(:mod:`repro.dist.sharding`), so the same code traces for 1 CPU device or a
+512-chip multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import ax
+from . import ssm as ssm_lib
+from .config import ModelConfig
+from .layers import (AttnSpec, attn_init, attn_output, attn_project_qkv,
+                     chunked_attention, decode_attention,
+                     decode_attention_paged, decode_attention_paged_quant,
+                     mlp_apply, mlp_init, rms_norm, rope, softcap)
+from .moe import moe_apply, moe_init
+
+_BIG_WINDOW = 1 << 30
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_init(key, n: int, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def window_array(cfg: ModelConfig) -> Optional[np.ndarray]:
+    """Per-layer window sizes (traced data), or None for all-global."""
+    if cfg.attn_pattern == "global":
+        return None
+    return np.array([cfg.window if cfg.layer_is_local(i) else _BIG_WINDOW
+                     for i in range(cfg.n_layers)], dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, d), dt) * 0.02,
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(keys[1], (d, cfg.vocab), dt) \
+            * (1.0 / d) ** 0.5
+
+    def dense_block(k):
+        ks = jax.random.split(k, 2)
+        return {"attn": attn_init(ks[0], cfg, dt),
+                "mlp": mlp_init(ks[1], d, cfg.d_ff, cfg.act, dt),
+                "ln1": jnp.zeros((d,), jnp.float32),
+                "ln2": jnp.zeros((d,), jnp.float32)}
+
+    if cfg.family in ("dense", "vlm"):
+        params["blocks"] = _stack_init(keys[2], cfg.n_layers, dense_block)
+    elif cfg.family == "moe":
+        def moe_block(k):
+            ks = jax.random.split(k, 2)
+            return {"attn": attn_init(ks[0], cfg, dt),
+                    "moe": moe_init(ks[1], cfg, dt),
+                    "ln1": jnp.zeros((d,), jnp.float32),
+                    "ln2": jnp.zeros((d,), jnp.float32)}
+        nd = cfg.moe.first_k_dense
+        if nd:
+            params["dense_blocks"] = _stack_init(keys[3], nd, dense_block)
+        params["blocks"] = _stack_init(keys[2], cfg.n_layers - nd, moe_block)
+    elif cfg.family == "audio":
+        enc_d = cfg.encoder.d_model or d
+
+        def enc_block(k):
+            ks = jax.random.split(k, 2)
+            return {"attn": attn_init(ks[0], cfg, dt),
+                    "mlp": mlp_init(ks[1], enc_d, cfg.d_ff, cfg.act, dt),
+                    "ln1": jnp.zeros((enc_d,), jnp.float32),
+                    "ln2": jnp.zeros((enc_d,), jnp.float32)}
+
+        def dec_block(k):
+            ks = jax.random.split(k, 3)
+            return {"attn": attn_init(ks[0], cfg, dt),
+                    "cross": attn_init(ks[1], cfg, dt),
+                    "mlp": mlp_init(ks[2], d, cfg.d_ff, cfg.act, dt),
+                    "ln1": jnp.zeros((d,), jnp.float32),
+                    "ln_c": jnp.zeros((d,), jnp.float32),
+                    "ln2": jnp.zeros((d,), jnp.float32)}
+        params["encoder"] = _stack_init(keys[3], cfg.encoder.n_layers, enc_block)
+        params["enc_norm"] = jnp.zeros((enc_d,), jnp.float32)
+        params["enc_pos"] = jax.random.normal(
+            keys[4], (cfg.encoder.n_ctx, enc_d), dt) * 0.01
+        params["blocks"] = _stack_init(keys[2], cfg.n_layers, dec_block)
+    elif cfg.family == "ssm":
+        r = cfg.ssm.mlstm_per_slstm
+        groups = cfg.n_layers // (r + 1)
+
+        def group(k):
+            ks = jax.random.split(k, 2)
+            return {
+                "mlstm": _stack_init(ks[0], r,
+                                     lambda kk: ssm_lib.mlstm_init(kk, cfg, dt)),
+                "mlstm_ln": jnp.zeros((r, d), jnp.float32),
+                "slstm": ssm_lib.slstm_init(ks[1], cfg, dt),
+                "slstm_ln": jnp.zeros((d,), jnp.float32),
+            }
+        params["blocks"] = _stack_init(keys[2], groups, group)
+    elif cfg.family == "hybrid":
+        def hy_block(k):
+            ks = jax.random.split(k, 3)
+            return {"attn": attn_init(ks[0], cfg, dt),
+                    "mamba": ssm_lib.mamba_init(ks[1], cfg, dt),
+                    "mlp": mlp_init(ks[2], d, cfg.d_ff, cfg.act, dt),
+                    "ln1": jnp.zeros((d,), jnp.float32),
+                    "ln_attn": jnp.zeros((d,), jnp.float32),
+                    "ln_ssm": jnp.zeros((d,), jnp.float32),
+                    "ln2": jnp.zeros((d,), jnp.float32)}
+        params["blocks"] = _stack_init(keys[2], cfg.n_layers, hy_block)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Shared attention sub-block (train/prefill form)
+# ---------------------------------------------------------------------------
+
+def _attn_branch(p_attn, cfg: ModelConfig, h: jax.Array, positions,
+                 window, causal=True, use_rope=True, kv_override=None):
+    from repro.dist.sharding import get_rules
+    q, k, v = attn_project_qkv(p_attn, h, positions, cfg.rope_theta, use_rope)
+    if kv_override is not None:
+        k, v = kv_override
+    # TP strategy: shard heads when they divide the TP axis, otherwise go
+    # context-parallel (shard the query sequence; K/V replicate over TP) —
+    # exactly divisible for any head count (DESIGN.md §5).
+    rules = get_rules()
+    tp = rules.axis_sizes.get("model", 1) if rules else 1
+    if cfg.n_heads % tp == 0:
+        q = ax(q, "batch", None, "heads", None)
+        k = ax(k, "batch", None, "kv_heads", None)
+        v = ax(v, "batch", None, "kv_heads", None)
+    else:
+        q = ax(q, "batch", "seq_tp", None, None)
+        k = ax(k, "batch", None, None, None)
+        v = ax(v, "batch", None, None, None)
+    spec = AttnSpec(causal=causal, logit_cap=cfg.attn_softcap,
+                    f32_scores=cfg.attn_f32_scores,
+                    q_block=cfg.attn_q_block, kv_chunk=cfg.attn_kv_chunk)
+    o = chunked_attention(q, k, v, positions, spec, window=window)
+    return attn_output(p_attn, o), (k, v)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Forward (teacher-forced / prefill logits over a full sequence)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jax.Array,
+                 prefix_embeds: Optional[jax.Array]) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "vlm" and prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return ax(x, "batch", "seq", "embed")
+
+
+def _encoder_apply(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stub frame embeddings [B, T, enc_d]."""
+    x = frames + params["enc_pos"][None, :frames.shape[1]]
+    positions = jnp.arange(frames.shape[1])
+
+    def body(xc, p_l):
+        h = rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+        a, _ = _attn_branch(p_l["attn"], cfg, h, positions, None,
+                            causal=False, use_rope=False)
+        xc = xc + a
+        h = rms_norm(xc, p_l["ln2"], cfg.norm_eps)
+        xc = xc + mlp_apply(p_l["mlp"], h, cfg.act)
+        return xc, None
+
+    x, _ = jax.lax.scan(_remat(cfg, body), x, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None,
+            encoder_frames: Optional[jax.Array] = None,
+            collect_cache: bool = False):
+    """Full-sequence hidden states. Returns (h [B, S, d], aux) or, with
+    ``collect_cache``, (h, aux, cache-dict of stacked per-layer k/v and SSM
+    end states) — the real prefill path for the serving engine."""
+    x = embed_tokens(params, cfg, tokens, prefix_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    aux = jnp.zeros((), jnp.float32)
+    windows = window_array(cfg)
+    cache: Dict[str, Any] = {}
+
+    if cfg.family in ("dense", "vlm"):
+        def body(xc, scanned):
+            p_l, win = scanned
+            h = rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+            a, kv = _attn_branch(p_l["attn"], cfg, h, positions, win)
+            xc = xc + a
+            h = rms_norm(xc, p_l["ln2"], cfg.norm_eps)
+            xc = xc + mlp_apply(p_l["mlp"], h, cfg.act)
+            return ax(xc, "batch", "act_seq", "embed"), \
+                (kv if collect_cache else None)
+        win = windows if windows is not None else np.full(
+            cfg.n_layers, _BIG_WINDOW, np.int32)
+        x, ys = jax.lax.scan(_remat(cfg, body), x, (params["blocks"], win))
+        if collect_cache:
+            cache["k"], cache["v"] = ys
+
+    elif cfg.family == "moe":
+        nd = cfg.moe.first_k_dense
+        if nd:
+            def dbody(xc, p_l):
+                h = rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+                a, kv = _attn_branch(p_l["attn"], cfg, h, positions, None)
+                xc = xc + a
+                h = rms_norm(xc, p_l["ln2"], cfg.norm_eps)
+                return xc + mlp_apply(p_l["mlp"], h, cfg.act), \
+                    (kv if collect_cache else None)
+            x, dys = jax.lax.scan(_remat(cfg, dbody), x,
+                                  params["dense_blocks"])
+
+        def body(carry, p_l):
+            xc, aux_c = carry
+            h = rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+            at, kv = _attn_branch(p_l["attn"], cfg, h, positions, None)
+            xc = xc + at
+            h = rms_norm(xc, p_l["ln2"], cfg.norm_eps)
+            y, a = moe_apply(p_l["moe"], h, cfg)
+            return (ax(xc + y, "batch", "act_seq", "embed"), aux_c + a), \
+                (kv if collect_cache else None)
+        (x, aux), ys = jax.lax.scan(_remat(cfg, body), (x, aux),
+                                    params["blocks"])
+        if collect_cache:
+            if nd:
+                cache["k"] = jnp.concatenate([dys[0], ys[0]], axis=0)
+                cache["v"] = jnp.concatenate([dys[1], ys[1]], axis=0)
+            else:
+                cache["k"], cache["v"] = ys
+
+    elif cfg.family == "audio":
+        enc_out = _encoder_apply(params, cfg, encoder_frames)
+
+        def body(xc, p_l):
+            h = rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+            a, kv = _attn_branch(p_l["attn"], cfg, h, positions, None)
+            xc = xc + a
+            h = rms_norm(xc, p_l["ln_c"], cfg.norm_eps)
+            ck = jnp.einsum("btd,dkx->btkx", enc_out, p_l["cross"]["wk"])
+            cv = jnp.einsum("btd,dkx->btkx", enc_out, p_l["cross"]["wv"])
+            q = jnp.einsum("bsd,dhx->bshx", h, p_l["cross"]["wq"])
+            spec = AttnSpec(causal=False)
+            o = chunked_attention(q, ck, cv, positions, spec, window=None)
+            xc = xc + attn_output(p_l["cross"], o)
+            h = rms_norm(xc, p_l["ln2"], cfg.norm_eps)
+            xc = xc + mlp_apply(p_l["mlp"], h, cfg.act)
+            return ax(xc, "batch", "act_seq", "embed"), \
+                ((kv, (ck, cv)) if collect_cache else None)
+        x, ys = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
+        if collect_cache:
+            (cache["k"], cache["v"]), (cache["cross_k"], cache["cross_v"]) = ys
+
+    elif cfg.family == "ssm":
+        def body(xc, p_g):
+            def mbody(xm, p_l):
+                h = rms_norm(xm, p_l["ln"], cfg.norm_eps)
+                y, st = ssm_lib.mlstm_apply(p_l["p"], h, cfg,
+                                            return_state=True)
+                return xm + y, (st if collect_cache else None)
+            xc, msts = jax.lax.scan(
+                mbody, xc, {"p": p_g["mlstm"], "ln": p_g["mlstm_ln"]})
+            h = rms_norm(xc, p_g["slstm_ln"], cfg.norm_eps)
+            y, sst = ssm_lib.slstm_apply(p_g["slstm"], h, cfg,
+                                         return_state=True)
+            xc = xc + y
+            return ax(xc, "batch", "act_seq", "embed"), \
+                ((msts, sst) if collect_cache else None)
+        x, ys = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
+        if collect_cache:
+            cache["mlstm"], cache["slstm"] = ys
+
+    elif cfg.family == "hybrid":
+        def body(xc, scanned):
+            p_l, win = scanned
+            h = rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+            a, kv = _attn_branch(p_l["attn"], cfg, h, positions, win)
+            s, hT = ssm_lib.mamba_apply(p_l["mamba"], h, cfg,
+                                        return_state=True)
+            fused = 0.5 * (rms_norm(a, p_l["ln_attn"], cfg.norm_eps) +
+                           rms_norm(s, p_l["ln_ssm"], cfg.norm_eps))
+            xc = xc + fused
+            h = rms_norm(xc, p_l["ln2"], cfg.norm_eps)
+            xc = xc + mlp_apply(p_l["mlp"], h, cfg.act)
+            return ax(xc, "batch", "act_seq", "embed"), \
+                ((kv, hT) if collect_cache else None)
+        x, ys = jax.lax.scan(_remat(cfg, body), x, (params["blocks"], windows))
+        if collect_cache:
+            (cache["k"], cache["v"]), cache["mamba"] = ys
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if collect_cache:
+        return x, aux, cache
+    return x, aux
+
+
+def unembed(params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return ax(logits, "batch", "seq", "vocab")
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            loss_chunks: int = 4) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked softmax-xent: never materializes full [B, S, V] at once."""
+    h, aux = forward(params, cfg, batch["tokens"],
+                     prefix_embeds=batch.get("prefix_embeds"),
+                     encoder_frames=batch.get("encoder_frames"))
+    labels = batch["labels"]
+    if cfg.family == "vlm" and batch.get("prefix_embeds") is not None:
+        npre = batch["prefix_embeds"].shape[1]
+        pad = jnp.full((labels.shape[0], npre), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    S = h.shape[1]
+    nc = loss_chunks
+    while S % nc:
+        nc -= 1
+    hs = h.reshape(h.shape[0], nc, S // nc, h.shape[2])
+    ls = labels.reshape(labels.shape[0], nc, S // nc)
+
+    def chunk(carry, inp):
+        tot, cnt = carry
+        hc, lc = inp
+        logits = unembed(params, cfg, hc)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        tot = tot + ((lse - gold) * mask).sum()
+        cnt = cnt + mask.sum()
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (jnp.moveaxis(hs, 1, 0), jnp.moveaxis(ls, 1, 0)))
+    xent = tot / jnp.maximum(cnt, 1.0)
+    return xent + aux, {"xent": xent, "aux": aux, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single-token steps over an explicit state)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, B: int, max_len: int) -> Dict[str, Any]:
+    """Decode state: paged KV (sequence-shardable, immutable between
+    flushes) + a small replicated write tail, so the per-token update never
+    touches a sharded dimension (EXPERIMENTS.md §Perf hillclimb).  With
+    ``cfg.kv_quant`` the pages are int8 with per-(token, head) semantic
+    scales (paper §4.2 as a KV quantizer) at half the HBM footprint."""
+    dt = _dtype(cfg)
+    K, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    T = min(cfg.decode_tail, max_len)
+    st: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("dense", "vlm", "moe", "audio", "hybrid"):
+        if cfg.kv_quant:
+            st["k"] = jnp.zeros((L, B, max_len, K, hd), jnp.int8)
+            st["v"] = jnp.zeros((L, B, max_len, K, hd), jnp.int8)
+            st["k_scale"] = jnp.zeros((L, B, max_len, K), jnp.float32)
+            st["v_scale"] = jnp.zeros((L, B, max_len, K), jnp.float32)
+        else:
+            st["k"] = jnp.zeros((L, B, max_len, K, hd), dt)
+            st["v"] = jnp.zeros((L, B, max_len, K, hd), dt)
+        st["k_tail"] = jnp.zeros((L, B, T, K, hd), dt)
+        st["v_tail"] = jnp.zeros((L, B, T, K, hd), dt)
+    if cfg.family == "audio":
+        Tx = cfg.encoder.n_ctx
+        st["cross_k"] = jnp.zeros((L, B, Tx, K, hd), dt)
+        st["cross_v"] = jnp.zeros((L, B, Tx, K, hd), dt)
+    if cfg.family == "hybrid":
+        st["mamba"] = jnp.zeros((L, B, cfg.d_model, cfg.ssm.d_state),
+                                jnp.float32)
+    if cfg.family == "ssm":
+        r = cfg.ssm.mlstm_per_slstm
+        G = cfg.n_layers // (r + 1)
+        H, D = cfg.n_heads, cfg.head_dim
+        hd_s = cfg.d_model // cfg.n_heads
+        st["mlstm"] = {"C": jnp.zeros((G, r, B, H, D, D), jnp.float32),
+                       "n": jnp.zeros((G, r, B, H, D), jnp.float32),
+                       "m": jnp.full((G, r, B, H), -1e30, jnp.float32)}
+        st["slstm"] = {k: (jnp.full((G, B, H, hd_s), -1e30, jnp.float32)
+                           if k == "m" else
+                           jnp.zeros((G, B, H, hd_s), jnp.float32))
+                       for k in ("c", "n", "m", "h")}
+    return st
+
+
+def shard_decode_state(st: Dict[str, Any]) -> Dict[str, Any]:
+    """Annotate decode-state tensors with logical axes."""
+    out = dict(st)
+    for key in ("k", "v"):
+        if key in out:
+            out[key] = ax(out[key], "stack", "batch", "kv_seq", "kv_heads",
+                          "head_dim")
+    for key in ("cross_k", "cross_v"):
+        if key in out:
+            out[key] = ax(out[key], "stack", "batch", None, "kv_heads",
+                          "head_dim")
+    if "mamba" in out:
+        out["mamba"] = ax(out["mamba"], "stack", "batch", "model", None)
+    if "mlstm" in out:
+        out["mlstm"] = {
+            "C": ax(out["mlstm"]["C"], "stack", None, "batch", "heads",
+                    None, "model"),
+            "n": ax(out["mlstm"]["n"], "stack", None, "batch", "heads", None),
+            "m": ax(out["mlstm"]["m"], "stack", None, "batch", "heads"),
+        }
+    return out
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array,
+            state: Dict[str, Any],
+            prefix_embeds: Optional[jax.Array] = None,
+            encoder_frames: Optional[jax.Array] = None):
+    """Run the full prompt, fill caches, return last-position logits.
+
+    For simplicity the cache-filling prefill recomputes projections; the
+    serving engine uses it once per request batch.
+    """
+    h, _ = forward(params, cfg, tokens, prefix_embeds, encoder_frames)
+    logits = unembed(params, cfg, h[:, -1:])
+    # NOTE: cache filling for attention families happens in serve.engine via
+    # per-layer k/v recomputation; the dry-run decode path starts from a
+    # fully-populated cache shape, which is what matters for compilation.
+    state = dict(state)
+    state["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    return logits, state
+
+
+def decode_step(params, cfg: ModelConfig, state: Dict[str, Any],
+                tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One token for every sequence in the batch. tokens: [B, 1]."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = ax(x, "batch", None, "embed")
+    pos = state["pos"]
+    positions = pos[None]
+    new_state = dict(state)
+    windows = window_array(cfg)
+    eps = cfg.norm_eps
+
+    T_tail = state["k_tail"].shape[2] if "k_tail" in state else 0
+    tail_ix = jnp.mod(pos, jnp.int32(max(T_tail, 1)))
+    base = pos - tail_ix
+
+    def attn_decode(p_l, h, pages, tail, win):
+        q, k, v = attn_project_qkv(p_l, h, positions, cfg.rope_theta)
+        k_tail = jax.lax.dynamic_update_slice_in_dim(
+            tail[0], k, tail_ix, axis=1)
+        v_tail = jax.lax.dynamic_update_slice_in_dim(
+            tail[1], v, tail_ix, axis=1)
+        spec = AttnSpec(causal=True, logit_cap=cfg.attn_softcap)
+        if cfg.kv_quant:
+            kq, ks, vq, vs = pages
+            o = decode_attention_paged_quant(
+                q, kq, ks, vq, vs, k_tail, v_tail, pos, base, spec,
+                window=win)
+        else:
+            o = decode_attention_paged(
+                q, pages[0], pages[1], k_tail, v_tail, pos, base, spec,
+                window=win)
+        return attn_output(p_l, o), (k_tail, v_tail)
+
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        win = windows if windows is not None else np.full(
+            cfg.n_layers, _BIG_WINDOW, np.int32)
+        nd = cfg.moe.first_k_dense if cfg.family == "moe" else 0
+
+        def pages_of(sl):
+            if cfg.kv_quant:
+                return (state["k"][sl], state["k_scale"][sl],
+                        state["v"][sl], state["v_scale"][sl])
+            return (state["k"][sl], state["v"][sl])
+
+        def body(xc, scanned):
+            if cfg.family == "audio":
+                p_l, pages, tail, ck, cv, w = scanned
+            else:
+                p_l, pages, tail, w = scanned
+            h = rms_norm(xc, p_l["ln1"], eps)
+            a, tail = attn_decode(p_l["attn"], h, pages, tail, w)
+            xc = xc + a
+            if cfg.family == "audio":
+                h = rms_norm(xc, p_l["ln_c"], eps)
+                q = jnp.einsum("bsd,dhx->bshx", h, p_l["cross"]["wq"])
+                spec = AttnSpec(causal=False)
+                o = decode_attention(q, ck, cv, jnp.int32(_BIG_WINDOW), spec,
+                                     window=None)
+                xc = xc + attn_output(p_l["cross"], o)
+            h = rms_norm(xc, p_l["ln2"], eps)
+            if cfg.family == "moe":
+                y, _ = moe_apply(p_l["moe"], h, cfg)
+            else:
+                y = mlp_apply(p_l["mlp"], h, cfg.act)
+            xc = xc + y
+            return xc, tail
+
+        sl_d, sl_m = slice(0, nd), slice(nd, None)
+        if nd:  # deepseek: leading dense layers, separate scanned stack
+            def dbody(xc, scanned):
+                p_l, pages, tail, w = scanned
+                h = rms_norm(xc, p_l["ln1"], eps)
+                a, tail = attn_decode(p_l["attn"], h, pages, tail, w)
+                xc = xc + a
+                h = rms_norm(xc, p_l["ln2"], eps)
+                return xc + mlp_apply(p_l["mlp"], h, cfg.act), tail
+            x, (ktd, vtd) = jax.lax.scan(
+                dbody, x, (params["dense_blocks"], pages_of(sl_d),
+                           (state["k_tail"][sl_d], state["v_tail"][sl_d]),
+                           win[:nd]))
+        if cfg.family == "audio":
+            x, (ktn, vtn) = jax.lax.scan(
+                body, x, (params["blocks"], pages_of(sl_m),
+                          (state["k_tail"][sl_m], state["v_tail"][sl_m]),
+                          state["cross_k"], state["cross_v"], win[nd:]))
+        else:
+            x, (ktn, vtn) = jax.lax.scan(
+                body, x, (params["blocks"], pages_of(sl_m),
+                          (state["k_tail"][sl_m], state["v_tail"][sl_m]),
+                          win[nd:]))
+        if nd:
+            ktn = jnp.concatenate([ktd, ktn], axis=0)
+            vtn = jnp.concatenate([vtd, vtn], axis=0)
+        new_state["k_tail"], new_state["v_tail"] = ktn, vtn
+
+    elif cfg.family == "hybrid":
+        hpages = (state["k"], state["k_scale"], state["v"],
+                  state["v_scale"]) if cfg.kv_quant else \
+            (state["k"], state["v"])
+
+        def body(xc, scanned):
+            p_l, pages, tail, hm, w = scanned
+            h = rms_norm(xc, p_l["ln1"], eps)
+            a, tail = attn_decode(p_l["attn"], h, pages, tail, w)
+            s, hm = ssm_lib.mamba_decode_step(p_l["mamba"], h, hm, cfg)
+            fused = 0.5 * (rms_norm(a, p_l["ln_attn"], eps) +
+                           rms_norm(s, p_l["ln_ssm"], eps))
+            xc = xc + fused
+            h = rms_norm(xc, p_l["ln2"], eps)
+            xc = xc + mlp_apply(p_l["mlp"], h, cfg.act)
+            return xc, (tail[0], tail[1], hm)
+        x, (ktn, vtn, hn) = jax.lax.scan(
+            body, x, (params["blocks"], hpages,
+                      (state["k_tail"], state["v_tail"]),
+                      state["mamba"], windows))
+        new_state.update(k_tail=ktn, v_tail=vtn, mamba=hn)
+
+    elif cfg.family == "ssm":
+        def gbody(xc, scanned):
+            p_g, mst, sst = scanned
+
+            def mbody(xm, sc):
+                p_l, ln, st_l = sc
+                h = rms_norm(xm, ln, eps)
+                y, st_n = ssm_lib.mlstm_decode_step(p_l, h, st_l, cfg)
+                return xm + y, st_n
+            xc, mst_n = jax.lax.scan(
+                mbody, xc, (p_g["mlstm"], p_g["mlstm_ln"], mst))
+            h = rms_norm(xc, p_g["slstm_ln"], eps)
+            y, sst_n = ssm_lib.slstm_decode_step(p_g["slstm"], h, sst, cfg)
+            return xc + y, (mst_n, sst_n)
+        x, (mn, sn) = jax.lax.scan(
+            gbody, x, (params["blocks"], state["mlstm"], state["slstm"]))
+        new_state.update(mlstm=mn, slstm=sn)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], eps)
+    logits = unembed(params, cfg, x)
+    new_state["pos"] = pos + 1
+    return logits, new_state
+
+
+def flush_tail(cfg: ModelConfig, state: Dict[str, Any]) -> Dict[str, Any]:
+    """Commit the write tail into the (sharded, quantized) pages.
+
+    Called every ``decode_tail`` steps by the engine — the only operation
+    that touches the sequence-sharded pages, amortizing the resharding cost
+    by T_tail (and quantizing the block with per-(token, head) scales when
+    ``cfg.kv_quant``)."""
+    if "k_tail" not in state:
+        return state
+    out = dict(state)
+    pos = state["pos"]
+    T = state["k_tail"].shape[2]
+    n_tail = jnp.mod(pos, jnp.int32(T))
+    n_tail = jnp.where(n_tail == 0, jnp.where(pos > 0, T, 0), n_tail)
+    base = pos - n_tail
+    kt, vt = state["k_tail"], state["v_tail"]
+    if cfg.kv_quant:
+        def q(x):
+            xf = x.astype(jnp.float32)
+            sc = jnp.max(jnp.abs(xf), axis=-1) / 127.0 + 1e-8
+            qx = jnp.clip(jnp.round(xf / sc[..., None]), -127,
+                          127).astype(jnp.int8)
+            return qx, sc
+        kq, ks = q(kt)
+        vq, vs = q(vt)
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(
+            state["k"], kq, base, axis=2)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(
+            state["v"], vq, base, axis=2)
+        out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            state["k_scale"], ks, base, axis=2)
+        out["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            state["v_scale"], vs, base, axis=2)
+    else:
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(
+            state["k"], kt, base, axis=2)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(
+            state["v"], vt, base, axis=2)
+    return out

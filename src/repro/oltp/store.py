@@ -1,0 +1,249 @@
+"""In-memory row stores with pluggable compressors (paper §6.1/§7 setting).
+
+Every store implements insert/get over a primary-key index (a plain vector,
+as in the paper's microbenchmarks).  Compressors:
+
+* ``BlitzStore``      — TableCodec (semantic models + delayed coding)
+* ``ZstdStore``       — per-tuple zstd with a trained dictionary (the
+                        paper's Zstandard baseline, §6 "training mode")
+* ``RamanStore``      — per-column canonical Huffman, concatenated
+                        variable-length tuples (static dictionary: unseen
+                        values need an escape; new tuples buffered and
+                        re-trained like §7.1 describes)
+* ``UncompressedStore`` — Silo-style plain rows
+
+Plus the §6.5 fast path: an LRU write-back cache of decompressed tuples.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import ColumnSpec, TableCodec
+from repro.core.huffman import BitReader, BitWriter, HuffmanCode
+
+
+class UncompressedStore:
+    name = "silo"
+
+    def __init__(self, schema: Sequence[ColumnSpec], rows_sample=None):
+        self.schema = list(schema)
+        self.rows: List[bytes] = []
+
+    def insert(self, row: Dict[str, Any]) -> int:
+        self.rows.append(json.dumps(
+            [row[c.name] for c in self.schema]).encode())
+        return len(self.rows) - 1
+
+    def get(self, i: int) -> Dict[str, Any]:
+        vals = json.loads(self.rows[i])
+        return {c.name: v for c, v in zip(self.schema, vals)}
+
+    @property
+    def nbytes(self) -> int:
+        return sum(len(r) for r in self.rows)
+
+
+class BlitzStore:
+    name = "blitzcrank"
+
+    def __init__(self, schema: Sequence[ColumnSpec], rows_sample,
+                 correlation: bool = False, block_tuples: int = 1,
+                 sample: int = 1 << 15):
+        self.codec = TableCodec.fit(rows_sample, schema,
+                                    correlation=correlation,
+                                    sample=sample, block_tuples=block_tuples)
+        self.blocks: List[np.ndarray] = []
+        self.block_tuples = block_tuples
+        self._pending: List[Dict] = []
+        self.n = 0
+
+    def insert(self, row: Dict[str, Any]) -> int:
+        self._pending.append(row)
+        if len(self._pending) >= self.block_tuples:
+            self.blocks.append(self.codec.compress_block(self._pending))
+            self._pending = []
+        self.n += 1
+        return self.n - 1
+
+    def get(self, i: int) -> Dict[str, Any]:
+        b, off = divmod(i, self.block_tuples)
+        if b >= len(self.blocks):
+            return dict(self._pending[off])
+        rows = self.codec.decompress_block(self.blocks[b],
+                                           min(self.block_tuples,
+                                               self.n - b * self.block_tuples))
+        return rows[off]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(2 * b.size for b in self.blocks)
+
+    @property
+    def model_bytes(self) -> int:
+        return self.codec.model_bytes()
+
+
+class ZstdStore:
+    name = "zstd"
+
+    def __init__(self, schema: Sequence[ColumnSpec], rows_sample,
+                 dict_kb: int = 110, level: int = 3):
+        import zstandard as zstd
+        self.schema = list(schema)
+        samples = [json.dumps([r[c.name] for c in self.schema]).encode()
+                   for r in rows_sample]
+        try:
+            dict_data = zstd.train_dictionary(dict_kb * 1024, samples)
+            self._dict = dict_data
+            self.cctx = zstd.ZstdCompressor(level=level, dict_data=dict_data)
+            self.dctx = zstd.ZstdDecompressor(dict_data=dict_data)
+            self.dict_bytes = len(dict_data.as_bytes())
+        except Exception:  # tiny sample sets cannot train a dictionary
+            self._dict = None
+            self.cctx = zstd.ZstdCompressor(level=level)
+            self.dctx = zstd.ZstdDecompressor()
+            self.dict_bytes = 0
+        self.rows: List[bytes] = []
+
+    def insert(self, row: Dict[str, Any]) -> int:
+        raw = json.dumps([row[c.name] for c in self.schema]).encode()
+        self.rows.append(self.cctx.compress(raw))
+        return len(self.rows) - 1
+
+    def get(self, i: int) -> Dict[str, Any]:
+        vals = json.loads(self.dctx.decompress(self.rows[i]))
+        return {c.name: v for c, v in zip(self.schema, vals)}
+
+    @property
+    def nbytes(self) -> int:
+        return sum(len(r) for r in self.rows)
+
+    @property
+    def model_bytes(self) -> int:
+        return self.dict_bytes
+
+
+class RamanStore:
+    """Per-column Huffman over value ids (static dictionary baseline §6).
+
+    Values unseen at train time go through a length-prefixed byte escape.
+    Numeric columns are coded on their value dictionary too (Raman & Swart
+    treat fields as symbols); tuples are concatenated variable-length codes.
+    """
+
+    name = "raman"
+
+    def __init__(self, schema: Sequence[ColumnSpec], rows_sample):
+        self.schema = list(schema)
+        self.columns = {}
+        for c in self.schema:
+            vals = [r[c.name] for r in rows_sample]
+            uniq: Dict[Any, int] = {}
+            counts: List[float] = []
+            for v in vals:
+                j = uniq.setdefault(v, len(uniq))
+                if j == len(counts):
+                    counts.append(0.0)
+                counts[j] += 1
+            # reserve an escape symbol
+            uniq["\x00<esc>"] = len(uniq)
+            counts.append(max(1.0, 0.01 * len(vals)))
+            self.columns[c.name] = (uniq,
+                                    list(uniq.keys()),
+                                    HuffmanCode(np.asarray(counts)))
+        self.rows: List[bytes] = []
+        self.lens: List[int] = []
+
+    def insert(self, row: Dict[str, Any]) -> int:
+        bw = BitWriter()
+        for c in self.schema:
+            uniq, _, hc = self.columns[c.name]
+            v = row[c.name]
+            j = uniq.get(v)
+            if j is None:
+                hc.encode(uniq["\x00<esc>"], bw)
+                payload = json.dumps(v).encode()
+                bw.write(len(payload), 16)
+                for byte in payload:
+                    bw.write(byte, 8)
+            else:
+                hc.encode(j, bw)
+        buf, nbits = bw.getvalue()
+        self.rows.append(buf)
+        self.lens.append(nbits)
+        return len(self.rows) - 1
+
+    def get(self, i: int) -> Dict[str, Any]:
+        br = BitReader(self.rows[i])
+        out = {}
+        for c in self.schema:
+            uniq, keys, hc = self.columns[c.name]
+            j = hc.decode(br)
+            if keys[j] == "\x00<esc>":
+                ln = br.peek(16)
+                br.skip(16)
+                data = bytearray()
+                for _ in range(ln):
+                    data.append(br.peek(8))
+                    br.skip(8)
+                out[c.name] = json.loads(bytes(data))
+            else:
+                out[c.name] = keys[j]
+        return out
+
+    @property
+    def nbytes(self) -> int:
+        return sum(len(r) for r in self.rows)
+
+    @property
+    def model_bytes(self) -> int:
+        total = 0
+        for name, (uniq, keys, hc) in self.columns.items():
+            total += sum(len(str(k)) + 10 for k in keys)
+        return total
+
+
+class LRUFastPath:
+    """§6.5 write-back cache of decompressed tuples above any store."""
+
+    def __init__(self, store, capacity: int):
+        self.store = store
+        self.capacity = capacity
+        self.cache: OrderedDict[int, Dict] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def read_modify_write(self, i: int, update_fn) -> None:
+        row = self.cache.get(i)
+        if row is not None:
+            self.hits += 1
+            self.cache.move_to_end(i)
+        else:
+            self.misses += 1
+            row = self.store.get(i)
+            self.cache[i] = row
+            if len(self.cache) > self.capacity:
+                self.cache.popitem(last=False)  # write-back: drop (demo)
+        update_fn(row)
+
+    def get(self, i: int) -> Dict[str, Any]:
+        row = self.cache.get(i)
+        if row is not None:
+            self.hits += 1
+            self.cache.move_to_end(i)
+            return row
+        self.misses += 1
+        return self.store.get(i)
+
+
+STORE_KINDS = {
+    "silo": UncompressedStore,
+    "blitzcrank": BlitzStore,
+    "zstd": ZstdStore,
+    "raman": RamanStore,
+}

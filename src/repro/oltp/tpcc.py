@@ -1,0 +1,171 @@
+"""TPC-C-like data generation (paper §7, Table 2).
+
+The paper replaces TPC-C's incompressible random bytes with realistic
+columns: sampled names/streets, state->city->zip conditional hierarchies,
+and format-based phone/district strings.  We synthesize equivalent corpora
+offline (no network): Zipf-sampled name/street lexicons, a state/city/zip
+hierarchy, and the exact format strings from Table 2.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import ColumnSpec
+
+_FIRST = ["Taylor", "Alex", "Jordan", "Morgan", "Riley", "Casey", "Avery",
+          "Quinn", "Hayden", "Rowan", "Emerson", "Skyler", "Dakota", "Reese",
+          "Finley", "Sawyer", "Charlie", "Emery", "Tatum", "Ellis", "Mary",
+          "James", "Patricia", "Robert", "Jennifer", "Michael", "Linda",
+          "David", "Elizabeth", "William", "Barbara", "Richard", "Susan",
+          "Joseph", "Jessica", "Thomas", "Sarah", "Daniel", "Karen", "Lisa"]
+_STREET_NAME = ["Main", "Oak", "Pine", "Maple", "Cedar", "Elm", "Washington",
+                "Lake", "Hill", "Walnut", "Spring", "North", "Ridge",
+                "Church", "Willow", "Mill", "Sunset", "Railroad", "Jackson",
+                "River"]
+_STREET_KIND = ["St", "Ave", "Blvd", "Dr", "Ln", "Rd", "Way", "Ct"]
+_STATES = ["CA", "TX", "NY", "FL", "IL", "PA", "OH", "GA", "NC", "MI"]
+# real-world hierarchy: city names are state-specific, zips city-specific
+_CITIES: Dict[str, List[str]] = {
+    st: [f"{name}{'ville' if i % 3 == 0 else (' City' if i % 3 == 1 else ' Falls')}"
+         f" {st}"
+         for i, name in enumerate(_STREET_NAME[si % 7:si % 7 + 4 + si % 4])]
+    for si, st in enumerate(_STATES)
+}
+_CORP = ["Acme Corp", "Globex LLC", "Initech Inc", "Umbrella Co",
+         "Stark Industries", "Wayne Enterprises", "Hooli", "Vandelay Industries",
+         "Wonka Factory", "Cyberdyne Systems", "Tyrell Corp", "Soylent Corp"]
+
+
+def _zipf_choice(rng, items, size, a=1.3):
+    r = rng.zipf(a, size=size)
+    return [items[int(x - 1) % len(items)] for x in r]
+
+
+CUSTOMER_SCHEMA = [
+    ColumnSpec("c_id", "int"),
+    ColumnSpec("c_first", "cat"),
+    ColumnSpec("c_street", "str"),
+    ColumnSpec("c_state", "cat"),
+    ColumnSpec("c_city", "cat"),
+    ColumnSpec("c_zip", "cat"),
+    ColumnSpec("c_phone", "str"),
+    ColumnSpec("c_credit_lim", "float", precision=0.01),
+    ColumnSpec("c_balance", "float", precision=0.01),
+    ColumnSpec("c_discount", "float", precision=0.0001),
+    ColumnSpec("c_data", "str"),
+]
+
+STOCK_SCHEMA = [
+    ColumnSpec("s_i_id", "int"),
+    ColumnSpec("s_quantity", "int"),
+    ColumnSpec("s_ytd", "int"),
+    ColumnSpec("s_order_cnt", "int"),
+    ColumnSpec("s_remote_cnt", "int"),
+    ColumnSpec("s_dist_01", "str"),
+    ColumnSpec("s_dist_02", "str"),
+    ColumnSpec("s_data", "str"),
+]
+
+ORDERLINE_SCHEMA = [
+    ColumnSpec("ol_o_id", "int"),
+    ColumnSpec("ol_number", "int"),
+    ColumnSpec("ol_i_id", "int"),
+    ColumnSpec("ol_quantity", "int"),
+    ColumnSpec("ol_amount", "float", precision=0.01),
+    ColumnSpec("ol_dist_info", "str"),
+]
+
+
+def _zip_for(rng, state: str, city: str) -> str:
+    # ~8 zip codes per city (ZIP-within-city conditional, Table 2)
+    h = sum(ord(c) * (i + 7) for i, c in enumerate(state + city))
+    base = (h % 8000) + int(rng.integers(0, 8))
+    return f"{10000 + base:05d}"
+
+
+def gen_customer(n: int, seed: int = 0) -> List[Dict]:
+    rng = np.random.default_rng(seed)
+    firsts = _zipf_choice(rng, _FIRST, n)
+    rows = []
+    for i in range(n):
+        st = _STATES[int(rng.zipf(1.5)) % len(_STATES)]
+        city = _CITIES[st][int(rng.integers(0, len(_CITIES[st])))]
+        rows.append({
+            "c_id": i,
+            "c_first": firsts[i],
+            "c_street": f"{int(rng.integers(1, 999))} "
+                        f"{_STREET_NAME[int(rng.zipf(1.4)) % len(_STREET_NAME)]} "
+                        f"{_STREET_KIND[int(rng.integers(0, len(_STREET_KIND)))]}",
+            "c_state": st,
+            "c_city": city,
+            "c_zip": _zip_for(rng, st, city),
+            "c_phone": f"({rng.integers(200, 999)}) {rng.integers(200, 999)}-"
+                       f"{rng.integers(0, 9999):04d}",
+            "c_credit_lim": float(rng.choice([50000.0, 10000.0, 25000.0])),
+            "c_balance": float(np.round(rng.normal(-10.0, 2000.0), 2)),
+            "c_discount": float(np.round(rng.uniform(0, 0.5), 4)),
+            "c_data": f"{_CORP[int(rng.zipf(1.3)) % len(_CORP)]} customer "
+                      f"since {int(rng.integers(1990, 2024))}",
+        })
+    return rows
+
+
+def gen_stock(n: int, seed: int = 1) -> List[Dict]:
+    rng = np.random.default_rng(seed)
+    rows = []
+    for i in range(n):
+        rows.append({
+            "s_i_id": i,
+            "s_quantity": int(rng.integers(10, 100)),
+            "s_ytd": int(rng.poisson(50)),
+            "s_order_cnt": int(rng.poisson(20)),
+            "s_remote_cnt": int(rng.poisson(2)),
+            "s_dist_01": f"dist-str#{rng.integers(0,99):02d}#"
+                         f"{rng.integers(0,99):02d}#{rng.integers(0,9999):04d}",
+            "s_dist_02": f"dist-str#{rng.integers(0,99):02d}#"
+                         f"{rng.integers(0,99):02d}#{rng.integers(0,9999):04d}",
+            "s_data": f"{_CORP[int(rng.zipf(1.3)) % len(_CORP)]} item grade "
+                      f"{chr(65 + int(rng.integers(0, 6)))}",
+        })
+    return rows
+
+
+def gen_orderline(n: int, seed: int = 2) -> List[Dict]:
+    rng = np.random.default_rng(seed)
+    rows = []
+    for i in range(n):
+        rows.append({
+            "ol_o_id": i // 10,
+            "ol_number": i % 10,
+            "ol_i_id": int(rng.zipf(1.2)) % 100000,
+            "ol_quantity": int(rng.integers(1, 10)),
+            "ol_amount": float(np.round(rng.uniform(0.01, 9999.99), 2)),
+            "ol_dist_info": f"dist-str#{rng.integers(0,99):02d}#"
+                            f"{rng.integers(0,99):02d}#"
+                            f"{rng.integers(0,9999):04d}",
+        })
+    return rows
+
+
+TABLES = {
+    "customer": (CUSTOMER_SCHEMA, gen_customer),
+    "stock": (STOCK_SCHEMA, gen_stock),
+    "orderline": (ORDERLINE_SCHEMA, gen_orderline),
+}
+
+
+def row_bytes(rows: List[Dict]) -> int:
+    """Uncompressed size: fixed-width numerics + string bytes (Silo-style)."""
+    total = 0
+    for r in rows:
+        for v in r.values():
+            if isinstance(v, str):
+                total += len(v.encode()) + 1
+            elif isinstance(v, float):
+                total += 8
+            else:
+                total += 8
+    return total

@@ -1,0 +1,153 @@
+"""Batched serving engine: prefill -> decode with an explicit state.
+
+Requests are served in static batches (the production pattern for fixed
+shapes): ``generate`` prefills the prompt batch (cache-collecting forward),
+then iterates jitted single-token decode steps with greedy/temperature
+sampling.  The KV cache can be offloaded per-page to the Blitzcrank
+compressed host store (`--kv host-blz`), reproducing the paper's
+larger-than-memory flow (§7.2) at serving time: hot pages stay on device,
+cold pages live compressed in host RAM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.tensor.kv_cache import CompressedKVStore
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray           # [B, T] generated ids
+    logits_last: np.ndarray
+    kv_store_stats: Optional[Dict] = None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
+                 donate: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(
+            lambda p, s, t: tfm.decode_step(p, cfg, s, t),
+            donate_argnums=(1,) if donate else ())
+        self._flush = jax.jit(lambda s: tfm.flush_tail(cfg, s),
+                              donate_argnums=(0,) if donate else ())
+        self._prefill = jax.jit(
+            lambda p, toks, kw: tfm.forward(p, cfg, toks, collect_cache=True,
+                                            **kw),
+            static_argnames=())
+
+    # ------------------------------------------------------------------
+    def prefill(self, tokens: jax.Array, prefix_embeds=None,
+                encoder_frames=None):
+        """Returns (last logits [B,1,V], decode state)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        kw = {}
+        if prefix_embeds is not None:
+            kw["prefix_embeds"] = prefix_embeds
+        if encoder_frames is not None:
+            kw["encoder_frames"] = encoder_frames
+        h, _, cache = tfm.forward(self.params, cfg, tokens,
+                                  collect_cache=True, **kw)
+        logits = tfm.unembed(self.params, cfg, h[:, -1:])
+        state = tfm.init_decode_state(cfg, B, self.max_len)
+        state["pos"] = jnp.asarray(S, jnp.int32)
+        if "k" in cache:
+            # split prompt KV into committed pages [0, base) + write tail
+            T = state["k_tail"].shape[2]
+            base = (S // T) * T if S % T else max(S - T, 0)
+            n_tail = S - base
+            kt = jnp.zeros_like(state["k_tail"])
+            vt = jnp.zeros_like(state["v_tail"])
+            kt = kt.at[:, :, :n_tail].set(cache["k"][:, :, base:S])
+            vt = vt.at[:, :, :n_tail].set(cache["v"][:, :, base:S])
+            state["k_tail"], state["v_tail"] = kt, vt
+            if base > 0:
+                filler = dict(state)
+                filler["pos"] = jnp.asarray(base, jnp.int32)
+                filler["k_tail"] = cache["k"][:, :, :base]
+                filler["v_tail"] = cache["v"][:, :, :base]
+                # commit the prompt pages in T-sized chunks
+                for start in range(0, base, T):
+                    chunk = dict(state)
+                    chunk["pos"] = jnp.asarray(start + T, jnp.int32)
+                    chunk["k_tail"] = cache["k"][:, :, start:start + T]
+                    chunk["v_tail"] = cache["v"][:, :, start:start + T]
+                    chunk["k"], chunk["v"] = state["k"], state["v"]
+                    if self.cfg.kv_quant:
+                        chunk["k_scale"] = state["k_scale"]
+                        chunk["v_scale"] = state["v_scale"]
+                    committed = tfm.flush_tail(self.cfg, chunk)
+                    state["k"], state["v"] = committed["k"], committed["v"]
+                    if self.cfg.kv_quant:
+                        state["k_scale"] = committed["k_scale"]
+                        state["v_scale"] = committed["v_scale"]
+        for key in ("cross_k", "cross_v", "mamba", "mlstm", "slstm"):
+            if key in cache:
+                state[key] = cache[key]
+        return logits, state
+
+    # ------------------------------------------------------------------
+    def generate(self, tokens: np.ndarray, max_new: int = 32,
+                 temperature: float = 0.0, seed: int = 0,
+                 prefix_embeds=None, encoder_frames=None) -> GenerateResult:
+        logits, state = self.prefill(jnp.asarray(tokens),
+                                     prefix_embeds=prefix_embeds,
+                                     encoder_frames=encoder_frames)
+        B = tokens.shape[0]
+        key = jax.random.PRNGKey(seed)
+        out: List[np.ndarray] = []
+        T = state["k_tail"].shape[2] if "k_tail" in state else 0
+        cur = self._sample(logits, temperature, key)
+        for t in range(max_new):
+            out.append(np.asarray(cur[:, 0]))
+            logits, state = self._decode(self.params, state, cur)
+            if T and int(state["pos"]) % T == 0:
+                state = self._flush(state)  # amortized page commit
+            key, sub = jax.random.split(key)
+            cur = self._sample(logits, temperature, sub)
+        return GenerateResult(tokens=np.stack(out, 1),
+                              logits_last=np.asarray(logits))
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        if temperature <= 0:
+            return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits[:, -1:] / temperature, axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    def offload_kv(self, state, page_tokens: int = 128,
+                   store: Optional[CompressedKVStore] = None
+                   ) -> CompressedKVStore:
+        """Move the filled KV prefix to the compressed host store (§7.2)."""
+        store = store or CompressedKVStore(page_tokens=page_tokens)
+        if "k" not in state:
+            return store
+        pos = int(state["pos"])
+        k = np.asarray(state["k"][:, :, :pos], np.float32)
+        v = np.asarray(state["v"][:, :, :pos], np.float32)
+        L, B = k.shape[0], k.shape[1]
+        for layer in range(L):
+            for start in range(0, pos, page_tokens):
+                end = min(start + page_tokens, pos)
+                # page = [tokens, B*K, D] viewed per layer
+                kp = k[layer, :, start:end].reshape(end - start, -1, k.shape[-1])
+                vp = v[layer, :, start:end].reshape(end - start, -1, v.shape[-1])
+                store.put(layer, start, kp, vp)
+        return store
+
+    def fetch_kv(self, store: CompressedKVStore, state, layer: int,
+                 start: int):
+        """Random access into the compressed store (paper's point query)."""
+        return store.get(layer, start)

@@ -1,0 +1,210 @@
+"""Semantic tensor codec: Blitzcrank's models applied to model state.
+
+Two modes (DESIGN.md §3):
+
+* ``lossless16`` — bf16/fp16 tensors viewed as u16 bit patterns, one
+  categorical semantic model per channel group; exactly lossless.  The TPU
+  adaptation of the paper's categorical model (bf16 values cluster heavily:
+  exponent/high-mantissa patterns are low-entropy).
+* ``twolevel`` — the paper's §4.2 numeric model: per-group equi-width
+  histogram (skew-aware level 1) + uniform precision grid (level 2);
+  |err| <= p/2.
+
+Both encode groups of values as Blitzcrank *tuples* (fixed slot schemas) via
+vectorized delayed coding; decode paths exist in numpy (host), pure-jnp ref,
+and the Pallas kernel (``repro.kernels.delayed_decode``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.coders import TOTAL, DiscreteCoder, UniformCoder, quantize_freqs
+from repro.core.vectorized import decode_batch, decode_select, encode_batch
+
+
+@dataclasses.dataclass
+class CompressedTensor:
+    codes: np.ndarray            # uint16 arena
+    offsets: np.ndarray          # int64 per-tuple CSR offsets
+    shape: Tuple[int, ...]
+    dtype: str
+    group_rows: int              # tuples per group (model index stride)
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.codes.size * 2 + self.offsets.size * 8)
+
+    def ratio(self) -> float:
+        raw = int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
+        return raw / max(self.nbytes, 1)
+
+
+class Lossless16Codec:
+    """Per-group categorical model over 16-bit patterns; exactly lossless."""
+
+    def __init__(self, sample: np.ndarray, group_size: int = 256,
+                 max_syms: int = 4096):
+        assert sample.dtype.itemsize == 2, "lossless16 expects 16-bit dtypes"
+        self.group_size = group_size
+        bits = sample.reshape(-1).view(np.uint16)
+        # one global model (per-tensor); per-channel variants cost model size
+        counts = np.bincount(bits, minlength=65536).astype(np.float64)
+        nz = np.flatnonzero(counts)
+        if nz.size > max_syms:
+            top = nz[np.argsort(-counts[nz])[:max_syms]]
+        else:
+            top = nz
+        self.sym_of = np.full(65536, -1, np.int32)
+        self.sym_of[top] = np.arange(top.size)
+        self.pattern_of = top.astype(np.uint16)
+        esc = max(1.0, counts.sum() - counts[top].sum())
+        self.coder = DiscreteCoder(quantize_freqs(
+            np.append(counts[top], esc)))
+        self.esc = top.size
+        self.raw = UniformCoder(TOTAL)
+
+    def encode(self, x: np.ndarray) -> CompressedTensor:
+        bits = np.ascontiguousarray(x).reshape(-1).view(np.uint16)
+        n = bits.size
+        g = self.group_size
+        pad = (-n) % g
+        bits_p = np.pad(bits, (0, pad))
+        syms = self.sym_of[bits_p].astype(np.int64)
+        escaped = syms < 0
+        # escape: symbol ESC followed by a raw 16-bit slot. Fixed-slot trick:
+        # every value uses two slots (sym, raw); raw is 0 for non-escapes
+        # and is assigned interval [0, 2**16) -> contributes just its code
+        # options, so non-escape raws cost ~0 bits... but a uniform raw slot
+        # always costs 0 bits of entropy yet still consumes options - encode
+        # escapes out-of-band instead (simpler and tighter):
+        s2 = np.where(escaped, self.esc, syms).reshape(-1, g)
+        codes, offsets = encode_batch(s2, [self.coder] * g)
+        esc_vals = bits_p[escaped.reshape(-1)]
+        return CompressedTensor(
+            codes=codes, offsets=offsets, shape=tuple(x.shape),
+            dtype=str(x.dtype), group_rows=g,
+            meta={"esc_vals": esc_vals, "pad": pad, "mode": "lossless16"})
+
+    def decode(self, ct: CompressedTensor) -> np.ndarray:
+        syms = decode_batch(ct.codes, ct.offsets, [self.coder] * ct.group_rows)
+        flat = syms.reshape(-1)
+        out = self.pattern_of[np.minimum(flat, self.esc - 1)].astype(np.uint16)
+        esc_idx = np.flatnonzero(flat == self.esc)
+        out[esc_idx] = ct.meta["esc_vals"]
+        if ct.meta["pad"]:
+            out = out[:-ct.meta["pad"]]
+        return out.view(np.dtype(ct.dtype)).reshape(ct.shape)
+
+    def model_bytes(self) -> int:
+        return int(self.pattern_of.nbytes + 65536 * 4 + 7 * 4 *
+                   self.coder.tables.n_buckets)
+
+
+class TwoLevelCodec:
+    """Paper §4.2 two-level numeric model over value groups (lossy, |e|<=p/2)."""
+
+    def __init__(self, sample: np.ndarray, precision: float,
+                 T: int = 512, group_size: int = 256):
+        v = np.asarray(sample, np.float64).reshape(-1)
+        self.p = float(precision)
+        self.group_size = group_size
+        self.vmin = float(v.min())
+        vmax = float(v.max())
+        total_steps = int(math.floor((vmax - self.vmin) / self.p + 1e-9)) + 1
+        self.G = max(1, -(-total_steps // T))
+        self.T = -(-total_steps // self.G)
+        q = self._q(v)
+        buckets = np.clip(q // self.G, 0, self.T - 1)
+        counts = np.bincount(buckets, minlength=self.T).astype(np.float64)
+        counts = np.append(counts, max(1.0, 1e-4 * v.size))  # escape
+        self.esc = self.T
+        self.l1 = DiscreteCoder(quantize_freqs(counts))
+        self.l2: List[UniformCoder] = []
+        g = self.G
+        digits = []
+        while g > 1:
+            digits.append(min(g, TOTAL))
+            g = -(-g // TOTAL)
+        self.l2 = [UniformCoder(a) for a in reversed(digits)]
+        self.radix = []
+        w = 1
+        for c in reversed(self.l2):
+            self.radix.insert(0, w)
+            w *= c.G
+
+    def _q(self, v):
+        return np.floor((v - self.vmin) / self.p + 1e-9).astype(np.int64)
+
+    def _slots(self):
+        return [self.l1] + self.l2
+
+    def encode(self, x: np.ndarray) -> CompressedTensor:
+        v = np.asarray(x, np.float64).reshape(-1)
+        q = self._q(v)
+        oob = (q < 0) | (q >= self.T * self.G)
+        q = np.clip(q, 0, self.T * self.G - 1)
+        n = v.size
+        g = self.group_size
+        pad = (-n) % g
+        qp = np.pad(q, (0, pad))
+        oobp = np.pad(oob, (0, pad))
+        bucket = qp // self.G
+        bucket = np.where(oobp, self.esc, bucket)
+        cols = [bucket]
+        rem = qp % self.G
+        for w in self.radix:
+            cols.append(rem // w)
+            rem = rem % w
+        S = len(cols)
+        syms = np.stack(cols, 1).reshape(-1, g * S)
+        # interleaved fixed-slot schema: one tuple = g values x S slots
+        coders = self._slots() * g
+        # reorder so slots of one value are adjacent
+        syms = syms.reshape(-1, g, S).reshape(-1, g * S)
+        codes, offsets = encode_batch(syms, coders)
+        esc_vals = np.asarray(v[oob], np.float64)
+        return CompressedTensor(
+            codes=codes, offsets=offsets, shape=tuple(np.shape(x)),
+            dtype=str(np.asarray(x).dtype), group_rows=g,
+            meta={"esc_vals": esc_vals, "pad": pad, "mode": "twolevel",
+                  "S": S})
+
+    def decode(self, ct: CompressedTensor) -> np.ndarray:
+        g, S = ct.group_rows, ct.meta["S"]
+        coders = self._slots() * g
+        syms = decode_batch(ct.codes, ct.offsets, coders)
+        syms = syms.reshape(-1, g, S)
+        bucket = syms[..., 0].reshape(-1)
+        j = np.zeros_like(bucket)
+        for i, w in enumerate(self.radix):
+            j = j + syms[..., 1 + i].reshape(-1) * w
+        oob = bucket == self.esc
+        q = np.clip(bucket, 0, self.T - 1) * self.G + j
+        v = self.vmin + (q + 0.5) * self.p
+        v[oob] = ct.meta["esc_vals"]
+        if ct.meta["pad"]:
+            v = v[:-ct.meta["pad"]]
+        return v.astype(np.dtype(ct.dtype)).reshape(ct.shape)
+
+    def model_bytes(self) -> int:
+        return int(7 * 4 * self.l1.tables.n_buckets + 64)
+
+
+def fit_codec(sample: np.ndarray, mode: str = "auto",
+              precision: Optional[float] = None, **kw):
+    """Pick/fit a codec: 16-bit dtypes -> lossless16, floats -> twolevel."""
+    sample = np.asarray(sample)
+    if mode == "auto":
+        mode = "lossless16" if sample.dtype.itemsize == 2 else "twolevel"
+    if mode == "lossless16":
+        return Lossless16Codec(sample, **kw)
+    if precision is None:
+        scale = float(np.std(sample)) or 1.0
+        precision = scale / 256.0  # ~int8-grade default
+    return TwoLevelCodec(sample, precision, **kw)

@@ -1,0 +1,94 @@
+"""Cross-pod gradient compression with error feedback (DESIGN.md §3.3).
+
+On the multi-pod mesh the 'pod' axis crosses DCN, the slowest fabric; the
+per-step gradient synchronisation across pods is the collective-roofline
+term this module attacks.  Scheme (paper §4.2's skew-aware quantizer in
+int8 clothing, plus standard error feedback):
+
+    g_local  = in-pod reduced gradients (implicit from batch sharding)
+    q        = int8_quantize(g_local + err)          per-block scales
+    exchange = all_gather(q, axis='pod')             int8 on the wire (4x
+                                                     fewer bytes than f32)
+    g_synced = mean(dequant(exchange))
+    err      = (g_local + err) - dequant(q)          error feedback
+
+Used through ``shard_map`` over the 'pod' axis so the wire dtype is
+explicit; the in-pod reduction stays GSPMD-implicit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+BLOCK = 256
+
+
+def _quant_block(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """int8 quantization with per-block scales (skew-aware via max-abs)."""
+    flat = g.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant_block(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def compress_exchange(g: jax.Array, err: jax.Array, axis_name: str
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Inside shard_map: returns (synced grads, new error feedback)."""
+    target = g.astype(jnp.float32) + err
+    q, scale = _quant_block(target)
+    # int8 + f32-scales on the wire (4x fewer bytes than f32 grads)
+    q_all = jax.lax.all_gather(q, axis_name)          # [n_pods, ...]
+    s_all = jax.lax.all_gather(scale, axis_name)
+    n = q_all.shape[0]
+    deq = jax.vmap(lambda qq, ss: _dequant_block(qq, ss, g.shape))(q_all, s_all)
+    synced = deq.mean(axis=0)
+    new_err = target - _dequant_block(q, scale, g.shape)
+    return synced.astype(g.dtype), new_err
+
+
+def make_podwise_sync(mesh, param_specs):
+    """Build a shard_map'd tree sync over the 'pod' axis.
+
+    ``param_specs``: pytree of PartitionSpecs for the gradient tree with the
+    'pod' axis absent (grads are pod-replicated after in-pod reduction).
+    """
+    if "pod" not in mesh.axis_names:
+        return None  # single-pod: nothing to compress
+
+    def sync(grads, errs):
+        def one(g, e):
+            return compress_exchange(g, e, "pod")
+        return jax.tree.map(one, grads, errs)
+
+    from jax.experimental.shard_map import shard_map
+    return shard_map(
+        sync, mesh=mesh,
+        in_specs=(param_specs, param_specs),
+        out_specs=(param_specs, param_specs),
+        check_rep=False)
+
+
+def wire_bytes(tree: Any) -> Tuple[int, int]:
+    """(uncompressed f32 bytes, compressed int8+scale bytes) per pod hop."""
+    raw = comp = 0
+    for x in jax.tree.leaves(tree):
+        n = int(x.size)
+        raw += 4 * n
+        comp += n + 4 * (-(-n // BLOCK))
+    return raw, comp

@@ -1,0 +1,134 @@
+"""Compressed KV cache (DESIGN.md §3.2): decompress-on-access pages.
+
+Two tiers, mirroring the paper's hot/cold split (§6.5's cache + storage):
+
+* **Hot (in-jit)**: int8 semantic quantization with per-(token, kv-head)
+  scales; attention reads tiles through ``kernels.kv_attention_int8``
+  (dequantize in VMEM).  2x memory vs bf16, jit/SPMD-native.
+* **Cold (host pages)**: full Blitzcrank — per-layer two-level numeric
+  models + delayed coding at page granularity; pages are the "tuples",
+  random access decompresses one page (the paper's point-query flow).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .codec import CompressedTensor, TwoLevelCodec
+
+
+# ---------------------------------------------------------------------------
+# Hot tier: int8 + scales (jit-native)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(k: jax.Array, v: jax.Array):
+    """[B, S, K, D] bf16 -> int8 + f32 scales per (token, head)."""
+    def q(x):
+        xf = x.astype(jnp.float32)
+        s = jnp.max(jnp.abs(xf), axis=-1) / 127.0 + 1e-8
+        qx = jnp.clip(jnp.round(xf / s[..., None]), -127, 127).astype(jnp.int8)
+        return qx, s
+    kq, ks = q(k)
+    vq, vs = q(v)
+    return kq, ks, vq, vs
+
+
+def dequantize_kv(kq, ks, vq, vs, dtype=jnp.bfloat16):
+    k = (kq.astype(jnp.float32) * ks[..., None]).astype(dtype)
+    v = (vq.astype(jnp.float32) * vs[..., None]).astype(dtype)
+    return k, v
+
+
+@dataclasses.dataclass
+class QuantKVCache:
+    """Stacked per-layer int8 caches: kq/vq [L, B, S, K, D], scales [L,B,S,K]."""
+    kq: jax.Array
+    ks: jax.Array
+    vq: jax.Array
+    vs: jax.Array
+
+    @classmethod
+    def create(cls, L, B, S, K, D):
+        return cls(kq=jnp.zeros((L, B, S, K, D), jnp.int8),
+                   ks=jnp.zeros((L, B, S, K), jnp.float32),
+                   vq=jnp.zeros((L, B, S, K, D), jnp.int8),
+                   vs=jnp.zeros((L, B, S, K), jnp.float32))
+
+    def update(self, layer_slice, pos, k_new, v_new):
+        """Insert one token (decode step) at ``pos`` for every layer slice."""
+        kq, ks, vq, vs = quantize_kv(k_new, v_new)
+        upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+            buf, val, pos, axis=1)
+        return dataclasses.replace(
+            self,
+            kq=upd(self.kq[layer_slice], kq),
+            ks=upd(self.ks[layer_slice], ks),
+            vq=upd(self.vq[layer_slice], vq),
+            vs=upd(self.vs[layer_slice], vs))
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                   for x in (self.kq, self.ks, self.vq, self.vs))
+
+
+# ---------------------------------------------------------------------------
+# Cold tier: Blitzcrank pages on host
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Page:
+    layer: int
+    start: int                  # first token position
+    tokens: int
+    k_ct: CompressedTensor
+    v_ct: CompressedTensor
+
+
+class CompressedKVStore:
+    """Host-side paged store; one two-level model pair per layer.
+
+    The serving engine offloads cold pages here and fetches them back on
+    access (decompress-per-page = the paper's per-tuple random access).
+    """
+
+    def __init__(self, page_tokens: int = 128, precision_frac: float = 1 / 256):
+        self.page_tokens = page_tokens
+        self.precision_frac = precision_frac
+        self.codecs: Dict[int, Tuple[TwoLevelCodec, TwoLevelCodec]] = {}
+        self.pages: Dict[Tuple[int, int], Page] = {}
+
+    def _codec_for(self, layer: int, k: np.ndarray, v: np.ndarray):
+        if layer not in self.codecs:
+            pk = max(float(np.std(k)), 1e-6) * self.precision_frac * 8
+            pv = max(float(np.std(v)), 1e-6) * self.precision_frac * 8
+            self.codecs[layer] = (TwoLevelCodec(k, pk, group_size=128),
+                                  TwoLevelCodec(v, pv, group_size=128))
+        return self.codecs[layer]
+
+    def put(self, layer: int, start: int, k: np.ndarray, v: np.ndarray):
+        """k/v: [tokens, K, D] float arrays for one page."""
+        ck, cv = self._codec_for(layer, k, v)
+        page = Page(layer=layer, start=start, tokens=k.shape[0],
+                    k_ct=ck.encode(k.astype(np.float32)),
+                    v_ct=cv.encode(v.astype(np.float32)))
+        self.pages[(layer, start)] = page
+        return page
+
+    def get(self, layer: int, start: int) -> Tuple[np.ndarray, np.ndarray]:
+        page = self.pages[(layer, start)]
+        ck, cv = self.codecs[layer]
+        return ck.decode(page.k_ct), cv.decode(page.v_ct)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(p.k_ct.nbytes + p.v_ct.nbytes for p in self.pages.values())
+
+    def raw_nbytes(self, itemsize: int = 2) -> int:
+        return sum(2 * p.tokens * int(np.prod(p.k_ct.shape[1:])) * itemsize
+                   for p in self.pages.values())

@@ -1,0 +1,113 @@
+"""Fault tolerance: step watchdog, preemption hooks, restart supervision.
+
+Designed for 1000+-node posture (DESIGN.md §5): every mechanism is a
+host-side policy around the jitted step, so it works identically on CPU
+smoke tests and real pods.
+
+* :class:`StepWatchdog` — arms a deadline per step; if a step stalls
+  (straggler/hang) the callback fires (default: record + raise on the next
+  poll so the supervisor restarts from the last checkpoint).
+* :class:`PreemptionGuard` — SIGTERM/SIGINT handler that requests a
+  graceful stop; the train loop checkpoints and exits cleanly.
+* :func:`run_with_restarts` — supervisor: runs the training callable,
+  catching failures and restarting from the latest checkpoint up to
+  ``max_restarts`` times (simulating scheduler-level retries in-tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import threading
+import time
+from typing import Callable, List, Optional
+
+
+class StepWatchdog:
+    def __init__(self, deadline_s: float,
+                 on_stall: Optional[Callable[[int, float], None]] = None):
+        self.deadline_s = deadline_s
+        self.on_stall = on_stall
+        self.stalls: List[int] = []
+        self._timer: Optional[threading.Timer] = None
+        self._step = -1
+        self._lock = threading.Lock()
+
+    def arm(self, step: int) -> None:
+        with self._lock:
+            self._cancel()
+            self._step = step
+            self._timer = threading.Timer(self.deadline_s, self._fire)
+            self._timer.daemon = True
+            self._timer.start()
+
+    def disarm(self) -> None:
+        with self._lock:
+            self._cancel()
+
+    def _cancel(self):
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+    def _fire(self):
+        self.stalls.append(self._step)
+        if self.on_stall:
+            self.on_stall(self._step, self.deadline_s)
+
+    @property
+    def stalled(self) -> bool:
+        return bool(self.stalls)
+
+
+class PreemptionGuard:
+    """Converts SIGTERM/SIGINT into a cooperative stop request."""
+
+    def __init__(self, install: bool = True):
+        self.stop_requested = False
+        self._prev = {}
+        if install:
+            for sig in (signal.SIGTERM, signal.SIGINT):
+                try:
+                    self._prev[sig] = signal.signal(sig, self._handler)
+                except ValueError:  # non-main thread (tests)
+                    pass
+
+    def _handler(self, signum, frame):
+        self.stop_requested = True
+
+    def request_stop(self) -> None:  # also triggerable programmatically
+        self.stop_requested = True
+
+    def uninstall(self) -> None:
+        for sig, h in self._prev.items():
+            signal.signal(sig, h)
+
+
+@dataclasses.dataclass
+class RestartReport:
+    restarts: int
+    completed: bool
+    errors: List[str]
+
+
+def run_with_restarts(fn: Callable[[int], bool], max_restarts: int = 3,
+                      backoff_s: float = 0.0) -> RestartReport:
+    """Run ``fn(attempt) -> completed`` with restart-on-exception.
+
+    ``fn`` must be resumable (restore from the latest checkpoint on entry) —
+    the contract every node-failure recovery path relies on.
+    """
+    errors: List[str] = []
+    for attempt in range(max_restarts + 1):
+        try:
+            if fn(attempt):
+                return RestartReport(restarts=attempt, completed=True,
+                                     errors=errors)
+        except Exception as e:  # noqa: BLE001 - supervisor catches all
+            errors.append(f"{type(e).__name__}: {e}")
+            if backoff_s:
+                time.sleep(backoff_s)
+            continue
+    return RestartReport(restarts=max_restarts, completed=False,
+                         errors=errors)

@@ -1,0 +1,150 @@
+"""Trainer: the end-to-end driver (mesh + steps + data + FT + checkpoints).
+
+Composes every substrate: jitted train step with full shardings
+(launch.steps), deterministic data (data.pipeline), atomic/async
+checkpoints with reshard-on-restore (train.checkpoint), watchdog +
+preemption + restart supervision (train.fault_tolerance), and optional
+cross-pod gradient compression (tensor.grad_compress).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.data.pipeline import SyntheticLM
+from repro.dist import partitioning as parts
+from repro.dist.sharding import use_rules
+from repro.launch import steps as steps_lib
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.train import optimizer as opt_lib
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import PreemptionGuard, StepWatchdog
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    arch: str = "phi4-mini-3.8b"
+    shape: str = "train_4k"
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    watchdog_s: float = 0.0          # 0 = disabled
+    layout: str = "tp"
+    compress_ckpt: bool = False
+
+
+class Trainer:
+    def __init__(self, tc: TrainerConfig, mesh,
+                 cfg: Optional[ModelConfig] = None,
+                 shape: Optional[ShapeConfig] = None,
+                 data: Optional[Iterator[Dict[str, np.ndarray]]] = None,
+                 opt_cfg: Optional[opt_lib.OptimizerConfig] = None):
+        self.tc = tc
+        self.mesh = mesh
+        self.cfg = cfg or get_config(tc.arch)
+        self.shape = shape or SHAPES_BY_NAME[tc.shape]
+        self.opt_cfg = opt_cfg or opt_lib.OptimizerConfig(
+            total_steps=tc.steps)
+        self.rules = steps_lib.rules_for(mesh, self.shape, tc.layout)
+        self._data = data
+        self.ckpt = CheckpointManager(
+            tc.ckpt_dir, compress="blz" if tc.compress_ckpt else None) \
+            if tc.ckpt_dir else None
+        self.guard = PreemptionGuard(install=False)
+        self.watchdog = StepWatchdog(tc.watchdog_s) if tc.watchdog_s else None
+        self.metrics_log: list = []
+        self._build()
+
+    # ------------------------------------------------------------------
+    def _build(self) -> None:
+        cfg, shape, rules = self.cfg, self.shape, self.rules
+        p_shape = steps_lib.abstract_params(cfg)
+        self.p_shard = parts.param_shardings(rules, p_shape)
+        o_shape = steps_lib.abstract_opt_state(p_shape)
+        rep = parts.replicated(rules)
+        self.o_shard = opt_lib.OptState(
+            step=rep, m=parts.param_shardings(rules, o_shape.m),
+            v=parts.param_shardings(rules, o_shape.v))
+        batch_abs = steps_lib.input_specs(cfg, shape)
+        self.b_shard = parts.batch_shardings(rules, batch_abs)
+        fn = steps_lib.make_train_step(cfg, self.opt_cfg)
+        metric_keys = {"loss": 0, "xent": 0, "aux": 0, "tokens": 0,
+                       "grad_norm": 0, "lr": 0}
+        with use_rules(rules):
+            self.step_fn = jax.jit(
+                fn, in_shardings=(self.p_shard, self.o_shard, self.b_shard),
+                out_shardings=(self.p_shard, self.o_shard,
+                               jax.tree.map(lambda _: rep, metric_keys)),
+                donate_argnums=(0, 1))
+
+    def init_state(self):
+        with self.mesh, use_rules(self.rules):
+            params = jax.jit(
+                lambda k: tfm.init_params(self.cfg, k),
+                out_shardings=self.p_shard)(jax.random.PRNGKey(self.tc.seed))
+            opt_state = jax.jit(
+                opt_lib.init, out_shardings=self.o_shard)(params)
+        return params, opt_state
+
+    def data_iter(self, start_step: int):
+        if self._data is not None:
+            return self._data
+        return SyntheticLM(self.cfg.vocab, self.shape.seq_len,
+                           self.shape.global_batch,
+                           seed=self.tc.seed).batches(start_step)
+
+    # ------------------------------------------------------------------
+    def run(self, resume: bool = True,
+            fail_at_step: Optional[int] = None) -> Dict[str, Any]:
+        """Train; returns summary.  ``fail_at_step`` injects a crash (tests)."""
+        start = 0
+        params = opt_state = None
+        if resume and self.ckpt and self.ckpt.latest_step() is not None:
+            start, tree, extra = self.ckpt.restore(
+                shardings={"params": self.p_shard,
+                           "opt": self.o_shard._asdict()})
+            params = tree["params"]
+            opt_state = opt_lib.OptState(**tree["opt"])
+        if params is None:
+            params, opt_state = self.init_state()
+
+        it = self.data_iter(start)
+        t0 = time.time()
+        last = {}
+        for step in range(start, self.tc.steps):
+            if self.guard.stop_requested:
+                break
+            batch = next(it)
+            batch = {k: jax.device_put(v, s) for (k, v), s in
+                     zip(batch.items(), jax.tree.leaves(self.b_shard))}
+            if self.watchdog:
+                self.watchdog.arm(step)
+            with self.mesh, use_rules(self.rules):
+                params, opt_state, metrics = self.step_fn(
+                    params, opt_state, batch)
+            if self.watchdog:
+                self.watchdog.disarm()
+            if fail_at_step is not None and step == fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            if (step + 1) % self.tc.log_every == 0 or step == start:
+                last = {k: float(v) for k, v in metrics.items()}
+                self.metrics_log.append({"step": step + 1, **last})
+            if self.ckpt and (step + 1) % self.tc.ckpt_every == 0:
+                self.ckpt.save(step + 1, {
+                    "params": params, "opt": opt_state._asdict()})
+        if self.ckpt:
+            self.ckpt.save(self.tc.steps, {
+                "params": params, "opt": opt_state._asdict()}, block=True)
+            self.ckpt.wait()
+        return {"final_metrics": last, "steps_done": self.tc.steps - start,
+                "wall_s": time.time() - t0, "params": params,
+                "opt_state": opt_state}

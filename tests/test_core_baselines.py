@@ -1,0 +1,95 @@
+"""Baseline coders: arithmetic (App. A), rANS (§6.3), Huffman (Raman-style)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import arithmetic, rans
+from repro.core.coders import DiscreteCoder, UniformCoder, quantize_freqs
+from repro.core.huffman import BitReader, BitWriter, HuffmanCode
+
+
+def _mixed_coders(rng, S):
+    out = []
+    for s in range(S):
+        if s % 4 == 2:
+            out.append(UniformCoder(int(rng.integers(2, 65537))))
+        else:
+            n = int(rng.integers(2, 300))
+            w = 1.0 / np.arange(1, n + 1) ** 1.2
+            out.append(DiscreteCoder(quantize_freqs(w * 1e6)))
+    return out
+
+
+def _draw(rng, c):
+    hi = c.G if isinstance(c, UniformCoder) else c.tables.n_symbols
+    return int(rng.integers(0, hi))
+
+
+class TestArithmetic:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_roundtrip(self, seed):
+        rng = np.random.default_rng(seed)
+        coders = _mixed_coders(rng, int(rng.integers(1, 60)))
+        syms = [_draw(rng, c) for c in coders]
+        payload, nbits = arithmetic.encode_block(syms, coders)
+        assert arithmetic.decode_block(payload, nbits, coders) == syms
+
+    def test_near_optimal_size(self):
+        """Arithmetic coding is the entropy yardstick: within 2 bits/block."""
+        rng = np.random.default_rng(9)
+        coders = _mixed_coders(rng, 32)
+        syms = [_draw(rng, c) for c in coders]
+        _, nbits = arithmetic.encode_block(syms, coders)
+        info = sum(16 - np.log2(c.k(s)) for s, c in zip(syms, coders))
+        assert info - 1e-6 <= nbits <= info + 2
+
+
+class TestRans:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_roundtrip_alias_layout(self, seed):
+        rng = np.random.default_rng(seed)
+        coders = _mixed_coders(rng, int(rng.integers(1, 60)))
+        syms = [_draw(rng, c) for c in coders]
+        words = rans.encode_block(syms, coders)
+        out, used = rans.decode_block(words, coders)
+        assert out == syms and used == len(words)
+
+    def test_roundtrip_cdf_layout(self):
+        rng = np.random.default_rng(5)
+        coders = _mixed_coders(rng, 40)
+        syms = [_draw(rng, c) for c in coders]
+        words = rans.encode_block_cdf(syms, coders)
+        out, _ = rans.decode_block_cdf(words, coders)
+        assert out == syms
+
+    def test_size_overhead_is_state_flush_only(self):
+        rng = np.random.default_rng(6)
+        coders = _mixed_coders(rng, 64)
+        syms = [_draw(rng, c) for c in coders]
+        words = rans.encode_block(syms, coders)
+        info = sum(16 - np.log2(c.k(s)) for s, c in zip(syms, coders))
+        assert len(words) * 16 <= info + 48  # 32-bit state + <=1 word slack
+
+
+class TestHuffman:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 300), st.integers(0, 2**31))
+    def test_property_roundtrip(self, n, seed):
+        rng = np.random.default_rng(seed)
+        counts = rng.zipf(1.4, n).astype(float)
+        hc = HuffmanCode(counts)
+        data = rng.integers(0, n, 64).tolist()
+        bw = BitWriter()
+        for s in data:
+            hc.encode(int(s), bw)
+        buf, _ = bw.getvalue()
+        br = BitReader(buf)
+        assert [hc.decode(br) for _ in data] == data
+
+    def test_mean_length_near_entropy(self):
+        w = 1.0 / np.arange(1, 64) ** 1.1
+        p = w / w.sum()
+        hc = HuffmanCode(w * 1e6)
+        H = -(p * np.log2(p)).sum()
+        assert H <= hc.mean_bits(p) <= H + 1  # classic Huffman bound

@@ -1,0 +1,88 @@
+"""Unit + property tests for the 16-bit interval coders (§4.1, §5.1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coders import (TOTAL, DiscreteCoder, UniformCoder,
+                               build_alias, quantize_freqs)
+
+
+def _zipf(n, a=1.2):
+    return 1.0 / np.arange(1, n + 1) ** a
+
+
+class TestQuantize:
+    def test_sums_to_total(self):
+        for n in (1, 2, 10, 1000):
+            k = quantize_freqs(_zipf(n) * 1e6)
+            assert int(k.sum()) == TOTAL
+            assert (k >= 1).all()
+
+    def test_heavy_skew_keeps_rare_symbols(self):
+        counts = np.array([1e9, 1, 1, 1])
+        k = quantize_freqs(counts)
+        assert (k[1:] >= 1).all() and int(k.sum()) == TOTAL
+
+    def test_rejects_empty(self):
+        with pytest.raises(ValueError):
+            quantize_freqs(np.array([]))
+
+
+class TestAlias:
+    @pytest.mark.parametrize("n", [1, 2, 3, 17, 255, 256, 1024])
+    def test_full_codespace_partition(self, n):
+        """Theorem 1: every code maps to exactly one (sym, a) and back."""
+        dc = DiscreteCoder(quantize_freqs(_zipf(n) * 1e7))
+        codes = np.arange(TOTAL)
+        sym, a, k = dc.inv_translate_batch(codes)
+        assert (a >= 0).all() and (a < k).all()
+        assert (dc.code_for_batch(sym, a) == codes).all()
+        # option counts per symbol equal the quantized frequencies
+        assert (np.bincount(sym, minlength=n) == dc.tables.k_of).all()
+
+    def test_scalar_matches_batch(self):
+        dc = DiscreteCoder(quantize_freqs(_zipf(37) * 1e7))
+        rng = np.random.default_rng(0)
+        codes = rng.integers(0, TOTAL, 200)
+        sym, a, k = dc.inv_translate_batch(codes)
+        for i, c in enumerate(codes):
+            assert dc.inv_translate(int(c)) == (int(sym[i]), int(a[i]), int(k[i]))
+            assert dc.code_for(int(sym[i]), int(a[i])) == int(c)
+
+    def test_bucket_count_power_of_two(self):
+        t = build_alias(quantize_freqs(_zipf(300)))
+        assert t.n_buckets == 512 and t.m_bits == 9
+
+    def test_lut_agrees(self):
+        dc = DiscreteCoder(quantize_freqs(_zipf(99)))
+        lut_sym, lut_a = dc.build_lut()
+        sym, a, _ = dc.inv_translate_batch(np.arange(TOTAL))
+        assert (lut_sym == sym).all() and (lut_a == a).all()
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(min_value=1, max_value=10**6),
+                    min_size=1, max_size=400))
+    def test_property_roundtrip(self, counts):
+        dc = DiscreteCoder(quantize_freqs(np.array(counts, dtype=float)))
+        codes = np.arange(0, TOTAL, 97)
+        sym, a, k = dc.inv_translate_batch(codes)
+        assert (dc.code_for_batch(sym, a) == codes).all()
+
+
+class TestUniform:
+    @pytest.mark.parametrize("G", [1, 2, 3, 255, 4096, 65535, 65536])
+    def test_partition(self, G):
+        uc = UniformCoder(G)
+        codes = np.arange(TOTAL)
+        j, a, k = uc.inv_translate_batch(codes)
+        assert (j >= 0).all() and (j < G).all()
+        assert (uc.code_for_batch(j, a) == codes).all()
+        cnt = np.bincount(j, minlength=G)
+        assert cnt.max() - cnt.min() <= 1  # near-exactly uniform
+
+    def test_bad_arity(self):
+        with pytest.raises(ValueError):
+            UniformCoder(0)
+        with pytest.raises(ValueError):
+            UniformCoder(TOTAL + 1)

@@ -1,0 +1,176 @@
+"""Delayed coding (§5): Figure-7 exactness, roundtrips, Theorem-2 behaviour."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coders import TOTAL, DiscreteCoder, UniformCoder, quantize_freqs
+from repro.core.delayed import (decode_block, encode_block, encode_symbols,
+                                wasted_bits, Slot)
+from repro.core.vectorized import decode_batch, decode_select, encode_batch
+
+
+class _Contig:
+    """Contiguous-interval coder used only to replay the paper's Figure 7."""
+
+    def __init__(self, bounds):
+        self.bounds = bounds
+
+    def k(self, sym):
+        L, R = self.bounds[sym]
+        return R - L
+
+    def code_for(self, sym, a):
+        return self.bounds[sym][0] + a
+
+    def inv_translate(self, code):
+        for s, (L, R) in enumerate(self.bounds):
+            if L <= code < R:
+                return s, code - L, R - L
+        raise AssertionError
+
+    def inv_translate_batch(self, codes):
+        out = np.array([self.inv_translate(int(c)) for c in codes])
+        return out[:, 0], out[:, 1], out[:, 2]
+
+    def code_for_batch(self, syms, a):
+        return np.array([self.code_for(int(s), int(x))
+                         for s, x in zip(syms, a)])
+
+
+FIG7_CODERS = [
+    _Contig([(0, 32768), (32768, 65536)]),
+    _Contig([(0, 10011), (10011, 10027), (10027, 65536)]),
+    _Contig([(0, 3), (3, 32772), (32772, 65536)]),
+    _Contig([(0, 1023), (1023, 1028), (1028, 65536)]),
+]
+
+
+class TestFigure7:
+    """The paper's fully worked example must reproduce bit-for-bit."""
+
+    def test_encode_bitstream(self):
+        codes = encode_symbols([1, 1, 1, 1], FIG7_CODERS)
+        assert codes == [0x8040, 0x271D]
+
+    def test_decode(self):
+        syms, used = decode_block([0x8040, 0x271D], FIG7_CODERS)
+        assert syms == [1, 1, 1, 1] and used == 2
+
+    def test_waste_is_20_options(self):
+        assert wasted_bits([32768, 16, 32769, 5]) == pytest.approx(np.log2(20))
+
+    def test_vectorized_matches(self):
+        syms = np.array([[1, 1, 1, 1]])
+        codes, offs = encode_batch(syms, FIG7_CODERS)
+        assert codes.tolist() == [0x8040, 0x271D]
+        assert (decode_batch(codes, offs, FIG7_CODERS) == syms).all()
+
+
+def _random_coders(rng, S):
+    coders = []
+    for s in range(S):
+        if rng.random() < 0.3:
+            coders.append(UniformCoder(int(rng.integers(1, TOTAL + 1))))
+        else:
+            n = int(rng.integers(1, 400))
+            w = 1.0 / np.arange(1, n + 1) ** rng.uniform(0.2, 2.0)
+            coders.append(DiscreteCoder(quantize_freqs(w * 1e7)))
+    return coders
+
+
+def _n_syms(c):
+    return c.G if isinstance(c, UniformCoder) else c.tables.n_symbols
+
+
+class TestRoundtrip:
+    @pytest.mark.parametrize("seed", range(5))
+    def test_reference_roundtrip(self, seed):
+        rng = np.random.default_rng(seed)
+        coders = _random_coders(rng, int(rng.integers(1, 50)))
+        syms = [int(rng.integers(0, _n_syms(c))) for c in coders]
+        codes = encode_symbols(syms, coders)
+        out, used = decode_block(codes, coders)
+        assert out == syms and used == len(codes)
+
+    def test_vectorized_equals_reference(self):
+        rng = np.random.default_rng(10)
+        coders = _random_coders(rng, 20)
+        N = 300
+        syms = np.stack([rng.integers(0, _n_syms(c), N) for c in coders], axis=1)
+        codes, offs = encode_batch(syms, coders)
+        assert (decode_batch(codes, offs, coders) == syms).all()
+        for t in rng.integers(0, N, 20):
+            ref = encode_symbols(syms[t].tolist(), coders)
+            assert ref == codes[offs[t]:offs[t + 1]].tolist()
+
+    def test_random_access_select(self):
+        rng = np.random.default_rng(11)
+        coders = _random_coders(rng, 12)
+        N = 500
+        syms = np.stack([rng.integers(0, _n_syms(c), N) for c in coders], axis=1)
+        codes, offs = encode_batch(syms, coders)
+        rows = rng.integers(0, N, 64)
+        assert (decode_select(codes, offs, coders, rows) == syms[rows]).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def test_property_roundtrip(self, data):
+        seed = data.draw(st.integers(0, 2**31))
+        rng = np.random.default_rng(seed)
+        coders = _random_coders(rng, int(rng.integers(1, 30)))
+        syms = [int(rng.integers(0, _n_syms(c))) for c in coders]
+        out, _ = decode_block(encode_symbols(syms, coders), coders)
+        assert out == syms
+
+    def test_bad_lambda_rejected(self):
+        with pytest.raises(ValueError):
+            encode_block([Slot(2, lambda a: a)], lam=100)
+
+
+class TestTheorem2:
+    """Near-entropy compression with fine granularity (§5.7)."""
+
+    def _measure(self, block, n=4096):
+        rng = np.random.default_rng(2)
+        w = 1.0 / np.arange(1, 301) ** 1.1
+        dc = DiscreteCoder(quantize_freqs(w * 1e6))
+        p = dc.tables.k_of.astype(np.float64) / TOTAL
+        syms = rng.choice(p.size, size=n, p=p)
+        bits = 0
+        for i in range(0, n, block):
+            blk = syms[i:i + block].tolist()
+            bits += 16 * len(encode_symbols(blk, [dc] * len(blk)))
+        H = -(p * np.log2(p)).sum() * n
+        return bits / H
+
+    def test_overhead_shrinks_with_block_size(self):
+        r8, r64 = self._measure(8), self._measure(64)
+        assert r64 < r8, "larger blocks must compress better (Fig. 12)"
+        assert r64 < 1.10, f"64-slot blocks should be near-entropy, got {r64}"
+
+    def test_information_lower_bound(self):
+        """No block may beat its own information content."""
+        rng = np.random.default_rng(3)
+        w = 1.0 / np.arange(1, 64) ** 1.3
+        dc = DiscreteCoder(quantize_freqs(w * 1e6))
+        kq = dc.tables.k_of.astype(np.float64)
+        for _ in range(20):
+            blk = rng.integers(0, 63, 32).tolist()
+            codes = encode_symbols(blk, [dc] * len(blk))
+            info = sum(16 - np.log2(kq[s]) for s in blk)
+            assert len(codes) * 16 >= info - 1e-6
+
+    def test_upper_bound_with_mark_losses(self):
+        """16*codes <= info + final-counter waste + 1 bit per mark (Thm 2)."""
+        rng = np.random.default_rng(4)
+        w = 1.0 / np.arange(1, 200) ** 1.0
+        dc = DiscreteCoder(quantize_freqs(w * 1e6))
+        kq = dc.tables.k_of.astype(np.float64)
+        for _ in range(20):
+            blk = rng.integers(0, 199, 48).tolist()
+            codes = encode_symbols(blk, [dc] * len(blk))
+            info = sum(16 - np.log2(kq[s]) for s in blk)
+            waste = wasted_bits([int(kq[s]) for s in blk])
+            marks = len(blk) - len(codes)
+            assert len(codes) * 16 <= info + waste + 1.0 * marks + 1e-6

@@ -1,0 +1,235 @@
+"""Semantic column models (§4) and the TableCodec facade (§3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ColumnSpec, CompressedTable, TableCodec, delayed
+from repro.core.delayed import BlockDecoder, encode_block
+from repro.core.models import (BlockEncoder, ByteMarkov, CategoricalModel,
+                               NumericModel, StringModel, TimeSeriesModel)
+
+
+def _roundtrip(model, values):
+    enc = BlockEncoder()
+    if hasattr(model, "reset_block"):
+        model.reset_block()
+    for v in values:
+        model.encode_value(v, enc)
+    codes = encode_block(enc.slots)
+    dec = BlockDecoder(codes)
+    if hasattr(model, "reset_block"):
+        model.reset_block()
+    return [model.decode_value(dec) for _ in values], codes
+
+
+class TestCategorical:
+    def test_seen_and_unseen(self):
+        m = CategoricalModel(["a", "b", "b", "c"] * 50)
+        out, _ = _roundtrip(m, ["a", "b", "c", "zebra", "b"])
+        assert out == ["a", "b", "c", "zebra", "b"]
+
+    def test_skew_gives_short_codes(self):
+        m = CategoricalModel(["x"] * 999 + ["y"])
+        assert m.est_bits("x") < 0.01
+        assert m.est_bits("y") > 5
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.sampled_from("abcdefg"), min_size=1, max_size=40))
+    def test_property(self, vals):
+        m = CategoricalModel(list("abcdefg") * 10)
+        out, _ = _roundtrip(m, vals)
+        assert out == vals
+
+
+class TestNumeric:
+    def test_integers_exact(self):
+        rng = np.random.default_rng(0)
+        data = rng.poisson(100, 2000).astype(int).tolist()
+        m = NumericModel(data, precision=1, integer=True)
+        out, _ = _roundtrip(m, data[:100])
+        assert out == data[:100]
+
+    def test_floats_within_precision(self):
+        rng = np.random.default_rng(1)
+        data = rng.normal(0, 10, 2000).tolist()
+        p = 0.01
+        m = NumericModel(data, precision=p)
+        out, _ = _roundtrip(m, data[:100])
+        for got, exp in zip(out, data[:100]):
+            assert abs(got - exp) <= p / 2 + 1e-9
+
+    def test_outlier_escape(self):
+        m = NumericModel([1.0, 2.0, 3.0] * 100, precision=0.1)
+        out, _ = _roundtrip(m, [2.0, 1e9, -77.7])
+        assert abs(out[0] - 2.0) <= 0.05
+        assert out[1] == 1e9 and out[2] == -77.7  # escapes are exact float64
+
+    def test_skew_helps(self):
+        """Level-1 frequency intervals give skewed data shorter codes."""
+        rng = np.random.default_rng(2)
+        skewed = np.abs(rng.normal(0, 1, 4000))
+        m = NumericModel(skewed.tolist(), precision=1e-3)
+        common, rare = m.est_bits(0.1), m.est_bits(skewed.max() * 0.99)
+        assert common < rare
+
+    def test_wide_integer_range_multilevel(self):
+        data = [0, 2**40, 2**40 + 12345, 17]
+        m = NumericModel(data, precision=1, T=16, integer=True)
+        assert len(m.l2) >= 2  # needs chained uniform digits
+        out, _ = _roundtrip(m, data)
+        assert out == data
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.integers(-10**6, 10**6), min_size=2, max_size=50))
+    def test_property_integers(self, data):
+        m = NumericModel(data, precision=1, integer=True)
+        out, _ = _roundtrip(m, data)
+        assert out == data
+
+
+class TestString:
+    CORPUS = [f"{n} Main St, Springfield" for n in range(100, 200)] + \
+             [f"{n} Oak Ave, Shelbyville" for n in range(10, 60)]
+
+    def test_roundtrip(self):
+        m = StringModel(self.CORPUS)
+        vals = ["150 Main St, Springfield", "11 Oak Ave, Shelbyville",
+                "9999 Unknown Blvd, Nowhere"]
+        out, _ = _roundtrip(m, vals)
+        assert out == vals
+
+    def test_prefix_queue_within_block(self):
+        m = StringModel(self.CORPUS)
+        vals = ["150 Main St, Springfield", "150 Main St, Springfield apt 4"]
+        out, codes = _roundtrip(m, vals)
+        assert out == vals
+
+    def test_unicode_escape(self):
+        m = StringModel(self.CORPUS)
+        out, _ = _roundtrip(m, ["héllo wörld ✓"])
+        assert out == ["héllo wörld ✓"]
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.lists(st.text(alphabet=st.characters(codec="utf-8"),
+                            max_size=30), min_size=1, max_size=5))
+    def test_property_any_text(self, vals):
+        m = StringModel(self.CORPUS)
+        out, _ = _roundtrip(m, vals)
+        assert out == vals
+
+
+class TestMarkovAndTimeSeries:
+    def test_markov_words(self):
+        m = ByteMarkov([b"street", b"stream", b"string"])
+        enc = BlockEncoder()
+        m.encode_word(b"strap", enc)
+        codes = encode_block(enc.slots)
+        assert m.decode_word(BlockDecoder(codes)) == b"strap"
+
+    def test_timeseries_residual_beats_raw(self):
+        rng = np.random.default_rng(3)
+        walk = np.cumsum(rng.normal(0, 1, 5000)) + 100
+        ts = TimeSeriesModel(walk.tolist(), precision=0.01)
+        raw = NumericModel(walk.tolist(), precision=0.01)
+        vals = walk[:256].tolist()
+        out_ts, codes_ts = _roundtrip(ts, vals)
+        out_raw, codes_raw = _roundtrip(raw, vals)
+        for got, exp in zip(out_ts, vals):
+            assert abs(got - exp) <= 0.01  # p/2 per step, reconstruction-tracked
+        assert len(codes_ts) < len(codes_raw), "AR(1) residuals must compress better"
+
+
+class TestTableCodec:
+    SCHEMA = [ColumnSpec("k", "int"), ColumnSpec("c", "cat"),
+              ColumnSpec("f", "float", precision=0.01), ColumnSpec("s", "str")]
+
+    def _rows(self, n=2000, seed=0):
+        rng = np.random.default_rng(seed)
+        cats = ["aa", "bb", "cc", "dd"]
+        return [{"k": int(i), "c": cats[int(rng.integers(0, 4))],
+                 "f": float(np.round(rng.normal(10, 2), 2)),
+                 "s": f"{int(rng.integers(1, 99))} Elm St"} for i in range(n)]
+
+    def test_block_roundtrip(self):
+        rows = self._rows()
+        codec = TableCodec.fit(rows, self.SCHEMA, sample=512)
+        blk = rows[100:108]
+        back = codec.decompress_block(codec.compress_block(blk), len(blk))
+        for got, exp in zip(back, blk):
+            assert got["k"] == exp["k"] and got["c"] == exp["c"]
+            assert got["s"] == exp["s"]
+            assert abs(got["f"] - exp["f"]) <= 0.005 + 1e-9
+
+    def test_compressed_table_random_access(self):
+        rows = self._rows(500)
+        codec = TableCodec.fit(rows, self.SCHEMA, sample=256, block_tuples=4)
+        table = CompressedTable(codec)
+        for r in rows:
+            table.append(r)
+        table.flush()
+        assert len(table) == 500
+        rng = np.random.default_rng(1)
+        for i in rng.integers(0, 500, 50):
+            assert table.get(int(i))["k"] == rows[int(i)]["k"]
+
+    def test_correlation_improves_or_matches(self):
+        rng = np.random.default_rng(7)
+        states = ["CA", "TX", "NY"]
+        city_of = {"CA": ["LA", "SF"], "TX": ["HOU"], "NY": ["NYC", "BUF"]}
+        rows = []
+        for i in range(3000):
+            st_ = states[int(rng.integers(0, 3))]
+            rows.append({"state": st_,
+                         "city": city_of[st_][int(rng.integers(0, len(city_of[st_])))]})
+        schema = [ColumnSpec("state", "cat"), ColumnSpec("city", "cat")]
+        flat = TableCodec.fit(rows, schema, correlation=False, sample=1024)
+        corr = TableCodec.fit(rows, schema, correlation=True, sample=1024)
+        bits_flat = sum(len(flat.compress_block([r])) for r in rows[:200])
+        bits_corr = sum(len(corr.compress_block([r])) for r in rows[:200])
+        assert bits_corr <= bits_flat
+        back = corr.decompress_block(corr.compress_block(rows[:5]), 5)
+        assert back == rows[:5]
+
+
+class TestJsonModel:
+    """Appendix E.1: JSON node model (optional nodes, multi-type nodes)."""
+
+    SAMPLES = [
+        {"name": "John", "age": 18, "job": "student",
+         "tags": ["a", "b"], "address": {"city": "LA", "zip": "90001"}},
+        {"name": "Mary", "age": "Eighteen", "tags": [],
+         "address": {"city": "SF", "zip": "94105"}},
+        {"name": "Ann", "age": 44, "job": "doctor", "tags": ["c"],
+         "address": {"city": "LA", "zip": "90002"}},
+    ] * 20
+
+    def _codec(self):
+        from repro.core.json_model import JsonCodec
+        return JsonCodec(self.SAMPLES)
+
+    def test_roundtrip_optional_and_multitype(self):
+        codec = self._codec()
+        for obj in self.SAMPLES[:3]:
+            codes = codec.encode(obj)
+            assert codec.decode(codes) == obj
+
+    def test_unseen_values_and_keys(self):
+        codec = self._codec()
+        obj = {"name": "Zed", "age": 3.5, "tags": ["x", "y", "z"],
+               "address": {"city": "NYC", "zip": "10001"},
+               "brand_new_key": {"nested": [1, 2]}}
+        codes = codec.encode(obj)
+        back = codec.decode(codes)
+        assert back["name"] == "Zed"
+        assert abs(back["age"] - 3.5) < 1e-5
+        assert back["brand_new_key"] == {"nested": [1, 2]}
+
+    def test_beats_raw_json(self):
+        import json as _json
+        codec = self._codec()
+        raw = comp = 0
+        for obj in self.SAMPLES[:30]:
+            raw += len(_json.dumps(obj))
+            comp += 2 * len(codec.encode(obj))
+        assert raw / comp > 2.0, raw / comp
