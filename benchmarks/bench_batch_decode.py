@@ -1,0 +1,127 @@
+"""Microbenchmark: scalar vs numpy-batch vs Pallas(interpret) point-get decode.
+
+Times random point gets of 256+ tuples on a 6-column mixed schema
+(int id, 2 categoricals, int, float, format-fixed string) through the three
+decode paths of the compiled fast path (DESIGN.md §2):
+
+* ``scalar`` — the per-tuple ``decompress_block`` Python loop (paper CPU path)
+* ``numpy``  — ``decode_select`` over the CSR arena (vectorized Algorithm 5)
+* ``pallas`` — the ``delayed_decode`` kernel in interpret mode on CPU
+
+Decoded rows are checked identical across all paths.  Emits the
+``BENCH_batch_decode.json`` artifact (repo root) so future PRs have a
+trajectory to beat, and prints ``name,us_per_call,derived`` CSV lines.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import ColumnSpec, CompressedTable, TableCodec
+
+SCHEMA = [
+    ColumnSpec("id", "int"),
+    ColumnSpec("city", "cat"),
+    ColumnSpec("grade", "cat"),
+    ColumnSpec("qty", "int"),
+    ColumnSpec("amount", "float", precision=0.01),
+    ColumnSpec("info", "str"),
+]
+
+_CITIES = [f"City{i:02d}" for i in range(40)]
+_GRADES = list("ABCDEF")
+_WORDS = ["alpha", "beta", "gamma", "delta", "epsilon", "zeta"]
+
+
+def gen_rows(n: int, seed: int = 0) -> List[Dict]:
+    rng = np.random.default_rng(seed)
+    return [{
+        "id": int(i),
+        "city": _CITIES[int(rng.zipf(1.3)) % len(_CITIES)],
+        "grade": _GRADES[int(rng.integers(0, len(_GRADES)))],
+        "qty": int(rng.integers(1, 100)),
+        "amount": float(np.round(rng.uniform(0.01, 9999.99), 2)),
+        "info": f"{_WORDS[int(rng.integers(0, 6))]}-"
+                f"{_WORDS[int(rng.integers(0, 6))]}"
+                f"#{int(rng.integers(0, 99)):02d}",
+    } for i in range(n)]
+
+
+def _best(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(n_rows: int = 8192, batches=(256, 2048), reps: int = 5) -> Dict:
+    rows = gen_rows(n_rows)
+    codec = TableCodec.fit(rows, SCHEMA, sample=4096)
+    plan = codec.compile()
+    assert plan is not None, codec.plan_fallback_reason
+    table = CompressedTable(codec)
+    t0 = time.perf_counter()
+    table.extend(rows)
+    table.flush()
+    insert_us = 1e6 * (time.perf_counter() - t0) / n_rows
+    fast_frac = float(table.block_fast.mean())
+
+    rng = np.random.default_rng(42)
+    results = []
+    for R in batches:
+        idx = rng.integers(0, n_rows, R)
+        exp = [table.get(int(i)) for i in idx]
+        got_np = table.get_many(idx, backend="numpy")
+        got_pl = table.get_many(idx, backend="pallas")  # also jit warmup
+        identical = (got_np == exp) and (got_pl == exp)
+        t_scalar = _best(lambda: [table.get(int(i)) for i in idx],
+                         max(2, reps // 2)) / R
+        t_numpy = _best(lambda: table.get_many(idx, backend="numpy"),
+                        reps) / R
+        t_pallas = _best(lambda: table.get_many(idx, backend="pallas"),
+                         max(2, reps // 2)) / R
+        results.append({
+            "R": int(R),
+            "scalar_us": round(1e6 * t_scalar, 2),
+            "numpy_us": round(1e6 * t_numpy, 2),
+            "pallas_us": round(1e6 * t_pallas, 2),
+            "speedup_numpy": round(t_scalar / t_numpy, 1),
+            "speedup_pallas": round(t_scalar / t_pallas, 1),
+            "identical": bool(identical),
+        })
+    return {
+        "schema": [f"{c.name}:{c.kind}" for c in SCHEMA],
+        "n_rows": int(n_rows),
+        "slots": int(plan.S),
+        "pallas_ok": bool(plan.pallas_ok),
+        "fast_fraction": round(fast_frac, 4),
+        "bulk_insert_us": round(insert_us, 2),
+        "batches": results,
+    }
+
+
+def main(quick: bool = True) -> Dict:
+    report = run(n_rows=8192 if quick else 32768,
+                 reps=5 if quick else 9)
+    artifact = Path(__file__).resolve().parent.parent / "BENCH_batch_decode.json"
+    artifact.write_text(json.dumps(report, indent=2) + "\n")
+    for b in report["batches"]:
+        print(f"batch_decode_R{b['R']}_scalar,{b['scalar_us']},baseline")
+        print(f"batch_decode_R{b['R']}_numpy,{b['numpy_us']},"
+              f"speedup={b['speedup_numpy']};identical={b['identical']}")
+        print(f"batch_decode_R{b['R']}_pallas,{b['pallas_us']},"
+              f"speedup={b['speedup_pallas']};interpret=True")
+    print(f"batch_decode_fast_fraction,{report['fast_fraction']},"
+          f"artifact={artifact.name}")
+    return report
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -19,13 +19,15 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     quick = not args.full
 
-    from benchmarks import (bench_archive, bench_compression,
-                            bench_entropy_coders, bench_fastpath,
-                            bench_framework, bench_granularity,
-                            bench_sampling, roofline_report)
+    from benchmarks import (bench_archive, bench_batch_decode,
+                            bench_compression, bench_entropy_coders,
+                            bench_fastpath, bench_framework,
+                            bench_granularity, bench_sampling,
+                            roofline_report)
 
     benches = {
         "compression": bench_compression,     # Fig 9
+        "batch_decode": bench_batch_decode,   # DESIGN.md §2 fast path
         "sampling": bench_sampling,           # Fig 10
         "entropy": bench_entropy_coders,      # Fig 11
         "granularity": bench_granularity,     # Fig 12

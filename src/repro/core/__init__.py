@@ -3,28 +3,30 @@
 Public API:
   * coders:      DiscreteCoder, UniformCoder, quantize_freqs
   * delayed:     encode_block / decode_block / BlockDecoder / Slot
-  * vectorized:  encode_batch / decode_batch / decode_select
+  * vectorized:  encode_batch / decode_batch / decode_select / CondSlot
   * models:      CategoricalModel, NumericModel, StringModel, ...
   * blitzcrank:  ColumnSpec, TableCodec, CompressedTable
+  * plan:        compile_plan / TablePlan (the batched fast path, DESIGN.md §2)
   * baselines:   arithmetic, rans, huffman
 """
 
 from .coders import DiscreteCoder, UniformCoder, quantize_freqs, TOTAL
 from .delayed import (BlockDecoder, Slot, decode_block, encode_block,
                       encode_symbols, LAMBDA_DEFAULT)
-from .vectorized import decode_batch, decode_select, encode_batch
+from .vectorized import CondSlot, decode_batch, decode_select, encode_batch
 from .models import (BlockEncoder, ByteMarkov, CategoricalModel,
                      ConditionalCategoricalModel, NumericModel, StringModel,
                      TimeSeriesModel)
 from .blitzcrank import ColumnSpec, CompressedTable, FitStats, TableCodec
+from .plan import PlanFallback, TablePlan, compile_plan
 from .structure import learn_order
 
 __all__ = [
     "DiscreteCoder", "UniformCoder", "quantize_freqs", "TOTAL",
     "BlockDecoder", "Slot", "decode_block", "encode_block", "encode_symbols",
-    "LAMBDA_DEFAULT", "decode_batch", "decode_select", "encode_batch",
-    "BlockEncoder", "ByteMarkov", "CategoricalModel",
+    "LAMBDA_DEFAULT", "CondSlot", "decode_batch", "decode_select",
+    "encode_batch", "BlockEncoder", "ByteMarkov", "CategoricalModel",
     "ConditionalCategoricalModel", "NumericModel", "StringModel",
     "TimeSeriesModel", "ColumnSpec", "CompressedTable", "FitStats",
-    "TableCodec", "learn_order",
+    "TableCodec", "PlanFallback", "TablePlan", "compile_plan", "learn_order",
 ]

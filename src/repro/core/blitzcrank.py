@@ -55,6 +55,9 @@ class TableCodec:
         self.stats = stats
         self.block_tuples = block_tuples
         self.lam = lam
+        self._plan = None
+        self._plan_reason: Optional[str] = None
+        self._plan_tried = False
 
     # ------------------------------------------------------------------
     @classmethod
@@ -122,13 +125,39 @@ class TableCodec:
         return cls(schema, models, order, stats, block_tuples, lam)
 
     # ------------------------------------------------------------------
+    # Compiled fast path (DESIGN.md §2): lower the fitted models to a
+    # static slot plan once, then batch-encode/decode through the
+    # vectorized codec (and the Pallas kernel for plain-table plans).
+    # ------------------------------------------------------------------
+    def compile(self, force: bool = False):
+        """Return the compiled :class:`~repro.core.plan.TablePlan` or None.
+
+        Compilation is attempted once and cached; on fallback the reason is
+        recorded in :attr:`plan_fallback_reason`.
+        """
+        if not self._plan_tried or force:
+            self._plan_tried = True
+            from .plan import PlanFallback, compile_plan
+            try:
+                self._plan = compile_plan(self)
+                self._plan_reason = None
+            except PlanFallback as e:
+                self._plan = None
+                self._plan_reason = str(e)
+        return self._plan
+
+    @property
+    def plan_fallback_reason(self) -> Optional[str]:
+        self.compile()
+        return self._plan_reason
+
+    # ------------------------------------------------------------------
     def _reset_block_state(self) -> None:
         for m in self.models.values():
             if hasattr(m, "reset_block"):
                 m.reset_block()
 
-    def compress_block(self, rows: Sequence[Dict[str, Any]]) -> np.ndarray:
-        """Compress a block of rows into a uint16 code array."""
+    def _scalar_compress(self, rows: Sequence[Dict[str, Any]]) -> np.ndarray:
         self._reset_block_state()
         enc = BlockEncoder()
         for r in rows:
@@ -138,6 +167,75 @@ class TableCodec:
                 ctx[name] = r[name]
         codes = delayed.encode_block(enc.slots, self.lam)
         return np.asarray(codes, dtype=np.uint16)
+
+    def compress_block(self, rows: Sequence[Dict[str, Any]]) -> np.ndarray:
+        """Compress a block of rows into a uint16 code array.
+
+        The compiled plan emits bit-identical codes for conforming
+        single-tuple blocks (verified in tests), so the scalar path is used
+        here unconditionally — for one row its Python loop beats the fixed
+        overhead of a 1-row numpy batch.  Bulk compression goes through
+        :meth:`compress_rows`, which amortizes ``encode_batch`` over N rows.
+        """
+        return self._scalar_compress(rows)
+
+    def compress_rows(self, rows: Sequence[Dict[str, Any]]
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batch-compress rows at single-tuple granularity.
+
+        Returns ``(codes uint16, offsets int64[N+1], fast bool[N])`` — a CSR
+        arena where row ``r`` owns ``codes[offsets[r]:offsets[r+1]]``.
+        Conforming rows go through one vectorized ``encode_batch`` call;
+        the rest are scalar-encoded one block each (identical stream format).
+        Requires ``block_tuples == 1``.
+        """
+        if self.block_tuples != 1:
+            raise ValueError("compress_rows requires block_tuples == 1")
+        n = len(rows)
+        offsets = np.zeros(n + 1, np.int64)
+        fast = np.zeros(n, bool)
+        if n == 0:
+            return np.zeros(0, np.uint16), offsets, fast
+        plan = self.compile()
+        fcodes = foff = None
+        if plan is not None:
+            syms, fast = plan.encode_rows(rows)
+            if fast.any():
+                fcodes, foff = plan.encode_batch(syms[fast])
+        chunks: List[np.ndarray] = []
+        fi = 0
+        pos = 0
+        for r in range(n):
+            if fast[r]:
+                c = fcodes[foff[fi]:foff[fi + 1]]
+                fi += 1
+            else:
+                c = self._scalar_compress([rows[r]])
+            chunks.append(c)
+            pos += len(c)
+            offsets[r + 1] = pos
+        codes = (np.concatenate(chunks) if chunks
+                 else np.zeros(0, np.uint16)).astype(np.uint16)
+        return codes, offsets, fast
+
+    def decompress_rows(self, codes: np.ndarray, offsets: np.ndarray,
+                        indices: Sequence[int], backend: str = "numpy"
+                        ) -> List[Dict[str, Any]]:
+        """Batch random-access decode from a CSR arena (compiled codecs only).
+
+        Every indexed row must have been encoded on the fast path (its codes
+        follow the plan's fixed slot layout).  ``backend`` is ``"numpy"`` or
+        ``"pallas"`` (interpret mode on CPU, verified against numpy).
+        """
+        plan = self.compile()
+        if plan is None:
+            raise RuntimeError(
+                f"codec did not compile: {self._plan_reason}")
+        syms = plan.decode_select(np.asarray(codes, np.uint16),
+                                  np.asarray(offsets, np.int64),
+                                  np.asarray(indices, np.int64),
+                                  backend=backend)
+        return plan.decode_syms_to_rows(syms)
 
     def decompress_block(self, codes: np.ndarray, n_rows: int
                          ) -> List[Dict[str, Any]]:
@@ -161,22 +259,53 @@ class TableCodec:
                    if hasattr(self.models[n], "est_bits"))
 
 
+def _raw_row_bytes(row: Dict[str, Any]) -> int:
+    """Silo-style uncompressed footprint of one row (for honest accounting)."""
+    total = 0
+    for v in row.values():
+        if isinstance(v, str):
+            total += len(v.encode()) + 1
+        elif isinstance(v, bytes):
+            total += len(v) + 1
+        else:
+            total += 8
+    return total
+
+
 class CompressedTable:
     """In-memory compressed row store with per-block random access (§6.1).
 
     Tuples are grouped into blocks of ``codec.block_tuples`` (default 1);
-    blocks live in one growing uint16 arena addressed by a block offset
-    index — the storage layout Blitzcrank sits above in Silo.
+    blocks live in one growing uint16 code arena addressed by a CSR offset
+    array ``(codes uint16[], offsets int64[n_blocks+1])`` — the storage
+    layout Blitzcrank sits above in Silo, and exactly the layout the batched
+    decoder (``vectorized`` / Pallas ``delayed_decode``) consumes.
+
+    When the codec compiled (``codec.compile()``), blocks whose rows conform
+    to the slot plan are flagged *fast*; :meth:`get_many` decodes fast rows
+    with one ``decode_select`` call (no per-tuple Python loop) and falls back
+    to scalar block decode for the rest.  ``use_pallas`` selects the kernel
+    backend for large fast batches: ``None`` auto-detects (kernel only on a
+    non-CPU jax backend), ``True`` forces it (interpret mode on CPU),
+    ``False`` disables it.
     """
 
-    def __init__(self, codec: TableCodec, capacity_hint: int = 1 << 16):
+    PALLAS_MIN_ROWS = 4096  # auto mode: below this, numpy always wins
+
+    def __init__(self, codec: TableCodec, capacity_hint: int = 1 << 16,
+                 use_pallas: Optional[bool] = None):
         self.codec = codec
+        self.use_pallas = use_pallas
         self.arena = np.zeros(capacity_hint, dtype=np.uint16)
         self.used = 0
-        self.block_offsets: List[int] = [0]
+        self.n_blocks = 0
+        self._offsets = np.zeros(1024, dtype=np.int64)
+        self._fast = np.zeros(1023, dtype=bool)
         self.block_rows: List[int] = []
+        self._rows_stored = 0
         self._pending: List[Dict[str, Any]] = []
 
+    # -- storage helpers -------------------------------------------------
     def _append_codes(self, codes: np.ndarray) -> None:
         need = self.used + codes.size
         if need > self.arena.size:
@@ -186,36 +315,165 @@ class CompressedTable:
         self.arena[self.used:need] = codes
         self.used = need
 
+    def _grow_index(self, n_new: int) -> None:
+        need = self.n_blocks + n_new + 1
+        if need > self._offsets.size:
+            cap = max(need, 2 * self._offsets.size)
+            off = np.zeros(cap, dtype=np.int64)
+            off[:self.n_blocks + 1] = self._offsets[:self.n_blocks + 1]
+            self._offsets = off
+            fast = np.zeros(cap - 1, dtype=bool)
+            fast[:self.n_blocks] = self._fast[:self.n_blocks]
+            self._fast = fast
+
+    def _append_block(self, codes: np.ndarray, n_rows: int, fast: bool) -> None:
+        self._append_codes(codes)
+        self._grow_index(1)
+        self.n_blocks += 1
+        self._offsets[self.n_blocks] = self.used
+        self._fast[self.n_blocks - 1] = fast
+        self.block_rows.append(n_rows)
+        self._rows_stored += n_rows
+
+    @property
+    def block_offsets(self) -> np.ndarray:
+        """CSR offsets ``int64[n_blocks + 1]`` into the code arena."""
+        return self._offsets[:self.n_blocks + 1]
+
+    @property
+    def block_fast(self) -> np.ndarray:
+        """Per-block flag: True when the block decodes on the compiled path."""
+        return self._fast[:self.n_blocks]
+
+    # -- write path ------------------------------------------------------
     def append(self, row: Dict[str, Any]) -> None:
         self._pending.append(row)
         if len(self._pending) >= self.codec.block_tuples:
             self.flush()
 
+    def extend(self, rows: Sequence[Dict[str, Any]]) -> None:
+        """Bulk insert: one vectorized encode for all plan-conforming rows."""
+        rows = list(rows)
+        if self.codec.block_tuples != 1 or self.codec.compile() is None:
+            for r in rows:
+                self.append(r)
+            return
+        self.flush()
+        codes, offsets, fast = self.codec.compress_rows(rows)
+        base = self.used
+        self._append_codes(codes)
+        n = len(rows)
+        self._grow_index(n)
+        self._offsets[self.n_blocks + 1:self.n_blocks + 1 + n] = \
+            base + offsets[1:]
+        self._fast[self.n_blocks:self.n_blocks + n] = fast
+        self.n_blocks += n
+        self.block_rows.extend([1] * n)
+        self._rows_stored += n
+
     def flush(self) -> None:
         if not self._pending:
             return
-        codes = self.codec.compress_block(self._pending)
-        self._append_codes(codes)
-        self.block_offsets.append(self.used)
-        self.block_rows.append(len(self._pending))
-        self._pending = []
+        rows, self._pending = self._pending, []
+        # Scalar encode (cheapest for one row; identical codes either way),
+        # plus a cheap pure-Python conformance probe for the fast flag.
+        plan = self.codec.compile()
+        fast = (plan is not None and len(rows) == 1
+                and plan.row_conforms(rows[0]))
+        codes = self.codec._scalar_compress(rows)
+        self._append_block(codes, len(rows), fast)
 
     def __len__(self) -> int:
-        return sum(self.block_rows) + len(self._pending)
+        return self._rows_stored + len(self._pending)
 
+    # -- read path -------------------------------------------------------
     def get(self, i: int) -> Dict[str, Any]:
         """Random access: decompress the block containing row ``i``."""
         bt = self.codec.block_tuples
         b = i // bt  # blocks are fixed-size except the trailing pending rows
-        if b < len(self.block_rows):
-            codes = self.arena[self.block_offsets[b]:self.block_offsets[b + 1]]
-            return self.codec.decompress_block(codes, self.block_rows[b])[i % bt]
-        return self._pending[i - bt * len(self.block_rows)]
+        if b < self.n_blocks:
+            return self.get_block(b)[i % bt]
+        return dict(self._pending[i - bt * self.n_blocks])
 
     def get_block(self, b: int) -> List[Dict[str, Any]]:
-        codes = self.arena[self.block_offsets[b]:self.block_offsets[b + 1]]
+        codes = self.arena[self._offsets[b]:self._offsets[b + 1]]
         return self.codec.decompress_block(codes, self.block_rows[b])
+
+    def _resolve_backend(self, backend: Optional[str], n_rows: int) -> str:
+        plan = self.codec.compile()
+        if backend in ("numpy", "pallas"):
+            # Explicit request; quietly downgrade when the plan has
+            # conditional slots the kernel cannot run.
+            if backend == "pallas" and (plan is None or not plan.pallas_ok):
+                return "numpy"
+            return backend
+        if plan is None or not plan.pallas_ok or self.use_pallas is False:
+            return "numpy"
+        if self.use_pallas:
+            return "pallas"
+        if n_rows >= self.PALLAS_MIN_ROWS:  # auto: only off-CPU is it a win
+            try:
+                import jax
+                if jax.default_backend() != "cpu":
+                    return "pallas"
+            except Exception:  # pragma: no cover - jax always present here
+                pass
+        return "numpy"
+
+    def get_many(self, indices: Sequence[int],
+                 backend: Optional[str] = None) -> List[Dict[str, Any]]:
+        """Batched point gets.
+
+        Rows in plan-conforming single-tuple blocks decode with ONE
+        ``decode_select`` call over the CSR arena; the rest fall back to
+        per-block scalar decode (each touched block decoded once).
+        """
+        idx_arr = np.asarray(list(indices), dtype=np.int64)
+        n = idx_arr.size
+        out: List[Optional[Dict[str, Any]]] = [None] * n
+        bt = self.codec.block_tuples
+        plan = self.codec.compile()
+        slow_pos: np.ndarray
+        if bt == 1 and plan is not None and n:
+            in_store = idx_arr < self._rows_stored
+            fmask = np.zeros(n, dtype=bool)
+            fmask[in_store] = self._fast[idx_arr[in_store]]
+            fast_pos = np.nonzero(fmask)[0]
+            if fast_pos.size:
+                rows = self.codec.decompress_rows(
+                    self.arena[:self.used], self.block_offsets,
+                    idx_arr[fast_pos],
+                    backend=self._resolve_backend(backend, fast_pos.size))
+                for j, r in zip(fast_pos.tolist(), rows):
+                    out[j] = r
+            slow_pos = np.nonzero(~fmask)[0]
+        else:
+            slow_pos = np.arange(n)
+        scalar_blocks: Dict[int, List[Tuple[int, int]]] = {}
+        for j in slow_pos.tolist():
+            i = int(idx_arr[j])
+            if i >= self._rows_stored:
+                out[j] = dict(self._pending[i - self._rows_stored])
+            else:
+                b = i // bt
+                scalar_blocks.setdefault(b, []).append((j, i - b * bt))
+        for b, items in scalar_blocks.items():
+            blk = self.get_block(b)
+            seen: set = set()
+            for j, off in items:
+                # duplicate indices get independent dicts, matching get()
+                out[j] = blk[off] if off not in seen else dict(blk[off])
+                seen.add(off)
+        return out
 
     @property
     def nbytes(self) -> int:
-        return self.used * 2 + 8 * len(self.block_offsets)
+        """Compressed footprint: code arena + block index + unflushed rows.
+
+        Offsets are counted at 4 B each (a uint32 arena index suffices for
+        <8 GiB of codes) plus 1 bit per block for the fast flag; pending
+        rows sit uncompressed and are charged at their raw size.
+        """
+        pending = sum(_raw_row_bytes(r) for r in self._pending)
+        return (self.used * 2 + 4 * (self.n_blocks + 1)
+                + (self.n_blocks + 7) // 8 + pending)

@@ -223,13 +223,14 @@ class DiscreteCoder:
     are exact inverses over the option-index ``a`` in ``[0, k(sym))``.
     """
 
-    __slots__ = ("tables", "_cdf", "_lut_sym", "_lut_a")
+    __slots__ = ("tables", "_cdf", "_lut_sym", "_lut_a", "_lut_k")
 
     def __init__(self, quantized: np.ndarray):
         self.tables = build_alias(quantized)
         self._cdf = None
         self._lut_sym = None
         self._lut_a = None
+        self._lut_k = None
 
     # -- scalar API (reference path) -------------------------------------
     def k(self, sym: int) -> int:
@@ -306,9 +307,10 @@ class DiscreteCoder:
     def build_lut(self):
         if self._lut_sym is None:
             codes = np.arange(TOTAL, dtype=np.int64)
-            sym, a, _ = self.inv_translate_batch(codes)
+            sym, a, k = self.inv_translate_batch(codes)
             self._lut_sym = sym.astype(np.int32)
             self._lut_a = a.astype(np.int64)
+            self._lut_k = k.astype(np.int64)
         return self._lut_sym, self._lut_a
 
     def entropy_bits(self) -> float:

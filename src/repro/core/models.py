@@ -351,6 +351,9 @@ class StringModel:
                 else:
                     delims.append(tok)
             queue.append(s)
+        # Segment-count histogram: the slot-plan compiler (plan.py) uses it
+        # to derive a fixed word/delimiter template for format-fixed columns.
+        self.n_words_counts = Counter(nseg)
         self.i_model = DiscreteCoder(quantize_freqs(
             np.bincount(i_seen, minlength=self.K + 1) + 0.5))
         self.h_model = NumericModel(h_seen or [self.MIN_PREFIX], precision=1,

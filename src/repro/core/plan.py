@@ -1,0 +1,477 @@
+"""Slot-plan compilation: lowering fitted semantic models to static slots.
+
+This is the compile step of the batched fast path (DESIGN.md §2).  A fitted
+:class:`~repro.core.blitzcrank.TableCodec` walks value-at-a-time through
+Python models; ``compile_plan`` lowers it — when the schema allows — into a
+*slot plan*: a fixed sequence of ``S`` slots per tuple, each owned by a
+static :class:`DiscreteCoder`/:class:`UniformCoder` (or a
+:class:`~repro.core.vectorized.CondSlot` for conditional columns), plus
+vectorized value<->symbol translation tables.  The plan feeds
+``vectorized.encode_batch``/``decode_batch``/``decode_select`` and, when all
+slots are plain tables, the Pallas ``delayed_decode`` kernel.
+
+Plan-ability rules (DESIGN.md §2.3):
+
+* ``block_tuples == 1`` — multi-tuple blocks chain virtual bits across rows,
+  which the tuple-parallel layout cannot reproduce;
+* every column model lowers: categorical (1 slot), numeric two-level
+  (1 + len(l2) slots), conditional categorical with an earlier categorical
+  (or conditional) parent chain (1 CondSlot), and format-fixed strings
+  (fixed word/delimiter template);
+* time-series models are stateful across rows and always fall back.
+
+Plan-ability is *per schema*; conformance is *per row*: a row whose value
+escapes (unseen category, out-of-range numeric, off-template string) is
+encoded by the scalar path and its block flagged slow.  Fast and slow blocks
+share one code-stream format — the plan emits bit-identical codes to the
+scalar encoder — so the flag only routes decoding.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from . import vectorized
+from .coders import TOTAL, DiscreteCoder, UniformCoder
+from .models import (CategoricalModel, ConditionalCategoricalModel,
+                     NumericModel, StringModel, TimeSeriesModel)
+from .vectorized import CondSlot
+
+MAX_COND_KEYS = 1 << 16  # cap on enumerated parent-chain combinations
+
+
+class PlanFallback(Exception):
+    """A fitted codec cannot lower to a static slot plan (reason in str)."""
+
+
+def _obj_array(values: Sequence, pad: Any = None) -> np.ndarray:
+    out = np.empty(len(values) + 1, dtype=object)
+    for i, v in enumerate(values):
+        out[i] = v
+    out[len(values)] = pad  # escape symbol row (never produced by the plan)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-column lowerings
+# ---------------------------------------------------------------------------
+
+class _CatPlan:
+    """CategoricalModel -> 1 DiscreteCoder slot; escape rows non-conforming."""
+
+    def __init__(self, model: CategoricalModel):
+        self.m = model
+        self.n_slots = 1
+        self._values = _obj_array(model.id2value)
+
+    def coders(self) -> List:
+        return [self.m.coder]
+
+    def encode(self, vals: Sequence, ctx: Dict[str, Sequence]
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        get = self.m.value2id.get
+        ids = np.fromiter((get(v, -1) for v in vals), np.int64, len(vals))
+        return ids[:, None], ids >= 0
+
+    def decode(self, syms: np.ndarray, ctx: Dict[str, Any]) -> np.ndarray:
+        return self._values[np.minimum(syms[:, 0], len(self._values) - 1)]
+
+    def conforms(self, v, row) -> bool:
+        return v in self.m.value2id
+
+
+class _NumPlan:
+    """NumericModel -> level-1 DiscreteCoder + level-2 UniformCoder digits."""
+
+    def __init__(self, model: NumericModel):
+        self.m = model
+        self.n_slots = 1 + len(model.l2)
+
+    def coders(self) -> List:
+        return [self.m.l1] + list(self.m.l2)
+
+    def encode(self, vals: Sequence, ctx: Dict[str, Sequence]
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        m = self.m
+        n = len(vals)
+        syms = np.zeros((n, self.n_slots), np.int64)
+        try:
+            v = np.asarray(vals, dtype=np.float64)
+        except (TypeError, ValueError):
+            return syms, np.zeros(n, bool)
+        if v.shape != (n,):
+            return syms, np.zeros(n, bool)
+        ok = np.isfinite(v)
+        q = m._quantize(np.where(ok, v, 0.0))
+        ok &= (q >= 0) & (q < m.total_steps)
+        q = np.clip(q, 0, m.total_steps - 1)
+        syms[:, 0] = q // m.G
+        j = q % m.G
+        for t, w in enumerate(m.radix):
+            d = j // w
+            j -= d * w
+            syms[:, 1 + t] = d
+        return syms, ok
+
+    def decode(self, syms: np.ndarray, ctx: Dict[str, Any]) -> np.ndarray:
+        m = self.m
+        q = syms[:, 0] * m.G
+        for t, w in enumerate(m.radix):
+            q = q + syms[:, 1 + t] * w
+        if m.integer:
+            return np.rint(m.vmin + q * m.p).astype(np.int64)
+        return m.vmin + (q + 0.5) * m.p
+
+    def conforms(self, v, row) -> bool:
+        m = self.m
+        try:
+            fv = float(v)
+        except (TypeError, ValueError):
+            return False
+        if not math.isfinite(fv):
+            return False
+        q = math.floor((fv - m.vmin) / m.p + 1e-9)
+        return 0 <= q < m.total_steps
+
+
+class _CondPlan:
+    """ConditionalCategoricalModel -> 1 CondSlot keyed on the parent chain.
+
+    The coder of the slot is selected per tuple.  At encode time selection is
+    by the parent's *raw value* (as the scalar model does); inside the batch
+    decoder it is by the parent chain's decoded *symbols*, which resolve to
+    the same sub-model because each (chain-symbol tuple) names exactly one
+    parent value.
+    """
+
+    n_slots = 1
+
+    def __init__(self, model: ConditionalCategoricalModel,
+                 chain_slots: Tuple[int, ...], bases: Tuple[int, ...],
+                 sub_by_tuple: Dict[Tuple[int, ...], CategoricalModel]):
+        self.m = model
+        self.chain_slots = chain_slots
+        self.bases = bases
+        self.sub_by_tuple = sub_by_tuple
+        packed_coders = {}
+        for key_t, sm in sub_by_tuple.items():
+            packed_coders[_pack_key(key_t, bases)] = sm.coder
+        self.slot = CondSlot(chain_slots, bases, packed_coders,
+                             model.marginal.coder)
+
+    def coders(self) -> List:
+        return [self.slot]
+
+    def encode(self, vals: Sequence, ctx: Dict[str, Sequence]
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        m = self.m
+        pvals = ctx[m.parent]
+        ids = np.empty(len(vals), np.int64)
+        for r, (pv, v) in enumerate(zip(pvals, vals)):
+            sub = m.cond.get(pv, m.marginal)
+            ids[r] = sub.value2id.get(v, -1)
+        return ids[:, None], ids >= 0
+
+    def decode(self, syms: np.ndarray, ctx: Dict[str, Any]) -> np.ndarray:
+        m = self.m
+        pvals = ctx[m.parent]
+        out = np.empty(syms.shape[0], dtype=object)
+        for r in range(syms.shape[0]):
+            sub = m.cond.get(pvals[r], m.marginal)
+            s = int(syms[r, 0])
+            out[r] = sub.id2value[s] if s < len(sub.id2value) else None
+        return out
+
+    def conforms(self, v, row) -> bool:
+        sub = self.m.cond.get(row[self.m.parent], self.m.marginal)
+        return v in sub.value2id
+
+
+class _StrPlan:
+    """StringModel -> fixed word/delimiter template slots.
+
+    Requires ``block_tuples == 1`` (enforced at plan level): the per-block
+    prefix queue is then always empty at encode time, so the match slot is
+    the constant "no prefix" symbol and no prefix-length slots are emitted.
+    The template fixes ``W`` = the modal word count of the training column;
+    rows with a different segment count, dictionary-miss words, or
+    escape delimiters are non-conforming.
+    """
+
+    def __init__(self, model: StringModel):
+        m = model
+        counts = getattr(m, "n_words_counts", None)
+        if not counts:
+            raise PlanFallback("string model has no template statistics")
+        self.m = m
+        self.W = int(counts.most_common(1)[0][0])
+        if self.W < 1:
+            raise PlanFallback("string template has no words")
+        n_m = m.n_model
+        q = int(n_m._quantize(self.W))
+        if not (0 <= q < n_m.total_steps):
+            raise PlanFallback("string template word count not encodable")
+        n_syms = [q // n_m.G]
+        j = q % n_m.G
+        for w in n_m.radix:
+            d = j // w
+            j -= d * w
+            n_syms.append(d)
+        self._n_syms = np.asarray(n_syms, np.int64)
+        self._nn = len(n_syms)
+        self.n_slots = 1 + self._nn + 2 * self.W - 1
+        self._words = _obj_array(
+            [wb.decode("utf-8", errors="replace") for wb in
+             m.dict_model.id2value], pad="")
+        self._delims = _obj_array(list(m.delim_model.id2value), pad="")
+
+    def coders(self) -> List:
+        m = self.m
+        out = [m.i_model, m.n_model.l1, *m.n_model.l2]
+        for t in range(self.W):
+            out.append(m.dict_model.coder)
+            if t < self.W - 1:
+                out.append(m.delim_model.coder)
+        return out
+
+    def encode(self, vals: Sequence, ctx: Dict[str, Sequence]
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        m, W = self.m, self.W
+        n = len(vals)
+        syms = np.zeros((n, self.n_slots), np.int64)
+        ok = np.ones(n, bool)
+        wget = m.dict_model.value2id.get
+        dget = m.delim_model.value2id.get
+        base = 1 + self._nn
+        for r, v in enumerate(vals):
+            s = v if isinstance(v, str) else str(v)
+            segs = m._split(s)
+            if (len(segs) + 1) // 2 != W:
+                ok[r] = False
+                continue
+            syms[r, 0] = m.K                      # empty queue: no prefix hit
+            syms[r, 1:base] = self._n_syms
+            for t, tok in enumerate(segs):
+                wid = (wget(tok.encode("utf-8")) if t % 2 == 0 else dget(tok))
+                if wid is None:
+                    ok[r] = False
+                    break
+                syms[r, base + t] = wid
+        return syms, ok
+
+    def decode(self, syms: np.ndarray, ctx: Dict[str, Any]) -> np.ndarray:
+        base = 1 + self._nn
+        cols = []
+        for t in range(2 * self.W - 1):
+            tab = self._words if t % 2 == 0 else self._delims
+            cols.append(tab[np.minimum(syms[:, base + t], len(tab) - 1)])
+        if len(cols) == 1:
+            return cols[0]
+        return np.asarray(["".join(parts) for parts in zip(*cols)],
+                          dtype=object)
+
+    def conforms(self, v, row) -> bool:
+        s = v if isinstance(v, str) else str(v)
+        segs = self.m._split(s)
+        if (len(segs) + 1) // 2 != self.W:
+            return False
+        wids = self.m.dict_model.value2id
+        dids = self.m.delim_model.value2id
+        for t, tok in enumerate(segs):
+            if t % 2 == 0:
+                if tok.encode("utf-8") not in wids:
+                    return False
+            elif tok not in dids:
+                return False
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Table plan
+# ---------------------------------------------------------------------------
+
+def _pack_key(key_t: Tuple[int, ...], bases: Tuple[int, ...]) -> int:
+    out = 0
+    for k, b in zip(key_t, bases):
+        out = out * b + k
+    return out
+
+
+def _parent_enum(plan_of: Dict[str, Tuple[Any, int]], parent: str
+                 ) -> Tuple[Tuple[int, ...], List[Tuple[Tuple[int, ...], Any]]]:
+    """Enumerate (chain-symbol tuple, parent value) pairs for a parent column."""
+    cp, off = plan_of[parent]
+    if isinstance(cp, _CatPlan):
+        return (off,), [((i,), v) for i, v in enumerate(cp.m.id2value)]
+    if isinstance(cp, _CondPlan):
+        chain = cp.chain_slots + (off,)
+        out = []
+        for key_t, sub in cp.sub_by_tuple.items():
+            for i, v in enumerate(sub.id2value):
+                out.append((key_t + (i,), v))
+        return chain, out
+    raise PlanFallback(
+        f"conditional parent {parent!r} is not a categorical column")
+
+
+def _build_cond(model: ConditionalCategoricalModel,
+                plan_of: Dict[str, Tuple[Any, int]], name: str) -> _CondPlan:
+    if model.parent not in plan_of:
+        raise PlanFallback(
+            f"column {name!r}: parent {model.parent!r} not ordered before it")
+    chain, enum = _parent_enum(plan_of, model.parent)
+    if len(enum) > MAX_COND_KEYS:
+        raise PlanFallback(
+            f"column {name!r}: {len(enum)} parent combinations exceed cap")
+    bases = tuple(max(k[i] for k, _ in enum) + 2 for i in range(len(chain)))
+    sub_by_tuple = {key_t: model.cond.get(pv, model.marginal)
+                    for key_t, pv in enum}
+    return _CondPlan(model, chain, bases, sub_by_tuple)
+
+
+class TablePlan:
+    """A compiled codec: static slots + vectorized value<->symbol tables."""
+
+    def __init__(self, codec, lowerings: List[Tuple[str, Any, int]]):
+        self.codec = codec
+        self.order = list(codec.order)
+        self.lowerings = lowerings
+        self.lam = codec.lam
+        self.coders: List = []
+        for _, cp, _ in lowerings:
+            self.coders.extend(cp.coders())
+        self.S = len(self.coders)
+        self.pallas_ok = (self.lam == TOTAL and all(
+            isinstance(c, (DiscreteCoder, UniformCoder)) for c in self.coders))
+        self._tables = None
+        self._m_bits: Optional[Tuple[int, ...]] = None
+        # Pre-build the 2**16 decoding maps (Fig 11): turns the per-slot
+        # alias lookup into two gathers on the hot decode path.  Conditional
+        # sub-coders are skipped — there can be thousands of them, and each
+        # map costs ~0.75 MiB; they decode via the alias tables instead.
+        for c in self.coders:
+            if isinstance(c, DiscreteCoder):
+                c.build_lut()
+
+    # -- encode ----------------------------------------------------------
+    def encode_rows(self, rows: Sequence[Dict[str, Any]]
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Rows -> (syms int64[N, S], conforming bool[N])."""
+        n = len(rows)
+        cols = {name: [r[name] for r in rows] for name in self.order}
+        syms = np.zeros((n, self.S), np.int64)
+        ok = np.ones(n, bool)
+        for name, cp, off in self.lowerings:
+            try:
+                s_col, o = cp.encode(cols[name], cols)
+            except Exception:
+                ok[:] = False
+                continue
+            syms[:, off:off + cp.n_slots] = s_col
+            ok &= o
+        return syms, ok
+
+    def encode_batch(self, syms: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Symbols -> CSR ``(codes uint16, offsets int64[N+1])``."""
+        codes, offsets = vectorized.encode_batch(syms, self.coders, self.lam)
+        return codes.astype(np.uint16), offsets
+
+    def row_conforms(self, row: Dict[str, Any]) -> bool:
+        """Cheap scalar check: would this row take the fast path?
+
+        Pure-Python per-column checks (no numpy) so the per-insert cost is a
+        few dict lookups, not a 1-row batch encode.
+        """
+        try:
+            return all(cp.conforms(row[name], row)
+                       for name, cp, _ in self.lowerings)
+        except (TypeError, KeyError):
+            return False
+
+    # -- decode ----------------------------------------------------------
+    def decode_batch(self, codes: np.ndarray, offsets: np.ndarray,
+                     n_tuples: Optional[int] = None) -> np.ndarray:
+        return vectorized.decode_batch(codes, offsets, self.coders,
+                                       n_tuples=n_tuples, lam=self.lam)
+
+    def decode_select(self, codes: np.ndarray, offsets: np.ndarray,
+                      rows: np.ndarray, backend: str = "numpy") -> np.ndarray:
+        """Random-access decode of selected tuples -> syms int64[R, S]."""
+        if backend == "pallas":
+            return self._decode_select_pallas(codes, offsets, rows)
+        return vectorized.decode_select(codes, offsets, self.coders,
+                                        rows, self.lam)
+
+    def _decode_select_pallas(self, codes: np.ndarray, offsets: np.ndarray,
+                              rows: np.ndarray) -> np.ndarray:
+        if not self.pallas_ok:
+            raise PlanFallback("plan has conditional slots; Pallas ineligible")
+        import jax.numpy as jnp
+        from repro.kernels.delayed_decode import delayed_decode
+        rows = np.asarray(rows, np.int64)
+        if rows.size == 0:
+            return np.zeros((0, self.S), np.int64)
+        starts = offsets[rows]
+        lens = offsets[rows + 1] - starts
+        cols = np.arange(self.S)[None, :]
+        idx = starts[:, None] + np.minimum(cols, np.maximum(lens[:, None] - 1, 0))
+        idx = np.minimum(idx, max(codes.size - 1, 0))
+        dense = np.where(cols < lens[:, None],
+                         np.asarray(codes)[idx], 0).astype(np.int32)
+        tables, m_bits = self.pallas_tables()
+        out = delayed_decode(jnp.asarray(dense), tables, m_bits)
+        return np.asarray(out).astype(np.int64)
+
+    def pallas_tables(self):
+        """Lazy ``(tables f32[S, M, 7], m_bits)`` in the kernel's layout."""
+        if self._tables is None:
+            from repro.kernels.ops import pack_slot_tables
+            self._tables, self._m_bits = pack_slot_tables(self.coders)
+        return self._tables, self._m_bits
+
+    def decode_syms_to_rows(self, syms: np.ndarray) -> List[Dict[str, Any]]:
+        """Symbols -> row dicts (vectorized per-column reconstruction)."""
+        ctx: Dict[str, Any] = {}
+        for name, cp, off in self.lowerings:
+            ctx[name] = cp.decode(syms[:, off:off + cp.n_slots], ctx)
+        names = self.order
+        # Bulk-convert numpy columns to Python objects (ints/floats/strs):
+        # much faster than boxing one numpy scalar per field, and the row
+        # dicts then hold the same native types the scalar decoder emits.
+        cols = [c.tolist() if isinstance(c, np.ndarray) else list(c)
+                for c in (ctx[nm] for nm in names)]
+        return [dict(zip(names, vals)) for vals in zip(*cols)]
+
+
+def compile_plan(codec) -> TablePlan:
+    """Lower a fitted TableCodec to a TablePlan, or raise PlanFallback."""
+    if codec.block_tuples != 1:
+        raise PlanFallback(
+            f"block_tuples={codec.block_tuples}: multi-tuple blocks chain "
+            "virtual bits across rows")
+    lowerings: List[Tuple[str, Any, int]] = []
+    plan_of: Dict[str, Tuple[Any, int]] = {}
+    offset = 0
+    for name in codec.order:
+        m = codec.models[name]
+        if isinstance(m, ConditionalCategoricalModel):
+            cp: Any = _build_cond(m, plan_of, name)
+        elif isinstance(m, CategoricalModel):
+            cp = _CatPlan(m)
+        elif isinstance(m, NumericModel):
+            cp = _NumPlan(m)
+        elif isinstance(m, StringModel):
+            cp = _StrPlan(m)
+        elif isinstance(m, TimeSeriesModel):
+            raise PlanFallback(
+                f"column {name!r}: time-series model is stateful across rows")
+        else:
+            raise PlanFallback(
+                f"column {name!r}: {type(m).__name__} has no slot lowering")
+        lowerings.append((name, cp, offset))
+        plan_of[name] = (cp, offset)
+        offset += cp.n_slots
+    return TablePlan(codec, lowerings)

@@ -27,6 +27,48 @@ _MASK16 = _U64(TOTAL - 1)
 _SH16 = _U64(TOTAL_BITS)
 
 
+class CondSlot:
+    """A slot whose coder depends on symbols decoded at *earlier* slots.
+
+    This is how conditional models (structure learning, §2.2/§3) enter the
+    fixed-slot batch layout: the slot position is static, but the coder is
+    selected per tuple by the symbols at ``chain_slots`` (the ancestor
+    categorical slots, root first).  Selection packs the chain symbols into a
+    mixed-radix key and groups the batch by key, so each group runs the
+    ordinary vectorized coder kernels.  Keys absent from ``by_key`` (unseen
+    parent combinations) fall back to ``default`` — the marginal coder, the
+    same fallback the scalar model uses.
+    """
+
+    __slots__ = ("chain_slots", "bases", "by_key", "default")
+
+    def __init__(self, chain_slots, bases, by_key, default):
+        assert len(chain_slots) == len(bases)
+        self.chain_slots = tuple(int(s) for s in chain_slots)
+        self.bases = tuple(int(b) for b in bases)
+        self.by_key = dict(by_key)
+        self.default = default
+
+    def packed_key(self, syms: np.ndarray) -> np.ndarray:
+        key = np.zeros(syms.shape[0], dtype=np.int64)
+        for s, b in zip(self.chain_slots, self.bases):
+            key = key * b + syms[:, s]
+        return key
+
+    def groups(self, syms: np.ndarray):
+        """Yield ``(mask, coder)`` partitioning the batch by chain key."""
+        key = self.packed_key(syms)
+        for kk in np.unique(key):
+            yield key == kk, self.by_key.get(int(kk), self.default)
+
+
+def _inv_translate_batch(coder, codes: np.ndarray):
+    """inv_translate with the O(1) LUT (Fig 11 "decoding map") when built."""
+    if isinstance(coder, DiscreteCoder) and coder._lut_sym is not None:
+        return coder._lut_sym[codes], coder._lut_a[codes], coder._lut_k[codes]
+    return coder.inv_translate_batch(codes)
+
+
 def _k_of_batch(coder, syms: np.ndarray) -> np.ndarray:
     if isinstance(coder, UniformCoder):
         j = syms.astype(np.int64)
@@ -52,7 +94,11 @@ def encode_batch(syms: np.ndarray, coders: Sequence,
     # k[t, s]: option count of the chosen symbol in slot s.
     k = np.empty((N, S), dtype=np.int64)
     for s, c in enumerate(coders):
-        k[:, s] = _k_of_batch(c, syms[:, s])
+        if isinstance(c, CondSlot):
+            for mask, sub in c.groups(syms):
+                k[mask, s] = _k_of_batch(sub, syms[mask, s])
+        else:
+            k[:, s] = _k_of_batch(c, syms[:, s])
 
     # ---- step 1: mark (forward) ---------------------------------------
     virt = np.zeros((N, S), dtype=bool)
@@ -72,7 +118,14 @@ def encode_batch(syms: np.ndarray, coders: Sequence,
         ks = k[:, s].astype(_U64)
         a = data % ks
         data = data // ks
-        c = coders[s].code_for_batch(syms[:, s], a.astype(np.int64)).astype(_U64)
+        a_i = a.astype(np.int64)
+        if isinstance(coders[s], CondSlot):
+            c = np.empty(N, dtype=np.int64)
+            for mask, sub in coders[s].groups(syms):
+                c[mask] = sub.code_for_batch(syms[mask, s], a_i[mask])
+            c = c.astype(_U64)
+        else:
+            c = coders[s].code_for_batch(syms[:, s], a_i).astype(_U64)
         v = virt[:, s]
         data = np.where(v, (data << _SH16) + c, data)
         codes_buf[:, s] = c.astype(np.uint16)
@@ -90,30 +143,42 @@ def decode_batch(codes: np.ndarray, offsets: np.ndarray, coders: Sequence,
                  n_tuples: int | None = None, lam: int = LAMBDA_DEFAULT
                  ) -> np.ndarray:
     """Decode the CSR store back to ``syms[N, S]`` (vectorized Algorithm 5)."""
-    codes = np.asarray(codes, dtype=np.uint16)
+    # All decode arithmetic is int64: the §5.1 invariant keeps the virtual
+    # counters < 2**32 and every product < 2**48, so int64 is exact and we
+    # avoid the per-slot uint64 casts on the hot path.
+    codes_i = np.asarray(codes).astype(np.int64)
     offsets = np.asarray(offsets, dtype=np.int64)
     N = (offsets.size - 1) if n_tuples is None else n_tuples
     S = len(coders)
-    lam64 = _U64(lam)
 
     syms = np.empty((N, S), dtype=np.int64)
     cursor = offsets[:N].copy()
-    v_info = np.zeros(N, dtype=_U64)
-    v_size = np.ones(N, dtype=_U64)
+    last = max(codes_i.size - 1, 0)
+    v_info = np.zeros(N, dtype=np.int64)
+    v_size = np.ones(N, dtype=np.int64)
     pending = np.zeros(N, dtype=bool)
-    pend_code = np.zeros(N, dtype=_U64)
+    pend_code = np.zeros(N, dtype=np.int64)
     for s in range(S):
-        stream_code = codes[np.minimum(cursor, codes.size - 1)].astype(_U64)
+        stream_code = codes_i[np.minimum(cursor, last)]
         code = np.where(pending, pend_code, stream_code)
         cursor = cursor + (~pending)
-        sym, a, k = coders[s].inv_translate_batch(code.astype(np.int64))
+        if isinstance(coders[s], CondSlot):
+            # chain slots are all < s, hence already decoded into ``syms``
+            sym = np.empty(N, dtype=np.int64)
+            a = np.empty(N, dtype=np.int64)
+            k = np.empty(N, dtype=np.int64)
+            for mask, sub in coders[s].groups(syms):
+                sy, aa, kk = _inv_translate_batch(sub, code[mask])
+                sym[mask], a[mask], k[mask] = sy, aa, kk
+        else:
+            sym, a, k = _inv_translate_batch(coders[s], code)
         syms[:, s] = sym
-        v_info = v_info * k.astype(_U64) + a.astype(_U64)
-        v_size = v_size * k.astype(_U64)
-        pending = v_size >= lam64
-        pend_code = v_info & _MASK16
-        v_info = np.where(pending, v_info >> _SH16, v_info)
-        v_size = np.where(pending, v_size >> _SH16, v_size)
+        v_info = v_info * k + a
+        v_size = v_size * k
+        pending = v_size >= lam
+        pend_code = v_info & (TOTAL - 1)
+        v_info = np.where(pending, v_info >> TOTAL_BITS, v_info)
+        v_size = np.where(pending, v_size >> TOTAL_BITS, v_size)
     if n_tuples is None:
         assert (cursor == offsets[1:]).all(), "stream misalignment"
     return syms

@@ -12,7 +12,7 @@ from typing import List, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.coders import DiscreteCoder
+from repro.core.coders import DiscreteCoder, UniformCoder
 from . import ref as ref_lib
 from .alias_decode import alias_decode
 from .delayed_decode import delayed_decode
@@ -23,13 +23,24 @@ __all__ = ["alias_decode", "delayed_decode", "kv_attention_int8",
            "flash_prefill_attention", "pack_slot_tables", "dense_codes"]
 
 
-def pack_slot_tables(coders: Sequence[DiscreteCoder]
+def pack_slot_tables(coders: Sequence
                      ) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
-    """Stack per-slot alias tables into [S, M_max, 7] (padded) + m_bits."""
+    """Stack per-slot decode tables into [S, M_max, 7] (padded) + m_bits.
+
+    Accepts a mix of :class:`DiscreteCoder` (alias layout, Appendix C) and
+    :class:`UniformCoder` (contiguous segments) — both lower to the same
+    bucket-major (threshold, sym_u, sym_v, ja, jb, k_u, k_v) row format the
+    delayed-decode kernel consumes.
+    """
     tabs: List[np.ndarray] = []
     mbits: List[int] = []
     for c in coders:
-        t, m = ref_lib.pack_tables(c)
+        if isinstance(c, DiscreteCoder):
+            t, m = ref_lib.pack_tables(c)
+        elif isinstance(c, UniformCoder):
+            t, m = ref_lib.pack_tables_uniform(c)
+        else:
+            raise TypeError(f"cannot pack device tables for {type(c).__name__}")
         tabs.append(np.asarray(t))
         mbits.append(m)
     M = max(t.shape[0] for t in tabs)

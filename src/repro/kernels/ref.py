@@ -33,6 +33,35 @@ def pack_tables(coder) -> Tuple[jnp.ndarray, int]:
     return jnp.asarray(tab), int(t.m_bits)
 
 
+def pack_tables_uniform(coder) -> Tuple[jnp.ndarray, int]:
+    """Bucket-major decode table of a UniformCoder in the same [M, 7] layout.
+
+    The uniform coder's segments are contiguous: symbol ``j`` owns
+    ``[ceil(j*2^16/G), ceil((j+1)*2^16/G))``.  With ``m = ceil(log2 G)`` the
+    bucket width ``W = 2^(16-m)`` is <= the minimum segment length, so every
+    bucket intersects at most two segments — the one owning the bucket's
+    first code and (possibly) its successor — which is exactly the
+    (threshold, sym_u, sym_v) split the delayed-decode kernel consumes.
+    """
+    import numpy as np
+    G = int(coder.G)
+    m = max(0, int(np.ceil(np.log2(G)))) if G > 1 else 0
+    M = 1 << m
+    W = TOTAL >> m
+    tab = np.zeros((M, 7), np.float32)
+    for p in range(M):
+        c0 = p * W
+        j0 = (c0 * G) >> TOTAL_BITS
+        lo0 = -((-j0 * TOTAL) // G)            # ceil(j0 * 2^16 / G)
+        b = -((-(j0 + 1) * TOTAL) // G)        # start of segment j0+1
+        if b >= c0 + W:                        # bucket entirely inside j0
+            tab[p] = (0, j0, j0, lo0, lo0, b - lo0, b - lo0)
+        else:                                  # boundary b interior: two syms
+            b2 = -((-(j0 + 2) * TOTAL) // G)
+            tab[p] = (b - c0, j0, j0 + 1, lo0, b, b - lo0, b2 - b)
+    return jnp.asarray(tab), m
+
+
 def alias_decode_ref(codes: jax.Array, table: jax.Array, m_bits: int
                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """codes int32[N] -> (sym, a, k) int32 — Algorithm 6 / Inv-Translate."""

@@ -24,6 +24,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import ColumnSpec, TableCodec
+from repro.core.blitzcrank import CompressedTable, _raw_row_bytes
 from repro.core.huffman import BitReader, BitWriter, HuffmanCode
 
 
@@ -43,45 +44,72 @@ class UncompressedStore:
         vals = json.loads(self.rows[i])
         return {c.name: v for c, v in zip(self.schema, vals)}
 
+    def update(self, i: int, row: Dict[str, Any]) -> None:
+        self.rows[i] = json.dumps([row[c.name] for c in self.schema]).encode()
+
     @property
     def nbytes(self) -> int:
         return sum(len(r) for r in self.rows)
 
 
 class BlitzStore:
+    """TableCodec store over the CSR code arena (DESIGN.md §2.5).
+
+    Rows live in a :class:`CompressedTable` — one uint16 arena plus int64
+    block offsets — so batched point reads (:meth:`get_many`) decode through
+    ``decode_select`` with no per-tuple Python loop whenever the codec
+    compiled.  Updates (the §6.5 write-back path) go to an uncompressed
+    delta overlay consulted before the arena, as a real delta-store would.
+    """
+
     name = "blitzcrank"
 
     def __init__(self, schema: Sequence[ColumnSpec], rows_sample,
                  correlation: bool = False, block_tuples: int = 1,
-                 sample: int = 1 << 15):
+                 sample: int = 1 << 15, use_pallas: bool | None = None):
         self.codec = TableCodec.fit(rows_sample, schema,
                                     correlation=correlation,
                                     sample=sample, block_tuples=block_tuples)
-        self.blocks: List[np.ndarray] = []
+        self.table = CompressedTable(self.codec, use_pallas=use_pallas)
         self.block_tuples = block_tuples
-        self._pending: List[Dict] = []
-        self.n = 0
+        self._updates: Dict[int, Dict] = {}
+
+    @property
+    def n(self) -> int:
+        return len(self.table)
 
     def insert(self, row: Dict[str, Any]) -> int:
-        self._pending.append(row)
-        if len(self._pending) >= self.block_tuples:
-            self.blocks.append(self.codec.compress_block(self._pending))
-            self._pending = []
-        self.n += 1
-        return self.n - 1
+        self.table.append(row)
+        return len(self.table) - 1
+
+    def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
+        base = len(self.table)
+        self.table.extend(rows)
+        return range(base, len(self.table))
 
     def get(self, i: int) -> Dict[str, Any]:
-        b, off = divmod(i, self.block_tuples)
-        if b >= len(self.blocks):
-            return dict(self._pending[off])
-        rows = self.codec.decompress_block(self.blocks[b],
-                                           min(self.block_tuples,
-                                               self.n - b * self.block_tuples))
-        return rows[off]
+        u = self._updates.get(int(i))
+        if u is not None:
+            return dict(u)
+        return self.table.get(i)
+
+    def get_many(self, indices: Sequence[int],
+                 backend: str | None = None) -> List[Dict[str, Any]]:
+        idxs = [int(i) for i in indices]  # materialize: may be an iterator
+        rows = self.table.get_many(idxs, backend=backend)
+        if self._updates:
+            rows = [dict(self._updates[i]) if i in self._updates else r
+                    for i, r in zip(idxs, rows)]
+        return rows
+
+    def update(self, i: int, row: Dict[str, Any]) -> None:
+        """Write a modified row back (delta overlay over the code arena)."""
+        self._updates[int(i)] = dict(row)
 
     @property
     def nbytes(self) -> int:
-        return sum(2 * b.size for b in self.blocks)
+        return self.table.nbytes + sum(_raw_row_bytes(r) + 8
+                                       for r in self._updates.values())
 
     @property
     def model_bytes(self) -> int:
@@ -114,6 +142,10 @@ class ZstdStore:
         raw = json.dumps([row[c.name] for c in self.schema]).encode()
         self.rows.append(self.cctx.compress(raw))
         return len(self.rows) - 1
+
+    def update(self, i: int, row: Dict[str, Any]) -> None:
+        raw = json.dumps([row[c.name] for c in self.schema]).encode()
+        self.rows[i] = self.cctx.compress(raw)
 
     def get(self, i: int) -> Dict[str, Any]:
         vals = json.loads(self.dctx.decompress(self.rows[i]))
@@ -178,6 +210,11 @@ class RamanStore:
         self.lens.append(nbits)
         return len(self.rows) - 1
 
+    def update(self, i: int, row: Dict[str, Any]) -> None:
+        j = self.insert(row)
+        self.rows[i] = self.rows.pop(j)
+        self.lens[i] = self.lens.pop(j)
+
     def get(self, i: int) -> Dict[str, Any]:
         br = BitReader(self.rows[i])
         out = {}
@@ -209,14 +246,36 @@ class RamanStore:
 
 
 class LRUFastPath:
-    """§6.5 write-back cache of decompressed tuples above any store."""
+    """§6.5 write-back cache of decompressed tuples above any store.
+
+    Modified rows are marked dirty and written back to the underlying store
+    (via its ``update`` method) when they are evicted — and on :meth:`sync`
+    — so ``read_modify_write`` never loses data once the cache fills.
+    """
 
     def __init__(self, store, capacity: int):
         self.store = store
         self.capacity = capacity
         self.cache: OrderedDict[int, Dict] = OrderedDict()
+        self.dirty: set = set()
         self.hits = 0
         self.misses = 0
+        self.writebacks = 0
+
+    def _writeback(self, i: int, row: Dict[str, Any]) -> None:
+        self.dirty.discard(i)
+        self.writebacks += 1
+        if hasattr(self.store, "update"):
+            self.store.update(i, row)
+        else:  # pragma: no cover - every bundled store supports update
+            raise TypeError(
+                f"{type(self.store).__name__} cannot accept write-backs")
+
+    def _evict(self) -> None:
+        while len(self.cache) > self.capacity:
+            i, row = self.cache.popitem(last=False)
+            if i in self.dirty:
+                self._writeback(i, row)
 
     def read_modify_write(self, i: int, update_fn) -> None:
         row = self.cache.get(i)
@@ -227,9 +286,12 @@ class LRUFastPath:
             self.misses += 1
             row = self.store.get(i)
             self.cache[i] = row
-            if len(self.cache) > self.capacity:
-                self.cache.popitem(last=False)  # write-back: drop (demo)
+        # Apply the update and mark dirty BEFORE evicting: with a full (or
+        # zero-capacity) cache the evicted row may be this one, and the
+        # write-back must carry the new value.
         update_fn(row)
+        self.dirty.add(i)
+        self._evict()
 
     def get(self, i: int) -> Dict[str, Any]:
         row = self.cache.get(i)
@@ -239,6 +301,11 @@ class LRUFastPath:
             return row
         self.misses += 1
         return self.store.get(i)
+
+    def sync(self) -> None:
+        """Flush all dirty cached rows back to the underlying store."""
+        for i in list(self.dirty):
+            self._writeback(i, self.cache[i])
 
 
 STORE_KINDS = {

@@ -157,6 +157,34 @@ TABLES = {
 }
 
 
+def zipf_keys(rng, n_rows: int, n_ops: int, a: float = 1.1) -> np.ndarray:
+    """YCSB-C style Zipfian point-read key stream over ``[0, n_rows)``."""
+    keys = rng.zipf(a, size=4 * n_ops) - 1
+    keys = keys[keys < n_rows][:n_ops].astype(np.int64)
+    while keys.size < n_ops:  # extremely skewed draws can come up short
+        more = rng.zipf(a, size=4 * n_ops) - 1
+        keys = np.concatenate([keys, more[more < n_rows]])[:n_ops]
+    return keys.astype(np.int64)
+
+
+def batched_point_gets(store, keys, batch: int = 256) -> List[Dict]:
+    """Drive point gets through the store's batch API in fixed-size chunks.
+
+    Stores exposing ``get_many`` (BlitzStore / CompressedTable) decode each
+    chunk with one vectorized ``decode_select`` call; others fall back to
+    scalar gets.  This is the read path the TPC-C style harness and the
+    compression benchmarks time.
+    """
+    out: List[Dict] = []
+    if hasattr(store, "get_many"):
+        keys = list(keys)
+        for lo in range(0, len(keys), batch):
+            out.extend(store.get_many(keys[lo:lo + batch]))
+    else:
+        out = [store.get(int(k)) for k in keys]
+    return out
+
+
 def row_bytes(rows: List[Dict]) -> int:
     """Uncompressed size: fixed-width numerics + string bytes (Silo-style)."""
     total = 0

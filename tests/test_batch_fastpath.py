@@ -1,0 +1,274 @@
+"""Compiled fast path (DESIGN.md §2): slot plans, CSR stores, batch decode.
+
+Three-way equivalence on random schemas: the scalar TableCodec encode/decode
+vs the compiled ``encode_batch``/``decode_batch``/``decode_select`` vs the
+Pallas ``delayed_decode`` kernel (interpret mode) must produce identical
+symbols and identical code streams.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ColumnSpec, CompressedTable, TableCodec
+from repro.core.coders import TOTAL, UniformCoder
+from repro.oltp.store import BlitzStore, LRUFastPath
+from repro.oltp import tpcc
+
+
+def _mixed_rows(n, seed=0):
+    rng = np.random.default_rng(seed)
+    cities = [f"City{i:02d}" for i in range(30)]
+    words = ["alpha", "beta", "gamma", "delta"]
+    return [{
+        "id": int(i),
+        "city": cities[int(rng.zipf(1.3)) % 30],
+        "qty": int(rng.integers(1, 100)),
+        "amount": float(np.round(rng.uniform(0.01, 999.99), 2)),
+        "info": f"{words[int(rng.integers(0, 4))]}-"
+                f"{words[int(rng.integers(0, 4))]}"
+                f"#{int(rng.integers(0, 50)):02d}",
+    } for i in range(n)]
+
+
+MIXED_SCHEMA = [
+    ColumnSpec("id", "int"), ColumnSpec("city", "cat"),
+    ColumnSpec("qty", "int"), ColumnSpec("amount", "float", precision=0.01),
+    ColumnSpec("info", "str"),
+]
+
+
+def _hier_rows(n, seed=1):
+    rng = np.random.default_rng(seed)
+    states = ["CA", "TX", "NY"]
+    city_of = {"CA": ["LA", "SF"], "TX": ["HOU", "AUS"], "NY": ["NYC", "BUF"]}
+    rows = []
+    for _ in range(n):
+        st = states[int(rng.integers(0, 3))]
+        ci = city_of[st][int(rng.integers(0, 2))]
+        zp = f"z{(hash((st, ci)) % 89):02d}{int(rng.integers(0, 4))}"
+        rows.append({"state": st, "city": ci, "zip": zp})
+    return rows
+
+
+HIER_SCHEMA = [ColumnSpec("state", "cat"), ColumnSpec("city", "cat"),
+               ColumnSpec("zip", "cat")]
+
+
+class TestUniformTables:
+    """UniformCoder lowered to the [M, 7] bucket table == closed form."""
+
+    @pytest.mark.parametrize("G", [1, 2, 3, 5, 7, 255, 256, 1000, 4096,
+                                   50000, 65536])
+    def test_all_codes(self, G):
+        jax = pytest.importorskip("jax")  # noqa: F841
+        from repro.kernels import ref
+        uc = UniformCoder(G)
+        tab, m = ref.pack_tables_uniform(uc)
+        codes = np.arange(TOTAL, dtype=np.int64)
+        sym_r, a_r, k_r = (np.asarray(x) for x in
+                           ref.alias_decode_ref(__import__("jax").numpy.asarray(
+                               codes.astype(np.int32)), tab, m))
+        sym_c, a_c, k_c = uc.inv_translate_batch(codes)
+        np.testing.assert_array_equal(sym_r, sym_c)
+        np.testing.assert_array_equal(a_r, a_c)
+        np.testing.assert_array_equal(k_r, k_c)
+
+
+class TestPlanEquivalence:
+    @pytest.mark.parametrize("rows_fn,schema", [
+        (_mixed_rows, MIXED_SCHEMA),
+    ])
+    def test_codes_identical_to_scalar(self, rows_fn, schema):
+        rows = rows_fn(1500)
+        codec = TableCodec.fit(rows, schema, sample=1024)
+        plan = codec.compile()
+        assert plan is not None, codec.plan_fallback_reason
+        syms, ok = plan.encode_rows(rows[:300])
+        assert ok.mean() > 0.5  # the schema is mostly plan-conforming
+        sel = np.nonzero(ok)[0][:60]
+        batch_codes, offsets = plan.encode_batch(syms[sel])
+        for j, r in enumerate(sel):
+            scalar = codec._scalar_compress([rows[int(r)]])
+            np.testing.assert_array_equal(
+                scalar, batch_codes[offsets[j]:offsets[j + 1]])
+
+    def test_decode_batch_and_select_roundtrip(self):
+        rows = _mixed_rows(1200, seed=3)
+        codec = TableCodec.fit(rows, MIXED_SCHEMA, sample=1024)
+        plan = codec.compile()
+        syms, ok = plan.encode_rows(rows)
+        syms = syms[ok]
+        codes, offsets = plan.encode_batch(syms)
+        back = plan.decode_batch(codes, offsets)
+        np.testing.assert_array_equal(back, syms)
+        rng = np.random.default_rng(0)
+        sel = rng.integers(0, syms.shape[0], 200)
+        np.testing.assert_array_equal(
+            plan.decode_select(codes, offsets, sel), syms[sel])
+        # decoded rows match the scalar decoder's reconstruction
+        rows_b = plan.decode_syms_to_rows(syms[sel][:20])
+        kept = [r for r, o in zip(rows, ok) if o]
+        for r, i in zip(rows_b, sel[:20]):
+            scalar = codec.decompress_block(
+                codes[offsets[i]:offsets[i + 1]], 1)[0]
+            assert r == scalar
+            assert r["id"] == kept[int(i)]["id"]
+
+    def test_pallas_matches_numpy_and_scalar(self):
+        pytest.importorskip("jax")
+        rows = _mixed_rows(900, seed=5)
+        codec = TableCodec.fit(rows, MIXED_SCHEMA, sample=512)
+        plan = codec.compile()
+        assert plan.pallas_ok
+        syms, ok = plan.encode_rows(rows)
+        syms = syms[ok]
+        codes, offsets = plan.encode_batch(syms)
+        rng = np.random.default_rng(1)
+        sel = rng.integers(0, syms.shape[0], 300)
+        out_np = plan.decode_select(codes, offsets, sel, backend="numpy")
+        out_pl = plan.decode_select(codes, offsets, sel, backend="pallas")
+        np.testing.assert_array_equal(out_np, syms[sel])
+        np.testing.assert_array_equal(out_pl, syms[sel])
+
+    def test_conditional_chain_plan(self):
+        rows = _hier_rows(2500)
+        codec = TableCodec.fit(rows, HIER_SCHEMA, correlation=True,
+                               sample=2048)
+        if not any(codec.stats.parents.values()):
+            pytest.skip("structure learning found no parents")
+        plan = codec.compile()
+        assert plan is not None, codec.plan_fallback_reason
+        assert not plan.pallas_ok  # conditional slots are numpy-only
+        for r in rows[:80]:
+            scalar = codec._scalar_compress([r])
+            syms, ok = plan.encode_rows([r])
+            if not ok[0]:
+                continue
+            codes, offs = plan.encode_batch(syms)
+            np.testing.assert_array_equal(scalar, codes)
+        table = CompressedTable(codec)
+        table.extend(rows)
+        table.flush()
+        idx = np.random.default_rng(2).integers(0, len(rows), 400)
+        got = table.get_many(idx)
+        for g, i in zip(got, idx):
+            assert g == rows[int(i)]
+
+    def test_fallback_reasons(self):
+        rows = _mixed_rows(400)
+        codec = TableCodec.fit(rows, MIXED_SCHEMA, sample=256, block_tuples=4)
+        assert codec.compile() is None
+        assert "block_tuples" in codec.plan_fallback_reason
+        ts_rows = [{"t": float(i) + 0.1 * (i % 7)} for i in range(300)]
+        ts_codec = TableCodec.fit(ts_rows, [ColumnSpec("t", "ts")], sample=128)
+        assert ts_codec.compile() is None
+        assert "time-series" in ts_codec.plan_fallback_reason
+        # scalar fallback still round-trips through the store
+        table = CompressedTable(codec)
+        for r in rows[:40]:
+            table.append(r)
+        table.flush()
+        got = table.get_many(range(40))
+        assert [g["id"] for g in got] == [r["id"] for r in rows[:40]]
+
+
+class TestStoreBatchPath:
+    def test_get_many_matches_get(self):
+        schema, gen = tpcc.TABLES["orderline"]
+        rows = gen(900)
+        store = BlitzStore(schema, rows[:450])
+        store.insert_many(rows)
+        rng = np.random.default_rng(0)
+        idx = rng.integers(0, 900, 300)
+        batch = store.get_many(idx)
+        scalar = [store.get(int(i)) for i in idx]
+        assert batch == scalar
+
+    def test_batched_point_gets_helper(self):
+        schema, gen = tpcc.TABLES["stock"]
+        rows = gen(400)
+        store = BlitzStore(schema, rows[:200])
+        store.insert_many(rows)
+        rng = np.random.default_rng(3)
+        keys = tpcc.zipf_keys(rng, 400, 250)
+        out = tpcc.batched_point_gets(store, keys, batch=64)
+        assert len(out) == 250
+        assert out[0] == store.get(int(keys[0]))
+
+    def test_updates_visible_through_batch_gets(self):
+        schema, gen = tpcc.TABLES["orderline"]
+        rows = gen(200)
+        store = BlitzStore(schema, rows[:100])
+        store.insert_many(rows)
+        row = store.get(7)
+        row["ol_quantity"] = 999
+        store.update(7, row)
+        assert store.get(7)["ol_quantity"] == 999
+        assert store.get_many([6, 7, 8])[1]["ol_quantity"] == 999
+
+    def test_nbytes_counts_pending_and_offsets(self):
+        schema, gen = tpcc.TABLES["orderline"]
+        rows = gen(300)
+        store = BlitzStore(schema, rows[:150], block_tuples=8)
+        flushed_zero = store.nbytes
+        for r in rows[:4]:  # stays pending: block not full
+            store.insert(r)
+        assert store.table._pending, "rows should be buffered"
+        assert store.nbytes > flushed_zero, \
+            "pending rows must count toward nbytes"
+
+
+class TestLRUWriteback:
+    def test_eviction_writes_back_dirty_rows(self):
+        schema, gen = tpcc.TABLES["orderline"]
+        rows = gen(120)
+        store = BlitzStore(schema, rows[:60])
+        store.insert_many(rows)
+        fp = LRUFastPath(store, capacity=8)
+        for i in range(50):  # far beyond capacity: forces evictions
+            fp.read_modify_write(i, lambda r, i=i: r.update(ol_quantity=1000 + i))
+        fp.sync()
+        assert fp.writebacks >= 42
+        for i in range(50):
+            assert store.get(i)["ol_quantity"] == 1000 + i, i
+        # unmodified rows unchanged
+        assert store.get(60)["ol_quantity"] == rows[60]["ol_quantity"]
+
+    def test_zero_capacity_cache_never_loses_updates(self):
+        schema, gen = tpcc.TABLES["orderline"]
+        rows = gen(40)
+        store = BlitzStore(schema, rows[:20])
+        store.insert_many(rows)
+        fp = LRUFastPath(store, capacity=0)
+        for i in range(10):
+            fp.read_modify_write(i, lambda r, i=i: r.update(ol_quantity=i + 500))
+            fp.read_modify_write(i, lambda r, i=i: r.update(ol_number=i))
+        fp.sync()  # must not raise on dangling dirty ids
+        for i in range(10):
+            got = store.get(i)
+            assert got["ol_quantity"] == i + 500 and got["ol_number"] == i
+
+
+class TestGetManyContracts:
+    def test_duplicate_slow_path_indices_get_fresh_dicts(self):
+        rows = _mixed_rows(60)
+        codec = TableCodec.fit(rows, MIXED_SCHEMA, sample=64, block_tuples=4)
+        assert codec.compile() is None  # every block takes the slow path
+        table = CompressedTable(codec)
+        for r in rows:
+            table.append(r)
+        table.flush()
+        a, b = table.get_many([3, 3])
+        assert a == b and a is not b
+
+    def test_get_many_accepts_one_shot_iterator_with_updates(self):
+        schema, gen = tpcc.TABLES["orderline"]
+        rows = gen(50)
+        store = BlitzStore(schema, rows[:25])
+        store.insert_many(rows)
+        row = store.get(5)
+        row["ol_quantity"] = 777
+        store.update(5, row)
+        got = store.get_many(iter([4, 5, 6]))
+        assert got[1]["ol_quantity"] == 777
+        assert got[0] == store.get(4)

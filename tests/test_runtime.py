@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 jax = pytest.importorskip("jax")
+pytest.importorskip("repro.dist.sharding")  # dist substrate: future PR
 import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import reduced_config  # noqa: E402
