@@ -1,0 +1,33 @@
+"""Shared BENCH_*.json artifact helpers: every artifact is stamped with the
+git SHA it was produced at and the schema it measured, so trajectories
+across PRs are comparable (ISSUE 2 CI/tooling task)."""
+
+from __future__ import annotations
+
+import json
+import subprocess
+from pathlib import Path
+from typing import Dict
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def git_sha() -> str:
+    try:
+        out = subprocess.run(["git", "describe", "--always", "--dirty"],
+                             cwd=REPO_ROOT, capture_output=True, text=True,
+                             timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except Exception:
+        return "unknown"
+
+
+def write_bench_json(name: str, report: Dict, schema: str) -> Path:
+    """Write ``BENCH_<name>.json`` at the repo root with sha+schema stamps."""
+    report = dict(report)
+    report.setdefault("schema_name", schema)
+    report["git_sha"] = git_sha()
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(report, indent=2) + "\n")
+    return path

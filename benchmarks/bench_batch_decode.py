@@ -15,9 +15,7 @@ trajectory to beat, and prints ``name,us_per_call,derived`` CSV lines.
 
 from __future__ import annotations
 
-import json
 import time
-from pathlib import Path
 from typing import Dict, List
 
 import numpy as np
@@ -108,10 +106,11 @@ def run(n_rows: int = 8192, batches=(256, 2048), reps: int = 5) -> Dict:
 
 
 def main(quick: bool = True) -> Dict:
+    from benchmarks.artifact import write_bench_json
     report = run(n_rows=8192 if quick else 32768,
                  reps=5 if quick else 9)
-    artifact = Path(__file__).resolve().parent.parent / "BENCH_batch_decode.json"
-    artifact.write_text(json.dumps(report, indent=2) + "\n")
+    artifact = write_bench_json("batch_decode", report,
+                                schema="mixed6 (id/city/grade/qty/amount/info)")
     for b in report["batches"]:
         print(f"batch_decode_R{b['R']}_scalar,{b['scalar_us']},baseline")
         print(f"batch_decode_R{b['R']}_numpy,{b['numpy_us']},"

@@ -23,11 +23,12 @@ def main() -> None:
                             bench_compression, bench_entropy_coders,
                             bench_fastpath, bench_framework,
                             bench_granularity, bench_sampling,
-                            roofline_report)
+                            bench_update_merge, roofline_report)
 
     benches = {
         "compression": bench_compression,     # Fig 9
         "batch_decode": bench_batch_decode,   # DESIGN.md §2 fast path
+        "update_merge": bench_update_merge,   # DESIGN.md §3 delta merge
         "sampling": bench_sampling,           # Fig 10
         "entropy": bench_entropy_coders,      # Fig 11
         "granularity": bench_granularity,     # Fig 12

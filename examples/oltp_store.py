@@ -1,10 +1,15 @@
 """OLTP scenario (paper §6/§7): an in-memory row store under a YCSB-style
-mixed workload, comparing Blitzcrank against zstd / Raman / uncompressed,
-with the §6.5 LRU fast path for read-modify-write transactions.
+mixed workload, comparing Blitzcrank against zstd / Raman / uncompressed
+through the unified batched RowStore protocol (DESIGN.md §3), with the
+§6.5 LRU fast path for read-modify-write transactions.
 
 Run:  PYTHONPATH=src python examples/oltp_store.py
+      PYTHONPATH=src python examples/oltp_store.py --mix   # update-heavy
+                                                           # TPC-C mix with
+                                                           # delta-merge stats
 """
 
+import argparse
 import time
 
 import numpy as np
@@ -14,13 +19,13 @@ from repro.oltp.store import (BlitzStore, LRUFastPath, RamanStore,
                               UncompressedStore, ZstdStore)
 
 
-def main(n_rows=4000, n_reads=1500, n_rmw=500):
+def compare_stores(n_rows=4000, n_reads=1500, n_rmw=500):
     schema, gen = tpcc.TABLES["customer"]
     rows = gen(n_rows)
     raw = tpcc.row_bytes(rows)
     rng = np.random.default_rng(0)
-    zipf_keys = (rng.zipf(1.2, 8 * n_reads) - 1)
-    zipf_keys = zipf_keys[zipf_keys < n_rows]
+    read_keys = tpcc.zipf_keys(rng, n_rows, n_reads, a=1.2)
+    rmw_keys = tpcc.zipf_keys(rng, n_rows, n_rmw, a=1.2)
 
     print(f"{'store':12s} {'factor':>7s} {'read us':>9s} {'rmw us':>9s} "
           f"{'hit%':>6s}")
@@ -29,26 +34,69 @@ def main(n_rows=4000, n_reads=1500, n_rmw=500):
             store = cls(schema, rows[: n_rows // 2])
         except ImportError:  # optional backend (zstandard) not installed
             continue
-        for r in rows:
-            store.insert(r)
+        store.insert_many(rows)
 
         t0 = time.perf_counter()
-        for i in zipf_keys[:n_reads]:
-            store.get(int(i))
+        tpcc.batched_point_gets(store, read_keys, batch=256)
         t_read = (time.perf_counter() - t0) / n_reads
 
         fp = LRUFastPath(store, capacity=256)
         t0 = time.perf_counter()
-        for i in zipf_keys[n_reads:n_reads + n_rmw]:
+        for i in rmw_keys:
             fp.read_modify_write(int(i),
                                  lambda r: r.update(c_balance=r["c_balance"] + 1))
         t_rmw = (time.perf_counter() - t0) / n_rmw
+        fp.sync()
         hit = fp.hits / max(fp.hits + fp.misses, 1)
         print(f"{store.name:12s} {raw / store.nbytes:7.2f} "
               f"{1e6 * t_read:9.1f} {1e6 * t_rmw:9.1f} {100 * hit:6.1f}")
 
     print("\nBlitzcrank: highest factor; the fast path absorbs Zipfian "
           "updates (paper Fig. 13).")
+
+
+def update_heavy_mix(n_rows=8000, n_ops=30000):
+    """Payment-heavy TPC-C mix: the delta overlay merges back into the
+    arena instead of growing forever (DESIGN.md §3)."""
+    schema, gen = tpcc.TABLES["customer"]
+    rows = gen(n_rows)
+    store = BlitzStore(schema, rows, sample=1 << 13)
+    store.insert_many(rows)
+    post_load = store.stats()
+    print(f"loaded {post_load['n_live']} rows, "
+          f"{post_load['nbytes'] / 1024:.0f} KiB compressed "
+          f"(factor {tpcc.row_bytes(rows) / post_load['nbytes']:.2f})")
+
+    t0 = time.perf_counter()
+    counts = tpcc.run_transaction_mix(
+        store, n_ops, seed=3, p_payment=0.6, p_order_status=0.25,
+        p_new_order=0.10, p_delivery=0.05, new_row_fn=tpcc.customer_row)
+    dt = time.perf_counter() - t0
+    s = store.stats()
+    print(f"\n{n_ops} ops in {dt:.1f}s "
+          f"({1e6 * dt / n_ops:.1f} us/op): {counts}")
+    print(f"bytes: total {s['nbytes'] / 1024:.0f} KiB "
+          f"(= {s['nbytes'] / post_load['nbytes']:.2f}x post-load) | "
+          f"arena {s['arena_bytes'] / 1024:.0f} KiB, "
+          f"overlay {s['overlay_bytes'] / 1024:.1f} KiB "
+          f"({s['overlay_rows']} rows), dead {s['dead_bytes'] / 1024:.1f} KiB")
+    print(f"compaction: {s['merges']} merges, {s['rewrites']} arena "
+          f"rewrites; live rows {s['n_live']} (+{counts['inserts']} inserted, "
+          f"-{counts['deletes']} deleted)")
+    escapes = {k: v for k, v in s["escapes"].items() if v}
+    print(f"escape counters (refit hook): {escapes}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mix", action="store_true",
+                    help="run the update-heavy TPC-C transaction mix "
+                         "with delta-merge stats")
+    args = ap.parse_args()
+    if args.mix:
+        update_heavy_mix()
+    else:
+        compare_stores()
 
 
 if __name__ == "__main__":

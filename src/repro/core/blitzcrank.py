@@ -304,6 +304,13 @@ class CompressedTable:
         self.block_rows: List[int] = []
         self._rows_stored = 0
         self._pending: List[Dict[str, Any]] = []
+        # Mutation support (DESIGN.md §3), single-tuple granularity only:
+        # logical row id -> physical block, -1 = tombstone.  Replaced and
+        # deleted runs stay in the arena as dead bytes until rewrite().
+        self._row2block = np.full(1024, -1, dtype=np.int64)
+        self._dead_codes = 0
+        self._n_deleted = 0
+        self.rewrites = 0
 
     # -- storage helpers -------------------------------------------------
     def _append_codes(self, codes: np.ndarray) -> None:
@@ -326,6 +333,14 @@ class CompressedTable:
             fast[:self.n_blocks] = self._fast[:self.n_blocks]
             self._fast = fast
 
+    def _grow_rows(self, n_new: int) -> None:
+        need = self._rows_stored + n_new
+        if need > self._row2block.size:
+            cap = max(need, 2 * self._row2block.size)
+            r2b = np.full(cap, -1, dtype=np.int64)
+            r2b[:self._rows_stored] = self._row2block[:self._rows_stored]
+            self._row2block = r2b
+
     def _append_block(self, codes: np.ndarray, n_rows: int, fast: bool) -> None:
         self._append_codes(codes)
         self._grow_index(1)
@@ -333,6 +348,9 @@ class CompressedTable:
         self._offsets[self.n_blocks] = self.used
         self._fast[self.n_blocks - 1] = fast
         self.block_rows.append(n_rows)
+        if self.codec.block_tuples == 1:
+            self._grow_rows(n_rows)
+            self._row2block[self._rows_stored] = self.n_blocks - 1
         self._rows_stored += n_rows
 
     @property
@@ -367,6 +385,9 @@ class CompressedTable:
         self._offsets[self.n_blocks + 1:self.n_blocks + 1 + n] = \
             base + offsets[1:]
         self._fast[self.n_blocks:self.n_blocks + n] = fast
+        self._grow_rows(n)
+        self._row2block[self._rows_stored:self._rows_stored + n] = \
+            np.arange(self.n_blocks, self.n_blocks + n)
         self.n_blocks += n
         self.block_rows.extend([1] * n)
         self._rows_stored += n
@@ -388,7 +409,19 @@ class CompressedTable:
 
     # -- read path -------------------------------------------------------
     def get(self, i: int) -> Dict[str, Any]:
-        """Random access: decompress the block containing row ``i``."""
+        """Random access: decompress the block containing row ``i``.
+
+        Raises :class:`KeyError` for tombstoned rows (single-tuple
+        granularity; see :meth:`delete_many`).
+        """
+        i = int(i)
+        if self.codec.block_tuples == 1:
+            if i < self._rows_stored:
+                b = int(self._row2block[i])
+                if b < 0:
+                    raise KeyError(f"row {i} is deleted")
+                return self.get_block(b)[0]
+            return dict(self._pending[i - self._rows_stored])
         bt = self.codec.block_tuples
         b = i // bt  # blocks are fixed-size except the trailing pending rows
         if b < self.n_blocks:
@@ -421,8 +454,9 @@ class CompressedTable:
         return "numpy"
 
     def get_many(self, indices: Sequence[int],
-                 backend: Optional[str] = None) -> List[Dict[str, Any]]:
-        """Batched point gets.
+                 backend: Optional[str] = None
+                 ) -> List[Optional[Dict[str, Any]]]:
+        """Batched point gets (``None`` for tombstoned rows).
 
         Rows in plan-conforming single-tuple blocks decode with ONE
         ``decode_select`` call over the CSR arena; the rest fall back to
@@ -433,30 +467,42 @@ class CompressedTable:
         out: List[Optional[Dict[str, Any]]] = [None] * n
         bt = self.codec.block_tuples
         plan = self.codec.compile()
-        slow_pos: np.ndarray
-        if bt == 1 and plan is not None and n:
+        scalar_blocks: Dict[int, List[Tuple[int, int]]] = {}
+        if bt == 1:
+            if not n:
+                return out
+            # logical row -> physical block; -2 = pending tail, -1 = deleted
             in_store = idx_arr < self._rows_stored
+            blks = np.full(n, -2, dtype=np.int64)
+            blks[in_store] = self._row2block[idx_arr[in_store]]
             fmask = np.zeros(n, dtype=bool)
-            fmask[in_store] = self._fast[idx_arr[in_store]]
+            stored = blks >= 0
+            if plan is not None and stored.any():
+                fmask[stored] = self._fast[blks[stored]]
             fast_pos = np.nonzero(fmask)[0]
             if fast_pos.size:
                 rows = self.codec.decompress_rows(
                     self.arena[:self.used], self.block_offsets,
-                    idx_arr[fast_pos],
+                    blks[fast_pos],
                     backend=self._resolve_backend(backend, fast_pos.size))
                 for j, r in zip(fast_pos.tolist(), rows):
                     out[j] = r
-            slow_pos = np.nonzero(~fmask)[0]
+            for j in np.nonzero(~fmask)[0].tolist():
+                b = int(blks[j])
+                if b == -2:
+                    out[j] = dict(
+                        self._pending[int(idx_arr[j]) - self._rows_stored])
+                elif b >= 0:
+                    scalar_blocks.setdefault(b, []).append((j, 0))
+                # b == -1: tombstone, leave None
         else:
-            slow_pos = np.arange(n)
-        scalar_blocks: Dict[int, List[Tuple[int, int]]] = {}
-        for j in slow_pos.tolist():
-            i = int(idx_arr[j])
-            if i >= self._rows_stored:
-                out[j] = dict(self._pending[i - self._rows_stored])
-            else:
-                b = i // bt
-                scalar_blocks.setdefault(b, []).append((j, i - b * bt))
+            for j in range(n):
+                i = int(idx_arr[j])
+                if i >= self._rows_stored:
+                    out[j] = dict(self._pending[i - self._rows_stored])
+                else:
+                    b = i // bt
+                    scalar_blocks.setdefault(b, []).append((j, i - b * bt))
         for b, items in scalar_blocks.items():
             blk = self.get_block(b)
             seen: set = set()
@@ -466,14 +512,138 @@ class CompressedTable:
                 seen.add(off)
         return out
 
+    # -- mutation path (DESIGN.md §3; single-tuple granularity only) -----
+    def _require_mutable(self, what: str) -> None:
+        if self.codec.block_tuples != 1:
+            raise ValueError(
+                f"{what} requires block_tuples == 1 (multi-tuple blocks "
+                "share code runs across rows)")
+
+    def _retire_blocks(self, blocks: np.ndarray) -> None:
+        """Account the code runs of abandoned physical blocks as dead."""
+        if blocks.size:
+            self._dead_codes += int(
+                (self._offsets[blocks + 1] - self._offsets[blocks]).sum())
+
+    def replace_many(self, indices: Sequence[int],
+                     rows: Sequence[Dict[str, Any]]) -> None:
+        """Re-encode ``rows`` in place of ``indices`` (delta-merge step).
+
+        New code runs are appended to the arena through the bulk
+        ``compress_rows`` path (one ``encode_batch`` call for conforming
+        rows); the old runs are tombstoned in place and counted as dead
+        bytes until :meth:`rewrite` reclaims them.  ``indices`` must be
+        unique; replacing a tombstoned row resurrects it.
+        """
+        self._require_mutable("replace_many")
+        self.flush()
+        idx = np.asarray(list(indices), dtype=np.int64)
+        n = idx.size
+        if n != len(rows):
+            raise ValueError("indices and rows length mismatch")
+        if not n:
+            return
+        if idx.min() < 0 or idx.max() >= self._rows_stored:
+            raise IndexError("replace_many index out of range")
+        if np.unique(idx).size != n:
+            # duplicates would double-count dead bytes and orphan runs
+            raise ValueError("replace_many indices must be unique")
+        codes, offsets, fast = self.codec.compress_rows(list(rows))
+        base = self.used
+        self._append_codes(codes)
+        self._grow_index(n)
+        first = self.n_blocks
+        self._offsets[first + 1:first + 1 + n] = base + offsets[1:]
+        self._fast[first:first + n] = fast
+        self.n_blocks += n
+        self.block_rows.extend([1] * n)
+        old = self._row2block[idx]
+        live = old >= 0
+        self._retire_blocks(old[live])
+        self._n_deleted -= int(n - np.count_nonzero(live))  # resurrections
+        self._row2block[idx] = np.arange(first, first + n)
+
+    def delete_many(self, indices: Sequence[int]) -> int:
+        """Tombstone rows: their code runs become dead bytes.  Returns the
+        number of rows newly deleted (repeat deletes are no-ops)."""
+        self._require_mutable("delete_many")
+        self.flush()
+        idx = np.unique(np.asarray(list(indices), dtype=np.int64))
+        if not idx.size:
+            return 0
+        if idx[0] < 0 or idx[-1] >= self._rows_stored:
+            raise IndexError("delete_many index out of range")
+        old = self._row2block[idx]
+        live = old >= 0
+        self._retire_blocks(old[live])
+        self._row2block[idx[live]] = -1
+        newly = int(np.count_nonzero(live))
+        self._n_deleted += newly
+        return newly
+
+    def is_live(self, i: int) -> bool:
+        """True when logical row ``i`` exists and is not tombstoned."""
+        i = int(i)
+        if i < 0 or i >= len(self):
+            return False
+        if self.codec.block_tuples != 1 or i >= self._rows_stored:
+            return True
+        return self._row2block[i] >= 0
+
+    @property
+    def n_live(self) -> int:
+        return len(self) - self._n_deleted
+
+    @property
+    def dead_bytes(self) -> int:
+        """Bytes of abandoned (replaced/deleted) code runs in the arena."""
+        return 2 * self._dead_codes
+
+    def rewrite(self) -> int:
+        """Compact the arena: copy live runs, drop dead ones, renumber
+        physical blocks.  Returns the number of bytes reclaimed."""
+        self._require_mutable("rewrite")
+        self.flush()
+        reclaimed = self.dead_bytes
+        nrows = self._rows_stored
+        live_rows = np.nonzero(self._row2block[:nrows] >= 0)[0]
+        blks = self._row2block[live_rows]
+        starts = self._offsets[blks]
+        lens = self._offsets[blks + 1] - starts
+        total = int(lens.sum())
+        new_off = np.zeros(live_rows.size + 1, dtype=np.int64)
+        np.cumsum(lens, out=new_off[1:])
+        gather = np.repeat(starts - new_off[:-1], lens) + np.arange(total)
+        arena = np.zeros(max(total, 1024), dtype=np.uint16)
+        arena[:total] = self.arena[gather]
+        nb = live_rows.size
+        offs = np.zeros(max(nb + 1, 1024), dtype=np.int64)
+        offs[:nb + 1] = new_off
+        fast = np.zeros(offs.size - 1, dtype=bool)
+        fast[:nb] = self._fast[blks]
+        self.arena, self.used = arena, total
+        self._offsets, self._fast, self.n_blocks = offs, fast, nb
+        self.block_rows = [1] * nb
+        self._row2block[:nrows] = -1
+        self._row2block[live_rows] = np.arange(nb)
+        self._dead_codes = 0
+        self.rewrites += 1
+        return reclaimed
+
     @property
     def nbytes(self) -> int:
         """Compressed footprint: code arena + block index + unflushed rows.
 
         Offsets are counted at 4 B each (a uint32 arena index suffices for
         <8 GiB of codes) plus 1 bit per block for the fast flag; pending
-        rows sit uncompressed and are charged at their raw size.
+        rows sit uncompressed and are charged at their raw size.  At
+        single-tuple granularity the row->block indirection (mutation
+        support) adds 4 B per logical row.  Dead bytes from replaced or
+        deleted runs are *included* — they are held memory until
+        :meth:`rewrite` — and reported separately via :attr:`dead_bytes`.
         """
         pending = sum(_raw_row_bytes(r) for r in self._pending)
+        indirection = (4 * self._rows_stored
+                       if self.codec.block_tuples == 1 else 0)
         return (self.used * 2 + 4 * (self.n_blocks + 1)
-                + (self.n_blocks + 7) // 8 + pending)
+                + (self.n_blocks + 7) // 8 + indirection + pending)

@@ -340,6 +340,10 @@ class TablePlan:
         self.order = list(codec.order)
         self.lowerings = lowerings
         self.lam = codec.lam
+        # Per-column escape counters (§5-style dynamic value sets): how many
+        # values failed to lower at encode time — the signal a refit hook
+        # watches to decide a column's model has drifted.
+        self.escape_counts: Dict[str, int] = {n: 0 for n, _, _ in lowerings}
         self.coders: List = []
         for _, cp, _ in lowerings:
             self.coders.extend(cp.coders())
@@ -368,9 +372,13 @@ class TablePlan:
             try:
                 s_col, o = cp.encode(cols[name], cols)
             except Exception:
+                self.escape_counts[name] += n
                 ok[:] = False
                 continue
             syms[:, off:off + cp.n_slots] = s_col
+            misses = int(n - np.count_nonzero(o))
+            if misses:
+                self.escape_counts[name] += misses
             ok &= o
         return syms, ok
 
@@ -383,13 +391,18 @@ class TablePlan:
         """Cheap scalar check: would this row take the fast path?
 
         Pure-Python per-column checks (no numpy) so the per-insert cost is a
-        few dict lookups, not a 1-row batch encode.
+        few dict lookups, not a 1-row batch encode.  A miss is charged to the
+        first non-conforming column in :attr:`escape_counts`.
         """
-        try:
-            return all(cp.conforms(row[name], row)
-                       for name, cp, _ in self.lowerings)
-        except (TypeError, KeyError):
-            return False
+        for name, cp, _ in self.lowerings:
+            try:
+                if not cp.conforms(row[name], row):
+                    self.escape_counts[name] += 1
+                    return False
+            except (TypeError, KeyError):
+                self.escape_counts[name] += 1
+                return False
+        return True
 
     # -- decode ----------------------------------------------------------
     def decode_batch(self, codes: np.ndarray, offsets: np.ndarray,

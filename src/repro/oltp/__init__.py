@@ -1,0 +1,23 @@
+"""OLTP layer: the batched-first RowStore protocol over pluggable
+compressors, plus the TPC-C-style data generators and transaction mix
+(DESIGN.md §3).
+
+Public API:
+  * store: RowStore, BlitzStore, ZstdStore, RamanStore, UncompressedStore,
+           LRUFastPath, STORE_KINDS
+  * tpcc:  TABLES, gen_customer/gen_stock/gen_orderline, customer_row,
+           zipf_keys, batched_point_gets, run_transaction_mix, row_bytes
+"""
+
+from .store import (STORE_KINDS, BlitzStore, LRUFastPath, RamanStore,
+                    RowStore, UncompressedStore, ZstdStore)
+from .tpcc import (TABLES, batched_point_gets, customer_row, gen_customer,
+                   gen_orderline, gen_stock, row_bytes, run_transaction_mix,
+                   zipf_keys)
+
+__all__ = [
+    "RowStore", "BlitzStore", "ZstdStore", "RamanStore",
+    "UncompressedStore", "LRUFastPath", "STORE_KINDS",
+    "TABLES", "gen_customer", "gen_stock", "gen_orderline", "customer_row",
+    "zipf_keys", "batched_point_gets", "run_transaction_mix", "row_bytes",
+]

@@ -1,25 +1,35 @@
-"""In-memory row stores with pluggable compressors (paper §6.1/§7 setting).
+"""In-memory row stores behind one batched-first protocol (paper §6.1/§7).
 
-Every store implements insert/get over a primary-key index (a plain vector,
-as in the paper's microbenchmarks).  Compressors:
+Every store implements the :class:`RowStore` protocol (DESIGN.md §3) —
+``insert_many / get_many / update_many / delete_many / scan / stats()`` over
+a dense primary-key id space, with scalar ``insert/get/update/delete`` kept
+as thin wrappers — so every harness and benchmark drives one interface.
+Compressors:
 
-* ``BlitzStore``      — TableCodec (semantic models + delayed coding)
+* ``BlitzStore``      — TableCodec (semantic models + delayed coding) over
+                        the CSR code arena, with a bounded delta overlay and
+                        Funke-style ``merge()`` compaction back into the arena
 * ``ZstdStore``       — per-tuple zstd with a trained dictionary (the
                         paper's Zstandard baseline, §6 "training mode")
 * ``RamanStore``      — per-column canonical Huffman, concatenated
                         variable-length tuples (static dictionary: unseen
-                        values need an escape; new tuples buffered and
-                        re-trained like §7.1 describes)
+                        values need an escape)
 * ``UncompressedStore`` — Silo-style plain rows
 
-Plus the §6.5 fast path: an LRU write-back cache of decompressed tuples.
+Plus the §6.5 fast path: :class:`LRUFastPath`, an LRU write-back cache of
+decompressed tuples that also speaks the protocol.
+
+Deletion semantics (uniform across stores): ids are never reused;
+``get_many`` returns ``None`` for tombstoned ids, scalar ``get`` raises
+``KeyError``, updating a deleted row raises ``KeyError``, repeat deletes
+are no-ops.
 """
 
 from __future__ import annotations
 
 import json
 from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -27,102 +37,370 @@ from repro.core import ColumnSpec, TableCodec
 from repro.core.blitzcrank import CompressedTable, _raw_row_bytes
 from repro.core.huffman import BitReader, BitWriter, HuffmanCode
 
+# Per-entry charge of an uncompressed dict overlay / cache slot: 8 B key +
+# 8 B table-slot pointer on top of the raw row bytes (DESIGN.md §3).
+OVERLAY_ENTRY_OVERHEAD = 16
+# A pending tombstone is one id in a hash set.
+TOMBSTONE_BYTES = 8
 
-class UncompressedStore:
-    name = "silo"
 
-    def __init__(self, schema: Sequence[ColumnSpec], rows_sample=None):
-        self.schema = list(schema)
-        self.rows: List[bytes] = []
+class RowStore:
+    """Unified batched-first storage protocol (DESIGN.md §3).
 
+    Subclasses implement the batched methods; the scalar ``insert / get /
+    update / delete`` are thin wrappers over them.  ``len(store)`` is the
+    id span (including tombstones), ``n_live`` the live row count.
+    """
+
+    name = "rowstore"
+
+    def __init__(self, schema: Optional[Sequence[ColumnSpec]] = None):
+        self.schema = list(schema) if schema is not None else None
+
+    # -- batched protocol (override) -------------------------------------
+    def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
+        raise NotImplementedError
+
+    def get_many(self, indices: Sequence[int]
+                 ) -> List[Optional[Dict[str, Any]]]:
+        raise NotImplementedError
+
+    def update_many(self, indices: Sequence[int],
+                    rows: Sequence[Dict[str, Any]]) -> None:
+        raise NotImplementedError
+
+    def delete_many(self, indices: Sequence[int]) -> int:
+        raise NotImplementedError
+
+    def scan(self, start: int = 0, stop: Optional[int] = None,
+             batch: int = 1024) -> Iterator[Tuple[int, Dict[str, Any]]]:
+        """Yield ``(id, row)`` for live rows in id order, a batch at a time."""
+        n = len(self)
+        stop = n if stop is None else min(stop, n)
+        for lo in range(start, stop, batch):
+            ids = range(lo, min(lo + batch, stop))
+            for i, r in zip(ids, self.get_many(ids)):
+                if r is not None:
+                    yield i, r
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "n_ids": len(self),
+            "n_live": self.n_live,
+            "n_deleted": len(self) - self.n_live,
+            "nbytes": self.nbytes,
+            "model_bytes": getattr(self, "model_bytes", 0),
+        }
+
+    # -- scalar wrappers -------------------------------------------------
     def insert(self, row: Dict[str, Any]) -> int:
-        self.rows.append(json.dumps(
-            [row[c.name] for c in self.schema]).encode())
-        return len(self.rows) - 1
+        return self.insert_many([row])[0]
 
     def get(self, i: int) -> Dict[str, Any]:
-        vals = json.loads(self.rows[i])
-        return {c.name: v for c, v in zip(self.schema, vals)}
+        r = self.get_many([int(i)])[0]
+        if r is None:
+            raise KeyError(f"row {int(i)} is deleted")
+        return r
 
     def update(self, i: int, row: Dict[str, Any]) -> None:
-        self.rows[i] = json.dumps([row[c.name] for c in self.schema]).encode()
+        self.update_many([int(i)], [row])
+
+    def delete(self, i: int) -> int:
+        return self.delete_many([int(i)])
+
+    # -- shared helpers --------------------------------------------------
+    def is_live(self, i: int) -> bool:
+        """True when id ``i`` exists and is not tombstoned (per-store state)."""
+        raise NotImplementedError
+
+    @property
+    def n_live(self) -> int:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
 
     @property
     def nbytes(self) -> int:
-        return sum(len(r) for r in self.rows)
+        raise NotImplementedError
+
+    @staticmethod
+    def _dedup_last(indices: Sequence[int], rows: Sequence[Dict[str, Any]]
+                    ) -> Tuple[List[int], List[Dict[str, Any]]]:
+        """Unique (id, row) pairs, last write wins (update_many contract)."""
+        m: Dict[int, Dict[str, Any]] = {}
+        for i, r in zip(indices, rows):
+            m[int(i)] = r
+        return list(m.keys()), list(m.values())
 
 
-class BlitzStore:
-    """TableCodec store over the CSR code arena (DESIGN.md §2.5).
+class _BytesRowStore(RowStore):
+    """Shared list-of-encoded-tuples plumbing for the baseline stores:
+    one encoded payload per id, tombstones in a side set."""
 
-    Rows live in a :class:`CompressedTable` — one uint16 arena plus int64
-    block offsets — so batched point reads (:meth:`get_many`) decode through
-    ``decode_select`` with no per-tuple Python loop whenever the codec
-    compiled.  Updates (the §6.5 write-back path) go to an uncompressed
-    delta overlay consulted before the arena, as a real delta-store would.
+    def __init__(self, schema: Sequence[ColumnSpec]):
+        super().__init__(schema)
+        self.rows: List[bytes] = []
+        self._deleted: set = set()
+
+    def is_live(self, i: int) -> bool:
+        i = int(i)
+        return 0 <= i < len(self.rows) and i not in self._deleted
+
+    @property
+    def n_live(self) -> int:
+        return len(self.rows) - len(self._deleted)
+
+    def _encode_row(self, row: Dict[str, Any]) -> bytes:
+        raise NotImplementedError
+
+    def _decode_row(self, raw: bytes) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
+        base = len(self.rows)
+        enc = self._encode_row
+        self.rows.extend(enc(r) for r in rows)
+        return range(base, len(self.rows))
+
+    def get_many(self, indices: Sequence[int]
+                 ) -> List[Optional[Dict[str, Any]]]:
+        dels, rows, dec = self._deleted, self.rows, self._decode_row
+        return [None if (i := int(j)) in dels else dec(rows[i])
+                for j in indices]
+
+    def update_many(self, indices: Sequence[int],
+                    rows: Sequence[Dict[str, Any]]) -> None:
+        idxs, rows = self._dedup_last(indices, rows)
+        for i, r in zip(idxs, rows):
+            if not self.is_live(i):
+                raise KeyError(f"row {i} is deleted")
+            self.rows[i] = self._encode_row(r)
+
+    def delete_many(self, indices: Sequence[int]) -> int:
+        n = 0
+        for i in {int(j) for j in indices}:
+            if self.is_live(i):
+                self.rows[i] = b""  # reclaim the tuple bytes
+                self._deleted.add(i)
+                n += 1
+        return n
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    @property
+    def nbytes(self) -> int:
+        return (sum(len(r) for r in self.rows)
+                + TOMBSTONE_BYTES * len(self._deleted))
+
+
+class UncompressedStore(_BytesRowStore):
+    name = "silo"
+
+    def __init__(self, schema: Sequence[ColumnSpec], rows_sample=None):
+        super().__init__(schema)
+
+    def _encode_row(self, row: Dict[str, Any]) -> bytes:
+        return json.dumps([row[c.name] for c in self.schema]).encode()
+
+    def _decode_row(self, raw: bytes) -> Dict[str, Any]:
+        return {c.name: v for c, v in zip(self.schema, json.loads(raw))}
+
+
+class BlitzStore(RowStore):
+    """TableCodec store: CSR code arena + bounded delta overlay (§2.5/§3).
+
+    Cold rows live in a :class:`CompressedTable`; batched point reads
+    (:meth:`get_many`) decode through ``decode_select`` with no per-tuple
+    Python loop whenever the codec compiled.  Updates and deletes go to an
+    uncompressed delta overlay / tombstone set consulted before the arena.
+    The overlay is *bounded*: when it exceeds ``merge_frac`` of the arena
+    code bytes (min ``merge_min_bytes``), :meth:`merge` re-encodes the dirty
+    rows through the bulk ``encode_batch`` path back into the arena
+    (``CompressedTable.replace_many``), applies tombstones, and rewrites the
+    arena once dead bytes pass ``rewrite_frac`` — so a write-heavy run stays
+    compressed instead of converging to raw size (DESIGN.md §3).
     """
 
     name = "blitzcrank"
 
     def __init__(self, schema: Sequence[ColumnSpec], rows_sample,
                  correlation: bool = False, block_tuples: int = 1,
-                 sample: int = 1 << 15, use_pallas: bool | None = None):
+                 sample: int = 1 << 15, use_pallas: bool | None = None,
+                 auto_merge: bool = True, merge_frac: float = 0.06,
+                 rewrite_frac: float = 0.12, merge_min_bytes: int = 1 << 16):
+        super().__init__(schema)
         self.codec = TableCodec.fit(rows_sample, schema,
                                     correlation=correlation,
                                     sample=sample, block_tuples=block_tuples)
         self.table = CompressedTable(self.codec, use_pallas=use_pallas)
         self.block_tuples = block_tuples
-        self._updates: Dict[int, Dict] = {}
+        self.auto_merge = bool(auto_merge) and block_tuples == 1
+        self.merge_frac = merge_frac
+        self.rewrite_frac = rewrite_frac
+        self.merge_min_bytes = merge_min_bytes
+        self._overlay: Dict[int, Dict] = {}
+        self._overlay_bytes = 0
+        self._tombstones: set = set()
+        self.merges = 0
 
     @property
     def n(self) -> int:
         return len(self.table)
 
-    def insert(self, row: Dict[str, Any]) -> int:
-        self.table.append(row)
-        return len(self.table) - 1
+    def __len__(self) -> int:
+        return len(self.table)
 
+    @property
+    def n_live(self) -> int:
+        return self.table.n_live - len(self._tombstones)
+
+    def is_live(self, i: int) -> bool:
+        i = int(i)
+        if i in self._overlay:
+            return True
+        if i in self._tombstones:
+            return False
+        return self.table.is_live(i)
+
+    # -- batched protocol ------------------------------------------------
     def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
         base = len(self.table)
         self.table.extend(rows)
         return range(base, len(self.table))
 
-    def get(self, i: int) -> Dict[str, Any]:
-        u = self._updates.get(int(i))
-        if u is not None:
-            return dict(u)
-        return self.table.get(i)
-
     def get_many(self, indices: Sequence[int],
-                 backend: str | None = None) -> List[Dict[str, Any]]:
+                 backend: str | None = None
+                 ) -> List[Optional[Dict[str, Any]]]:
         idxs = [int(i) for i in indices]  # materialize: may be an iterator
         rows = self.table.get_many(idxs, backend=backend)
-        if self._updates:
-            rows = [dict(self._updates[i]) if i in self._updates else r
+        if self._overlay or self._tombstones:
+            ov, ts = self._overlay, self._tombstones
+            rows = [None if i in ts
+                    else (dict(ov[i]) if i in ov else r)
                     for i, r in zip(idxs, rows)]
         return rows
 
-    def update(self, i: int, row: Dict[str, Any]) -> None:
-        """Write a modified row back (delta overlay over the code arena)."""
-        self._updates[int(i)] = dict(row)
+    def update_many(self, indices: Sequence[int],
+                    rows: Sequence[Dict[str, Any]]) -> None:
+        idxs, rows = self._dedup_last(indices, rows)
+        for i, r in zip(idxs, rows):
+            if not self.is_live(i):
+                raise KeyError(f"row {i} is deleted")
+            old = self._overlay.get(i)
+            if old is not None:
+                self._overlay_bytes -= \
+                    _raw_row_bytes(old) + OVERLAY_ENTRY_OVERHEAD
+            r = dict(r)
+            self._overlay[i] = r
+            self._overlay_bytes += _raw_row_bytes(r) + OVERLAY_ENTRY_OVERHEAD
+        self._maybe_merge()
 
+    def delete_many(self, indices: Sequence[int]) -> int:
+        if self.block_tuples != 1:
+            raise ValueError("delete_many requires block_tuples == 1")
+        n = 0
+        for i in {int(j) for j in indices}:
+            if not self.is_live(i):
+                continue
+            old = self._overlay.pop(i, None)
+            if old is not None:
+                self._overlay_bytes -= \
+                    _raw_row_bytes(old) + OVERLAY_ENTRY_OVERHEAD
+            self._tombstones.add(i)
+            n += 1
+        self._maybe_merge()
+        return n
+
+    # -- delta-merge compaction (DESIGN.md §3) ---------------------------
+    def _maybe_merge(self) -> None:
+        if not self.auto_merge:
+            return
+        delta = (self._overlay_bytes
+                 + TOMBSTONE_BYTES * len(self._tombstones))
+        if delta > max(self.merge_min_bytes,
+                       self.merge_frac * 2 * self.table.used):
+            self.merge()
+
+    def merge(self) -> Dict[str, Any]:
+        """Fold the delta overlay + tombstones back into the code arena.
+
+        Dirty rows are re-encoded through the bulk ``compress_rows`` path
+        (one vectorized ``encode_batch`` for conforming rows) and their old
+        runs tombstoned; the arena is rewritten once dead bytes exceed
+        ``rewrite_frac`` of the code bytes.  Returns :meth:`stats`.
+        """
+        if self.block_tuples != 1:
+            raise ValueError("merge requires block_tuples == 1")
+        if self._tombstones:
+            self.table.delete_many(sorted(self._tombstones))
+            self._tombstones.clear()
+        if self._overlay:
+            idxs = sorted(self._overlay)
+            self.table.replace_many(idxs, [self._overlay[i] for i in idxs])
+            self._overlay.clear()
+            self._overlay_bytes = 0
+        self.merges += 1
+        if self.table.dead_bytes > max(self.merge_min_bytes,
+                                       self.rewrite_frac
+                                       * 2 * self.table.used):
+            self.table.rewrite()
+        return self.stats()
+
+    # -- accounting ------------------------------------------------------
     @property
     def nbytes(self) -> int:
-        return self.table.nbytes + sum(_raw_row_bytes(r) + 8
-                                       for r in self._updates.values())
+        """Total footprint: arena (incl. dead bytes) + overlay + tombstones.
+
+        Overlay entries are charged at raw row bytes plus
+        ``OVERLAY_ENTRY_OVERHEAD`` (dict key + slot pointer) so compression
+        factors are not overstated mid-merge; ``stats()`` reports the
+        overlay separately from the arena.
+        """
+        return (self.table.nbytes + self._overlay_bytes
+                + TOMBSTONE_BYTES * len(self._tombstones))
 
     @property
     def model_bytes(self) -> int:
         return self.codec.model_bytes()
 
+    def stats(self) -> Dict[str, Any]:
+        t = self.table
+        plan = self.codec.compile()
+        n_blocks = t.n_blocks
+        return {
+            "name": self.name,
+            "n_ids": len(t),
+            "n_live": self.n_live,
+            "n_deleted": len(t) - self.n_live,
+            "nbytes": self.nbytes,
+            "arena_bytes": t.nbytes,
+            "dead_bytes": t.dead_bytes,
+            "overlay_bytes": self._overlay_bytes,
+            "overlay_rows": len(self._overlay),
+            "tombstones": len(self._tombstones),
+            "merges": self.merges,
+            "rewrites": t.rewrites,
+            "model_bytes": self.model_bytes,
+            "fast_fraction": (float(t.block_fast.mean())
+                              if n_blocks else 0.0),
+            # §5-style dynamic value-set hook: per-column escape counters
+            # (model misses at encode time) a refit policy can watch.
+            "escapes": dict(plan.escape_counts) if plan is not None else {},
+            "plan_fallback": (None if plan is not None
+                              else self.codec.plan_fallback_reason),
+        }
 
-class ZstdStore:
+
+class ZstdStore(_BytesRowStore):
     name = "zstd"
 
     def __init__(self, schema: Sequence[ColumnSpec], rows_sample,
                  dict_kb: int = 110, level: int = 3):
         import zstandard as zstd
-        self.schema = list(schema)
+        super().__init__(schema)
         samples = [json.dumps([r[c.name] for c in self.schema]).encode()
                    for r in rows_sample]
         try:
@@ -136,31 +414,68 @@ class ZstdStore:
             self.cctx = zstd.ZstdCompressor(level=level)
             self.dctx = zstd.ZstdDecompressor()
             self.dict_bytes = 0
-        self.rows: List[bytes] = []
 
-    def insert(self, row: Dict[str, Any]) -> int:
+    def _encode_row(self, row: Dict[str, Any]) -> bytes:
         raw = json.dumps([row[c.name] for c in self.schema]).encode()
-        self.rows.append(self.cctx.compress(raw))
-        return len(self.rows) - 1
+        return self.cctx.compress(raw)
 
-    def update(self, i: int, row: Dict[str, Any]) -> None:
-        raw = json.dumps([row[c.name] for c in self.schema]).encode()
-        self.rows[i] = self.cctx.compress(raw)
-
-    def get(self, i: int) -> Dict[str, Any]:
-        vals = json.loads(self.dctx.decompress(self.rows[i]))
+    def _decode_row(self, raw: bytes) -> Dict[str, Any]:
+        vals = json.loads(self.dctx.decompress(raw))
         return {c.name: v for c, v in zip(self.schema, vals)}
 
-    @property
-    def nbytes(self) -> int:
-        return sum(len(r) for r in self.rows)
+    def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
+        """Bulk insert through ``multi_compress_to_buffer`` when available:
+        one C call over all payloads, amortizing context setup."""
+        base = len(self.rows)
+        schema = self.schema
+        payloads = [json.dumps([r[c.name] for c in schema]).encode()
+                    for r in rows]
+        frames = None
+        if len(payloads) > 1 and hasattr(self.cctx,
+                                         "multi_compress_to_buffer"):
+            try:
+                segs = self.cctx.multi_compress_to_buffer(payloads)
+                frames = [segs[i].tobytes() for i in range(len(segs))]
+            except Exception:
+                frames = None
+        if frames is None:
+            comp = self.cctx.compress
+            frames = [comp(p) for p in payloads]
+        self.rows.extend(frames)
+        return range(base, len(self.rows))
+
+    def get_many(self, indices: Sequence[int]
+                 ) -> List[Optional[Dict[str, Any]]]:
+        """Batched point gets: one ``multi_decompress_to_buffer`` C call for
+        the whole batch when the library supports it."""
+        idxs = [int(i) for i in indices]
+        dels = self._deleted
+        live = [j for j, i in enumerate(idxs) if i not in dels]
+        out: List[Optional[Dict[str, Any]]] = [None] * len(idxs)
+        frames = [self.rows[idxs[j]] for j in live]
+        raws = None
+        if len(frames) > 1 and hasattr(self.dctx,
+                                       "multi_decompress_to_buffer"):
+            try:
+                segs = self.dctx.multi_decompress_to_buffer(frames)
+                raws = [segs[i].tobytes() for i in range(len(segs))]
+            except Exception:
+                raws = None
+        if raws is None:
+            dec = self.dctx.decompress
+            raws = [dec(f) for f in frames]
+        schema = self.schema
+        for j, raw in zip(live, raws):
+            vals = json.loads(raw)
+            out[j] = {c.name: v for c, v in zip(schema, vals)}
+        return out
 
     @property
     def model_bytes(self) -> int:
         return self.dict_bytes
 
 
-class RamanStore:
+class RamanStore(_BytesRowStore):
     """Per-column Huffman over value ids (static dictionary baseline §6).
 
     Values unseen at train time go through a length-prefixed byte escape.
@@ -171,7 +486,7 @@ class RamanStore:
     name = "raman"
 
     def __init__(self, schema: Sequence[ColumnSpec], rows_sample):
-        self.schema = list(schema)
+        super().__init__(schema)
         self.columns = {}
         for c in self.schema:
             vals = [r[c.name] for r in rows_sample]
@@ -188,54 +503,42 @@ class RamanStore:
             self.columns[c.name] = (uniq,
                                     list(uniq.keys()),
                                     HuffmanCode(np.asarray(counts)))
-        self.rows: List[bytes] = []
-        self.lens: List[int] = []
+        # hoisted per-column (name, value->id, esc_id, id->value, code)
+        self._cols = [(c.name, *self.columns[c.name],
+                       self.columns[c.name][0]["\x00<esc>"])
+                      for c in self.schema]
 
-    def insert(self, row: Dict[str, Any]) -> int:
+    def _encode_row(self, row: Dict[str, Any]) -> bytes:
         bw = BitWriter()
-        for c in self.schema:
-            uniq, _, hc = self.columns[c.name]
-            v = row[c.name]
+        for name, uniq, _, hc, esc in self._cols:
+            v = row[name]
             j = uniq.get(v)
             if j is None:
-                hc.encode(uniq["\x00<esc>"], bw)
+                hc.encode(esc, bw)
                 payload = json.dumps(v).encode()
                 bw.write(len(payload), 16)
                 for byte in payload:
                     bw.write(byte, 8)
             else:
                 hc.encode(j, bw)
-        buf, nbits = bw.getvalue()
-        self.rows.append(buf)
-        self.lens.append(nbits)
-        return len(self.rows) - 1
+        return bw.getvalue()[0]
 
-    def update(self, i: int, row: Dict[str, Any]) -> None:
-        j = self.insert(row)
-        self.rows[i] = self.rows.pop(j)
-        self.lens[i] = self.lens.pop(j)
-
-    def get(self, i: int) -> Dict[str, Any]:
-        br = BitReader(self.rows[i])
+    def _decode_row(self, raw: bytes) -> Dict[str, Any]:
+        br = BitReader(raw)
         out = {}
-        for c in self.schema:
-            uniq, keys, hc = self.columns[c.name]
+        for name, _, keys, hc, esc in self._cols:
             j = hc.decode(br)
-            if keys[j] == "\x00<esc>":
+            if j == esc:
                 ln = br.peek(16)
                 br.skip(16)
                 data = bytearray()
                 for _ in range(ln):
                     data.append(br.peek(8))
                     br.skip(8)
-                out[c.name] = json.loads(bytes(data))
+                out[name] = json.loads(bytes(data))
             else:
-                out[c.name] = keys[j]
+                out[name] = keys[j]
         return out
-
-    @property
-    def nbytes(self) -> int:
-        return sum(len(r) for r in self.rows)
 
     @property
     def model_bytes(self) -> int:
@@ -245,15 +548,20 @@ class RamanStore:
         return total
 
 
-class LRUFastPath:
-    """§6.5 write-back cache of decompressed tuples above any store.
+class LRUFastPath(RowStore):
+    """§6.5 write-back cache of decompressed tuples above any RowStore.
 
-    Modified rows are marked dirty and written back to the underlying store
-    (via its ``update`` method) when they are evicted — and on :meth:`sync`
-    — so ``read_modify_write`` never loses data once the cache fills.
+    Speaks the full protocol: reads are served from the cache when hot and
+    batch-fetched through the store's ``get_many`` otherwise; updates are
+    buffered dirty in the cache and written back to the underlying store
+    (``update_many``) on eviction and on :meth:`sync`, so
+    ``read_modify_write`` never loses data once the cache fills.
     """
 
+    name = "lru"
+
     def __init__(self, store, capacity: int):
+        super().__init__(getattr(store, "schema", None))
         self.store = store
         self.capacity = capacity
         self.cache: OrderedDict[int, Dict] = OrderedDict()
@@ -265,11 +573,7 @@ class LRUFastPath:
     def _writeback(self, i: int, row: Dict[str, Any]) -> None:
         self.dirty.discard(i)
         self.writebacks += 1
-        if hasattr(self.store, "update"):
-            self.store.update(i, row)
-        else:  # pragma: no cover - every bundled store supports update
-            raise TypeError(
-                f"{type(self.store).__name__} cannot accept write-backs")
+        self.store.update(i, row)
 
     def _evict(self) -> None:
         while len(self.cache) > self.capacity:
@@ -298,14 +602,96 @@ class LRUFastPath:
         if row is not None:
             self.hits += 1
             self.cache.move_to_end(i)
-            return row
+            return dict(row)  # a copy: callers must not alias the cache
         self.misses += 1
         return self.store.get(i)
 
     def sync(self) -> None:
-        """Flush all dirty cached rows back to the underlying store."""
-        for i in list(self.dirty):
-            self._writeback(i, self.cache[i])
+        """Flush all dirty cached rows back in one ``update_many`` call."""
+        idxs = [i for i in self.dirty if i in self.cache]
+        if idxs:
+            self.store.update_many(idxs, [self.cache[i] for i in idxs])
+            self.writebacks += len(idxs)
+        self.dirty.clear()
+
+    # -- batched protocol ------------------------------------------------
+    def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
+        return self.store.insert_many(rows)
+
+    def get_many(self, indices: Sequence[int]
+                 ) -> List[Optional[Dict[str, Any]]]:
+        idxs = [int(i) for i in indices]
+        out: List[Optional[Dict[str, Any]]] = [None] * len(idxs)
+        miss_pos: List[int] = []
+        cache = self.cache
+        for j, i in enumerate(idxs):
+            row = cache.get(i)
+            if row is not None:
+                self.hits += 1
+                cache.move_to_end(i)
+                out[j] = dict(row)  # copies: callers must not alias the cache
+            else:
+                miss_pos.append(j)
+        if miss_pos:
+            self.misses += len(miss_pos)
+            fetched = self.store.get_many([idxs[j] for j in miss_pos])
+            for j, row in zip(miss_pos, fetched):
+                if row is None:
+                    continue  # tombstone: never cached
+                i = idxs[j]
+                if i in cache:  # duplicate miss within this batch
+                    row = cache[i]
+                else:
+                    cache[i] = row
+                out[j] = dict(row)
+            self._evict()
+        return out
+
+    def update_many(self, indices: Sequence[int],
+                    rows: Sequence[Dict[str, Any]]) -> None:
+        idxs, rows = self._dedup_last(indices, rows)
+        for i, r in zip(idxs, rows):
+            if not self.is_live(i):
+                raise KeyError(f"row {i} is deleted")
+            self.cache[i] = dict(r)
+            self.cache.move_to_end(i)
+            self.dirty.add(i)
+        self._evict()
+
+    def delete_many(self, indices: Sequence[int]) -> int:
+        idxs = {int(i) for i in indices}
+        for i in idxs:
+            self.cache.pop(i, None)
+            self.dirty.discard(i)
+        return self.store.delete_many(idxs)
+
+    def scan(self, start: int = 0, stop: Optional[int] = None,
+             batch: int = 1024) -> Iterator[Tuple[int, Dict[str, Any]]]:
+        self.sync()  # the underlying store must see dirty rows
+        return self.store.scan(start, stop, batch)
+
+    def is_live(self, i: int) -> bool:
+        return int(i) in self.cache or self.store.is_live(i)
+
+    def __len__(self) -> int:
+        return len(self.store)
+
+    @property
+    def n_live(self) -> int:
+        return self.store.n_live
+
+    @property
+    def nbytes(self) -> int:
+        return self.store.nbytes + sum(
+            _raw_row_bytes(r) + OVERLAY_ENTRY_OVERHEAD
+            for r in self.cache.values())
+
+    def stats(self) -> Dict[str, Any]:
+        s = dict(self.store.stats())
+        s.update(nbytes=self.nbytes,  # include the cached rows (§3.4)
+                 cache_rows=len(self.cache), cache_hits=self.hits,
+                 cache_misses=self.misses, writebacks=self.writebacks)
+        return s
 
 
 STORE_KINDS = {

@@ -86,31 +86,38 @@ def _zip_for(rng, state: str, city: str) -> str:
     return f"{10000 + base:05d}"
 
 
+def customer_row(rng, i: int, first: str | None = None) -> Dict:
+    """One customer tuple (Table 2 formats) — the NewOrder insert factory.
+
+    ``first`` lets :func:`gen_customer` supply its pre-drawn Zipf name
+    without consuming an extra draw, keeping seeded streams reproducible.
+    """
+    st = _STATES[int(rng.zipf(1.5)) % len(_STATES)]
+    city = _CITIES[st][int(rng.integers(0, len(_CITIES[st])))]
+    return {
+        "c_id": i,
+        "c_first": (first if first is not None
+                    else _FIRST[int(rng.zipf(1.3)) % len(_FIRST)]),
+        "c_street": f"{int(rng.integers(1, 999))} "
+                    f"{_STREET_NAME[int(rng.zipf(1.4)) % len(_STREET_NAME)]} "
+                    f"{_STREET_KIND[int(rng.integers(0, len(_STREET_KIND)))]}",
+        "c_state": st,
+        "c_city": city,
+        "c_zip": _zip_for(rng, st, city),
+        "c_phone": f"({rng.integers(200, 999)}) {rng.integers(200, 999)}-"
+                   f"{rng.integers(0, 9999):04d}",
+        "c_credit_lim": float(rng.choice([50000.0, 10000.0, 25000.0])),
+        "c_balance": float(np.round(rng.normal(-10.0, 2000.0), 2)),
+        "c_discount": float(np.round(rng.uniform(0, 0.5), 4)),
+        "c_data": f"{_CORP[int(rng.zipf(1.3)) % len(_CORP)]} customer "
+                  f"since {int(rng.integers(1990, 2024))}",
+    }
+
+
 def gen_customer(n: int, seed: int = 0) -> List[Dict]:
     rng = np.random.default_rng(seed)
     firsts = _zipf_choice(rng, _FIRST, n)
-    rows = []
-    for i in range(n):
-        st = _STATES[int(rng.zipf(1.5)) % len(_STATES)]
-        city = _CITIES[st][int(rng.integers(0, len(_CITIES[st])))]
-        rows.append({
-            "c_id": i,
-            "c_first": firsts[i],
-            "c_street": f"{int(rng.integers(1, 999))} "
-                        f"{_STREET_NAME[int(rng.zipf(1.4)) % len(_STREET_NAME)]} "
-                        f"{_STREET_KIND[int(rng.integers(0, len(_STREET_KIND)))]}",
-            "c_state": st,
-            "c_city": city,
-            "c_zip": _zip_for(rng, st, city),
-            "c_phone": f"({rng.integers(200, 999)}) {rng.integers(200, 999)}-"
-                       f"{rng.integers(0, 9999):04d}",
-            "c_credit_lim": float(rng.choice([50000.0, 10000.0, 25000.0])),
-            "c_balance": float(np.round(rng.normal(-10.0, 2000.0), 2)),
-            "c_discount": float(np.round(rng.uniform(0, 0.5), 4)),
-            "c_data": f"{_CORP[int(rng.zipf(1.3)) % len(_CORP)]} customer "
-                      f"since {int(rng.integers(1990, 2024))}",
-        })
-    return rows
+    return [customer_row(rng, i, first=firsts[i]) for i in range(n)]
 
 
 def gen_stock(n: int, seed: int = 1) -> List[Dict]:
@@ -183,6 +190,82 @@ def batched_point_gets(store, keys, batch: int = 256) -> List[Dict]:
     else:
         out = [store.get(int(k)) for k in keys]
     return out
+
+
+def run_transaction_mix(store, n_ops: int, *, seed: int = 0, batch: int = 64,
+                        zipf_a: float = 1.1,
+                        p_payment: float = 0.5, p_order_status: float = 0.35,
+                        p_new_order: float = 0.10, p_delivery: float = 0.05,
+                        balance_col: str = "c_balance",
+                        amount: float = 100.0,
+                        new_row_fn=None,
+                        sample_every: int = 0, on_sample=None) -> Dict:
+    """Drive a TPC-C-style transaction mix through the RowStore protocol.
+
+    Four transaction shapes over Zipfian keys (paper §7 dynamic traffic):
+
+    * *Payment* — batched read-modify-write: ``get_many`` the keys, walk the
+      balance column by ±``amount``, write back with one ``update_many``;
+    * *OrderStatus* — batched point reads (``get_many`` only);
+    * *NewOrder* — ``insert_many`` of fresh tuples from ``new_row_fn(rng, i)``
+      (skipped, redistributed to reads, when no factory is given);
+    * *Delivery* — ``delete_many`` of a few old keys (tombstones).
+
+    Keys hitting tombstoned rows are skipped, as a real transaction would
+    abort.  ``on_sample(ops_done)`` is invoked every ``sample_every`` ops —
+    the hook the bytes-over-time benchmark charts.  Returns op counts.
+    """
+    rng = np.random.default_rng(seed)
+    if new_row_fn is None:
+        p_order_status += p_new_order
+        p_new_order = 0.0
+    counts = {"ops": 0, "payments": 0, "reads": 0, "inserts": 0,
+              "deletes": 0, "aborts": 0}
+    next_sample = sample_every
+    while counts["ops"] < n_ops:
+        k = min(batch, n_ops - counts["ops"])
+        span = len(store)
+        u = float(rng.random())
+        if u < p_payment:
+            keys = zipf_keys(rng, span, k, zipf_a)
+            rows = store.get_many(keys)
+            upd_i: List[int] = []
+            upd_r: List[Dict] = []
+            seen = set()
+            for key, r in zip(keys.tolist(), rows):
+                if r is None:  # tombstoned: the transaction aborts
+                    counts["aborts"] += 1
+                    continue
+                if key in seen:  # batch touches each row once
+                    continue
+                seen.add(key)
+                r[balance_col] = round(
+                    float(r[balance_col])
+                    + float(rng.uniform(-amount, amount)), 2)
+                upd_i.append(key)
+                upd_r.append(r)
+            store.update_many(upd_i, upd_r)
+            counts["payments"] += len(upd_i)
+        elif u < p_payment + p_order_status:
+            keys = zipf_keys(rng, span, k, zipf_a)
+            got = store.get_many(keys)
+            counts["aborts"] += sum(r is None for r in got)
+            counts["reads"] += k
+        elif u < p_payment + p_order_status + p_new_order:
+            rows = [new_row_fn(rng, span + j) for j in range(k)]
+            store.insert_many(rows)
+            counts["inserts"] += k
+        else:
+            # Delivery drains uniformly (old orders), not the Zipfian head —
+            # deleting hot keys would abort most of the later traffic.
+            keys = rng.integers(0, span, max(1, k // 8))
+            counts["deletes"] += store.delete_many(keys)
+        counts["ops"] += k
+        if sample_every and on_sample is not None \
+                and counts["ops"] >= next_sample:
+            on_sample(counts["ops"])
+            next_sample += sample_every
+    return counts
 
 
 def row_bytes(rows: List[Dict]) -> int:

@@ -1,0 +1,251 @@
+"""RowStore protocol (DESIGN.md §3): property-style reference-model tests,
+delta-merge compaction, and backend equivalence after merge.
+
+Every store must behave like a plain dict keyed by dense ids under any
+interleaving of insert/update/delete/merge/get_many/scan; BlitzStore's
+merge must keep the bytes bounded and never change what reads return.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.blitzcrank import _raw_row_bytes
+from repro.oltp import tpcc
+from repro.oltp.store import (OVERLAY_ENTRY_OVERHEAD, BlitzStore,
+                              LRUFastPath, RamanStore, UncompressedStore)
+
+SCHEMA, GEN = tpcc.TABLES["orderline"]
+
+
+def _rand_row(rng, base):
+    r = dict(base[int(rng.integers(0, len(base)))])
+    r["ol_quantity"] = int(rng.integers(1, 60))
+    # occasionally beyond the trained range: exercises the escape path
+    r["ol_amount"] = round(float(rng.uniform(0.01, 12000.0)), 2)
+    r["ol_o_id"] = int(rng.integers(0, 200))
+    return r
+
+
+def _assert_row(got, exp):
+    assert got is not None
+    for c in SCHEMA:
+        if c.kind == "float":
+            assert abs(got[c.name] - exp[c.name]) <= c.precision / 2 + 1e-9
+        else:
+            assert got[c.name] == exp[c.name], c.name
+
+
+def _makers():
+    makers = {
+        "silo": lambda s, sample: UncompressedStore(s, sample),
+        "raman": lambda s, sample: RamanStore(s, sample),
+        "blitz_auto": lambda s, sample: BlitzStore(
+            s, sample, merge_min_bytes=1 << 10),
+        "blitz_manual": lambda s, sample: BlitzStore(
+            s, sample, auto_merge=False),
+        "lru_blitz": lambda s, sample: LRUFastPath(
+            BlitzStore(s, sample, merge_min_bytes=1 << 10), capacity=64),
+    }
+    try:
+        import zstandard  # noqa: F401
+        from repro.oltp.store import ZstdStore
+        makers["zstd"] = lambda s, sample: ZstdStore(s, sample)
+    except ImportError:
+        pass
+    return makers
+
+
+class TestReferenceModel:
+    """Any op interleaving matches a plain-dict model, for every store."""
+
+    @pytest.mark.parametrize("kind", sorted(_makers()))
+    def test_random_ops_match_reference(self, kind):
+        base = GEN(500)
+        store = _makers()[kind](SCHEMA, base[:250])
+        ref = {}
+        dead = set()
+        ids = store.insert_many(base[:300])
+        for i, r in zip(ids, base[:300]):
+            ref[i] = r
+        rng = np.random.default_rng(42)
+
+        for step in range(60):
+            span = len(ref) + len(dead)
+            op = ("insert", "update", "delete", "get",
+                  "merge", "scan")[int(rng.integers(0, 6))]
+            if op == "insert":
+                rows = [_rand_row(rng, base)
+                        for _ in range(int(rng.integers(1, 12)))]
+                new_ids = store.insert_many(rows)
+                assert list(new_ids) == list(range(span, span + len(rows)))
+                for i, r in zip(new_ids, rows):
+                    ref[i] = r
+            elif op == "update" and ref:
+                keys = rng.choice(sorted(ref), replace=False,
+                                  size=min(len(ref), int(rng.integers(1, 10))))
+                rows = [_rand_row(rng, base) for _ in keys]
+                store.update_many(keys.tolist(), rows)
+                for i, r in zip(keys.tolist(), rows):
+                    ref[i] = r
+                if dead:  # updating a tombstoned row must raise
+                    with pytest.raises(KeyError):
+                        store.update(next(iter(dead)), rows[0])
+            elif op == "delete" and span:
+                keys = rng.integers(0, span, int(rng.integers(1, 6)))
+                newly = ({int(i) for i in keys} - dead) & set(ref)
+                assert store.delete_many(keys) == len(newly)
+                for i in newly:
+                    dead.add(i)
+                    del ref[i]
+            elif op == "get" and span:
+                keys = rng.integers(0, span, 20)
+                for i, g in zip(keys.tolist(), store.get_many(keys)):
+                    if i in dead:
+                        assert g is None
+                        with pytest.raises(KeyError):
+                            store.get(i)
+                    else:
+                        _assert_row(g, ref[i])
+            elif op == "merge":
+                if hasattr(store, "merge"):
+                    store.merge()
+                elif hasattr(store, "sync"):
+                    store.sync()
+            elif op == "scan":
+                seen = dict(store.scan(batch=64))
+                assert set(seen) == set(ref)
+
+        # final sweep: every id answers correctly
+        span = len(ref) + len(dead)
+        assert len(store) == span
+        assert store.n_live == len(ref)
+        for i, g in zip(range(span), store.get_many(range(span))):
+            if i in dead:
+                assert g is None
+            else:
+                _assert_row(g, ref[i])
+
+
+class TestMergeCompaction:
+    def test_auto_merge_bounds_bytes_under_updates(self):
+        rows = GEN(2000)
+        store = BlitzStore(SCHEMA, rows, merge_min_bytes=1 << 12)
+        store.insert_many(rows)
+        post_load = store.nbytes
+        counts = tpcc.run_transaction_mix(
+            store, 6000, seed=5, p_payment=1.0, p_order_status=0.0,
+            p_new_order=0.0, p_delivery=0.0, balance_col="ol_amount",
+            amount=5.0)
+        s = store.stats()
+        assert s["merges"] > 0, "auto-merge never triggered"
+        assert s["rewrites"] > 0, "dead bytes never reclaimed"
+        assert store.nbytes <= 1.6 * post_load, (store.nbytes, post_load)
+        assert counts["payments"] > 3000
+        # reads identical to the scalar per-tuple decompress_block path
+        store.merge()  # drain the overlay so the arena answers everything
+        idx = np.random.default_rng(0).integers(0, len(store), 200)
+        assert store.get_many(idx) == [store.table.get(int(i)) for i in idx]
+
+    def test_merge_preserves_reads_and_clears_overlay(self):
+        rows = GEN(400)
+        store = BlitzStore(SCHEMA, rows, auto_merge=False)
+        store.insert_many(rows)
+        rng = np.random.default_rng(1)
+        keys = rng.choice(400, 80, replace=False).tolist()
+        new = [dict(rows[i], ol_quantity=int(rng.integers(100, 200)))
+               for i in keys]
+        store.update_many(keys, new)
+        store.delete_many([0, 1, 2])
+        before = store.get_many(range(len(store)))
+        assert store.stats()["overlay_rows"] == 80
+        store.merge()
+        s = store.stats()
+        assert s["overlay_rows"] == 0 and s["tombstones"] == 0
+        # merge re-encodes: floats come back quantized (within precision/2),
+        # everything else identical
+        after = store.get_many(range(len(store)))
+        for a, b in zip(after, before):
+            if b is None:
+                assert a is None
+            else:
+                _assert_row(a, b)
+        # a second merge is a bit-exact no-op for reads
+        store.merge()
+        assert store.get_many(range(len(store))) == after
+
+    def test_post_merge_get_many_backend_bit_identical(self):
+        pytest.importorskip("jax")
+        rows = GEN(1200)
+        store = BlitzStore(SCHEMA, rows, merge_min_bytes=1 << 10)
+        store.insert_many(rows)
+        plan = store.codec.compile()
+        assert plan is not None and plan.pallas_ok
+        rng = np.random.default_rng(2)
+        for _ in range(3):
+            keys = rng.choice(1200, 200, replace=False).tolist()
+            got = store.get_many(keys)
+            store.update_many(
+                keys, [dict(r, ol_quantity=int(rng.integers(1, 60)))
+                       for r in got])
+        store.merge()
+        assert store.stats()["overlay_rows"] == 0
+        idx = rng.integers(0, 1200, 400)
+        out_np = store.get_many(idx, backend="numpy")
+        out_pl = store.get_many(idx, backend="pallas")
+        assert out_np == out_pl  # bit-identical across decode backends
+        assert out_np == [store.table.get(int(i)) for i in idx]  # scalar ref
+
+
+class TestAccountingAndCounters:
+    def test_overlay_reported_separately_with_entry_overhead(self):
+        rows = GEN(300)
+        store = BlitzStore(SCHEMA, rows, auto_merge=False)
+        store.insert_many(rows)
+        assert store.stats()["overlay_bytes"] == 0
+        r = store.get(5)
+        r["ol_quantity"] = 7
+        store.update(5, r)
+        s = store.stats()
+        assert s["overlay_bytes"] == _raw_row_bytes(r) + OVERLAY_ENTRY_OVERHEAD
+        assert s["nbytes"] == s["arena_bytes"] + s["overlay_bytes"]
+        # re-updating the same row replaces, not accumulates
+        store.update(5, r)
+        assert store.stats()["overlay_bytes"] == s["overlay_bytes"]
+        # deleting the row drops its overlay entry, leaves one tombstone
+        store.delete(5)
+        s2 = store.stats()
+        assert s2["overlay_bytes"] == 0 and s2["tombstones"] == 1
+
+    def test_replace_many_rejects_duplicate_indices(self):
+        rows = GEN(100)
+        store = BlitzStore(SCHEMA, rows, auto_merge=False)
+        store.insert_many(rows)
+        with pytest.raises(ValueError, match="unique"):
+            store.table.replace_many([5, 5], [rows[5], rows[6]])
+        # update_many dedups (last write wins) before reaching the table
+        store.update_many([5, 5], [rows[6], rows[7]])
+        store.merge()
+        assert store.get(5)["ol_amount"] == pytest.approx(
+            rows[7]["ol_amount"], abs=0.01)
+
+    def test_escape_counters_track_model_misses(self):
+        rows = GEN(300)
+        store = BlitzStore(SCHEMA, rows)
+        store.insert_many(rows)
+        before = store.stats()["escapes"].get("ol_dist_info", 0)
+        bad = dict(rows[0])
+        bad["ol_dist_info"] = "a layout the template has never seen"
+        i = store.insert(bad)
+        after = store.stats()["escapes"]["ol_dist_info"]
+        assert after >= before + 1
+        assert store.get(i)["ol_dist_info"] == bad["ol_dist_info"]
+
+    def test_stats_protocol_keys_on_every_store(self):
+        rows = GEN(120)
+        for maker in _makers().values():
+            store = maker(SCHEMA, rows[:60])
+            store.insert_many(rows)
+            s = store.stats()
+            for key in ("name", "n_ids", "n_live", "n_deleted", "nbytes"):
+                assert key in s, (s.get("name"), key)
+            assert s["n_ids"] == len(rows) and s["n_deleted"] == 0
