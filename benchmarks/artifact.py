@@ -11,6 +11,15 @@ from typing import Dict
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
+# Smoke mode (benchmarks/run.py --smoke): exercise every bench at tiny
+# sizes without clobbering the checked-in BENCH_*.json trajectories.
+_SMOKE = False
+
+
+def set_smoke(on: bool) -> None:
+    global _SMOKE
+    _SMOKE = bool(on)
+
 
 def git_sha() -> str:
     try:
@@ -24,10 +33,15 @@ def git_sha() -> str:
 
 
 def write_bench_json(name: str, report: Dict, schema: str) -> Path:
-    """Write ``BENCH_<name>.json`` at the repo root with sha+schema stamps."""
+    """Write ``BENCH_<name>.json`` at the repo root with sha+schema stamps.
+
+    In smoke mode the write is skipped (the path is still returned) so a
+    tiny-size CI pass can never overwrite a real trajectory artifact.
+    """
     report = dict(report)
     report.setdefault("schema_name", schema)
     report["git_sha"] = git_sha()
     path = REPO_ROOT / f"BENCH_{name}.json"
-    path.write_text(json.dumps(report, indent=2) + "\n")
+    if not _SMOKE:
+        path.write_text(json.dumps(report, indent=2) + "\n")
     return path

@@ -100,8 +100,13 @@ def run(n_rows: int = 4000) -> List[Dict]:
     return out
 
 
-def main(quick: bool = True):
-    rows = run(n_rows=1500 if quick else 8000)
+def main(quick: bool = True, smoke: bool = False):
+    try:
+        import zstandard  # noqa: F401  (optional baseline dependency)
+    except ImportError:
+        print("appF_archive,0,skipped=zstandard-not-installed")
+        return []
+    rows = run(n_rows=400 if smoke else (1500 if quick else 8000))
     for r in rows:
         if "gzip" in r:
             print(f"appF_{r['table']}_archive,{1e3*r['t_blitz_s']:.0f},"

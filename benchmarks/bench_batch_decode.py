@@ -105,10 +105,13 @@ def run(n_rows: int = 8192, batches=(256, 2048), reps: int = 5) -> Dict:
     }
 
 
-def main(quick: bool = True) -> Dict:
+def main(quick: bool = True, smoke: bool = False) -> Dict:
     from benchmarks.artifact import write_bench_json
-    report = run(n_rows=8192 if quick else 32768,
-                 reps=5 if quick else 9)
+    if smoke:
+        report = run(n_rows=1024, batches=(64, 256), reps=2)
+    else:
+        report = run(n_rows=8192 if quick else 32768,
+                     reps=5 if quick else 9)
     artifact = write_bench_json("batch_decode", report,
                                 schema="mixed6 (id/city/grade/qty/amount/info)")
     for b in report["batches"]:

@@ -57,9 +57,12 @@ def run(n_rows: int = 6000, n_access: int = 1500, zipf_a: float = 1.1,
     return out
 
 
-def main(quick: bool = True):
-    rows = run(n_rows=3000 if quick else 20000,
-               n_access=600 if quick else 5000)
+def main(quick: bool = True, smoke: bool = False):
+    if smoke:
+        rows = run(n_rows=500, n_access=100)
+    else:
+        rows = run(n_rows=3000 if quick else 20000,
+                   n_access=600 if quick else 5000)
     for r in rows:
         print(f"fig9_{r['table']}_{r['compressor']},"
               f"{r['access_us']},factor={r['factor']}"

@@ -74,8 +74,8 @@ def run(n_cols_list=(4, 16, 64), n_rows: int = 800) -> List[Dict]:
     return out
 
 
-def main(quick: bool = True):
-    rows = run(n_rows=300 if quick else 2000)
+def main(quick: bool = True, smoke: bool = False):
+    rows = run(n_rows=100 if smoke else (300 if quick else 2000))
     for r in rows:
         print(f"fig11_cols{r['n_cols']}_delayed,{r['delayed_us']},"
               f"bits={r['bits_delayed']:.0f}")

@@ -47,9 +47,12 @@ def run(n_rows: int = 3000, n_ops: int = 2000,
     return out
 
 
-def main(quick: bool = True):
-    rows = run(n_rows=1200 if quick else 5000,
-               n_ops=600 if quick else 5000)
+def main(quick: bool = True, smoke: bool = False):
+    if smoke:
+        rows = run(n_rows=400, n_ops=100)
+    else:
+        rows = run(n_rows=1200 if quick else 5000,
+                   n_ops=600 if quick else 5000)
     for r in rows:
         print(f"fig13_{r['dist']}_cap{r['capacity']},{r['op_us']},"
               f"hit_rate={r['hit_rate']}")

@@ -33,9 +33,12 @@ def run(blocks=(1, 2, 4, 8, 16, 32, 128), n_rows: int = 4000,
     return out
 
 
-def main(quick: bool = True):
-    rows = run(n_rows=1500 if quick else 8000,
-               n_access=200 if quick else 2000)
+def main(quick: bool = True, smoke: bool = False):
+    if smoke:
+        rows = run(n_rows=400, n_access=50)
+    else:
+        rows = run(n_rows=1500 if quick else 8000,
+                   n_access=200 if quick else 2000)
     for r in rows:
         print(f"fig12_block{r['block_tuples']},{r['access_us']},"
               f"factor={r['factor']}")

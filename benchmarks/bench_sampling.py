@@ -38,10 +38,13 @@ def run(samples=(256, 1024, 4096, 16384), n_rows: int = 8000) -> List[Dict]:
     return out
 
 
-def main(quick: bool = True):
-    rows = run(samples=(256, 1024, 4096) if quick else
-               (256, 1024, 4096, 16384, 32768),
-               n_rows=3000 if quick else 16000)
+def main(quick: bool = True, smoke: bool = False):
+    if smoke:
+        rows = run(samples=(256, 1024), n_rows=800)
+    else:
+        rows = run(samples=(256, 1024, 4096) if quick else
+                   (256, 1024, 4096, 16384, 32768),
+                   n_rows=3000 if quick else 16000)
     for r in rows:
         print(f"fig10_samples{r['samples']},{1e6*r['structuring_s']:.0f},"
               f"factor={r['factor']};gen_s={r['generation_s']}"

@@ -118,12 +118,15 @@ def run(n_rows: int = 50000, n_ops: int = 100000, seed: int = 7,
     }
 
 
-def main(quick: bool = True) -> Dict:
+def main(quick: bool = True, smoke: bool = False) -> Dict:
     # Quick mode shrinks the table, not the story; the acceptance-scale
     # artifact is produced by ``main(quick=False)`` (50k rows / 100k ops).
-    report = run(n_rows=12000 if quick else 50000,
-                 n_ops=24000 if quick else 100000)
-    report["scale"] = "quick" if quick else "full"
+    if smoke:
+        report = run(n_rows=1500, n_ops=3000, sample_points=5)
+    else:
+        report = run(n_rows=12000 if quick else 50000,
+                     n_ops=24000 if quick else 100000)
+    report["scale"] = "smoke" if smoke else ("quick" if quick else "full")
     artifact = write_bench_json("update_merge", report, schema="customer")
     for arm_name, arm in report["arms"].items():
         us = 1e6 * arm["mix_s"] / report["n_ops"]

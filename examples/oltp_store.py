@@ -7,6 +7,9 @@ Run:  PYTHONPATH=src python examples/oltp_store.py
       PYTHONPATH=src python examples/oltp_store.py --mix   # update-heavy
                                                            # TPC-C mix with
                                                            # delta-merge stats
+      PYTHONPATH=src python examples/oltp_store.py --drift # drifting mix:
+                                                           # adaptive refit
+                                                           # on vs off
 """
 
 import argparse
@@ -14,6 +17,7 @@ import time
 
 import numpy as np
 
+from repro.adaptive import DriftConfig, MaintenanceConfig
 from repro.oltp import tpcc
 from repro.oltp.store import (BlitzStore, LRUFastPath, RamanStore,
                               UncompressedStore, ZstdStore)
@@ -87,13 +91,55 @@ def update_heavy_mix(n_rows=8000, n_ops=30000):
     print(f"escape counters (refit hook): {escapes}")
 
 
+def drifting_mix(n_rows=5000, n_ops=50000):
+    """Drifting TPC-C mix (DESIGN.md §4): over the run, new customers carry
+    previously unseen names/cities/employers and widening balances.  With
+    adaptive maintenance off the fitted models degrade toward raw size;
+    with it on, drift detection + background refit + plan-version migration
+    hold the compression factor."""
+    schema, gen = tpcc.TABLES["customer"]
+    rows = gen(n_rows)
+    maint = MaintenanceConfig(
+        drift=DriftConfig(rate_threshold=0.02, min_escapes=32,
+                          min_window_rows=256),
+        check_every=1024, migrate_rows_per_step=2048, numeric_headroom=2.0)
+    for label, adaptive in (("refit off", False), ("refit on ", maint)):
+        store = BlitzStore(schema, rows, sample=1 << 13,
+                           merge_min_bytes=1 << 14, adaptive=adaptive)
+        store.insert_many(rows)
+        t0 = time.perf_counter()
+        tpcc.run_transaction_mix(
+            store, n_ops, seed=3, p_payment=0.25, p_order_status=0.15,
+            p_new_order=0.55, p_delivery=0.05,
+            new_row_fn=tpcc.drifting_customer_row, drift=1.0)
+        dt = time.perf_counter() - t0
+        s = store.stats()
+        raw = tpcc.row_bytes([r for _, r in store.scan()])
+        line = (f"{label}: factor {raw / s['nbytes']:.2f} "
+                f"({s['nbytes'] / 1024:.0f} KiB for {s['n_live']} rows, "
+                f"{1e6 * dt / n_ops:.0f} us/op)")
+        if s.get("maintenance"):
+            m = s["maintenance"]
+            line += (f" | {m['refits']} refits -> {s['plan_versions']} plan "
+                     f"versions, {s['migrated_rows']} rows migrated, "
+                     f"frozen: {m['frozen_columns']}")
+        print(line)
+    print("\nRefit-on holds the compression factor as the workload drifts "
+          "(paper §5 dynamic value sets; BENCH_adaptive_refit.json).")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mix", action="store_true",
                     help="run the update-heavy TPC-C transaction mix "
                          "with delta-merge stats")
+    ap.add_argument("--drift", action="store_true",
+                    help="drifting TPC-C mix over 50k ops: adaptive "
+                         "refit on vs off compression factor")
     args = ap.parse_args()
-    if args.mix:
+    if args.drift:
+        drifting_mix()
+    elif args.mix:
         update_heavy_mix()
     else:
         compare_stores()

@@ -1,0 +1,19 @@
+"""Adaptive model maintenance (DESIGN.md §4): drift detection, background
+refit, and versioned plan migration — the paper's §5 "dynamic value sets"
+claim made operational for a long-running drifting workload.
+
+Public API:
+  * monitor:   DriftConfig, DriftMonitor, DriftReport
+  * refit:     ReservoirSample, refit_codec
+  * scheduler: MaintenanceConfig, MaintenanceScheduler
+"""
+
+from .monitor import DriftConfig, DriftMonitor, DriftReport
+from .refit import ReservoirSample, refit_codec
+from .scheduler import MaintenanceConfig, MaintenanceScheduler
+
+__all__ = [
+    "DriftConfig", "DriftMonitor", "DriftReport",
+    "ReservoirSample", "refit_codec",
+    "MaintenanceConfig", "MaintenanceScheduler",
+]

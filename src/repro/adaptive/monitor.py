@@ -1,0 +1,80 @@
+"""Drift detection over the plan's escape counters (DESIGN.md §4.1).
+
+The compiled :class:`~repro.core.plan.TablePlan` charges every encode-time
+model miss to its column (both the batch masks and the scalar conformance
+probe — unified per-column semantics).  The monitor turns those counters
+into *windowed rates*: each :meth:`check` call reads the current window
+(escapes and rows since the last ``reset_escapes``) and reports the columns
+whose models have drifted past the configured thresholds.
+
+Two thresholds must both trip (Fehér & Lucani's adaptive-compression rule
+of thumb, arXiv:2209.02334): a *rate* (escapes per encoded row, so a busy
+store isn't refit just for being busy) and an *absolute floor* (so a quiet
+store isn't refit over three unlucky rows).  Windows shorter than
+``min_window_rows`` are never judged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class DriftConfig:
+    """Trigger thresholds for per-column drift detection.
+
+    A column is *drifted* when, over the current escape window,
+
+        window_escapes[col] >= min_escapes                 (absolute floor)
+        window_escapes[col] / window_rows >= rate_threshold  (rate trigger)
+
+    and the window itself holds at least ``min_window_rows`` encoded rows.
+    """
+
+    rate_threshold: float = 0.02
+    min_escapes: int = 50
+    min_window_rows: int = 512
+
+
+@dataclasses.dataclass
+class DriftReport:
+    """One :meth:`DriftMonitor.check` observation (kept for stats/tests)."""
+
+    window_rows: int
+    rates: Dict[str, float]
+    drifted: List[str]
+
+
+class DriftMonitor:
+    """Watches a plan's escape window and names the drifted columns."""
+
+    def __init__(self, config: Optional[DriftConfig] = None):
+        self.config = config or DriftConfig()
+        self.last_report: Optional[DriftReport] = None
+        self.checks = 0
+
+    def check(self, plan) -> List[str]:
+        """Judge the plan's current window; returns drifted column names.
+
+        Does not reset the window — the scheduler resets it after acting
+        (refit or explicit dismissal), so an undersized window keeps
+        accumulating until it is judgeable.
+        """
+        self.checks += 1
+        if plan is None:
+            return []
+        cfg = self.config
+        n = plan.window_rows
+        rates = plan.escape_rates()
+        if n < cfg.min_window_rows:
+            drifted: List[str] = []
+        else:
+            drifted = sorted(
+                (name for name, esc in plan.window_escapes.items()
+                 if esc >= cfg.min_escapes
+                 and esc / n >= cfg.rate_threshold),
+                key=lambda name: -rates[name])
+        self.last_report = DriftReport(window_rows=n, rates=rates,
+                                       drifted=drifted)
+        return drifted

@@ -1,0 +1,135 @@
+"""Background per-column refit on a reservoir of recent writes (§4.2).
+
+A drifted column gets a *new model fitted to recent data*, not a full-table
+refit: the refitter re-runs the Semantic Learner's per-column model
+generation (:func:`repro.core.blitzcrank.fit_column_model` — the same
+machinery ``TableCodec.fit`` uses, so plan-ability rules cannot diverge) on
+a reservoir sample of recently written rows, shares every non-drifted
+model with the outgoing codec, and compiles the result into a fresh
+:class:`~repro.core.plan.TablePlan` version.
+
+Vocabulary preservation: the outgoing model's value dictionary (categorical)
+or range endpoints (numeric) are appended to the training column, so every
+value the old model encoded without escaping stays conforming under the new
+model.  That keeps opportunistic migration monotone — re-encoding an old
+block under the new plan never *creates* escapes for values the old plan
+handled.  String models are refit purely on the reservoir (their word
+dictionaries are rebuilt from recent data; old off-template rows simply
+stay on their old plan version, which remains decodable forever).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.blitzcrank import TableCodec, fit_column_model
+from repro.core.models import (CategoricalModel, ConditionalCategoricalModel,
+                               NumericModel)
+
+
+class ReservoirSample:
+    """Uniform reservoir (Vitter's algorithm R) over a stream of rows.
+
+    The refitter trains on *recently written* rows; the reservoir gives an
+    unbiased sample of the write stream in O(capacity) memory without
+    stalling the write path.
+    """
+
+    def __init__(self, capacity: int = 4096, seed: int = 0):
+        self.capacity = int(capacity)
+        self.rows: List[Dict[str, Any]] = []
+        self.seen = 0
+        self._rng = np.random.default_rng(seed)
+
+    def add_many(self, rows: Sequence[Dict[str, Any]]) -> None:
+        for r in rows:
+            self.seen += 1
+            if len(self.rows) < self.capacity:
+                self.rows.append(dict(r))
+            else:
+                j = int(self._rng.integers(0, self.seen))
+                if j < self.capacity:
+                    self.rows[j] = dict(r)
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+
+def _vocab_extras(model: Any, name: str, rows: Sequence[Dict[str, Any]],
+                  headroom: float) -> Optional[List[Any]]:
+    """Training extras that keep the old model's value set conforming.
+
+    Numeric columns additionally get *range headroom*: the refit range is
+    the union of the old range and the sample's, widened by ``headroom`` of
+    its span on both ends.  Without it a monotonically growing column (a
+    dense primary key, a running total) re-escapes on the first insert
+    after every refit and the scheduler thrashes; with it each refit buys a
+    proportional amount of future growth.
+    """
+    if isinstance(model, ConditionalCategoricalModel):
+        return list(model.marginal.id2value)
+    if isinstance(model, CategoricalModel):
+        return list(model.id2value)
+    if isinstance(model, NumericModel):
+        lo = model.vmin
+        hi = model.vmin + (model.total_steps - 1) * model.p
+        for r in rows:
+            try:
+                v = float(r[name])
+            except (TypeError, ValueError, KeyError):
+                continue
+            if np.isfinite(v):
+                lo, hi = min(lo, v), max(hi, v)
+        pad = headroom * max(hi - lo, model.p)
+        lo, hi = lo - pad, hi + pad
+        if model.integer:
+            return [int(np.floor(lo)), int(np.ceil(hi))]
+        return [lo, hi]
+    return None
+
+
+def refit_codec(codec: TableCodec, rows: Sequence[Dict[str, Any]],
+                columns: Sequence[str], preserve_vocab: bool = True,
+                numeric_headroom: float = 0.5) -> TableCodec:
+    """New codec version: drifted ``columns`` refit on ``rows``, rest shared.
+
+    The returned codec reuses the outgoing codec's schema, column order,
+    structure (parents) and fit stats — only the named column models are
+    replaced.  Sharing unchanged model objects is safe: models are
+    immutable after fit (the string model's per-block queue is reset per
+    block) and the old plan keeps its own references.
+    """
+    if not columns:
+        raise ValueError("refit_codec: no columns to refit")
+    missing = [c for c in columns if c not in codec.models]
+    if missing:
+        raise KeyError(f"refit_codec: unknown columns {missing}")
+    models = dict(codec.models)
+    for name in columns:
+        spec = codec.by_name[name]
+        parent = codec.stats.parents.get(name)
+        old = models[name]
+        extras = pairs = None
+        if preserve_vocab:
+            extras = _vocab_extras(old, name, rows, numeric_headroom)
+            if isinstance(old, ConditionalCategoricalModel):
+                # Encode-side conformance is judged per parent group, so
+                # each group's child vocabulary must carry over too.
+                pairs = [(pv, v) for pv, sub in old.cond.items()
+                         for v in sub.id2value]
+        new = fit_column_model(spec, list(rows), parent, codec.block_tuples,
+                               extra_values=extras, extra_pairs=pairs)
+        if (preserve_vocab and isinstance(old, NumericModel)
+                and not isinstance(new, NumericModel)):
+            # An int column that drifted down to few distinct reservoir
+            # values would flip to categorical, dropping the preserved
+            # range (every old in-range value absent from the reservoir
+            # would escape).  Keep the model kind stable instead.
+            new = NumericModel([r[name] for r in rows] + list(extras or []),
+                               precision=old.p, T=spec.buckets,
+                               integer=old.integer)
+        models[name] = new
+    return TableCodec(codec.schema, models, list(codec.order), codec.stats,
+                      codec.block_tuples, codec.lam)

@@ -1,0 +1,161 @@
+"""Maintenance scheduler: the fit→encode→drift→refit loop closed (§4.3).
+
+Wires the :class:`~repro.adaptive.monitor.DriftMonitor` and the reservoir
+refitter to a store that speaks three verbs:
+
+* ``codec``                — the current (newest) :class:`TableCodec`;
+* ``install_codec(codec)`` — make a refit codec the new current version;
+* ``migrate(limit)``       — re-encode up to ``limit`` stale escaped rows
+                             under the newest plan (returns rows migrated).
+
+``BlitzStore`` provides all three and drives :meth:`maybe_step` from its
+write path (piggybacking on the same cadence as ``_maybe_merge``), so a
+long-running workload gets drift detection, background refit, and
+opportunistic migration without any extra thread; tests call :meth:`step`
+directly for determinism.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+from .monitor import DriftConfig, DriftMonitor
+from .refit import ReservoirSample, refit_codec
+
+
+@dataclasses.dataclass
+class MaintenanceConfig:
+    drift: DriftConfig = dataclasses.field(default_factory=DriftConfig)
+    check_every: int = 2048        # writes between automatic steps
+    reservoir_size: int = 4096     # recent-write sample the refitter trains on
+    min_refit_rows: int = 256      # don't refit on a thinner sample
+    migrate_rows_per_step: int = 1024  # opportunistic migration budget
+    max_versions: int = 16         # hard cap on installed plan versions
+    numeric_headroom: float = 0.5  # range padding on numeric refits
+    # Futility freeze: after a refit, the column's escape rate in the next
+    # full window is compared against the rate that triggered the refit.
+    # Still >= futility_frac of it means the refit didn't take (e.g. a
+    # column of effectively random strings no dictionary can cover);
+    # futility_patience consecutive such refits freeze the column so it
+    # stops churning out a plan version per window.  Trigger-time rates are
+    # self-normalizing (checks fire right when the threshold is crossed),
+    # so only the *post*-refit window is a reliable verdict.
+    futility_frac: float = 0.7
+    futility_patience: int = 2
+
+
+class MaintenanceScheduler:
+    """Drift-detect → refit → migrate, one bounded unit of work per step."""
+
+    def __init__(self, store, config: Optional[MaintenanceConfig] = None,
+                 seed: int = 0):
+        self.store = store
+        self.config = config or MaintenanceConfig()
+        self.monitor = DriftMonitor(self.config.drift)
+        self.reservoir = ReservoirSample(self.config.reservoir_size, seed)
+        self.refits = 0
+        self.refit_failures = 0
+        self.migrated_rows = 0
+        self.steps = 0
+        self.last_drifted: List[str] = []
+        self.frozen: set = set()
+        self._rate_at_refit: Dict[str, float] = {}
+        self._futile_count: Dict[str, int] = {}
+        self._pending_eval: List[str] = []
+        self._writes_since_check = 0
+
+    # -- write-path hooks (called by the store) --------------------------
+    def observe_writes(self, rows: Sequence[Dict[str, Any]]) -> None:
+        """Feed written rows to the reservoir; cheap enough for the hot path."""
+        self.reservoir.add_many(rows)
+        self._writes_since_check += len(rows)
+
+    def maybe_step(self) -> Optional[Dict[str, Any]]:
+        """Run one step when enough writes accumulated since the last one."""
+        if self._writes_since_check < self.config.check_every:
+            return None
+        return self.step()
+
+    # -- the deterministic unit of work ----------------------------------
+    def step(self) -> Dict[str, Any]:
+        """One maintenance step: check drift, maybe refit, maybe migrate.
+
+        Refit rules: the drifted column set must be non-empty, the reservoir
+        must hold at least ``min_refit_rows`` rows, and the version cap must
+        not be reached.  A refit whose plan fails to compile is discarded
+        (the store keeps encoding under the old plan) and its window is
+        dismissed so the same escapes don't re-trigger every step.
+        Migration runs every step with a fixed row budget, so old escaped
+        blocks drain gradually — never a stop-the-world re-encode.
+        """
+        self.steps += 1
+        self._writes_since_check = 0
+        cfg = self.config
+        plan = self.store.codec.compile()
+        raw_drifted = self.monitor.check(plan)
+        rates = (self.monitor.last_report.rates
+                 if self.monitor.last_report else {})
+        window_rows = (self.monitor.last_report.window_rows
+                       if self.monitor.last_report else 0)
+        # Verdict on the previous refit, once a full window has accrued:
+        # a column still escaping near its trigger rate was refit in vain.
+        if self._pending_eval and window_rows >= cfg.drift.min_window_rows:
+            for c in self._pending_eval:
+                prev = self._rate_at_refit.get(c, 0.0)
+                if prev > 0.0 and rates.get(c, 0.0) >= \
+                        cfg.futility_frac * prev:
+                    n = self._futile_count.get(c, 0) + 1
+                    self._futile_count[c] = n
+                    if n >= cfg.futility_patience:
+                        self.frozen.add(c)
+                else:
+                    self._futile_count[c] = 0
+            self._pending_eval = []
+        drifted = [c for c in raw_drifted if c not in self.frozen]
+        self.last_drifted = drifted
+        refit_cols: List[str] = []
+        if raw_drifted and not drifted:
+            plan.reset_escapes()  # all frozen/futile: dismiss the window
+        elif drifted and len(self.reservoir) >= cfg.min_refit_rows:
+            if self.store.n_versions >= cfg.max_versions:
+                plan.reset_escapes()  # at cap: dismiss, don't thrash
+            else:
+                new_codec = refit_codec(self.store.codec, self.reservoir.rows,
+                                        drifted,
+                                        numeric_headroom=cfg.numeric_headroom)
+                if new_codec.compile() is None:
+                    self.refit_failures += 1
+                    plan.reset_escapes()
+                else:
+                    self.store.install_codec(new_codec)
+                    plan.reset_escapes()  # new plan opens a fresh window
+                    self.refits += 1
+                    refit_cols = drifted
+                    self._pending_eval = list(drifted)
+                    for c in drifted:
+                        self._rate_at_refit[c] = rates.get(c, 0.0)
+        migrated = self.store.migrate(cfg.migrate_rows_per_step)
+        self.migrated_rows += migrated
+        return {
+            "step": self.steps,
+            "window_rows": (self.monitor.last_report.window_rows
+                            if self.monitor.last_report else 0),
+            "drifted": drifted,
+            "refit_columns": refit_cols,
+            "refits": self.refits,
+            "migrated_rows": migrated,
+            "versions": self.store.n_versions,
+        }
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "steps": self.steps,
+            "refits": self.refits,
+            "refit_failures": self.refit_failures,
+            "migrated_rows": self.migrated_rows,
+            "reservoir_rows": len(self.reservoir),
+            "reservoir_seen": self.reservoir.seen,
+            "last_drifted": list(self.last_drifted),
+            "frozen_columns": sorted(self.frozen),
+        }

@@ -17,7 +17,8 @@ from .vectorized import CondSlot, decode_batch, decode_select, encode_batch
 from .models import (BlockEncoder, ByteMarkov, CategoricalModel,
                      ConditionalCategoricalModel, NumericModel, StringModel,
                      TimeSeriesModel)
-from .blitzcrank import ColumnSpec, CompressedTable, FitStats, TableCodec
+from .blitzcrank import (ColumnSpec, CompressedTable, FitStats, TableCodec,
+                         fit_column_model)
 from .plan import PlanFallback, TablePlan, compile_plan
 from .structure import learn_order
 
@@ -28,5 +29,6 @@ __all__ = [
     "encode_batch", "BlockEncoder", "ByteMarkov", "CategoricalModel",
     "ConditionalCategoricalModel", "NumericModel", "StringModel",
     "TimeSeriesModel", "ColumnSpec", "CompressedTable", "FitStats",
-    "TableCodec", "PlanFallback", "TablePlan", "compile_plan", "learn_order",
+    "TableCodec", "fit_column_model", "PlanFallback", "TablePlan",
+    "compile_plan", "learn_order",
 ]

@@ -11,6 +11,7 @@ store with per-block random access (default granularity: 1 tuple, §6.4).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -40,6 +41,53 @@ class FitStats:
     sample_rows: int = 0
     order: Tuple[str, ...] = ()
     parents: Dict[str, Optional[str]] = dataclasses.field(default_factory=dict)
+
+
+def fit_column_model(spec: ColumnSpec, rows: Sequence[Dict[str, Any]],
+                     parent: Optional[str] = None, block_tuples: int = 1,
+                     extra_values: Optional[Sequence[Any]] = None,
+                     extra_pairs: Optional[Sequence[Tuple[Any, Any]]] = None
+                     ) -> Any:
+    """Fit one column's semantic model (Semantic Learner step 2, per column).
+
+    Shared by :meth:`TableCodec.fit` and the adaptive per-column refitter
+    (``repro.adaptive.refit``): both must produce models under identical
+    rules or a refit would silently change plan-ability.  ``extra_values``
+    augments the training column (each value once) — the refitter passes the
+    outgoing model's vocabulary / range endpoints there so every value the
+    old model encoded stays conforming under the new one.  For conditional
+    columns ``extra_pairs`` additionally preserves the per-parent child
+    vocabularies (the encode-side conformance check is per parent group,
+    so marginal coverage alone is not enough).
+    """
+    col = [r[spec.name] for r in rows]
+    if extra_values:
+        col = col + list(extra_values)
+    if parent is not None and spec.kind in ("cat", "int", "str"):
+        pairs = [(r[parent], r[spec.name]) for r in rows]
+        if extra_pairs:
+            pairs = pairs + list(extra_pairs)
+        if extra_values:
+            # A fresh sentinel parent keeps the extras out of every real
+            # conditional group while still feeding the marginal fallback.
+            sentinel = object()
+            pairs = pairs + [(sentinel, v) for v in extra_values]
+        return ConditionalCategoricalModel(pairs, parent)
+    if spec.kind == "cat":
+        return CategoricalModel(col)
+    if spec.kind == "int":
+        # small-cardinality ints behave better as categorical
+        card = len(set(col[:4096]))
+        if card <= 256 and len(set(col)) <= 4096:
+            return CategoricalModel(col)
+        return NumericModel(col, precision=1, T=spec.buckets, integer=True)
+    if spec.kind == "float":
+        return NumericModel(col, precision=spec.precision, T=spec.buckets)
+    if spec.kind == "ts":
+        return TimeSeriesModel(col, precision=spec.precision, T=spec.buckets)
+    if spec.kind == "str":
+        return StringModel(col, block_tuples=block_tuples)
+    raise ValueError(f"unknown column kind {spec.kind}")
 
 
 class TableCodec:
@@ -96,31 +144,8 @@ class TableCodec:
         t0 = time.perf_counter()
         models: Dict[str, Any] = {}
         for c in schema:
-            col = [r[c.name] for r in rows]
-            parent = parents.get(c.name)
-            if parent is not None and c.kind in ("cat", "int", "str"):
-                pairs = [(r[parent], r[c.name]) for r in rows]
-                models[c.name] = ConditionalCategoricalModel(pairs, parent)
-            elif c.kind == "cat":
-                models[c.name] = CategoricalModel(col)
-            elif c.kind == "int":
-                # small-cardinality ints behave better as categorical
-                card = len(set(col[:4096]))
-                if card <= 256 and len(set(col)) <= 4096:
-                    models[c.name] = CategoricalModel(col)
-                else:
-                    models[c.name] = NumericModel(col, precision=1,
-                                                  T=c.buckets, integer=True)
-            elif c.kind == "float":
-                models[c.name] = NumericModel(col, precision=c.precision,
-                                              T=c.buckets)
-            elif c.kind == "ts":
-                models[c.name] = TimeSeriesModel(col, precision=c.precision,
-                                                 T=c.buckets)
-            elif c.kind == "str":
-                models[c.name] = StringModel(col, block_tuples=block_tuples)
-            else:
-                raise ValueError(f"unknown column kind {c.kind}")
+            models[c.name] = fit_column_model(c, rows, parents.get(c.name),
+                                              block_tuples)
         stats.generation_s = time.perf_counter() - t0
         return cls(schema, models, order, stats, block_tuples, lam)
 
@@ -294,7 +319,11 @@ class CompressedTable:
 
     def __init__(self, codec: TableCodec, capacity_hint: int = 1 << 16,
                  use_pallas: Optional[bool] = None):
-        self.codec = codec
+        # Versioned codecs (DESIGN.md §4): writes always encode under the
+        # newest codec; every block carries the version it was encoded with
+        # so older blocks stay readable after a refit installs a new codec.
+        self._codecs: List[TableCodec] = [codec]
+        self._plan_ver = np.zeros(1023, dtype=np.uint16)
         self.use_pallas = use_pallas
         self.arena = np.zeros(capacity_hint, dtype=np.uint16)
         self.used = 0
@@ -311,6 +340,88 @@ class CompressedTable:
         self._dead_codes = 0
         self._n_deleted = 0
         self.rewrites = 0
+        self.migrated_rows = 0
+
+    # -- codec versions (DESIGN.md §4) -----------------------------------
+    @property
+    def codec(self) -> TableCodec:
+        """The newest installed codec — all writes encode under it."""
+        return self._codecs[-1]
+
+    @property
+    def current_version(self) -> int:
+        return len(self._codecs) - 1
+
+    @property
+    def n_versions(self) -> int:
+        return len(self._codecs)
+
+    def codec_at(self, version: int) -> TableCodec:
+        return self._codecs[version]
+
+    def install_codec(self, codec: TableCodec) -> int:
+        """Install a refit codec as the new current version.
+
+        Pending rows are flushed first (they were probed against the old
+        plan); existing blocks keep their version tag and remain decodable
+        forever — migration to the new plan is opportunistic
+        (:meth:`migrate_rows`, merge re-encodes), never stop-the-world.
+        """
+        if codec.block_tuples != self.codec.block_tuples:
+            raise ValueError("install_codec: block_tuples mismatch")
+        if codec.order != self.codec.order:
+            raise ValueError("install_codec: column order mismatch")
+        if len(self._codecs) >= 0xFFFF:  # the uint16 tag must never wrap
+            raise ValueError("install_codec: plan version limit reached")
+        self.flush()
+        self._codecs.append(codec)
+        return self.current_version
+
+    @property
+    def block_versions(self) -> np.ndarray:
+        """Per-block plan-version tag ``uint16[n_blocks]``."""
+        return self._plan_ver[:self.n_blocks]
+
+    def version_rows(self) -> Dict[int, int]:
+        """Live-row counts keyed by the plan version of their block."""
+        live = self._row2block[:self._rows_stored]
+        live = live[live >= 0]
+        vers, counts = np.unique(self._plan_ver[live], return_counts=True)
+        return {int(v): int(c) for v, c in zip(vers, counts)}
+
+    def migrate_rows(self, limit: int = 1 << 12) -> int:
+        """Re-encode up to ``limit`` stale rows under the newest plan.
+
+        Candidates are live rows whose block is tagged with an older version
+        AND flagged slow — they escaped their own plan, so the refit that
+        superseded it is the first realistic chance to encode them fast
+        (plus reclaim their oversized escape runs at the next rewrite).
+        Old *fast* blocks are left alone: their codes are already tight and
+        every installed version stays decodable.  Returns rows migrated.
+        """
+        self._require_mutable("migrate_rows")
+        if limit <= 0 or self.current_version == 0:
+            return 0
+        self.flush()
+        r2b = self._row2block[:self._rows_stored]
+        live = r2b >= 0
+        blks = r2b[live]
+        stale = (self._plan_ver[blks] < self.current_version) \
+            & ~self._fast[blks]
+        rows_idx = np.nonzero(live)[0][stale][:limit]
+        if not rows_idx.size:
+            return 0
+        rows = self.get_many(rows_idx.tolist())
+        # Maintenance re-encodes must not feed the drift monitor: these
+        # rows already escaped once; recounting them would make migration
+        # traffic look like fresh workload drift.
+        plan = self.codec.compile()
+        ctx = (plan.pause_escape_accounting() if plan is not None
+               else contextlib.nullcontext())
+        with ctx:
+            self.replace_many(rows_idx, rows)
+        self.migrated_rows += int(rows_idx.size)
+        return int(rows_idx.size)
 
     # -- storage helpers -------------------------------------------------
     def _append_codes(self, codes: np.ndarray) -> None:
@@ -332,6 +443,9 @@ class CompressedTable:
             fast = np.zeros(cap - 1, dtype=bool)
             fast[:self.n_blocks] = self._fast[:self.n_blocks]
             self._fast = fast
+            ver = np.zeros(cap - 1, dtype=np.uint16)
+            ver[:self.n_blocks] = self._plan_ver[:self.n_blocks]
+            self._plan_ver = ver
 
     def _grow_rows(self, n_new: int) -> None:
         need = self._rows_stored + n_new
@@ -347,6 +461,7 @@ class CompressedTable:
         self.n_blocks += 1
         self._offsets[self.n_blocks] = self.used
         self._fast[self.n_blocks - 1] = fast
+        self._plan_ver[self.n_blocks - 1] = self.current_version
         self.block_rows.append(n_rows)
         if self.codec.block_tuples == 1:
             self._grow_rows(n_rows)
@@ -385,6 +500,7 @@ class CompressedTable:
         self._offsets[self.n_blocks + 1:self.n_blocks + 1 + n] = \
             base + offsets[1:]
         self._fast[self.n_blocks:self.n_blocks + n] = fast
+        self._plan_ver[self.n_blocks:self.n_blocks + n] = self.current_version
         self._grow_rows(n)
         self._row2block[self._rows_stored:self._rows_stored + n] = \
             np.arange(self.n_blocks, self.n_blocks + n)
@@ -430,10 +546,12 @@ class CompressedTable:
 
     def get_block(self, b: int) -> List[Dict[str, Any]]:
         codes = self.arena[self._offsets[b]:self._offsets[b + 1]]
-        return self.codec.decompress_block(codes, self.block_rows[b])
+        codec = self._codecs[self._plan_ver[b]]  # decode under the block's
+        return codec.decompress_block(codes, self.block_rows[b])  # own plan
 
-    def _resolve_backend(self, backend: Optional[str], n_rows: int) -> str:
-        plan = self.codec.compile()
+    def _resolve_backend(self, backend: Optional[str], n_rows: int,
+                         codec: Optional[TableCodec] = None) -> str:
+        plan = (codec or self.codec).compile()
         if backend in ("numpy", "pallas"):
             # Explicit request; quietly downgrade when the plan has
             # conditional slots the kernel cannot run.
@@ -459,14 +577,15 @@ class CompressedTable:
         """Batched point gets (``None`` for tombstoned rows).
 
         Rows in plan-conforming single-tuple blocks decode with ONE
-        ``decode_select`` call over the CSR arena; the rest fall back to
-        per-block scalar decode (each touched block decoded once).
+        ``decode_select`` call *per plan version present in the batch*
+        (a block's fast flag certifies it against the plan it was encoded
+        with); the rest fall back to per-block scalar decode (each touched
+        block decoded once, under its own version's codec).
         """
         idx_arr = np.asarray(list(indices), dtype=np.int64)
         n = idx_arr.size
         out: List[Optional[Dict[str, Any]]] = [None] * n
         bt = self.codec.block_tuples
-        plan = self.codec.compile()
         scalar_blocks: Dict[int, List[Tuple[int, int]]] = {}
         if bt == 1:
             if not n:
@@ -477,16 +596,23 @@ class CompressedTable:
             blks[in_store] = self._row2block[idx_arr[in_store]]
             fmask = np.zeros(n, dtype=bool)
             stored = blks >= 0
-            if plan is not None and stored.any():
+            if stored.any():
+                # fast flags are self-certifying: a block is only flagged
+                # fast if its version's codec compiled at encode time
                 fmask[stored] = self._fast[blks[stored]]
             fast_pos = np.nonzero(fmask)[0]
             if fast_pos.size:
-                rows = self.codec.decompress_rows(
-                    self.arena[:self.used], self.block_offsets,
-                    blks[fast_pos],
-                    backend=self._resolve_backend(backend, fast_pos.size))
-                for j, r in zip(fast_pos.tolist(), rows):
-                    out[j] = r
+                vers = self._plan_ver[blks[fast_pos]]
+                for v in np.unique(vers):
+                    sel = fast_pos[vers == v]
+                    codec_v = self._codecs[v]
+                    rows = codec_v.decompress_rows(
+                        self.arena[:self.used], self.block_offsets,
+                        blks[sel],
+                        backend=self._resolve_backend(backend, sel.size,
+                                                      codec_v))
+                    for j, r in zip(sel.tolist(), rows):
+                        out[j] = r
             for j in np.nonzero(~fmask)[0].tolist():
                 b = int(blks[j])
                 if b == -2:
@@ -555,6 +681,7 @@ class CompressedTable:
         first = self.n_blocks
         self._offsets[first + 1:first + 1 + n] = base + offsets[1:]
         self._fast[first:first + n] = fast
+        self._plan_ver[first:first + n] = self.current_version
         self.n_blocks += n
         self.block_rows.extend([1] * n)
         old = self._row2block[idx]
@@ -621,8 +748,11 @@ class CompressedTable:
         offs[:nb + 1] = new_off
         fast = np.zeros(offs.size - 1, dtype=bool)
         fast[:nb] = self._fast[blks]
+        ver = np.zeros(offs.size - 1, dtype=np.uint16)
+        ver[:nb] = self._plan_ver[blks]  # tags survive compaction
         self.arena, self.used = arena, total
         self._offsets, self._fast, self.n_blocks = offs, fast, nb
+        self._plan_ver = ver
         self.block_rows = [1] * nb
         self._row2block[:nrows] = -1
         self._row2block[live_rows] = np.arange(nb)
@@ -638,12 +768,15 @@ class CompressedTable:
         <8 GiB of codes) plus 1 bit per block for the fast flag; pending
         rows sit uncompressed and are charged at their raw size.  At
         single-tuple granularity the row->block indirection (mutation
-        support) adds 4 B per logical row.  Dead bytes from replaced or
-        deleted runs are *included* — they are held memory until
+        support) adds 4 B per logical row.  Once a refit installs a second
+        codec the per-block plan-version tag is charged at 1 B per block
+        (a single-version table needs no tags).  Dead bytes from replaced
+        or deleted runs are *included* — they are held memory until
         :meth:`rewrite` — and reported separately via :attr:`dead_bytes`.
         """
         pending = sum(_raw_row_bytes(r) for r in self._pending)
         indirection = (4 * self._rows_stored
                        if self.codec.block_tuples == 1 else 0)
+        ver_tags = self.n_blocks if len(self._codecs) > 1 else 0
         return (self.used * 2 + 4 * (self.n_blocks + 1)
-                + (self.n_blocks + 7) // 8 + indirection + pending)
+                + (self.n_blocks + 7) // 8 + indirection + ver_tags + pending)

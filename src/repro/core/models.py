@@ -195,10 +195,11 @@ class NumericModel:
                         + 1e-9).astype(np.int64)
 
     def encode_value(self, v: float, enc: BlockEncoder, ctx=None) -> None:
-        q = int(self._quantize(v))
+        fv = float(v)
+        q = int(self._quantize(fv)) if math.isfinite(fv) else -1
         if not (0 <= q < self.total_steps):
             enc.add(self.l1, self.esc)
-            _encode_f64(enc, float(v))
+            _encode_f64(enc, fv)
             return
         i, j = q // self.G, q % self.G
         enc.add(self.l1, i)
@@ -230,7 +231,10 @@ class NumericModel:
         return self.vmin + (q + 0.5) * self.p
 
     def bucket_of(self, v: float) -> int:
-        q = int(self._quantize(v))
+        fv = float(v)
+        if not math.isfinite(fv):
+            return self.esc
+        q = int(self._quantize(fv))
         if not (0 <= q < self.total_steps):
             return self.esc
         return q // self.G

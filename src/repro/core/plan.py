@@ -29,6 +29,7 @@ scalar encoder — so the flag only routes decoding.
 
 from __future__ import annotations
 
+import contextlib
 import math
 
 import numpy as np
@@ -45,6 +46,23 @@ MAX_COND_KEYS = 1 << 16  # cap on enumerated parent-chain combinations
 
 class PlanFallback(Exception):
     """A fitted codec cannot lower to a static slot plan (reason in str)."""
+
+
+def _hashable(v: Any) -> bool:
+    try:
+        hash(v)
+        return True
+    except TypeError:
+        return False
+
+
+def _safe_get(get, v, default: int = -1) -> int:
+    """Dictionary id lookup that treats unhashable values as misses, so the
+    batch path charges the same rows the scalar `conforms` probe would."""
+    try:
+        return get(v, default)
+    except TypeError:
+        return default
 
 
 def _obj_array(values: Sequence, pad: Any = None) -> np.ndarray:
@@ -73,7 +91,8 @@ class _CatPlan:
     def encode(self, vals: Sequence, ctx: Dict[str, Sequence]
                ) -> Tuple[np.ndarray, np.ndarray]:
         get = self.m.value2id.get
-        ids = np.fromiter((get(v, -1) for v in vals), np.int64, len(vals))
+        ids = np.fromiter((_safe_get(get, v) for v in vals),
+                          np.int64, len(vals))
         return ids[:, None], ids >= 0
 
     def decode(self, syms: np.ndarray, ctx: Dict[str, Any]) -> np.ndarray:
@@ -98,13 +117,21 @@ class _NumPlan:
         m = self.m
         n = len(vals)
         syms = np.zeros((n, self.n_slots), np.int64)
+        ok = np.ones(n, bool)
         try:
             v = np.asarray(vals, dtype=np.float64)
+            if v.shape != (n,):
+                raise ValueError("ragged numeric column")
         except (TypeError, ValueError):
-            return syms, np.zeros(n, bool)
-        if v.shape != (n,):
-            return syms, np.zeros(n, bool)
-        ok = np.isfinite(v)
+            # Mixed-type column: convert per element so only the rows that
+            # actually fail are charged (scalar `conforms` semantics).
+            v = np.zeros(n, np.float64)
+            for r, x in enumerate(vals):
+                try:
+                    v[r] = float(x)
+                except (TypeError, ValueError):
+                    ok[r] = False
+        ok &= np.isfinite(v)
         q = m._quantize(np.where(ok, v, 0.0))
         ok &= (q >= 0) & (q < m.total_steps)
         q = np.clip(q, 0, m.total_steps - 1)
@@ -171,8 +198,8 @@ class _CondPlan:
         pvals = ctx[m.parent]
         ids = np.empty(len(vals), np.int64)
         for r, (pv, v) in enumerate(zip(pvals, vals)):
-            sub = m.cond.get(pv, m.marginal)
-            ids[r] = sub.value2id.get(v, -1)
+            sub = m.cond.get(pv, m.marginal) if _hashable(pv) else m.marginal
+            ids[r] = _safe_get(sub.value2id.get, v)
         return ids[:, None], ids >= 0
 
     def decode(self, syms: np.ndarray, ctx: Dict[str, Any]) -> np.ndarray:
@@ -186,7 +213,9 @@ class _CondPlan:
         return out
 
     def conforms(self, v, row) -> bool:
-        sub = self.m.cond.get(row[self.m.parent], self.m.marginal)
+        pv = row[self.m.parent]
+        sub = (self.m.cond.get(pv, self.m.marginal) if _hashable(pv)
+               else self.m.marginal)
         return v in sub.value2id
 
 
@@ -341,9 +370,19 @@ class TablePlan:
         self.lowerings = lowerings
         self.lam = codec.lam
         # Per-column escape counters (§5-style dynamic value sets): how many
-        # values failed to lower at encode time — the signal a refit hook
-        # watches to decide a column's model has drifted.
+        # values failed to lower at encode time — the signal the adaptive
+        # maintenance layer (DESIGN.md §4) watches to decide a column's model
+        # has drifted.  Both the batch `encode_rows` masks and the scalar
+        # `row_conforms` probe charge *every* non-conforming column of a row
+        # (identical semantics, tested in tests/test_plan_escapes.py).
+        # `escape_counts`/`rows_seen` are cumulative for the plan's lifetime;
+        # the `window_*` pair resets on `reset_escapes()` so drift detection
+        # sees rates over the current window, not the whole history.
         self.escape_counts: Dict[str, int] = {n: 0 for n, _, _ in lowerings}
+        self.window_escapes: Dict[str, int] = {n: 0 for n, _, _ in lowerings}
+        self.rows_seen = 0
+        self.window_rows = 0
+        self._accounting_paused = False
         self.coders: List = []
         for _, cp, _ in lowerings:
             self.coders.extend(cp.coders())
@@ -360,11 +399,58 @@ class TablePlan:
             if isinstance(c, DiscreteCoder):
                 c.build_lut()
 
+    # -- escape accounting (refit hook, DESIGN.md §4) --------------------
+    def _charge(self, name: str, misses: int = 1) -> None:
+        if self._accounting_paused:
+            return
+        self.escape_counts[name] += misses
+        self.window_escapes[name] += misses
+
+    def _note_rows(self, n: int) -> None:
+        if self._accounting_paused:
+            return
+        self.rows_seen += n
+        self.window_rows += n
+
+    @contextlib.contextmanager
+    def pause_escape_accounting(self):
+        """Suspend counter updates for maintenance re-encodes.
+
+        Migration re-encodes rows that already escaped once; charging them
+        again would make maintenance traffic indistinguishable from
+        workload drift and feed the monitor a signal it generated itself.
+        """
+        self._accounting_paused = True
+        try:
+            yield
+        finally:
+            self._accounting_paused = False
+
+    def reset_escapes(self) -> Dict[str, int]:
+        """Close the current escape window; returns its per-column counts.
+
+        Cumulative ``escape_counts``/``rows_seen`` are untouched — drift
+        detection consumes windows, long-horizon stats the totals.
+        """
+        snapshot = dict(self.window_escapes)
+        for k in self.window_escapes:
+            self.window_escapes[k] = 0
+        self.window_rows = 0
+        return snapshot
+
+    def escape_rates(self) -> Dict[str, float]:
+        """Per-column escape rate over the current window (0.0 if empty)."""
+        n = self.window_rows
+        if not n:
+            return {k: 0.0 for k in self.window_escapes}
+        return {k: v / n for k, v in self.window_escapes.items()}
+
     # -- encode ----------------------------------------------------------
     def encode_rows(self, rows: Sequence[Dict[str, Any]]
                     ) -> Tuple[np.ndarray, np.ndarray]:
         """Rows -> (syms int64[N, S], conforming bool[N])."""
         n = len(rows)
+        self._note_rows(n)
         cols = {name: [r[name] for r in rows] for name in self.order}
         syms = np.zeros((n, self.S), np.int64)
         ok = np.ones(n, bool)
@@ -372,13 +458,13 @@ class TablePlan:
             try:
                 s_col, o = cp.encode(cols[name], cols)
             except Exception:
-                self.escape_counts[name] += n
+                self._charge(name, n)
                 ok[:] = False
                 continue
             syms[:, off:off + cp.n_slots] = s_col
             misses = int(n - np.count_nonzero(o))
             if misses:
-                self.escape_counts[name] += misses
+                self._charge(name, misses)
             ok &= o
         return syms, ok
 
@@ -391,18 +477,22 @@ class TablePlan:
         """Cheap scalar check: would this row take the fast path?
 
         Pure-Python per-column checks (no numpy) so the per-insert cost is a
-        few dict lookups, not a 1-row batch encode.  A miss is charged to the
-        first non-conforming column in :attr:`escape_counts`.
+        few dict lookups, not a 1-row batch encode.  Every non-conforming
+        column is charged in :attr:`escape_counts` — the same per-column
+        semantics as the batch ``encode_rows`` masks, so drift rates don't
+        depend on which encode path a row took.
         """
+        self._note_rows(1)
+        ok = True
         for name, cp, _ in self.lowerings:
             try:
-                if not cp.conforms(row[name], row):
-                    self.escape_counts[name] += 1
-                    return False
-            except (TypeError, KeyError):
-                self.escape_counts[name] += 1
-                return False
-        return True
+                good = cp.conforms(row[name], row)
+            except (TypeError, KeyError, ValueError):
+                good = False
+            if not good:
+                self._charge(name)
+                ok = False
+        return ok
 
     # -- decode ----------------------------------------------------------
     def decode_batch(self, codes: np.ndarray, offsets: np.ndarray,

@@ -11,13 +11,14 @@ Public API:
 
 from .store import (STORE_KINDS, BlitzStore, LRUFastPath, RamanStore,
                     RowStore, UncompressedStore, ZstdStore)
-from .tpcc import (TABLES, batched_point_gets, customer_row, gen_customer,
-                   gen_orderline, gen_stock, row_bytes, run_transaction_mix,
-                   zipf_keys)
+from .tpcc import (TABLES, batched_point_gets, customer_row,
+                   drifting_customer_row, gen_customer, gen_orderline,
+                   gen_stock, row_bytes, run_transaction_mix, zipf_keys)
 
 __all__ = [
     "RowStore", "BlitzStore", "ZstdStore", "RamanStore",
     "UncompressedStore", "LRUFastPath", "STORE_KINDS",
     "TABLES", "gen_customer", "gen_stock", "gen_orderline", "customer_row",
-    "zipf_keys", "batched_point_gets", "run_transaction_mix", "row_bytes",
+    "drifting_customer_row", "zipf_keys", "batched_point_gets",
+    "run_transaction_mix", "row_bytes",
 ]

@@ -33,6 +33,7 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.adaptive import MaintenanceConfig, MaintenanceScheduler
 from repro.core import ColumnSpec, TableCodec
 from repro.core.blitzcrank import CompressedTable, _raw_row_bytes
 from repro.core.huffman import BitReader, BitWriter, HuffmanCode
@@ -222,6 +223,15 @@ class BlitzStore(RowStore):
     (``CompressedTable.replace_many``), applies tombstones, and rewrites the
     arena once dead bytes pass ``rewrite_frac`` — so a write-heavy run stays
     compressed instead of converging to raw size (DESIGN.md §3).
+
+    ``adaptive`` (DESIGN.md §4) turns on model maintenance: a
+    :class:`~repro.adaptive.MaintenanceScheduler` samples written rows into
+    a reservoir and, every ``check_every`` writes, checks the plan's escape
+    window, refits drifted column models into a new plan version
+    (:meth:`install_codec`), and migrates stale escaped blocks — so a
+    drifting workload holds its compression factor instead of degrading
+    toward raw size.  Pass ``True`` for defaults or a ``MaintenanceConfig``;
+    tests can drive ``store.maintenance.step()`` directly.
     """
 
     name = "blitzcrank"
@@ -230,12 +240,13 @@ class BlitzStore(RowStore):
                  correlation: bool = False, block_tuples: int = 1,
                  sample: int = 1 << 15, use_pallas: bool | None = None,
                  auto_merge: bool = True, merge_frac: float = 0.06,
-                 rewrite_frac: float = 0.12, merge_min_bytes: int = 1 << 16):
+                 rewrite_frac: float = 0.12, merge_min_bytes: int = 1 << 16,
+                 adaptive: bool | MaintenanceConfig = False):
         super().__init__(schema)
-        self.codec = TableCodec.fit(rows_sample, schema,
-                                    correlation=correlation,
-                                    sample=sample, block_tuples=block_tuples)
-        self.table = CompressedTable(self.codec, use_pallas=use_pallas)
+        codec = TableCodec.fit(rows_sample, schema,
+                               correlation=correlation,
+                               sample=sample, block_tuples=block_tuples)
+        self.table = CompressedTable(codec, use_pallas=use_pallas)
         self.block_tuples = block_tuples
         self.auto_merge = bool(auto_merge) and block_tuples == 1
         self.merge_frac = merge_frac
@@ -245,6 +256,30 @@ class BlitzStore(RowStore):
         self._overlay_bytes = 0
         self._tombstones: set = set()
         self.merges = 0
+        self.maintenance: MaintenanceScheduler | None = None
+        if adaptive and block_tuples == 1:
+            cfg = (adaptive if isinstance(adaptive, MaintenanceConfig)
+                   else None)
+            self.maintenance = MaintenanceScheduler(self, cfg)
+
+    # -- codec versions (DESIGN.md §4) -----------------------------------
+    @property
+    def codec(self) -> TableCodec:
+        """The current (newest) codec; older versions live in the table."""
+        return self.table.codec
+
+    @property
+    def n_versions(self) -> int:
+        return self.table.n_versions
+
+    def install_codec(self, codec: TableCodec) -> int:
+        """Install a refit codec as the new plan version (writes use it)."""
+        return self.table.install_codec(codec)
+
+    def migrate(self, limit: int = 1 << 12) -> int:
+        """Re-encode up to ``limit`` stale escaped rows under the newest
+        plan (dirty overlay rows migrate through :meth:`merge` instead)."""
+        return self.table.migrate_rows(limit)
 
     @property
     def n(self) -> int:
@@ -269,6 +304,9 @@ class BlitzStore(RowStore):
     def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
         base = len(self.table)
         self.table.extend(rows)
+        if self.maintenance is not None:
+            self.maintenance.observe_writes(rows)
+            self.maintenance.maybe_step()
         return range(base, len(self.table))
 
     def get_many(self, indices: Sequence[int],
@@ -297,6 +335,9 @@ class BlitzStore(RowStore):
             self._overlay[i] = r
             self._overlay_bytes += _raw_row_bytes(r) + OVERLAY_ENTRY_OVERHEAD
         self._maybe_merge()
+        if self.maintenance is not None:
+            self.maintenance.observe_writes(rows)
+            self.maintenance.maybe_step()
 
     def delete_many(self, indices: Sequence[int]) -> int:
         if self.block_tuples != 1:
@@ -364,13 +405,30 @@ class BlitzStore(RowStore):
 
     @property
     def model_bytes(self) -> int:
-        return self.codec.model_bytes()
+        # Codec versions share unchanged model objects; count each once.
+        seen: set = set()
+        total = 0
+        for v in range(self.table.n_versions):
+            for m in self.table.codec_at(v).models.values():
+                if id(m) not in seen:
+                    seen.add(id(m))
+                    total += m.model_bytes()
+        return total
 
     def stats(self) -> Dict[str, Any]:
         t = self.table
-        plan = self.codec.compile()
+        plans = [t.codec_at(v).compile() for v in range(t.n_versions)]
+        plan = plans[-1]
+        # Cumulative escapes aggregate over every plan version's lifetime;
+        # the window counters (drift signal, DESIGN.md §4) are the current
+        # plan's open window only.
+        escapes: Dict[str, int] = {}
+        for p in plans:
+            if p is not None:
+                for k, v in p.escape_counts.items():
+                    escapes[k] = escapes.get(k, 0) + v
         n_blocks = t.n_blocks
-        return {
+        out = {
             "name": self.name,
             "n_ids": len(t),
             "n_live": self.n_live,
@@ -386,12 +444,21 @@ class BlitzStore(RowStore):
             "model_bytes": self.model_bytes,
             "fast_fraction": (float(t.block_fast.mean())
                               if n_blocks else 0.0),
-            # §5-style dynamic value-set hook: per-column escape counters
-            # (model misses at encode time) a refit policy can watch.
-            "escapes": dict(plan.escape_counts) if plan is not None else {},
+            # §5 dynamic value sets: cumulative per-column model misses ...
+            "escapes": escapes,
+            # ... and the current drift window (resets on refit/dismissal).
+            "escapes_window": (dict(plan.window_escapes)
+                               if plan is not None else {}),
+            "window_rows": plan.window_rows if plan is not None else 0,
+            "plan_versions": t.n_versions,
+            "version_rows": t.version_rows(),
+            "migrated_rows": t.migrated_rows,
             "plan_fallback": (None if plan is not None
                               else self.codec.plan_fallback_reason),
         }
+        if self.maintenance is not None:
+            out["maintenance"] = self.maintenance.stats()
+        return out
 
 
 class ZstdStore(_BytesRowStore):

@@ -120,6 +120,56 @@ def gen_customer(n: int, seed: int = 0) -> List[Dict]:
     return [customer_row(rng, i, first=firsts[i]) for i in range(n)]
 
 
+# -- workload drift (§5 dynamic value sets; DESIGN.md §4) -------------------
+# A second generation of values disjoint from the load-time lexicons: names
+# and employers the fitted models have never seen, city names (and therefore
+# zips) outside the trained hierarchy, and a widening balance distribution.
+_DRIFT_FIRST = ["Zephyr", "Onyx", "Juniper", "Caspian", "Marisol", "Thaddeus",
+                "Isolde", "Evander", "Seraphina", "Lysander", "Ottilie",
+                "Peregrine", "Anouk", "Balthazar", "Clementine", "Dashiell",
+                "Eulalia", "Fitzgerald", "Guinevere", "Hyacinth", "Ignatius",
+                "Jessamine", "Kingsley", "Lavinia", "Montgomery", "Novalie",
+                "Octavian", "Persimmon", "Quillon", "Rosalind"]
+_DRIFT_CITIES: Dict[str, List[str]] = {
+    st: [f"New {name} Heights {st}" for name in _STREET_NAME[si % 5:si % 5 + 3]]
+    for si, st in enumerate(_STATES)
+}
+_DRIFT_CORP = ["Nimbus Dynamics", "Quasar Holdings", "Vertex Biotech",
+               "Aurora Freight", "Helios Mining", "Zenith Robotics",
+               "Meridian Foods", "Polaris Media"]
+
+
+def drifting_customer_row(rng, i: int, progress: float = 0.0) -> Dict:
+    """NewOrder factory under workload drift (paper §5 dynamic value sets).
+
+    ``progress`` in [0, 1] is how far the drift has advanced: with that
+    probability each of the drifting columns draws from a second-generation
+    value set the load-time models never saw (new first names, new
+    city/zip pairs, new employers in ``c_data``), and the balance
+    distribution widens by up to 10x — so late-run inserts escape the
+    fitted plan on several columns at once unless the models are refit.
+    At ``progress == 0`` this is exactly :func:`customer_row`.
+    """
+    row = customer_row(rng, i)
+    p = min(1.0, max(0.0, float(progress)))
+    if p <= 0.0:
+        return row
+    if rng.random() < p:
+        row["c_first"] = _DRIFT_FIRST[int(rng.zipf(1.3)) % len(_DRIFT_FIRST)]
+    if rng.random() < p:
+        st = row["c_state"]
+        city = _DRIFT_CITIES[st][int(rng.integers(0, len(_DRIFT_CITIES[st])))]
+        row["c_city"] = city
+        row["c_zip"] = _zip_for(rng, st, city)
+    if rng.random() < p:
+        row["c_data"] = (f"{_DRIFT_CORP[int(rng.zipf(1.3)) % len(_DRIFT_CORP)]}"
+                         f" customer since {int(rng.integers(2024, 2030))}")
+    # widening range: the spread grows up to 10x as the drift advances
+    row["c_balance"] = float(np.round(
+        rng.normal(-10.0, 2000.0 * (1.0 + 9.0 * p)), 2))
+    return row
+
+
 def gen_stock(n: int, seed: int = 1) -> List[Dict]:
     rng = np.random.default_rng(seed)
     rows = []
@@ -198,7 +248,7 @@ def run_transaction_mix(store, n_ops: int, *, seed: int = 0, batch: int = 64,
                         p_new_order: float = 0.10, p_delivery: float = 0.05,
                         balance_col: str = "c_balance",
                         amount: float = 100.0,
-                        new_row_fn=None,
+                        new_row_fn=None, drift: float = 0.0,
                         sample_every: int = 0, on_sample=None) -> Dict:
     """Drive a TPC-C-style transaction mix through the RowStore protocol.
 
@@ -210,6 +260,13 @@ def run_transaction_mix(store, n_ops: int, *, seed: int = 0, batch: int = 64,
     * *NewOrder* — ``insert_many`` of fresh tuples from ``new_row_fn(rng, i)``
       (skipped, redistributed to reads, when no factory is given);
     * *Delivery* — ``delete_many`` of a few old keys (tombstones).
+
+    ``drift > 0`` turns on workload drift (paper §5 dynamic value sets):
+    NewOrder calls ``new_row_fn(rng, i, progress)`` with
+    ``progress = drift · ops_done/n_ops`` (use a progress-aware factory such
+    as :func:`drifting_customer_row`), and the Payment walk amplitude grows
+    with progress so balances wander out of the fitted range — together they
+    put real escape pressure on the fitted models as the run advances.
 
     Keys hitting tombstoned rows are skipped, as a real transaction would
     abort.  ``on_sample(ops_done)`` is invoked every ``sample_every`` ops —
@@ -225,6 +282,7 @@ def run_transaction_mix(store, n_ops: int, *, seed: int = 0, batch: int = 64,
     while counts["ops"] < n_ops:
         k = min(batch, n_ops - counts["ops"])
         span = len(store)
+        progress = drift * counts["ops"] / n_ops if drift else 0.0
         u = float(rng.random())
         if u < p_payment:
             keys = zipf_keys(rng, span, k, zipf_a)
@@ -232,6 +290,7 @@ def run_transaction_mix(store, n_ops: int, *, seed: int = 0, batch: int = 64,
             upd_i: List[int] = []
             upd_r: List[Dict] = []
             seen = set()
+            amt = amount * (1.0 + 9.0 * progress)
             for key, r in zip(keys.tolist(), rows):
                 if r is None:  # tombstoned: the transaction aborts
                     counts["aborts"] += 1
@@ -241,7 +300,7 @@ def run_transaction_mix(store, n_ops: int, *, seed: int = 0, batch: int = 64,
                 seen.add(key)
                 r[balance_col] = round(
                     float(r[balance_col])
-                    + float(rng.uniform(-amount, amount)), 2)
+                    + float(rng.uniform(-amt, amt)), 2)
                 upd_i.append(key)
                 upd_r.append(r)
             store.update_many(upd_i, upd_r)
@@ -252,7 +311,10 @@ def run_transaction_mix(store, n_ops: int, *, seed: int = 0, batch: int = 64,
             counts["aborts"] += sum(r is None for r in got)
             counts["reads"] += k
         elif u < p_payment + p_order_status + p_new_order:
-            rows = [new_row_fn(rng, span + j) for j in range(k)]
+            if drift:
+                rows = [new_row_fn(rng, span + j, progress) for j in range(k)]
+            else:
+                rows = [new_row_fn(rng, span + j) for j in range(k)]
             store.insert_many(rows)
             counts["inserts"] += k
         else:

@@ -1,0 +1,380 @@
+"""Adaptive model maintenance (repro/adaptive, DESIGN.md §4): drift
+detection, per-column background refit, versioned plan migration, and the
+maintenance scheduler's deterministic step().
+
+The invariant under test throughout: every plan version ever used to encode
+a block stays decodable, and reads through any path (scalar per-block,
+batched numpy, Pallas interpret) agree across mixed plan versions.
+"""
+
+import numpy as np
+import pytest
+
+from repro.adaptive import (DriftConfig, DriftMonitor, MaintenanceConfig,
+                            MaintenanceScheduler, ReservoirSample, refit_codec)
+from repro.core import ColumnSpec, CompressedTable, TableCodec
+from repro.oltp import tpcc
+from repro.oltp.store import BlitzStore
+
+SCHEMA = [
+    ColumnSpec("city", "cat"),
+    ColumnSpec("qty", "int"),
+    ColumnSpec("amount", "float", precision=0.01),
+    ColumnSpec("note", "str"),
+]
+OLD_CITIES = ["Paris", "Rome", "Oslo"]
+NEW_CITIES = ["Kyoto", "Quito", "Dakar"]
+OLD_WORDS = ["red", "blue", "jade"]
+NEW_WORDS = ["onyx", "teal", "plum"]
+
+
+def gen_rows(n, seed=0, cities=OLD_CITIES, words=OLD_WORDS, amount_hi=100.0):
+    rng = np.random.default_rng(seed)
+    return [{
+        "city": cities[int(rng.integers(0, len(cities)))],
+        "qty": int(rng.integers(0, 5000)),
+        "amount": round(float(rng.uniform(0.0, amount_hi)), 2),
+        "note": f"{words[int(rng.integers(0, len(words)))]}-"
+                f"{words[int(rng.integers(0, len(words)))]}",
+    } for _ in range(n)]
+
+
+def drifted_rows(n, seed=1):
+    """Rows from the second-generation value sets: escape on 3 columns."""
+    return gen_rows(n, seed=seed, cities=NEW_CITIES, words=NEW_WORDS,
+                    amount_hi=100.0)
+
+
+class TestDriftMonitor:
+    def test_no_drift_no_trigger(self):
+        codec = TableCodec.fit(gen_rows(400), SCHEMA)
+        plan = codec.compile()
+        mon = DriftMonitor(DriftConfig(rate_threshold=0.02, min_escapes=5,
+                                       min_window_rows=50))
+        plan.encode_rows(gen_rows(200, seed=2))
+        assert mon.check(plan) == []
+
+    def test_rate_and_floor_must_both_trip(self):
+        codec = TableCodec.fit(gen_rows(400), SCHEMA)
+        plan = codec.compile()
+        mon = DriftMonitor(DriftConfig(rate_threshold=0.05, min_escapes=8,
+                                       min_window_rows=50))
+        # 4 escapes over 204 rows: above neither threshold pair
+        plan.encode_rows(gen_rows(200, seed=2) + drifted_rows(4))
+        assert mon.check(plan) == []
+        # 60 more escaping rows: rate ~0.24 and floor cleared
+        plan.encode_rows(drifted_rows(60))
+        drifted = mon.check(plan)
+        assert set(drifted) == {"city", "note"}
+        assert mon.last_report.window_rows == 264
+
+    def test_small_window_never_judged(self):
+        codec = TableCodec.fit(gen_rows(400), SCHEMA)
+        plan = codec.compile()
+        mon = DriftMonitor(DriftConfig(min_window_rows=1000, min_escapes=1,
+                                       rate_threshold=0.0001))
+        plan.encode_rows(drifted_rows(50))
+        assert mon.check(plan) == []
+
+
+class TestReservoir:
+    def test_capacity_bound_and_count(self):
+        res = ReservoirSample(capacity=64, seed=0)
+        res.add_many(gen_rows(1000))
+        assert len(res) == 64 and res.seen == 1000
+
+    def test_holds_recent_values_eventually(self):
+        res = ReservoirSample(capacity=128, seed=0)
+        res.add_many(gen_rows(128))
+        res.add_many(drifted_rows(512))
+        cities = {r["city"] for r in res.rows}
+        assert cities & set(NEW_CITIES)
+
+
+class TestRefitCodec:
+    def test_refit_preserves_old_vocab_and_covers_new(self):
+        old = TableCodec.fit(gen_rows(500), SCHEMA)
+        sample = gen_rows(300, seed=1, cities=NEW_CITIES)
+        new = refit_codec(old, sample, ["city"])
+        plan = new.compile()
+        assert plan is not None
+        # unchanged columns share the very same model objects
+        assert new.models["qty"] is old.models["qty"]
+        assert new.models["amount"] is old.models["amount"]
+        assert new.models["note"] is old.models["note"]
+        # old AND new cities conform under the refit plan (qty/amount may
+        # graze their fitted range edges on fresh seeds; city must not)
+        plan.encode_rows(
+            gen_rows(50, seed=5) + gen_rows(50, seed=6, cities=NEW_CITIES))
+        assert plan.escape_counts["city"] == 0
+        # the old plan must NOT cover the new cities (sanity of the setup)
+        old_plan = old.compile(force=True)
+        old_plan.encode_rows(gen_rows(50, seed=6, cities=NEW_CITIES))
+        assert old_plan.escape_counts["city"] == 50
+
+    def test_string_refit_covers_new_words_old_rows_stay_on_old_plan(self):
+        # String dictionaries are rebuilt from the reservoir only (no vocab
+        # carry-over, see refit.py): new-word rows conform under the new
+        # plan, old-word rows escape it — they stay readable on their old
+        # plan version, which is exactly what versioned blocks are for.
+        old = TableCodec.fit(gen_rows(500), SCHEMA)
+        new = refit_codec(old, gen_rows(300, seed=2, words=NEW_WORDS),
+                          ["note"])
+        plan = new.compile()
+        assert plan is not None
+        plan.encode_rows(gen_rows(50, seed=6, words=NEW_WORDS))
+        assert plan.escape_counts["note"] == 0
+        plan.encode_rows(gen_rows(50, seed=5))
+        assert plan.escape_counts["note"] == 50
+
+    def test_numeric_headroom_extends_range(self):
+        old = TableCodec.fit(gen_rows(500), SCHEMA)
+        sample = gen_rows(300, seed=3, amount_hi=200.0)
+        new = refit_codec(old, sample, ["amount"], numeric_headroom=0.5)
+        m = new.models["amount"]
+        hi = m.vmin + (m.total_steps - 1) * m.p
+        assert hi >= 200.0 + 0.5 * 200.0 * 0.9  # ~50% pad on the span
+        # old range stays conforming
+        plan = new.compile()
+        plan.encode_rows(gen_rows(50, seed=5))
+        assert plan.escape_counts["amount"] == 0
+
+    def test_refit_rejects_unknown_or_empty_columns(self):
+        old = TableCodec.fit(gen_rows(200), SCHEMA)
+        with pytest.raises(ValueError):
+            refit_codec(old, gen_rows(50), [])
+        with pytest.raises(KeyError):
+            refit_codec(old, gen_rows(50), ["nope"])
+
+    def test_conditional_refit_preserves_per_parent_vocab(self):
+        from repro.core import (CategoricalModel, ColumnSpec,
+                                ConditionalCategoricalModel, FitStats)
+        schema = [ColumnSpec("state", "cat"), ColumnSpec("city", "cat")]
+        old_pairs = [("CA", c) for c in ("LA", "SF", "SD")] * 10 \
+            + [("TX", c) for c in ("Austin", "Dallas")] * 10
+        models = {
+            "state": CategoricalModel([p for p, _ in old_pairs]),
+            "city": ConditionalCategoricalModel(old_pairs, "state"),
+        }
+        stats = FitStats(order=("state", "city"),
+                         parents={"state": None, "city": "state"})
+        old = TableCodec(schema, models, ["state", "city"], stats)
+        assert old.compile() is not None
+        # reservoir: CA appears often but only with a NEW city
+        sample = [{"state": "CA", "city": "Fresno"}] * 40
+        new = refit_codec(old, sample, ["city"])
+        plan = new.compile()
+        assert plan is not None
+        rows = [{"state": "CA", "city": "SF"},      # old pair
+                {"state": "CA", "city": "Fresno"},  # new pair
+                {"state": "TX", "city": "Dallas"}]  # old pair, other group
+        plan.encode_rows(rows)
+        assert plan.escape_counts["city"] == 0
+
+    def test_int_refit_keeps_numeric_model_kind(self):
+        from repro.core.models import NumericModel
+        old = TableCodec.fit(gen_rows(500), SCHEMA)
+        assert isinstance(old.models["qty"], NumericModel)
+        # reservoir with few distinct qty values would flip to categorical
+        rng = np.random.default_rng(4)
+        sample = [dict(r, qty=int(rng.integers(0, 20)) * 10)
+                  for r in gen_rows(300, seed=4)]
+        new = refit_codec(old, sample, ["qty"])
+        assert isinstance(new.models["qty"], NumericModel)
+        plan = new.compile()
+        plan.encode_rows(gen_rows(50, seed=5))   # old range still covered
+        assert plan.escape_counts["qty"] == 0
+
+
+class TestVersionedTable:
+    def _table_with_two_versions(self):
+        codec = TableCodec.fit(gen_rows(500), SCHEMA)
+        table = CompressedTable(codec)
+        table.extend(gen_rows(100, seed=11))     # v0, fast
+        table.extend(drifted_rows(40, seed=12))  # v0, slow (escapes)
+        new = refit_codec(codec, drifted_rows(300, seed=13),
+                          ["city", "note"])
+        assert new.compile() is not None
+        table.install_codec(new)
+        table.extend(drifted_rows(30, seed=14))  # v1, fast
+        return table
+
+    def test_mixed_version_reads_agree_with_scalar(self):
+        table = self._table_with_two_versions()
+        assert table.n_versions == 2
+        vr = table.version_rows()
+        assert vr[0] == 140 and vr[1] == 30
+        idx = list(range(len(table)))
+        batched = table.get_many(idx)
+        scalar = [table.get(i) for i in idx]
+        assert batched == scalar
+
+    def test_migrate_reencodes_only_stale_slow_blocks(self):
+        table = self._table_with_two_versions()
+        before = [table.get(i) for i in range(len(table))]
+        live = table._row2block[:table._rows_stored]
+        stale = int((~table.block_fast[live]
+                     & (table.block_versions[live] == 0)).sum())
+        n_v0_fast = int((table.block_fast[live]
+                         & (table.block_versions[live] == 0)).sum())
+        assert stale >= 40                   # at least the 40 drifted rows
+        n = table.migrate_rows(limit=1000)
+        assert n == stale                    # exactly the stale slow blocks
+        assert table.migrated_rows == stale
+        vr = table.version_rows()
+        assert vr[0] == n_v0_fast            # old fast blocks untouched
+        assert vr[1] == 30 + stale
+        # no stale slow blocks remain; rows conforming to the new plan
+        # turned fast (the few that escape on unrefit columns stay slow,
+        # but now under the current version so they won't be retried)
+        live = table._row2block[:table._rows_stored]
+        lb = live[live >= 0]
+        assert not (~table.block_fast[lb]
+                    & (table.block_versions[lb] < 1)).any()
+        assert int(table.block_fast[lb].sum()) >= n_v0_fast + 40
+        after = [table.get(i) for i in range(len(table))]
+        assert after == before               # reads unchanged bit-for-bit
+        assert table.migrate_rows(limit=1000) == 0   # idempotent
+
+    def test_version_tags_survive_rewrite(self):
+        table = self._table_with_two_versions()
+        table.migrate_rows(limit=1000)
+        vr = table.version_rows()
+        assert table.dead_bytes > 0
+        table.rewrite()
+        assert table.dead_bytes == 0
+        assert table.version_rows() == vr    # tags carried through
+        idx = list(range(len(table)))
+        assert table.get_many(idx) == [table.get(i) for i in idx]
+
+    def test_install_codec_guards(self):
+        codec = TableCodec.fit(gen_rows(200), SCHEMA)
+        table = CompressedTable(codec)
+        other = TableCodec.fit(gen_rows(200), list(reversed(SCHEMA)))
+        with pytest.raises(ValueError, match="order"):
+            table.install_codec(other)
+        # the uint16 plan_version tag must never wrap
+        table._codecs.extend([codec] * (0xFFFF - len(table._codecs)))
+        with pytest.raises(ValueError, match="version limit"):
+            table.install_codec(codec)
+
+    def test_migration_does_not_feed_the_drift_window(self):
+        table = self._table_with_two_versions()
+        plan = table.codec.compile()
+        w_rows, w_esc = plan.window_rows, dict(plan.window_escapes)
+        assert table.migrate_rows(limit=1000) > 0
+        # maintenance re-encodes are invisible to the drift monitor
+        assert plan.window_rows == w_rows
+        assert plan.window_escapes == w_esc
+
+    @pytest.mark.parametrize("backend", ["numpy", "pallas"])
+    def test_mixed_version_backends_bit_identical(self, backend):
+        pytest.importorskip("jax")
+        table = self._table_with_two_versions()
+        idx = list(range(len(table)))
+        assert table.get_many(idx, backend=backend) == \
+            [table.get(i) for i in idx]
+
+
+class TestScheduler:
+    CFG = MaintenanceConfig(
+        drift=DriftConfig(rate_threshold=0.02, min_escapes=10,
+                          min_window_rows=64),
+        check_every=10**9,  # automatic stepping off: tests drive step()
+        min_refit_rows=64, migrate_rows_per_step=1000)
+
+    def _store(self, adaptive=None):
+        store = BlitzStore(SCHEMA, gen_rows(500), auto_merge=False,
+                           adaptive=adaptive or self.CFG)
+        store.insert_many(gen_rows(400, seed=21))
+        return store
+
+    def test_step_without_drift_is_a_noop(self):
+        store = self._store()
+        rep = store.maintenance.step()
+        assert rep["drifted"] == [] and rep["refits"] == 0
+        assert store.n_versions == 1
+
+    def test_step_refits_drifted_columns_and_migrates(self):
+        store = self._store()
+        store.insert_many(drifted_rows(200, seed=22))
+        rep = store.maintenance.step()
+        assert set(rep["refit_columns"]) >= {"city", "note"}
+        assert store.n_versions == 2
+        assert rep["migrated_rows"] > 0
+        # post-refit drifted inserts take the fast path under the new plan
+        plan = store.codec.compile()
+        _, ok = plan.encode_rows(drifted_rows(50, seed=23))
+        assert ok.all()
+        # window was reset on the old plan
+        assert rep["window_rows"] >= 200
+        s = store.stats()
+        assert s["plan_versions"] == 2
+        assert s["maintenance"]["refits"] == 1
+
+    def test_futility_freeze_stops_hopeless_columns(self):
+        store = self._store()
+        rng = np.random.default_rng(0)
+
+        def noise(n, seed):
+            r = np.random.default_rng(seed)
+            return [dict(row, note=f"x{int(r.integers(0, 10**9))}-y")
+                    for row in gen_rows(n, seed=seed)]
+
+        sched = store.maintenance
+        for i in range(6):
+            store.insert_many(noise(150, seed=30 + i))
+            sched.step()
+            if "note" in sched.frozen:
+                break
+        assert "note" in sched.frozen
+        versions_at_freeze = store.n_versions
+        store.insert_many(noise(150, seed=99))
+        sched.step()
+        assert store.n_versions == versions_at_freeze  # no more churn
+
+    def test_maybe_step_fires_on_write_cadence(self):
+        cfg = MaintenanceConfig(
+            drift=self.CFG.drift, check_every=128,
+            min_refit_rows=64, migrate_rows_per_step=1000)
+        store = self._store(adaptive=cfg)
+        steps0 = store.maintenance.steps
+        store.insert_many(drifted_rows(200, seed=40))
+        assert store.maintenance.steps > steps0
+        assert store.n_versions == 2   # the drift was refit automatically
+
+
+class TestEndToEndDriftMix:
+    def test_adaptive_store_on_drifting_tpcc_mix(self):
+        schema, gen = tpcc.TABLES["customer"]
+        rows = gen(1200)
+        cfg = MaintenanceConfig(
+            drift=DriftConfig(rate_threshold=0.02, min_escapes=24,
+                              min_window_rows=192),
+            check_every=512, min_refit_rows=128,
+            migrate_rows_per_step=2000)
+        store = BlitzStore(schema, rows, sample=1 << 12,
+                           merge_min_bytes=1 << 13, adaptive=cfg)
+        store.insert_many(rows)
+        tpcc.run_transaction_mix(
+            store, 6000, seed=5, batch=64, p_payment=0.3,
+            p_order_status=0.15, p_new_order=0.5, p_delivery=0.05,
+            new_row_fn=tpcc.drifting_customer_row, drift=1.0)
+        s = store.stats()
+        assert s["plan_versions"] >= 2, "drift never triggered a refit"
+        assert len(s["version_rows"]) >= 2, "no mixed-version arena"
+        # reads across mixed plan versions == scalar per-block reference
+        rng = np.random.default_rng(7)
+        idx = [int(i) for i in rng.integers(0, len(store), 300)]
+
+        def scalar_ref(i):
+            if i in store._tombstones:
+                return None
+            ov = store._overlay.get(i)
+            if ov is not None:
+                return dict(ov)
+            return (store.table.get(i)
+                    if store.table.is_live(i) else None)
+
+        ref = [scalar_ref(i) for i in idx]
+        assert store.get_many(idx, backend="numpy") == ref

@@ -1,0 +1,148 @@
+"""Escape/fallback encode paths of the compiled slot plan (plan.py).
+
+Every way a row can fail to conform — unseen category, out-of-range or
+non-finite or non-numeric value, off-template or dictionary-miss string —
+must (a) still roundtrip exactly through the scalar escape encoding, and
+(b) charge the same per-column escape counters whether the row went through
+the batch ``encode_rows`` masks or the scalar ``row_conforms`` probe
+(unified accounting, DESIGN.md §4.1).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ColumnSpec, CompressedTable, TableCodec
+
+SCHEMA = [
+    ColumnSpec("city", "cat"),
+    ColumnSpec("qty", "int"),
+    ColumnSpec("amount", "float", precision=0.01),
+    ColumnSpec("note", "str"),
+]
+CITIES = ["Paris", "Rome", "Oslo", "Lima"]
+WORDS = ["red", "blue", "jade", "gold"]
+
+
+def gen_rows(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{
+        "city": CITIES[int(rng.integers(0, len(CITIES)))],
+        "qty": int(rng.integers(0, 5000)),
+        "amount": round(float(rng.uniform(0.0, 100.0)), 2),
+        "note": f"{WORDS[int(rng.integers(0, 4))]}-"
+                f"{WORDS[int(rng.integers(0, 4))]}",
+    } for _ in range(n)]
+
+
+@pytest.fixture(scope="module")
+def codec():
+    c = TableCodec.fit(gen_rows(600), SCHEMA)
+    assert c.compile() is not None
+    return c
+
+
+# Each case: (column, escaping value). All must decode back exactly.
+ESCAPES = [
+    ("city", "Kyoto"),                      # unseen category
+    ("qty", 10**7),                         # out-of-range integer
+    ("amount", 5000.25),                    # out-of-range float
+    ("amount", float("inf")),               # non-finite
+    ("note", "one two three words here"),   # off-template segment count
+    ("note", "zzzz-qqqq"),                  # dictionary-miss words
+]
+
+
+class TestEscapeRoundtrip:
+    @pytest.mark.parametrize("col,val", ESCAPES)
+    def test_escaping_value_roundtrips_exactly(self, codec, col, val):
+        plan = codec.compile(force=True)
+        row = dict(gen_rows(1, seed=9)[0])
+        row[col] = val
+        before = plan.escape_counts[col]
+        table = CompressedTable(codec)
+        table.extend([row] + gen_rows(4, seed=10))
+        assert plan.escape_counts[col] >= before + 1
+        assert not table.block_fast[0]          # escaped row routes slow
+        assert table.block_fast[1:].all()       # the rest stay fast
+        got = table.get(0)
+        if col == "amount":
+            assert got[col] == val              # raw float64: exact
+        else:
+            assert got[col] == val
+        # and the batch read path agrees with the scalar one
+        assert table.get_many([0, 1]) == [table.get(0), table.get(1)]
+
+    def test_non_numeric_in_float_column_charges_only_that_row(self, codec):
+        plan = codec.compile(force=True)
+        rows = gen_rows(8, seed=3)
+        rows[2] = dict(rows[2], amount="not a number")
+        syms, ok = plan.encode_rows(rows)
+        assert not ok[2]
+        assert ok[[0, 1, 3, 4, 5, 6, 7]].all()  # neighbours unaffected
+        assert plan.escape_counts["amount"] == 1
+
+
+class TestCounterAgreement:
+    """Property-style: scalar and batch paths charge identical counters."""
+
+    def _mutate(self, rng, row):
+        """Randomly corrupt 0-2 columns; returns the mutated row."""
+        mutations = [
+            ("city", lambda: f"Nowhere{int(rng.integers(0, 99))}"),
+            ("qty", lambda: int(rng.integers(10**6, 10**7))),
+            ("amount", lambda: float(rng.uniform(1e4, 1e6))),
+            ("amount", lambda: "abc"),
+            ("note", lambda: "a b c d e"),
+            ("note", lambda: f"xx{int(rng.integers(0, 99))}-yy"),
+        ]
+        for _ in range(int(rng.integers(0, 3))):
+            col, fn = mutations[int(rng.integers(0, len(mutations)))]
+            row = dict(row, **{col: fn()})
+        return row
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_scalar_matches_batch_per_column(self, codec, seed):
+        rng = np.random.default_rng(seed)
+        rows = [self._mutate(rng, r) for r in gen_rows(120, seed=seed + 50)]
+
+        batch_plan = codec.compile(force=True)
+        _, ok = batch_plan.encode_rows(rows)
+
+        scalar_plan = codec.compile(force=True)
+        scalar_ok = [scalar_plan.row_conforms(r) for r in rows]
+
+        assert ok.tolist() == scalar_ok
+        assert batch_plan.escape_counts == scalar_plan.escape_counts
+        assert batch_plan.rows_seen == scalar_plan.rows_seen == len(rows)
+
+    def test_window_reset_keeps_cumulative(self, codec):
+        plan = codec.compile(force=True)
+        rows = gen_rows(20, seed=77)
+        rows[0] = dict(rows[0], city="Gotham")
+        plan.encode_rows(rows)
+        assert plan.window_escapes["city"] == 1
+        assert plan.window_rows == 20
+        snap = plan.reset_escapes()
+        assert snap["city"] == 1
+        assert plan.window_escapes["city"] == 0 and plan.window_rows == 0
+        assert plan.escape_counts["city"] == 1      # cumulative survives
+        assert plan.rows_seen == 20
+        assert plan.escape_rates()["city"] == 0.0   # empty window -> 0.0
+
+
+class TestStoreSurfacesCounters:
+    def test_stats_reports_cumulative_and_window(self):
+        from repro.oltp.store import BlitzStore
+        rows = gen_rows(300)
+        store = BlitzStore(SCHEMA, rows)
+        store.insert_many(rows)
+        store.insert(dict(rows[0], city="Atlantis"))
+        s = store.stats()
+        assert s["escapes"]["city"] >= 1
+        assert s["escapes_window"]["city"] >= 1
+        assert s["window_rows"] >= 301
+        assert s["plan_versions"] == 1
+        store.codec.compile().reset_escapes()
+        s2 = store.stats()
+        assert s2["escapes"]["city"] >= 1           # cumulative stays
+        assert s2["escapes_window"]["city"] == 0    # window cleared
