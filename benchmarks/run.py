@@ -26,10 +26,10 @@ def main() -> None:
 
     from benchmarks import (artifact, bench_adaptive_refit, bench_archive,
                             bench_batch_decode, bench_compression,
-                            bench_entropy_coders, bench_fastpath,
-                            bench_framework, bench_granularity,
-                            bench_sampling, bench_update_merge,
-                            roofline_report)
+                            bench_db_tpcc, bench_entropy_coders,
+                            bench_fastpath, bench_framework,
+                            bench_granularity, bench_sampling,
+                            bench_update_merge, roofline_report)
 
     if args.smoke:
         artifact.set_smoke(True)
@@ -39,6 +39,8 @@ def main() -> None:
         "batch_decode": bench_batch_decode,      # DESIGN.md §2 fast path
         "update_merge": bench_update_merge,      # DESIGN.md §3 delta merge
         "adaptive_refit": bench_adaptive_refit,  # DESIGN.md §4 drift/refit
+        "db_tpcc": bench_db_tpcc,                # DESIGN.md §5 engine, §6
+
         "sampling": bench_sampling,              # Fig 10
         "entropy": bench_entropy_coders,         # Fig 11
         "granularity": bench_granularity,        # Fig 12

@@ -10,6 +10,9 @@ Run:  PYTHONPATH=src python examples/oltp_store.py
       PYTHONPATH=src python examples/oltp_store.py --drift # drifting mix:
                                                            # adaptive refit
                                                            # on vs off
+      PYTHONPATH=src python examples/oltp_store.py --db    # full multi-table
+                                                           # TPC-C through the
+                                                           # repro.db engine
 """
 
 import argparse
@@ -128,6 +131,43 @@ def drifting_mix(n_rows=5000, n_ops=50000):
           "(paper §5 dynamic value sets; BENCH_adaptive_refit.json).")
 
 
+def multi_table_db(n_ops=1500):
+    """Full multi-table TPC-C through the repro.db engine (DESIGN.md §5):
+    seven hash-partitioned tables in one Database catalog, the cross-table
+    NewOrder/Payment/OrderStatus/Delivery mix, and the whole-database
+    compression factor the paper's §6 is about."""
+    print("loading the 7-table TPC-C database (blitzcrank vs silo)...")
+    db, pop = tpcc.build_tpcc_database(
+        backend="blitzcrank", n_shards=4, n_warehouses=2,
+        districts_per_wh=10, customers_per_district=150, n_items=1000,
+        orders_per_district=50)
+    silo, _ = tpcc.build_tpcc_database(backend="silo", n_shards=4,
+                                       population=pop)
+    print(f"loaded {db.n_live} rows across {len(db)} tables; "
+          f"post-load factor {silo.nbytes / db.nbytes:.2f}x")
+
+    t0 = time.perf_counter()
+    counts = tpcc.run_tpcc_mix(db, n_ops, seed=7)
+    dt = time.perf_counter() - t0
+    tpcc.run_tpcc_mix(silo, n_ops, seed=7)
+    db.merge_all()
+    print(f"\n{n_ops} transactions in {dt:.1f}s "
+          f"({1e6 * dt / n_ops:.0f} us/txn): {counts}")
+    s, ss = db.stats(), silo.stats()
+    print(f"{'table':11s} {'rows':>7s} {'blitz KiB':>10s} {'silo KiB':>9s} "
+          f"{'factor':>7s} {'shards':>7s}")
+    for name in db.table_names:
+        ts, tss = s["tables"][name], ss["tables"][name]
+        print(f"{name:11s} {ts['n_live']:7d} {ts['nbytes'] / 1024:10.1f} "
+              f"{tss['nbytes'] / 1024:9.1f} "
+              f"{tss['nbytes'] / ts['nbytes']:7.2f} {ts['n_shards']:7d}")
+    print(f"{'TOTAL':11s} {s['n_live']:7d} {s['nbytes'] / 1024:10.1f} "
+          f"{ss['nbytes'] / 1024:9.1f} {ss['nbytes'] / s['nbytes']:7.2f}")
+    print(f"\nwhole-database factor {ss['nbytes'] / s['nbytes']:.2f}x "
+          f"(models {s['model_bytes'] / 1024:.0f} KiB reported separately); "
+          f"see BENCH_db_tpcc.json for the acceptance run.")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mix", action="store_true",
@@ -136,8 +176,13 @@ def main():
     ap.add_argument("--drift", action="store_true",
                     help="drifting TPC-C mix over 50k ops: adaptive "
                          "refit on vs off compression factor")
+    ap.add_argument("--db", action="store_true",
+                    help="full multi-table TPC-C through the repro.db "
+                         "engine (catalog + hash-partitioned shards)")
     args = ap.parse_args()
-    if args.drift:
+    if args.db:
+        multi_table_db()
+    elif args.drift:
         drifting_mix()
     elif args.mix:
         update_heavy_mix()

@@ -49,9 +49,13 @@ class MaintenanceScheduler:
     """Drift-detect → refit → migrate, one bounded unit of work per step."""
 
     def __init__(self, store, config: Optional[MaintenanceConfig] = None,
-                 seed: int = 0):
+                 seed: int = 0, label: str = ""):
         self.store = store
         self.config = config or MaintenanceConfig()
+        # Which store this scheduler maintains, e.g. "customer/shard3" —
+        # set by the db engine (repro.db.Table) so aggregated maintenance
+        # stats stay attributable to a shard.
+        self.label = label
         self.monitor = DriftMonitor(self.config.drift)
         self.reservoir = ReservoirSample(self.config.reservoir_size, seed)
         self.refits = 0
@@ -150,6 +154,7 @@ class MaintenanceScheduler:
 
     def stats(self) -> Dict[str, Any]:
         return {
+            **({"label": self.label} if self.label else {}),
             "steps": self.steps,
             "refits": self.refits,
             "refit_failures": self.refit_failures,

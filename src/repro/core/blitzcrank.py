@@ -32,6 +32,29 @@ class ColumnSpec:
     kind: str                    # 'cat' | 'int' | 'float' | 'str' | 'ts'
     precision: float = 1.0       # for 'float' (absolute precision p, §4.2)
     buckets: int = 512           # level-1 bucket budget T
+    # Headroom for append-mostly columns (order ids, ytd counters,
+    # balances): fraction of the observed value span added to each end of
+    # the fitted numeric range, so values that grow past the load-time
+    # population keep conforming instead of escaping on every insert.
+    # growth > 0 also pins an 'int' column to the numeric (range) model —
+    # a growing key must never specialize to a closed categorical vocab.
+    growth: float = 0.0
+
+
+def column_specs(schema: Any) -> List[ColumnSpec]:
+    """Normalize a schema argument to a list of :class:`ColumnSpec`.
+
+    Accepts either a plain sequence of specs or a schema object exposing
+    ``.columns`` (e.g. :class:`repro.db.TableSchema`), so the codec and
+    every :class:`~repro.oltp.store.RowStore` take both interchangeably —
+    the `db` engine layer hands its declarative schemas straight down.
+    """
+    cols = getattr(schema, "columns", schema)
+    cols = list(cols)
+    for c in cols:
+        if not isinstance(c, ColumnSpec):
+            raise TypeError(f"expected ColumnSpec, got {type(c).__name__}")
+    return cols
 
 
 @dataclasses.dataclass
@@ -63,7 +86,24 @@ def fit_column_model(spec: ColumnSpec, rows: Sequence[Dict[str, Any]],
     col = [r[spec.name] for r in rows]
     if extra_values:
         col = col + list(extra_values)
-    if parent is not None and spec.kind in ("cat", "int", "str"):
+    if spec.growth > 0.0 and spec.kind in ("int", "float", "ts") and col:
+        # Synthetic range endpoints widen the fitted range by
+        # ``growth * max(span, magnitude)`` on each side: two extra values
+        # cost two near-empty buckets, not a distribution shift.  Basing
+        # the pad on magnitude too keeps constant columns (a ytd counter
+        # loaded at one value) from getting a degenerate zero-width pad.
+        lo, hi = float(min(col)), float(max(col))
+        unit = spec.precision if spec.kind != "int" else 1.0
+        pad = spec.growth * max(hi - lo, abs(hi), abs(lo), unit)
+        if spec.kind == "int":
+            col = col + [int(lo - pad) - 1, int(hi + pad) + 1]
+        else:
+            col = col + [lo - pad, hi + pad]
+    # growth>0 numeric columns never specialize to a conditional (closed)
+    # vocabulary either — same reasoning as the categorical pin below
+    if parent is not None and (spec.kind in ("cat", "str")
+                               or (spec.kind == "int"
+                                   and spec.growth <= 0.0)):
         pairs = [(r[parent], r[spec.name]) for r in rows]
         if extra_pairs:
             pairs = pairs + list(extra_pairs)
@@ -76,9 +116,10 @@ def fit_column_model(spec: ColumnSpec, rows: Sequence[Dict[str, Any]],
     if spec.kind == "cat":
         return CategoricalModel(col)
     if spec.kind == "int":
-        # small-cardinality ints behave better as categorical
+        # small-cardinality ints behave better as categorical — unless the
+        # schema declares growth: a growing key needs an open-ended range
         card = len(set(col[:4096]))
-        if card <= 256 and len(set(col)) <= 4096:
+        if spec.growth <= 0.0 and card <= 256 and len(set(col)) <= 4096:
             return CategoricalModel(col)
         return NumericModel(col, precision=1, T=spec.buckets, integer=True)
     if spec.kind == "float":
@@ -96,7 +137,7 @@ class TableCodec:
     def __init__(self, schema: Sequence[ColumnSpec], models: Dict[str, Any],
                  order: List[str], stats: FitStats,
                  block_tuples: int = 1, lam: int = delayed.LAMBDA_DEFAULT):
-        self.schema = list(schema)
+        self.schema = column_specs(schema)
         self.by_name = {c.name: c for c in self.schema}
         self.models = models
         self.order = order
@@ -113,6 +154,7 @@ class TableCodec:
             correlation: bool = False, sample: int = 1 << 15,
             block_tuples: int = 1, seed: int = 0,
             lam: int = delayed.LAMBDA_DEFAULT) -> "TableCodec":
+        schema = column_specs(schema)
         rng = np.random.default_rng(seed)
         n = len(rows)
         stats = FitStats()

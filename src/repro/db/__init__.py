@@ -1,0 +1,30 @@
+"""`repro.db`: the schema-first database engine (DESIGN.md §5).
+
+Public API — import everything from here, never from the private modules:
+
+* :class:`TableSchema` / :class:`ColumnSpec` — declarative table shape
+  with a typed primary key;
+* :class:`Database` — the catalog: registers schemas, owns tables,
+  aggregates whole-database stats;
+* :class:`Table` — N hash-partitioned shards with primary-key routing
+  and one batched RowStore call per shard;
+* the store backends (:class:`BlitzStore`, :class:`UncompressedStore`,
+  :class:`RamanStore`, :class:`ZstdStore`, :data:`STORE_KINDS`) re-exported
+  so a backend choice never needs a second import.
+"""
+
+from repro.core.blitzcrank import ColumnSpec
+from repro.oltp.store import (STORE_KINDS, BlitzStore, RamanStore, RowStore,
+                              UncompressedStore, ZstdStore)
+
+from .database import Database
+from .schema import KEYABLE_KINDS, Key, TableSchema, stable_key_hash
+from .table import INDEX_ENTRY_OVERHEAD, StoreFactory, Table
+
+__all__ = [
+    "Database", "Table", "TableSchema", "ColumnSpec",
+    "Key", "KEYABLE_KINDS", "stable_key_hash",
+    "StoreFactory", "INDEX_ENTRY_OVERHEAD",
+    "RowStore", "BlitzStore", "UncompressedStore", "RamanStore",
+    "ZstdStore", "STORE_KINDS",
+]

@@ -1,0 +1,119 @@
+"""The `repro.db` catalog: named tables, one engine-wide view (DESIGN.md §5).
+
+A :class:`Database` registers :class:`~repro.db.TableSchema` s and owns the
+resulting :class:`~repro.db.Table` s.  It carries engine-wide defaults
+(backend, shard count, store kwargs) that individual ``create_table`` calls
+can override, and aggregates ``stats()`` / ``nbytes`` across every table
+and shard — the number the paper's §6 "whole-database memory reduction"
+claim is about, and the one ``benchmarks/bench_db_tpcc.py`` reports.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+from .schema import TableSchema
+from .table import StoreFactory, Table
+
+
+class Database:
+    """Catalog of tables sharing engine-wide defaults.
+
+    >>> db = Database(backend="blitzcrank", n_shards=4)
+    >>> db.create_table(schema, sample_rows=rows)
+    >>> db["customer"].get_many(keys)
+    """
+
+    def __init__(self, backend: str | StoreFactory = "blitzcrank",
+                 n_shards: int = 1,
+                 store_kwargs: Optional[Dict[str, Any]] = None):
+        self.backend = backend
+        self.n_shards = int(n_shards)
+        self.store_kwargs = dict(store_kwargs or {})
+        self._tables: Dict[str, Table] = {}
+
+    # -- catalog ---------------------------------------------------------
+    def create_table(self, schema: TableSchema, *,
+                     backend: str | StoreFactory | None = None,
+                     n_shards: Optional[int] = None,
+                     sample_rows: Optional[Sequence[Dict[str, Any]]] = None,
+                     store_kwargs: Optional[Dict[str, Any]] = None) -> Table:
+        """Register ``schema`` and build its table (engine defaults apply
+        unless overridden).  Re-registering a name raises ``ValueError``."""
+        if schema.name in self._tables:
+            raise ValueError(f"table {schema.name!r} already registered")
+        kwargs = dict(self.store_kwargs)
+        kwargs.update(store_kwargs or {})
+        table = Table(schema,
+                      backend=self.backend if backend is None else backend,
+                      n_shards=self.n_shards if n_shards is None
+                      else n_shards,
+                      sample_rows=sample_rows, store_kwargs=kwargs)
+        self._tables[schema.name] = table
+        return table
+
+    def drop_table(self, name: str) -> None:
+        if name not in self._tables:
+            raise KeyError(f"no table {name!r}")
+        del self._tables[name]
+
+    def table(self, name: str) -> Table:
+        try:
+            return self._tables[name]
+        except KeyError:
+            raise KeyError(
+                f"no table {name!r}; registered: "
+                f"{sorted(self._tables)}") from None
+
+    def __getitem__(self, name: str) -> Table:
+        return self.table(name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._tables
+
+    def __iter__(self) -> Iterator[Table]:
+        return iter(self._tables.values())
+
+    def __len__(self) -> int:
+        return len(self._tables)
+
+    @property
+    def table_names(self) -> List[str]:
+        return sorted(self._tables)
+
+    @property
+    def schemas(self) -> Dict[str, TableSchema]:
+        return {n: t.schema for n, t in self._tables.items()}
+
+    # -- engine-wide maintenance -----------------------------------------
+    def merge_all(self) -> None:
+        """Fold every table's delta overlay back into its arenas."""
+        for t in self._tables.values():
+            t.merge()
+
+    def migrate_all(self, limit_per_table: int = 1 << 12) -> int:
+        return sum(t.migrate(limit_per_table) for t in self._tables.values())
+
+    def maintenance_step(self) -> Dict[str, List[Dict[str, Any]]]:
+        return {n: t.maintenance_step() for n, t in self._tables.items()}
+
+    # -- aggregated accounting -------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return sum(t.nbytes for t in self._tables.values())
+
+    @property
+    def n_live(self) -> int:
+        return sum(t.n_live for t in self._tables.values())
+
+    def stats(self) -> Dict[str, Any]:
+        per_table = {n: t.stats() for n, t in sorted(self._tables.items())}
+        return {
+            "n_tables": len(self._tables),
+            "n_live": self.n_live,
+            "nbytes": self.nbytes,
+            "store_bytes": sum(s["store_bytes"] for s in per_table.values()),
+            "index_bytes": sum(s["index_bytes"] for s in per_table.values()),
+            "model_bytes": sum(s["model_bytes"] for s in per_table.values()),
+            "tables": per_table,
+        }

@@ -1,0 +1,144 @@
+"""Declarative table schemas for the `repro.db` engine (DESIGN.md §5).
+
+A :class:`TableSchema` is the unit the :class:`~repro.db.Database` catalog
+registers: named :class:`~repro.core.ColumnSpec` columns plus a *typed*
+primary key — an ordered subset of hashable columns whose values identify a
+row.  The schema owns key extraction (:meth:`TableSchema.key_of`) and the
+engine owns key→shard routing via :func:`stable_key_hash`, a deterministic
+FNV-1a over the key's components.  Python's builtin ``hash`` is per-process
+randomized for strings, so it would scatter the same table differently on
+every run; shard layout must instead be a pure function of the key so that
+reloading a table (or comparing two stores) reproduces the same placement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Sequence, Tuple, Union
+
+from repro.core.blitzcrank import ColumnSpec, column_specs
+
+# Primary-key columns must hold hashable, routable values.  Floats are
+# excluded on purpose: their quantized decode (precision p, §4.2) means a
+# value can change representation across an encode round-trip, which would
+# silently re-route the row to a different shard.
+KEYABLE_KINDS = ("int", "cat", "str")
+
+Key = Union[int, str, Tuple[Any, ...]]
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK = (1 << 64) - 1
+
+
+def stable_key_hash(key: Key) -> int:
+    """64-bit FNV-1a of a primary key, stable across processes and runs.
+
+    Components are domain-separated by type tag + byte length so that
+    ``(1, "2")`` and ``("1", 2)`` land differently; ints hash their
+    little-endian two's-complement bytes, strings their UTF-8.
+    """
+    parts = key if isinstance(key, tuple) else (key,)
+    h = _FNV_OFFSET
+    for part in parts:
+        if isinstance(part, bool):  # bool is an int subclass: tag it apart
+            data, tag = bytes([int(part)]), 0x62
+        elif isinstance(part, int):
+            n = max(1, (part.bit_length() + 8) // 8)
+            data, tag = part.to_bytes(n, "little", signed=True), 0x69
+        elif isinstance(part, str):
+            data, tag = part.encode("utf-8"), 0x73
+        else:
+            raise TypeError(
+                f"unroutable key component {part!r} ({type(part).__name__})")
+        for b in (tag, len(data) & 0xFF):
+            h = ((h ^ b) * _FNV_PRIME) & _MASK
+        for b in data:
+            h = ((h ^ b) * _FNV_PRIME) & _MASK
+    return h
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSchema:
+    """Named columns + typed primary key: what the catalog registers.
+
+    ``primary_key`` is an ordered tuple of column names (a single name is
+    accepted and normalized); each must name a declared column of a
+    hashable kind (:data:`KEYABLE_KINDS`).  Keys extracted by
+    :meth:`key_of` are scalars for single-column keys and tuples for
+    composite keys — e.g. TPC-C's ``customer`` is keyed by
+    ``(c_w_id, c_d_id, c_id)``.
+    """
+
+    name: str
+    columns: Tuple[ColumnSpec, ...]
+    primary_key: Tuple[str, ...]
+
+    def __init__(self, name: str, columns: Sequence[ColumnSpec],
+                 primary_key: Union[str, Sequence[str]]):
+        cols = tuple(column_specs(columns))
+        pk = ((primary_key,) if isinstance(primary_key, str)
+              else tuple(primary_key))
+        object.__setattr__(self, "name", str(name))
+        object.__setattr__(self, "columns", cols)
+        object.__setattr__(self, "primary_key", pk)
+        self._validate()
+
+    def _validate(self) -> None:
+        by_name: Dict[str, ColumnSpec] = {}
+        for c in self.columns:
+            if c.name in by_name:
+                raise ValueError(
+                    f"table {self.name!r}: duplicate column {c.name!r}")
+            by_name[c.name] = c
+        if not self.primary_key:
+            raise ValueError(f"table {self.name!r}: empty primary key")
+        if len(set(self.primary_key)) != len(self.primary_key):
+            raise ValueError(
+                f"table {self.name!r}: repeated primary-key column")
+        for k in self.primary_key:
+            spec = by_name.get(k)
+            if spec is None:
+                raise ValueError(
+                    f"table {self.name!r}: primary-key column {k!r} "
+                    f"is not declared")
+            if spec.kind not in KEYABLE_KINDS:
+                raise ValueError(
+                    f"table {self.name!r}: primary-key column {k!r} has "
+                    f"kind {spec.kind!r}; keys must be one of "
+                    f"{KEYABLE_KINDS} (floats re-quantize on decode and "
+                    f"would re-route)")
+        object.__setattr__(self, "_by_name", by_name)
+
+    # -- lookups ---------------------------------------------------------
+    @property
+    def column_names(self) -> List[str]:
+        return [c.name for c in self.columns]
+
+    def column(self, name: str) -> ColumnSpec:
+        try:
+            return self._by_name[name]
+        except KeyError:
+            raise KeyError(f"table {self.name!r} has no column {name!r}") \
+                from None
+
+    # -- key handling ----------------------------------------------------
+    def key_of(self, row: Dict[str, Any]) -> Key:
+        """Extract the primary key (scalar for 1 column, tuple otherwise)."""
+        if len(self.primary_key) == 1:
+            return row[self.primary_key[0]]
+        return tuple(row[k] for k in self.primary_key)
+
+    def keys_of(self, rows: Iterable[Dict[str, Any]]) -> List[Key]:
+        return [self.key_of(r) for r in rows]
+
+    def key_hash(self, key: Key) -> int:
+        return stable_key_hash(key)
+
+    def validate_row(self, row: Dict[str, Any]) -> None:
+        """Cheap shape check: every declared column present (used on the
+        insert path of :class:`~repro.db.Table`)."""
+        for c in self.columns:
+            if c.name not in row:
+                raise KeyError(
+                    f"table {self.name!r}: row missing column {c.name!r}")

@@ -1,0 +1,362 @@
+"""Hash-partitioned table: primary-key routing over RowStore shards.
+
+A :class:`Table` owns N shards, each an independent
+:class:`~repro.oltp.store.RowStore` (``BlitzStore`` by default — any
+backend in ``STORE_KINDS`` or a user factory plugs in).  Rows are placed
+by ``stable_key_hash(pk) % n_shards``; a directory maps each live primary
+key to its ``(shard, local row id)`` slot.  The batched verbs group keys
+per shard and issue **one** batched RowStore call per shard, so the
+compiled Pallas ``decode_select`` fast path (DESIGN.md §2) is preserved:
+a ``get_many`` over K keys costs at most ``n_shards`` vectorized decodes,
+never K scalar ones.
+
+Routing invariants (DESIGN.md §5):
+
+* placement is a pure function of the key — the same key always routes to
+  the same shard, across runs and processes;
+* batched results come back in *request order*, exactly as an unsharded
+  store would return them;
+* local row ids are never reused (RowStore contract), so a delete + fresh
+  insert of the same key occupies a new slot but the directory always
+  points at the live one.
+
+Key-level semantics mirror the RowStore protocol with keys in place of
+dense ids: ``get_many`` returns ``None`` for unknown/deleted keys, scalar
+``get`` raises ``KeyError``, ``update_many`` of a missing key raises
+``KeyError``, ``insert_many`` of a live key raises ``ValueError``
+(re-inserting a *deleted* key is allowed and revives it in a new slot).
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
+
+from repro.oltp.store import STORE_KINDS, RowStore
+from .schema import Key, TableSchema, stable_key_hash
+
+# Per-entry directory charge: 8 B key hash + 8 B packed (shard, slot)
+# pointer, the footprint of an open-addressed C hash index.  Key payload
+# bytes are NOT charged: the primary-key columns are stored (compressed)
+# in the rows themselves, and a hash index verifies the key against the
+# decoded row rather than duplicating it.
+INDEX_ENTRY_OVERHEAD = 16
+
+StoreFactory = Callable[..., RowStore]
+
+
+class Table:
+    """One catalog table: schema + N hash-partitioned RowStore shards.
+
+    Shards are built lazily on the first non-empty ``insert_many`` (that
+    batch doubles as the model-fit sample) unless ``sample_rows`` is given,
+    in which case they are built eagerly — the TPC-C loader passes its
+    generated population so models are fit before any traffic.  All shards
+    fit on the *same* sample: per-shard slices would give each shard a
+    different model for the same column, which breaks nothing but wastes
+    model bytes and makes shard stats incomparable.
+    """
+
+    def __init__(self, schema: TableSchema, backend: str | StoreFactory
+                 = "blitzcrank", n_shards: int = 1,
+                 sample_rows: Optional[Sequence[Dict[str, Any]]] = None,
+                 store_kwargs: Optional[Dict[str, Any]] = None):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.schema = schema
+        self.name = schema.name
+        self.n_shards = int(n_shards)
+        self.backend = backend
+        self.store_kwargs = dict(store_kwargs or {})
+        self._shards: List[RowStore] = []
+        self._dir: Dict[Key, Tuple[int, int]] = {}
+        if sample_rows:
+            self._build_shards(sample_rows)
+
+    # -- shard lifecycle -------------------------------------------------
+    def _build_shards(self, sample_rows: Sequence[Dict[str, Any]]) -> None:
+        factory: StoreFactory
+        if callable(self.backend):
+            factory = self.backend
+        else:
+            try:
+                factory = STORE_KINDS[self.backend]
+            except KeyError:
+                raise ValueError(
+                    f"unknown backend {self.backend!r}; expected one of "
+                    f"{sorted(STORE_KINDS)} or a factory") from None
+        try:  # probe, don't catch build errors: those must propagate
+            can_share = "codec" in inspect.signature(factory).parameters
+        except (TypeError, ValueError):  # e.g. builtins without signatures
+            can_share = False
+        kwargs = dict(self.store_kwargs)
+        for j in range(self.n_shards):
+            shard = factory(self.schema, sample_rows, **kwargs)
+            if j == 0 and self.n_shards > 1 and can_share \
+                    and "codec" not in kwargs \
+                    and not kwargs.get("adaptive") \
+                    and getattr(shard, "codec", None) is not None:
+                # Every shard fits on the same sample, so fit once and
+                # share the codec (BlitzStore accepts a pre-fitted one):
+                # N identical model sets would multiply both fit time and
+                # model bytes by the shard count for nothing.  Shards
+                # still version/refit independently from v0.  Not shared
+                # under adaptive maintenance — each shard's drift monitor
+                # owns its plan's escape window, and a shared plan would
+                # let one shard's step reset every other shard's window.
+                try:
+                    kwargs["codec"] = shard.codec
+                except Exception:
+                    pass
+            maint = getattr(shard, "maintenance", None)
+            if maint is not None:
+                maint.label = f"{self.name}/shard{j}"
+            self._shards.append(shard)
+
+    @property
+    def shards(self) -> List[RowStore]:
+        return list(self._shards)
+
+    def shard_of(self, key: Key) -> int:
+        return stable_key_hash(key) % self.n_shards
+
+    def _route(self, key: Key) -> Tuple[int, int]:
+        """(shard, local id) of a live key, or raise KeyError."""
+        try:
+            return self._dir[key]
+        except KeyError:
+            raise KeyError(
+                f"table {self.name!r}: no live row for key {key!r}") \
+                from None
+
+    # -- batched verbs (one RowStore call per touched shard) -------------
+    def insert_many(self, rows: Sequence[Dict[str, Any]]) -> List[Key]:
+        """Insert rows, returning their primary keys in request order.
+
+        Raises ``ValueError`` on a key that is already live (in the table
+        or earlier in the same batch) — TPC-C inserts are always fresh
+        keys, and silent upsert would hide routing bugs.
+        """
+        rows = list(rows)
+        if not rows:
+            return []
+        if not self._shards:
+            self._build_shards(rows)
+        keys: List[Key] = []
+        batch_seen: set = set()
+        per_shard: List[List[Dict[str, Any]]] = [[] for _ in self._shards]
+        per_shard_keys: List[List[Key]] = [[] for _ in self._shards]
+        for r in rows:
+            self.schema.validate_row(r)
+            k = self.schema.key_of(r)
+            if k in self._dir or k in batch_seen:
+                raise ValueError(
+                    f"table {self.name!r}: duplicate insert of key {k!r}")
+            batch_seen.add(k)
+            s = self.shard_of(k)
+            per_shard[s].append(r)
+            per_shard_keys[s].append(k)
+            keys.append(k)
+        for s, (grp, gkeys) in enumerate(zip(per_shard, per_shard_keys)):
+            if not grp:
+                continue
+            ids = self._shards[s].insert_many(grp)
+            for i, k in zip(ids, gkeys):
+                self._dir[k] = (s, int(i))
+        return keys
+
+    def get_many(self, keys: Sequence[Key], backend: Optional[str] = None
+                 ) -> List[Optional[Dict[str, Any]]]:
+        """Batched point reads in request order; ``None`` for missing keys.
+
+        ``backend`` forces the decode backend ("numpy"/"pallas") on shards
+        that support it (BlitzStore); leave ``None`` for other backends.
+        """
+        out: List[Optional[Dict[str, Any]]] = [None] * len(keys)
+        if not self._shards:
+            return out
+        per_shard_pos: List[List[int]] = [[] for _ in self._shards]
+        per_shard_ids: List[List[int]] = [[] for _ in self._shards]
+        for pos, k in enumerate(keys):
+            slot = self._dir.get(k)
+            if slot is None:
+                continue
+            s, i = slot
+            per_shard_pos[s].append(pos)
+            per_shard_ids[s].append(i)
+        for s, (poss, ids) in enumerate(zip(per_shard_pos, per_shard_ids)):
+            if not ids:
+                continue
+            if backend is None:
+                got = self._shards[s].get_many(ids)
+            else:
+                got = self._shards[s].get_many(ids, backend=backend)
+            for pos, row in zip(poss, got):
+                out[pos] = row
+        return out
+
+    def update_many(self, keys: Sequence[Key],
+                    rows: Sequence[Dict[str, Any]]) -> None:
+        """In-place updates (last write wins on duplicate keys); the primary
+        key of each row must match its key — keys are immutable."""
+        merged: Dict[Key, Dict[str, Any]] = {}
+        for k, r in zip(keys, rows):
+            self.schema.validate_row(r)  # fail here, not in a later merge
+            if self.schema.key_of(r) != k:
+                raise ValueError(
+                    f"table {self.name!r}: update changes primary key "
+                    f"{k!r} -> {self.schema.key_of(r)!r}")
+            merged[k] = r
+        per_shard_ids: List[List[int]] = [[] for _ in self._shards]
+        per_shard_rows: List[List[Dict[str, Any]]] = \
+            [[] for _ in self._shards]
+        for k, r in merged.items():
+            s, i = self._route(k)
+            per_shard_ids[s].append(i)
+            per_shard_rows[s].append(r)
+        for s, (ids, grp) in enumerate(zip(per_shard_ids, per_shard_rows)):
+            if ids:
+                self._shards[s].update_many(ids, grp)
+
+    def delete_many(self, keys: Sequence[Key]) -> int:
+        """Delete live keys, returning how many were actually deleted
+        (missing/repeated keys are no-ops, matching RowStore)."""
+        per_shard_ids: List[List[int]] = [[] for _ in self._shards]
+        dropped: List[Key] = []
+        for k in dict.fromkeys(keys):  # dedup, keep order
+            slot = self._dir.get(k)
+            if slot is None:
+                continue
+            s, i = slot
+            per_shard_ids[s].append(i)
+            dropped.append(k)
+        n = 0
+        for s, ids in enumerate(per_shard_ids):
+            if ids:
+                n += self._shards[s].delete_many(ids)
+        for k in dropped:
+            del self._dir[k]
+        return n
+
+    # -- scalar wrappers -------------------------------------------------
+    def insert(self, row: Dict[str, Any]) -> Key:
+        return self.insert_many([row])[0]
+
+    def get(self, key: Key) -> Dict[str, Any]:
+        s, i = self._route(key)
+        return self._shards[s].get(i)
+
+    def update(self, key: Key, row: Dict[str, Any]) -> None:
+        self.update_many([key], [row])
+
+    def delete(self, key: Key) -> bool:
+        return self.delete_many([key]) == 1
+
+    def __contains__(self, key: Key) -> bool:
+        return key in self._dir
+
+    def scan(self, batch: int = 1024
+             ) -> Iterator[Tuple[Key, Dict[str, Any]]]:
+        """Yield ``(key, row)`` for every live row, shard by shard, one
+        batched ``get_many`` per chunk.
+
+        Keys are recovered from the decoded rows themselves (the primary
+        key lives in the row's columns), so no reverse id→key map is
+        needed; the directory check skips stale slots of keys that were
+        deleted and revived elsewhere.
+        """
+        key_of = self.schema.key_of
+        for s, shard in enumerate(self._shards):
+            span = len(shard)
+            for lo in range(0, span, batch):
+                ids = range(lo, min(lo + batch, span))
+                for i, row in zip(ids, shard.get_many(ids)):
+                    if row is None:  # tombstoned slot
+                        continue
+                    k = key_of(row)
+                    if self._dir.get(k) == (s, i):
+                        yield k, row
+
+    # -- maintenance (DESIGN.md §3/§4, fanned across shards) -------------
+    def merge(self) -> None:
+        for shard in self._shards:
+            if hasattr(shard, "merge"):
+                shard.merge()
+
+    def migrate(self, limit: int = 1 << 12) -> int:
+        moved = 0
+        for shard in self._shards:
+            if hasattr(shard, "migrate"):
+                moved += shard.migrate(limit)
+        return moved
+
+    def maintenance_step(self) -> List[Dict[str, Any]]:
+        """Run one deterministic maintenance step on every adaptive shard."""
+        out = []
+        for shard in self._shards:
+            maint = getattr(shard, "maintenance", None)
+            if maint is not None:
+                out.append(maint.step())
+        return out
+
+    # -- accounting ------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._dir)
+
+    @property
+    def n_live(self) -> int:
+        return len(self._dir)
+
+    @property
+    def index_bytes(self) -> int:
+        return INDEX_ENTRY_OVERHEAD * len(self._dir)
+
+    @property
+    def nbytes(self) -> int:
+        """Total footprint: every shard's bytes plus the key directory."""
+        return sum(s.nbytes for s in self._shards) + self.index_bytes
+
+    @property
+    def model_bytes(self) -> int:
+        """Model bytes with cross-shard dedup: shards share their v0 fit
+        (see :meth:`_build_shards`), so identical model objects count once."""
+        seen: set = set()
+        total = 0
+        for s in self._shards:
+            objs = getattr(s, "model_objects", None)
+            if objs is None:
+                total += getattr(s, "model_bytes", 0)
+                continue
+            for m in objs():
+                if id(m) not in seen:
+                    seen.add(id(m))
+                    total += m.model_bytes()
+        return total
+
+    def stats(self) -> Dict[str, Any]:
+        shard_stats = [s.stats() for s in self._shards]
+        out: Dict[str, Any] = {
+            "table": self.name,
+            "backend": (self.backend if isinstance(self.backend, str)
+                        else getattr(self.backend, "__name__", "factory")),
+            "n_shards": self.n_shards,
+            "n_live": self.n_live,
+            "n_ids": sum(s["n_ids"] for s in shard_stats),
+            "nbytes": self.nbytes,
+            "store_bytes": sum(s["nbytes"] for s in shard_stats),
+            "index_bytes": self.index_bytes,
+            "model_bytes": self.model_bytes,
+            "shards": shard_stats,
+        }
+        maint = [s["maintenance"] for s in shard_stats
+                 if "maintenance" in s]
+        if maint:
+            out["maintenance"] = {
+                "refits": sum(m["refits"] for m in maint),
+                "migrated_rows": sum(m["migrated_rows"] for m in maint),
+                "steps": sum(m["steps"] for m in maint),
+                "frozen_columns": sorted(
+                    {c for m in maint for c in m["frozen_columns"]}),
+            }
+        return out

@@ -1,19 +1,25 @@
 """OLTP layer: the batched-first RowStore protocol over pluggable
-compressors, plus the TPC-C-style data generators and transaction mix
-(DESIGN.md §3).
+compressors, the TPC-C-style data generators and single-store transaction
+mix (DESIGN.md §3), and the full multi-table TPC-C over the `repro.db`
+engine (DESIGN.md §5).
 
 Public API:
   * store: RowStore, BlitzStore, ZstdStore, RamanStore, UncompressedStore,
            LRUFastPath, STORE_KINDS
-  * tpcc:  TABLES, gen_customer/gen_stock/gen_orderline, customer_row,
-           zipf_keys, batched_point_gets, run_transaction_mix, row_bytes
+  * tpcc (single-table shims): TABLES, gen_customer/gen_stock/gen_orderline,
+           customer_row, zipf_keys, batched_point_gets, run_transaction_mix,
+           row_bytes
+  * tpcc (multi-table engine): TPCC_TABLES, generate_tpcc,
+           build_tpcc_database, run_tpcc_mix, database_row_bytes
 """
 
 from .store import (STORE_KINDS, BlitzStore, LRUFastPath, RamanStore,
                     RowStore, UncompressedStore, ZstdStore)
-from .tpcc import (TABLES, batched_point_gets, customer_row,
+from .tpcc import (TABLES, TPCC_TABLES, batched_point_gets,
+                   build_tpcc_database, customer_row, database_row_bytes,
                    drifting_customer_row, gen_customer, gen_orderline,
-                   gen_stock, row_bytes, run_transaction_mix, zipf_keys)
+                   gen_stock, generate_tpcc, row_bytes, run_tpcc_mix,
+                   run_transaction_mix, zipf_keys)
 
 __all__ = [
     "RowStore", "BlitzStore", "ZstdStore", "RamanStore",
@@ -21,4 +27,6 @@ __all__ = [
     "TABLES", "gen_customer", "gen_stock", "gen_orderline", "customer_row",
     "drifting_customer_row", "zipf_keys", "batched_point_gets",
     "run_transaction_mix", "row_bytes",
+    "TPCC_TABLES", "generate_tpcc", "build_tpcc_database", "run_tpcc_mix",
+    "database_row_bytes",
 ]

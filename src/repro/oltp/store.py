@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.adaptive import MaintenanceConfig, MaintenanceScheduler
 from repro.core import ColumnSpec, TableCodec
-from repro.core.blitzcrank import CompressedTable, _raw_row_bytes
+from repro.core.blitzcrank import (CompressedTable, _raw_row_bytes,
+                                   column_specs)
 from repro.core.huffman import BitReader, BitWriter, HuffmanCode
 
 # Per-entry charge of an uncompressed dict overlay / cache slot: 8 B key +
@@ -51,12 +52,36 @@ class RowStore:
     Subclasses implement the batched methods; the scalar ``insert / get /
     update / delete`` are thin wrappers over them.  ``len(store)`` is the
     id span (including tombstones), ``n_live`` the live row count.
+    ``schema`` may be a plain sequence of :class:`ColumnSpec` or any object
+    with a ``.columns`` attribute (:class:`repro.db.TableSchema`).
+
+    Return conventions and tombstone semantics (the protocol contract —
+    every store and wrapper must match it bit for bit):
+
+    * ``insert_many(rows) -> range`` — the dense ids assigned, in row
+      order; ``insert(row) -> int`` is the single id.  Ids are assigned
+      contiguously from the current span and **never reused**, even after
+      deletion.
+    * ``get_many(ids) -> list`` — one entry per requested id, in request
+      order; tombstoned ids yield ``None`` (a read-side abort signal, not
+      an error).  Scalar ``get(id)`` raises ``KeyError`` instead, and
+      ``IndexError`` semantics for never-assigned ids follow the backing
+      container.
+    * ``update_many(ids, rows) -> None`` — in-place overwrite, duplicate
+      ids deduplicated last-write-wins *before* hitting storage; updating
+      a tombstoned id raises ``KeyError``.  ``update`` is the 1-element
+      wrapper.
+    * ``delete_many(ids) -> int`` — the number of rows that transitioned
+      live→tombstoned (repeats and already-dead ids are no-ops, so the
+      count is of *effective* deletes); ``delete(id) -> bool`` — whether
+      this call performed the delete.  Both are idempotent.
+    * ``scan() -> iterator of (id, row)`` — live rows only, id order.
     """
 
     name = "rowstore"
 
     def __init__(self, schema: Optional[Sequence[ColumnSpec]] = None):
-        self.schema = list(schema) if schema is not None else None
+        self.schema = column_specs(schema) if schema is not None else None
 
     # -- batched protocol (override) -------------------------------------
     def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
@@ -107,8 +132,9 @@ class RowStore:
     def update(self, i: int, row: Dict[str, Any]) -> None:
         self.update_many([int(i)], [row])
 
-    def delete(self, i: int) -> int:
-        return self.delete_many([int(i)])
+    def delete(self, i: int) -> bool:
+        """True when this call deleted a live row (already-dead: False)."""
+        return self.delete_many([int(i)]) == 1
 
     # -- shared helpers --------------------------------------------------
     def is_live(self, i: int) -> bool:
@@ -241,11 +267,17 @@ class BlitzStore(RowStore):
                  sample: int = 1 << 15, use_pallas: bool | None = None,
                  auto_merge: bool = True, merge_frac: float = 0.06,
                  rewrite_frac: float = 0.12, merge_min_bytes: int = 1 << 16,
-                 adaptive: bool | MaintenanceConfig = False):
+                 adaptive: bool | MaintenanceConfig = False,
+                 codec: Optional[TableCodec] = None):
         super().__init__(schema)
-        codec = TableCodec.fit(rows_sample, schema,
-                               correlation=correlation,
-                               sample=sample, block_tuples=block_tuples)
+        if codec is None:
+            codec = TableCodec.fit(rows_sample, self.schema,
+                                   correlation=correlation,
+                                   sample=sample, block_tuples=block_tuples)
+        else:
+            # A pre-fitted codec (shared across a repro.db Table's shards:
+            # same sample => same models, fit once, count model bytes once)
+            block_tuples = codec.block_tuples
         self.table = CompressedTable(codec, use_pallas=use_pallas)
         self.block_tuples = block_tuples
         self.auto_merge = bool(auto_merge) and block_tuples == 1
@@ -403,16 +435,23 @@ class BlitzStore(RowStore):
         return (self.table.nbytes + self._overlay_bytes
                 + TOMBSTONE_BYTES * len(self._tombstones))
 
+    def model_objects(self) -> List[Any]:
+        """Every model object across codec versions (repro.db.Table dedups
+        these by identity across shards sharing a fit)."""
+        out: List[Any] = []
+        for v in range(self.table.n_versions):
+            out.extend(self.table.codec_at(v).models.values())
+        return out
+
     @property
     def model_bytes(self) -> int:
         # Codec versions share unchanged model objects; count each once.
         seen: set = set()
         total = 0
-        for v in range(self.table.n_versions):
-            for m in self.table.codec_at(v).models.values():
-                if id(m) not in seen:
-                    seen.add(id(m))
-                    total += m.model_bytes()
+        for m in self.model_objects():
+            if id(m) not in seen:
+                seen.add(id(m))
+                total += m.model_bytes()
         return total
 
     def stats(self) -> Dict[str, Any]:

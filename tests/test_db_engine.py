@@ -1,0 +1,335 @@
+"""`repro.db` engine tests (DESIGN.md §5): schema validation, stable key
+routing, the cross-shard property test (sharded Table == unsharded
+reference under interleaved ops, incl. post-merge/post-migrate reads on
+both decode backends), catalog behaviour, and the multi-table TPC-C mix.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ColumnSpec
+from repro.db import (Database, Table, TableSchema, stable_key_hash)
+from repro.oltp import tpcc
+from repro.oltp.store import BlitzStore, UncompressedStore
+
+ORDERLINE = TableSchema(
+    "orderline", tpcc.ORDERLINE_SCHEMA, ("ol_o_id", "ol_number"))
+
+
+def _gen_orderline_rows(n, seed=0):
+    # distinct (ol_o_id, ol_number) pairs: the single-table generator
+    # produces exactly 10 lines per order
+    return tpcc.gen_orderline(n, seed=seed)
+
+
+class TestSchema:
+    def test_primary_key_validation(self):
+        cols = [ColumnSpec("a", "int"), ColumnSpec("b", "float"),
+                ColumnSpec("c", "cat")]
+        with pytest.raises(ValueError, match="not declared"):
+            TableSchema("t", cols, "nope")
+        with pytest.raises(ValueError, match="float"):
+            TableSchema("t", cols, "b")  # float keys re-quantize: rejected
+        with pytest.raises(ValueError, match="empty"):
+            TableSchema("t", cols, ())
+        with pytest.raises(ValueError, match="repeated"):
+            TableSchema("t", cols, ("a", "a"))
+        with pytest.raises(ValueError, match="duplicate column"):
+            TableSchema("t", cols + [ColumnSpec("a", "int")], "a")
+
+    def test_key_of_scalar_and_composite(self):
+        cols = [ColumnSpec("a", "int"), ColumnSpec("c", "cat")]
+        assert TableSchema("t", cols, "a").key_of({"a": 7, "c": "x"}) == 7
+        assert TableSchema("t", cols, ("c", "a")).key_of(
+            {"a": 7, "c": "x"}) == ("x", 7)
+
+    def test_schema_accepted_by_stores_and_codec(self):
+        rows = _gen_orderline_rows(200)
+        store = BlitzStore(ORDERLINE, rows)  # TableSchema, not a list
+        store.insert_many(rows[:50])
+        assert store.get(3) is not None
+        assert [c.name for c in store.schema] == \
+            [c.name for c in ORDERLINE.columns]
+
+    def test_stable_hash_is_deterministic_and_typed(self):
+        assert stable_key_hash((1, "2")) != stable_key_hash(("1", 2))
+        # pinned constants: placement must be stable across processes/runs
+        # (Python's own str hash is per-process randomized)
+        assert stable_key_hash("x") == 9349625767463028147
+        assert stable_key_hash((1, "TX", 42)) == 16384999691884931257
+        with pytest.raises(TypeError):
+            stable_key_hash(1.5)
+
+
+def _interleave(table, ref, rows, rng, n_steps=40):
+    """Drive random batched ops against table + plain-dict reference."""
+    sch = table.schema
+    for _ in range(n_steps):
+        op = int(rng.integers(0, 4))
+        if op == 0:  # insert fresh keys
+            fresh = []
+            for r in rows:
+                if sch.key_of(r) not in ref and len(fresh) < 8:
+                    fresh.append(r)
+            rows = rows[len(fresh):]
+            if fresh:
+                table.insert_many(fresh)
+                for r in fresh:
+                    ref[sch.key_of(r)] = r
+        elif op == 1 and ref:  # update live keys
+            keys = list(ref)
+            picks = [keys[int(i)] for i in
+                     rng.integers(0, len(keys), min(6, len(keys)))]
+            upd = []
+            for k in dict.fromkeys(picks):
+                r = dict(ref[k], ol_quantity=int(rng.integers(1, 60)))
+                upd.append((k, r))
+                ref[k] = r
+            table.update_many([k for k, _ in upd], [r for _, r in upd])
+        elif op == 2 and ref:  # delete some, incl. repeats
+            keys = list(ref)
+            picks = [keys[int(i)] for i in
+                     rng.integers(0, len(keys), min(4, len(keys)))]
+            expect = len(set(picks))
+            assert table.delete_many(picks + picks[:1]) == expect
+            for k in picks:
+                ref.pop(k, None)
+        else:  # batched reads incl. unknown keys
+            keys = list(ref)[:10] + [(10**9, 1), (10**9, 2)]
+            got = table.get_many(keys)
+            for k, g in zip(keys, got):
+                if k in ref:
+                    assert g is not None and \
+                        g["ol_number"] == ref[k]["ol_number"]
+                else:
+                    assert g is None
+    return rows
+
+
+class TestShardRoutingProperty:
+    """A sharded Table must be indistinguishable from an unsharded one
+    (and from a plain dict) under any interleaving — the key routing
+    invariant the engine is built on."""
+
+    @pytest.mark.parametrize("n_shards", [1, 2, 7])
+    def test_sharded_matches_reference_model(self, n_shards):
+        rows = _gen_orderline_rows(600, seed=3)
+        table = Table(ORDERLINE, backend="blitzcrank", n_shards=n_shards,
+                      sample_rows=rows,
+                      store_kwargs={"merge_min_bytes": 1 << 10})
+        ref = {}
+        table.insert_many(rows[:300])
+        for r in rows[:300]:
+            ref[ORDERLINE.key_of(r)] = r
+        rng = np.random.default_rng(100 + n_shards)
+        _interleave(table, ref, rows[300:], rng)
+        # final sweep, batched via one get_many over every live key
+        keys = list(ref)
+        for k, g in zip(keys, table.get_many(keys)):
+            assert g is not None
+            for c in ORDERLINE.columns:
+                if c.kind == "float":
+                    assert abs(g[c.name] - ref[k][c.name]) \
+                        <= c.precision / 2 + 1e-9
+                else:
+                    assert g[c.name] == ref[k][c.name]
+        assert table.n_live == len(ref)
+        assert len(list(table.scan())) == len(ref)
+
+    @pytest.mark.parametrize("n_shards", [2, 7])
+    def test_sharded_bit_identical_to_unsharded(self, n_shards):
+        rows = _gen_orderline_rows(500, seed=4)
+        sharded = Table(ORDERLINE, backend="blitzcrank",
+                        n_shards=n_shards, sample_rows=rows)
+        flat = Table(ORDERLINE, backend="blitzcrank", n_shards=1,
+                     sample_rows=rows)
+        for t in (sharded, flat):
+            t.insert_many(rows)
+        rng = np.random.default_rng(5)
+        picks = [rows[int(i)] for i in rng.integers(0, len(rows), 120)]
+        keys = [ORDERLINE.key_of(r) for r in picks]
+        upd = {k: dict(r, ol_quantity=int(rng.integers(60, 90)))
+               for k, r in zip(keys, picks)}
+        for t in (sharded, flat):
+            t.update_many(list(upd), list(upd.values()))
+            t.delete_many(keys[:10])
+        probe = [ORDERLINE.key_of(r) for r in rows[::3]]
+        assert sharded.get_many(probe) == flat.get_many(probe)
+        # post-merge() reads stay identical
+        for t in (sharded, flat):
+            t.merge()
+        assert sharded.get_many(probe) == flat.get_many(probe)
+
+    def test_post_merge_and_migrate_backend_identical(self):
+        pytest.importorskip("jax")
+        rows = _gen_orderline_rows(800, seed=6)
+        table = Table(ORDERLINE, backend="blitzcrank", n_shards=3,
+                      sample_rows=rows,
+                      store_kwargs={"merge_min_bytes": 1 << 10})
+        table.insert_many(rows)
+        for shard in table.shards:
+            assert shard.codec.compile() is not None
+        rng = np.random.default_rng(7)
+        keys = [ORDERLINE.key_of(rows[int(i)])
+                for i in rng.integers(0, len(rows), 200)]
+        got = table.get_many(keys)
+        table.update_many(keys, [
+            dict(r, ol_amount=round(float(rng.uniform(0.01, 20000.0)), 2))
+            for r in got])
+        table.merge()
+        # install a refit plan on every shard, then migrate stale rows
+        from repro.adaptive.refit import refit_codec
+        for shard in table.shards:
+            shard.install_codec(
+                refit_codec(shard.codec, rows[:400], ["ol_amount"],
+                            numeric_headroom=2.0))
+        moved = table.migrate(limit=1 << 14)
+        assert moved >= 0
+        probe = [ORDERLINE.key_of(r) for r in rows[::2]]
+        out_np = table.get_many(probe, backend="numpy")
+        out_pl = table.get_many(probe, backend="pallas")
+        assert out_np == out_pl  # bit-identical across decode backends
+        # and identical to the per-shard scalar reference path
+        for k, row in zip(probe, out_np):
+            assert row == table.get(k)
+
+    def test_shards_share_one_model_fit(self):
+        rows = _gen_orderline_rows(400, seed=8)
+        table = Table(ORDERLINE, backend="blitzcrank", n_shards=4,
+                      sample_rows=rows)
+        codecs = {id(s.codec) for s in table.shards}
+        assert len(codecs) == 1  # fit once, shared
+        flat = Table(ORDERLINE, backend="blitzcrank", n_shards=1,
+                     sample_rows=rows)
+        assert table.model_bytes == flat.model_bytes  # deduped accounting
+
+
+class TestTableSemantics:
+    def test_duplicate_insert_raises_and_revive_after_delete(self):
+        rows = _gen_orderline_rows(100)
+        table = Table(ORDERLINE, backend="silo", n_shards=2,
+                      sample_rows=rows)
+        table.insert_many(rows)
+        with pytest.raises(ValueError, match="duplicate"):
+            table.insert(rows[0])
+        k = ORDERLINE.key_of(rows[0])
+        assert table.delete(k) is True
+        assert table.delete(k) is False  # idempotent
+        assert table.get_many([k]) == [None]
+        with pytest.raises(KeyError):
+            table.get(k)
+        with pytest.raises(KeyError):
+            table.update(k, rows[0])
+        table.insert(rows[0])  # revive in a fresh slot
+        assert table.get(k)["ol_amount"] == rows[0]["ol_amount"]
+        assert sum(1 for kk, _ in table.scan() if kk == k) == 1
+
+    def test_update_cannot_change_primary_key(self):
+        rows = _gen_orderline_rows(50)
+        table = Table(ORDERLINE, backend="silo", sample_rows=rows)
+        table.insert_many(rows[:20])
+        k = ORDERLINE.key_of(rows[0])
+        with pytest.raises(ValueError, match="primary key"):
+            table.update(k, dict(rows[0], ol_number=99))
+
+    def test_missing_column_rejected_on_insert(self):
+        rows = _gen_orderline_rows(50)
+        table = Table(ORDERLINE, backend="silo", sample_rows=rows)
+        bad = dict(rows[0])
+        del bad["ol_dist_info"]
+        with pytest.raises(KeyError, match="ol_dist_info"):
+            table.insert(bad)
+
+    def test_lazy_shard_build_on_first_insert(self):
+        table = Table(ORDERLINE, backend="silo", n_shards=3)
+        assert table.get_many([(1, 1)]) == [None]
+        rows = _gen_orderline_rows(60)
+        table.insert_many(rows)
+        assert table.n_live == 60 and len(table.shards) == 3
+
+
+class TestDatabaseCatalog:
+    def test_register_lookup_drop(self):
+        db = Database(backend="silo")
+        rows = _gen_orderline_rows(30)
+        db.create_table(ORDERLINE, sample_rows=rows)
+        assert "orderline" in db and db["orderline"].n_live == 0
+        with pytest.raises(ValueError, match="already registered"):
+            db.create_table(ORDERLINE)
+        with pytest.raises(KeyError, match="registered"):
+            db.table("nope")
+        db.drop_table("orderline")
+        assert "orderline" not in db
+
+    def test_stats_aggregate_across_tables(self):
+        rows = _gen_orderline_rows(200)
+        db = Database(backend="silo", n_shards=2)
+        t1 = db.create_table(ORDERLINE, sample_rows=rows)
+        t1.insert_many(rows)
+        other = TableSchema("ol2", tpcc.ORDERLINE_SCHEMA,
+                            ("ol_o_id", "ol_number"))
+        t2 = db.create_table(other, sample_rows=rows)
+        t2.insert_many(rows[:100])
+        s = db.stats()
+        assert s["n_tables"] == 2
+        assert s["n_live"] == 300 == db.n_live
+        assert s["nbytes"] == t1.nbytes + t2.nbytes == db.nbytes
+        assert set(s["tables"]) == {"orderline", "ol2"}
+
+
+class TestMultiTableTPCC:
+    @pytest.fixture(scope="class")
+    def pop(self):
+        return tpcc.generate_tpcc(n_warehouses=2, districts_per_wh=2,
+                                  customers_per_district=30, n_items=80,
+                                  orders_per_district=12, seed=1)
+
+    @pytest.mark.parametrize("backend", ["silo", "blitzcrank", "raman"])
+    def test_mix_runs_and_agrees_across_backends(self, pop, backend):
+        db, _ = tpcc.build_tpcc_database(backend=backend, n_shards=2,
+                                         population=pop)
+        assert db.table_names == sorted(tpcc.TPCC_TABLES)
+        counts = tpcc.run_tpcc_mix(db, 150, seed=2)
+        assert counts["new_orders"] > 0 and counts["payments"] > 0
+        assert counts["order_lines"] >= 5 * counts["new_orders"]
+        # cross-table integrity: every inserted order's lines are readable
+        orders = db["orders"]
+        order_line = db["order_line"]
+        for ok, orow in list(orders.scan())[-20:]:
+            lk = [(ok[0], ok[1], ok[2], ln)
+                  for ln in range(1, orow["o_ol_cnt"] + 1)]
+            lines = order_line.get_many(lk)
+            assert all(l is not None for l in lines)
+            assert all(l["ol_o_id"] == ok[2] for l in lines)
+
+    def test_mix_deterministic_across_backends(self, pop):
+        counts = {}
+        for backend in ("silo", "blitzcrank"):
+            db, _ = tpcc.build_tpcc_database(backend=backend, n_shards=3,
+                                             population=pop)
+            counts[backend] = tpcc.run_tpcc_mix(db, 120, seed=5)
+        assert counts["silo"] == counts["blitzcrank"]
+
+    def test_zstd_backend_if_available(self, pop):
+        pytest.importorskip("zstandard")
+        db, _ = tpcc.build_tpcc_database(backend="zstd", n_shards=2,
+                                         population=pop)
+        counts = tpcc.run_tpcc_mix(db, 60, seed=3)
+        assert counts["ops"] == 60
+
+    def test_payment_moves_money(self, pop):
+        db, _ = tpcc.build_tpcc_database(backend="silo", population=pop)
+        w0 = db["warehouse"].get(1)["w_ytd"]
+        tpcc.run_tpcc_mix(db, 200, seed=4, p_new_order=0.0, p_payment=1.0,
+                          p_order_status=0.0, p_delivery=0.0)
+        assert db["warehouse"].get(1)["w_ytd"] > w0
+
+    def test_new_order_advances_district_and_stock(self, pop):
+        db, _ = tpcc.build_tpcc_database(backend="silo", population=pop)
+        before = {k: r["d_next_o_id"] for k, r in db["district"].scan()}
+        n_orders = db["orders"].n_live
+        tpcc.run_tpcc_mix(db, 120, seed=6, p_new_order=1.0, p_payment=0.0,
+                          p_order_status=0.0, p_delivery=0.0)
+        after = {k: r["d_next_o_id"] for k, r in db["district"].scan()}
+        assert db["orders"].n_live - n_orders == 120
+        assert sum(after[k] - before[k] for k in before) == 120

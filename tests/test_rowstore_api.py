@@ -240,6 +240,24 @@ class TestAccountingAndCounters:
         assert after >= before + 1
         assert store.get(i)["ol_dist_info"] == bad["ol_dist_info"]
 
+    def test_return_conventions_on_every_store(self):
+        """Protocol contract: insert_many -> range, delete_many -> count of
+        effective deletes, scalar delete -> bool, all idempotent."""
+        rows = GEN(120)
+        for kind, maker in _makers().items():
+            store = maker(SCHEMA, rows[:60])
+            ids = store.insert_many(rows)
+            assert isinstance(ids, range) and len(ids) == len(rows), kind
+            assert isinstance(store.insert(rows[0]), int)
+            assert store.delete(5) is True, kind
+            assert store.delete(5) is False, kind  # already dead
+            # repeats dedup, dead ids are no-ops: count is effective deletes
+            assert store.delete_many([5, 6, 6, 7]) == 2, kind
+            assert store.delete_many([5, 6, 7]) == 0, kind
+            with pytest.raises(KeyError):
+                store.get(6)
+            assert store.get_many([5, 6, 7, 8])[:3] == [None] * 3, kind
+
     def test_stats_protocol_keys_on_every_store(self):
         rows = GEN(120)
         for maker in _makers().values():
