@@ -10,7 +10,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import ColumnSpec, TableCodec
+from repro.core import TableCodec
 from repro.core.models import NumericModel, TimeSeriesModel, BlockEncoder
 from repro.core.delayed import encode_block
 from repro.oltp import tpcc

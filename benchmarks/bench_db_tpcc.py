@@ -22,7 +22,7 @@ CSV lines.
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import Dict
 
 import numpy as np
 

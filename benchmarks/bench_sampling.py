@@ -6,7 +6,6 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-import numpy as np
 
 from repro.core import TableCodec
 from repro.oltp import tpcc
@@ -15,13 +14,10 @@ from repro.oltp import tpcc
 def run(samples=(256, 1024, 4096, 16384), n_rows: int = 8000) -> List[Dict]:
     schema, gen = tpcc.TABLES["customer"]
     rows = gen(n_rows)
-    raw = tpcc.row_bytes(rows)
     out = []
     for s in samples:
-        t0 = time.perf_counter()
         codec = TableCodec.fit(rows, schema, correlation=True,
                                sample=min(s, n_rows))
-        fit_s = time.perf_counter() - t0
         t0 = time.perf_counter()
         nbytes = sum(2 * codec.compress_block([r]).size for r in rows[:1000])
         comp_s = time.perf_counter() - t0

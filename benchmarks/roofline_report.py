@@ -6,7 +6,7 @@ from __future__ import annotations
 import glob
 import json
 import pathlib
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 
 def load(results_dir: str = "results/dryrun") -> List[Dict]:

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import argparse
 import inspect
-import sys
 import time
 
 
@@ -28,8 +27,9 @@ def main() -> None:
                             bench_batch_decode, bench_compression,
                             bench_db_tpcc, bench_entropy_coders,
                             bench_fastpath, bench_framework,
-                            bench_granularity, bench_sampling,
-                            bench_update_merge, roofline_report)
+                            bench_granularity, bench_out_of_core,
+                            bench_sampling, bench_update_merge,
+                            roofline_report)
 
     if args.smoke:
         artifact.set_smoke(True)
@@ -40,6 +40,7 @@ def main() -> None:
         "update_merge": bench_update_merge,      # DESIGN.md §3 delta merge
         "adaptive_refit": bench_adaptive_refit,  # DESIGN.md §4 drift/refit
         "db_tpcc": bench_db_tpcc,                # DESIGN.md §5 engine, §6
+        "out_of_core": bench_out_of_core,        # DESIGN.md §6 cold tier
 
         "sampling": bench_sampling,              # Fig 10
         "entropy": bench_entropy_coders,         # Fig 11

@@ -13,6 +13,9 @@ Run:  PYTHONPATH=src python examples/oltp_store.py
       PYTHONPATH=src python examples/oltp_store.py --db    # full multi-table
                                                            # TPC-C through the
                                                            # repro.db engine
+      PYTHONPATH=src python examples/oltp_store.py --budget # out-of-core
+                                                           # cold tier under a
+                                                           # memory budget
 """
 
 import argparse
@@ -165,7 +168,39 @@ def multi_table_db(n_ops=1500):
           f"{ss['nbytes'] / 1024:9.1f} {ss['nbytes'] / s['nbytes']:7.2f}")
     print(f"\nwhole-database factor {ss['nbytes'] / s['nbytes']:.2f}x "
           f"(models {s['model_bytes'] / 1024:.0f} KiB reported separately); "
-          f"see BENCH_db_tpcc.json for the acceptance run.")
+          "see BENCH_db_tpcc.json for the acceptance run.")
+
+
+def out_of_core(budget_frac=0.25, n_ops=2000):
+    """Cold-tier demo (paper §6.4, DESIGN.md §6): cap the blitz store at a
+    fraction of its fully-resident size and watch cold blocks spill to
+    disk and fault back in while reads stay bit-identical."""
+    schema, gen = tpcc.TABLES["customer"]
+    rows = gen(6000)
+    ref = BlitzStore(schema, rows, sample=1 << 13)
+    ref.insert_many(rows)
+    budget = int(budget_frac * ref.stats()["nbytes"])
+    store = BlitzStore(schema, rows, sample=1 << 13, memory_budget=budget)
+    store.insert_many(rows)
+    t0 = time.perf_counter()
+    tpcc.run_transaction_mix(store, n_ops, seed=5)
+    dt = time.perf_counter() - t0
+    tpcc.run_transaction_mix(ref, n_ops, seed=5)  # same ops, uncapped
+    store.merge()
+    ref.merge()
+    s = store.stats()
+    res = s["residency"]
+    print(f"budget {budget / 1024:.0f} KiB "
+          f"({budget_frac:.0%} of the resident store)")
+    print(f"resident {s['nbytes'] / 1024:.0f} KiB (arena + overlay + "
+          f"metadata), spilled {s['spilled_bytes'] / 1024:.0f} KiB on disk "
+          f"({res['spilled_blocks']} blocks)")
+    print(f"{n_ops} zipfian ops in {dt:.2f}s: {res['faults']} faults in "
+          f"{res['fault_batches']} grouped reads, {res['spills']} spills")
+    probe = list(range(0, len(rows), 7))
+    ok = store.get_many(probe) == ref.get_many(probe)
+    print(f"reads bit-identical to the uncapped store: {ok}; "
+          "see BENCH_out_of_core.json for the Fig. 15-style run.")
 
 
 def main():
@@ -179,8 +214,13 @@ def main():
     ap.add_argument("--db", action="store_true",
                     help="full multi-table TPC-C through the repro.db "
                          "engine (catalog + hash-partitioned shards)")
+    ap.add_argument("--budget", action="store_true",
+                    help="out-of-core cold tier: spill/fault under a "
+                         "memory budget (DESIGN.md §6)")
     args = ap.parse_args()
-    if args.db:
+    if args.budget:
+        out_of_core()
+    elif args.db:
         multi_table_db()
     elif args.drift:
         drifting_mix()

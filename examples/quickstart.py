@@ -11,7 +11,7 @@ import time
 
 import numpy as np
 
-from repro.core import ColumnSpec, CompressedTable, TableCodec
+from repro.core import CompressedTable, TableCodec
 from repro.core.coders import DiscreteCoder, quantize_freqs
 from repro.core.vectorized import decode_batch, encode_batch
 from repro.oltp import tpcc
@@ -27,7 +27,7 @@ def main():
     # 2. Fit: Semantic Learner (structure learning + model generation)
     codec = TableCodec.fit(rows, schema, correlation=True, sample=2048)
     print(f"column order: {codec.stats.order}")
-    print(f"learned parents: "
+    print("learned parents: "
           f"{ {k: v for k, v in codec.stats.parents.items() if v} }")
     print(f"model size: {codec.model_bytes() / 1024:.0f} KiB, "
           f"fit time: {codec.stats.structuring_s + codec.stats.generation_s:.2f}s")

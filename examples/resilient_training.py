@@ -6,7 +6,6 @@ Run:  PYTHONPATH=src python examples/resilient_training.py
 
 import tempfile
 
-import numpy as np
 
 from repro.configs import reduced_config
 from repro.data.pipeline import (CompressedExampleStore, SyntheticLM,

@@ -5,8 +5,10 @@ refitter to a store that speaks three verbs:
 
 * ``codec``                — the current (newest) :class:`TableCodec`;
 * ``install_codec(codec)`` — make a refit codec the new current version;
-* ``migrate(limit)``       — re-encode up to ``limit`` stale escaped rows
-                             under the newest plan (returns rows migrated).
+* ``migrate(limit, resident_only=...)`` — re-encode up to ``limit`` stale
+                             escaped rows under the newest plan (returns
+                             rows migrated); ``resident_only`` keeps the
+                             background work off any spilled cold tier.
 
 ``BlitzStore`` provides all three and drives :meth:`maybe_step` from its
 write path (piggybacking on the same cadence as ``_maybe_merge``), so a
@@ -31,6 +33,12 @@ class MaintenanceConfig:
     reservoir_size: int = 4096     # recent-write sample the refitter trains on
     min_refit_rows: int = 256      # don't refit on a thinner sample
     migrate_rows_per_step: int = 1024  # opportunistic migration budget
+    # Under a memory budget (DESIGN.md §6), migration only touches
+    # *resident* stale blocks: faulting cold blocks in for a background
+    # re-encode would evict the workload's hot set — maintenance must
+    # never thrash the cache.  Spilled stale rows migrate when the
+    # workload itself faults them back.
+    migrate_resident_only: bool = True
     max_versions: int = 16         # hard cap on installed plan versions
     numeric_headroom: float = 0.5  # range padding on numeric refits
     # Futility freeze: after a refit, the column's escape rate in the next
@@ -139,7 +147,9 @@ class MaintenanceScheduler:
                     self._pending_eval = list(drifted)
                     for c in drifted:
                         self._rate_at_refit[c] = rates.get(c, 0.0)
-        migrated = self.store.migrate(cfg.migrate_rows_per_step)
+        migrated = self.store.migrate(
+            cfg.migrate_rows_per_step,
+            resident_only=cfg.migrate_resident_only)
         self.migrated_rows += migrated
         return {
             "step": self.steps,

@@ -21,9 +21,8 @@ ring-algorithm accounting on the per-device (post-SPMD) shapes:
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 # TPU v5e hardware constants (task statement)
 PEAK_FLOPS = 197e12          # bf16 per chip
@@ -107,7 +106,6 @@ def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
         for k in _COLLECTIVE_KINDS:
             if re.search(rf"[\s(]({k}(-start|-done)?)\(", " " + stripped):
                 kind = k
-                start_done = f"{k}-done" in stripped
                 break
         if kind is None or f"{kind}-done" in stripped:
             continue  # count -start once, skip -done

@@ -17,6 +17,7 @@ from .vectorized import CondSlot, decode_batch, decode_select, encode_batch
 from .models import (BlockEncoder, ByteMarkov, CategoricalModel,
                      ConditionalCategoricalModel, NumericModel, StringModel,
                      TimeSeriesModel)
+from .arena import DiskArena, ResidencyConfig, ResidencyManager
 from .blitzcrank import (ColumnSpec, CompressedTable, FitStats, TableCodec,
                          fit_column_model)
 from .plan import PlanFallback, TablePlan, compile_plan
@@ -30,5 +31,6 @@ __all__ = [
     "ConditionalCategoricalModel", "NumericModel", "StringModel",
     "TimeSeriesModel", "ColumnSpec", "CompressedTable", "FitStats",
     "TableCodec", "fit_column_model", "PlanFallback", "TablePlan",
-    "compile_plan", "learn_order",
+    "compile_plan", "learn_order", "DiskArena", "ResidencyConfig",
+    "ResidencyManager",
 ]

@@ -1,0 +1,303 @@
+"""Out-of-core cold tier (paper §6.4): a paged on-disk arena + clock policy.
+
+The paper's final claim is that for data sets larger than physical memory,
+Blitzcrank "helps the database sustain a high throughput for more
+transactions before the I/O overhead dominates".  This module provides the
+two pieces the stores need to reproduce that experiment:
+
+* :class:`DiskArena` — an append-only, page-aligned spill file holding the
+  compressed code runs of cold blocks.  Extents are byte-addressed
+  ``(offset, length)`` pairs owned by the caller; freed extents are
+  accounted and reclaimed by an in-place ascending compaction
+  (:meth:`compact`), so the file never grows without bound.  Victim runs
+  are always written in arena byte order (ascending in-memory offset), so
+  blocks that were adjacent in the memory arena stay adjacent on disk and
+  a fault over a contiguous range coalesces into one read.
+
+* :class:`ResidencyManager` — the policy half: a memory budget, a
+  clock/second-chance hand over per-block referenced bits, and the
+  spill/fault counters surfaced through ``stats()``.  The sweep itself is
+  driven by the owning store (it owns the per-block arrays); the manager
+  decides *how much* to free and records what happened.
+
+The residency lifecycle of a block (DESIGN.md §6)::
+
+    resident --(clock finds ref=0)--> spilled --(get_many miss)--> faulted
+       ^                                 |                            |
+       +--------- rewrite() keeps tags --+----------- promoted ------+
+
+Hot-path invariant: a fault costs one (coalesced) disk read plus one
+vectorized batch decode — never per-row work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+# Spill segments are aligned to this many bytes so compaction and
+# sequential fault-in behave like page I/O rather than byte soup.
+PAGE_BYTES = 4096
+
+
+class DiskArena:
+    """Append-only spill file with free-extent accounting and compaction.
+
+    ``path=None`` (the default) uses an anonymous temp file that the OS
+    reclaims when the arena is closed or the process exits — spill data
+    never outlives the store that wrote it.  All offsets and lengths are
+    in bytes.
+    """
+
+    def __init__(self, path: Optional[str] = None, page_bytes: int = PAGE_BYTES):
+        if page_bytes <= 0:
+            raise ValueError("page_bytes must be positive")
+        self.page_bytes = int(page_bytes)
+        if path is None:
+            self._file = tempfile.TemporaryFile(prefix="blitz-spill-")
+        else:
+            self._file = open(path, "w+b")
+        self._fd = self._file.fileno()
+        self._tail = 0  # next unallocated byte (page-aligned per segment)
+        self._live = 0  # live payload bytes
+        self._freed = 0  # dead payload bytes awaiting compaction
+        self.writes = 0
+        self.reads = 0
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self.compactions = 0
+
+    # -- allocation ------------------------------------------------------
+    def write(self, payload: bytes) -> int:
+        """Append one segment, returning its byte offset.
+
+        Segments start page-aligned; interior layout (many block runs per
+        segment) is the caller's business.
+        """
+        off = -self._tail % self.page_bytes + self._tail
+        n = len(payload)
+        os.pwrite(self._fd, payload, off)
+        self._tail = off + n
+        self._live += n
+        self.writes += 1
+        self.bytes_written += n
+        return off
+
+    def free(self, offset: int, length: int) -> None:
+        """Mark ``length`` bytes at ``offset`` dead (reclaimed at compact)."""
+        self._live -= int(length)
+        self._freed += int(length)
+
+    # -- reads -----------------------------------------------------------
+    def read(self, offset: int, length: int) -> bytes:
+        self.reads += 1
+        self.bytes_read += int(length)
+        return os.pread(self._fd, int(length), int(offset))
+
+    def read_many(self, offsets: Sequence[int], lengths: Sequence[int]) -> List[bytes]:
+        """Batched extent reads, coalescing adjacent extents into one I/O.
+
+        Returns payloads in request order.  Extents written in arena byte
+        order by one spill sweep are adjacent on disk, so faulting a range
+        of once-neighboring blocks costs one ``pread``, not N.
+        """
+        offs = np.asarray(list(offsets), dtype=np.int64)
+        lens = np.asarray(list(lengths), dtype=np.int64)
+        n = offs.size
+        out: List[Optional[bytes]] = [None] * n
+        if not n:
+            return []
+        order = np.argsort(offs, kind="stable")
+        j = 0
+        while j < n:
+            # grow a contiguous disk range [start, end)
+            k = j
+            start = int(offs[order[j]])
+            end = start + int(lens[order[j]])
+            while k + 1 < n and int(offs[order[k + 1]]) == end:
+                k += 1
+                end += int(lens[order[k]])
+            buf = self.read(start, end - start)
+            pos = 0
+            for m in range(j, k + 1):
+                nxt = pos + int(lens[order[m]])
+                out[int(order[m])] = buf[pos:nxt]
+                pos = nxt
+            j = k + 1
+        return out  # type: ignore[return-value]
+
+    # -- compaction ------------------------------------------------------
+    @property
+    def needs_compact(self) -> bool:
+        return self._freed > max(1 << 20, self._live)
+
+    def compact(self, offsets: Sequence[int], lengths: Sequence[int]) -> List[int]:
+        """Rewrite the live extents densely from byte 0, in place.
+
+        Extents are moved in ascending offset order and packed with NO
+        page alignment: the write cursor is then always <= the sum of the
+        already-moved extents' lengths, which is <= the current extent's
+        old offset — it can never overtake an unread live extent, so the
+        move is safe without a second file.  (Aligning here would break
+        that invariant and overwrite live data.)  Returns the new offsets
+        in request order and truncates the file.
+        """
+        offs = np.asarray(list(offsets), dtype=np.int64)
+        lens = np.asarray(list(lengths), dtype=np.int64)
+        order = np.argsort(offs, kind="stable")
+        new_offs = [0] * offs.size
+        cursor = 0
+        for m in order:
+            off, ln = int(offs[m]), int(lens[m])
+            if cursor != off:
+                os.pwrite(self._fd, os.pread(self._fd, ln, off), cursor)
+            new_offs[int(m)] = cursor
+            cursor += ln
+        self._file.truncate(cursor)
+        self._tail = cursor
+        self._live = int(lens.sum())
+        self._freed = 0
+        self.compactions += 1
+        return new_offs
+
+    # -- accounting ------------------------------------------------------
+    @property
+    def live_bytes(self) -> int:
+        return self._live
+
+    @property
+    def file_bytes(self) -> int:
+        """Allocated file span (live + dead + alignment padding)."""
+        return self._tail
+
+    def close(self) -> None:
+        try:
+            self._file.close()
+        except Exception:
+            pass
+
+    def __del__(self):  # pragma: no cover - GC timing dependent
+        self.close()
+
+
+@dataclasses.dataclass
+class ResidencyConfig:
+    """Policy knobs for the cold tier (DESIGN.md §6)."""
+
+    # Spill down to this fraction of the budget once over it, so every
+    # insert batch doesn't trigger a sweep (hysteresis).
+    low_water: float = 0.9
+    # Physical arenas hold dead/spilled residue until rewrite(); force a
+    # compaction once the physical footprint passes budget + slack.
+    slack_frac: float = 0.25
+    slack_min_bytes: int = 1 << 16
+    # Clock sweep chunk: candidates examined per vectorized step.
+    sweep_chunk: int = 2048
+
+
+class ResidencyManager:
+    """Budget + clock state + counters for one store's cold tier.
+
+    The owning store keeps the per-block arrays (referenced bits, disk
+    offsets, residency flags) because they must grow and be permuted with
+    its other per-block metadata; the manager owns the budget arithmetic,
+    the clock hand, the spill file, and the observability counters.
+    """
+
+    def __init__(
+        self,
+        budget_bytes: int,
+        spill_path: Optional[str] = None,
+        config: Optional[ResidencyConfig] = None,
+    ):
+        if budget_bytes <= 0:
+            raise ValueError("memory_budget must be positive")
+        self.budget = int(budget_bytes)
+        self.config = config or ResidencyConfig()
+        self.disk = DiskArena(spill_path)
+        self.hand = 0
+        self.spills = 0  # blocks spilled
+        self.spill_sweeps = 0
+        self.faults = 0  # blocks faulted back in
+        self.fault_batches = 0
+        self.scalar_faults = 0  # read-through scalar block reads
+
+    # -- budget arithmetic ----------------------------------------------
+    @property
+    def budget_codes(self) -> int:
+        """The budget expressed in uint16 code units."""
+        return self.budget // 2
+
+    @property
+    def target_codes(self) -> int:
+        return int(self.config.low_water * self.budget_codes)
+
+    @property
+    def slack_bytes(self) -> int:
+        return max(
+            self.config.slack_min_bytes,
+            int(self.config.slack_frac * self.budget),
+        )
+
+    # -- the clock/second-chance sweep (shared by every store) -----------
+    def sweep(self, n_items, need, candidates, sizes, ref_get, ref_clear):
+        """Pick victims worth >= ``need`` size units via two clock passes.
+
+        Items are ids in ``[0, n_items)``; the callbacks are vectorized
+        over id arrays: ``candidates(ids) -> bool mask`` (spillable now),
+        ``sizes(ids) -> int64 sizes``, ``ref_get(ids) -> bool mask`` and
+        ``ref_clear(ids)`` over the caller-owned referenced bits.  A
+        referenced candidate gets its bit cleared and one more chance;
+        pass two takes it.  Items picked in an earlier chunk are excluded
+        when the hand wraps — a victim is chosen at most once per sweep
+        (the caller marks them spilled only after the sweep returns).
+        Advances :attr:`hand`; returns the victim ids in pick order.
+        """
+        if n_items <= 0 or need <= 0:
+            return np.zeros(0, dtype=np.int64)
+        self.spill_sweeps += 1
+        chunk = self.config.sweep_chunk
+        picked = np.zeros(n_items, dtype=bool)
+        victims = []
+        freed = 0
+        hand = self.hand % n_items
+        scanned = 0
+        limit = 2 * n_items + chunk  # two full passes: clear refs, take
+        while freed < need and scanned < limit:
+            ids = np.arange(hand, min(hand + chunk, n_items), dtype=np.int64)
+            hand = int(ids[-1] + 1) % n_items
+            scanned += ids.size
+            cand = candidates(ids) & ~picked[ids]
+            refd = cand & ref_get(ids)
+            ref_clear(ids[refd])
+            pick = cand & ~refd
+            if pick.any():
+                pids = ids[pick]
+                csum = np.cumsum(sizes(pids))
+                k = min(int(np.searchsorted(csum, need - freed)) + 1, pids.size)
+                picked[pids[:k]] = True
+                victims.append(pids[:k])
+                freed += int(csum[k - 1])
+        self.hand = hand
+        if victims:
+            return np.concatenate(victims)
+        return np.zeros(0, dtype=np.int64)
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "budget_bytes": self.budget,
+            "spills": self.spills,
+            "spill_sweeps": self.spill_sweeps,
+            "faults": self.faults,
+            "fault_batches": self.fault_batches,
+            "scalar_faults": self.scalar_faults,
+            "disk_live_bytes": self.disk.live_bytes,
+            "disk_file_bytes": self.disk.file_bytes,
+            "disk_reads": self.disk.reads,
+            "disk_writes": self.disk.writes,
+            "disk_compactions": self.disk.compactions,
+        }

@@ -18,7 +18,7 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from .coders import TOTAL, TOTAL_BITS, DiscreteCoder, UniformCoder
+from .coders import TOTAL, TOTAL_BITS, UniformCoder
 
 
 def _cdf_bounds(coder, sym: int) -> Tuple[int, int]:

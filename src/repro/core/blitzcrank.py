@@ -19,7 +19,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import delayed
-from .coders import TOTAL_BITS
+from .arena import ResidencyConfig, ResidencyManager
 from .delayed import BlockDecoder
 from .models import (BlockEncoder, CategoricalModel, ConditionalCategoricalModel,
                      NumericModel, StringModel, TimeSeriesModel)
@@ -360,7 +360,10 @@ class CompressedTable:
     PALLAS_MIN_ROWS = 4096  # auto mode: below this, numpy always wins
 
     def __init__(self, codec: TableCodec, capacity_hint: int = 1 << 16,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None,
+                 memory_budget: Optional[int] = None,
+                 spill_path: Optional[str] = None,
+                 residency: Optional[ResidencyConfig] = None):
         # Versioned codecs (DESIGN.md §4): writes always encode under the
         # newest codec; every block carries the version it was encoded with
         # so older blocks stay readable after a refit installs a new codec.
@@ -383,6 +386,21 @@ class CompressedTable:
         self._n_deleted = 0
         self.rewrites = 0
         self.migrated_rows = 0
+        # Out-of-core cold tier (DESIGN.md §6): when a memory budget is
+        # set, cold blocks spill their code runs to a DiskArena and fault
+        # back in on access.  The per-block arrays below only exist while
+        # a ResidencyManager is installed.
+        self._res: Optional[ResidencyManager] = None
+        self._resident: Optional[np.ndarray] = None   # bool[cap]
+        self._disk_off: Optional[np.ndarray] = None   # int64[cap], bytes
+        self._disk_len: Optional[np.ndarray] = None   # int64[cap], codes
+        self._ref: Optional[np.ndarray] = None        # uint8[cap], clock bit
+        self._block2row: Optional[np.ndarray] = None  # int64[cap], -1=orphan
+        self._spilled_codes = 0
+        self._in_enforce = False
+        if memory_budget is not None:
+            self.set_memory_budget(memory_budget, spill_path=spill_path,
+                                   config=residency)
 
     # -- codec versions (DESIGN.md §4) -----------------------------------
     @property
@@ -431,7 +449,8 @@ class CompressedTable:
         vers, counts = np.unique(self._plan_ver[live], return_counts=True)
         return {int(v): int(c) for v, c in zip(vers, counts)}
 
-    def migrate_rows(self, limit: int = 1 << 12) -> int:
+    def migrate_rows(self, limit: int = 1 << 12,
+                     resident_only: bool = True) -> int:
         """Re-encode up to ``limit`` stale rows under the newest plan.
 
         Candidates are live rows whose block is tagged with an older version
@@ -439,7 +458,12 @@ class CompressedTable:
         superseded it is the first realistic chance to encode them fast
         (plus reclaim their oversized escape runs at the next rewrite).
         Old *fast* blocks are left alone: their codes are already tight and
-        every installed version stays decodable.  Returns rows migrated.
+        every installed version stays decodable.  Under a memory budget,
+        ``resident_only`` (the default) keeps maintenance off the cold
+        tier: faulting spilled blocks in just to re-encode them would
+        evict the workload's hot set — cache thrash for a background
+        chore.  Spilled stale blocks migrate when the workload itself
+        faults them.  Returns rows migrated.
         """
         self._require_mutable("migrate_rows")
         if limit <= 0 or self.current_version == 0:
@@ -450,6 +474,8 @@ class CompressedTable:
         blks = r2b[live]
         stale = (self._plan_ver[blks] < self.current_version) \
             & ~self._fast[blks]
+        if resident_only and self._res is not None:
+            stale &= self._resident[blks]
         rows_idx = np.nonzero(live)[0][stale][:limit]
         if not rows_idx.size:
             return 0
@@ -464,6 +490,181 @@ class CompressedTable:
             self.replace_many(rows_idx, rows)
         self.migrated_rows += int(rows_idx.size)
         return int(rows_idx.size)
+
+    # -- out-of-core residency (DESIGN.md §6) ----------------------------
+    @property
+    def memory_budget(self) -> Optional[int]:
+        return self._res.budget if self._res is not None else None
+
+    @property
+    def spilled_bytes(self) -> int:
+        """Compressed payload bytes currently living on disk (not memory)."""
+        return 2 * self._spilled_codes
+
+    def set_memory_budget(self, budget: int,
+                          spill_path: Optional[str] = None,
+                          config: Optional[ResidencyConfig] = None) -> None:
+        """Install a residency manager bounding live resident code bytes.
+
+        Single-tuple granularity only (the spill unit is the block and
+        fault-in re-points rows at freshly appended blocks, which needs
+        the mutation machinery).  Can be enabled at any point in the
+        table's life; existing blocks start resident-and-referenced and
+        the first enforcement sweeps them against the budget.
+        """
+        self._require_mutable("set_memory_budget")
+        if self._res is not None:
+            raise ValueError("memory budget already set")
+        self.flush()
+        self._res = ResidencyManager(budget, spill_path, config)
+        cap = self._offsets.size - 1
+        self._resident = np.ones(cap, dtype=bool)
+        self._disk_off = np.full(cap, -1, dtype=np.int64)
+        self._disk_len = np.zeros(cap, dtype=np.int64)
+        self._ref = np.ones(cap, dtype=np.uint8)
+        self._block2row = np.full(cap, -1, dtype=np.int64)
+        live = np.nonzero(self._row2block[:self._rows_stored] >= 0)[0]
+        self._block2row[self._row2block[live]] = live
+        self._spilled_codes = 0
+        self._enforce_budget()
+
+    def _init_new_blocks(self, first: int, n: int,
+                         rows: Optional[np.ndarray]) -> None:
+        """Fresh blocks are resident and referenced (recently written)."""
+        if self._res is None:
+            return
+        self._resident[first:first + n] = True
+        self._disk_off[first:first + n] = -1
+        self._disk_len[first:first + n] = 0
+        self._ref[first:first + n] = 1
+        self._block2row[first:first + n] = -1 if rows is None else rows
+
+    def _enforce_budget(self) -> None:
+        """Spill cold blocks until live resident codes fit the budget, then
+        physically reclaim the arena once residue outgrows the slack."""
+        res = self._res
+        if res is None or self._in_enforce:
+            return
+        self._in_enforce = True
+        try:
+            if self.used - self._dead_codes > res.budget_codes:
+                self._spill_until(res.target_codes)
+            # Spilled/dead residue stays in the memory arena until a
+            # rewrite; force one when physical footprint passes the slack.
+            if self._dead_codes and 2 * self.used > res.budget \
+                    + res.slack_bytes:
+                self.rewrite()
+            self._maybe_compact_disk()
+        finally:
+            self._in_enforce = False
+
+    def _spill_until(self, target_codes: int) -> None:
+        """Spill cold blocks via the shared clock sweep: victims are live
+        resident blocks whose referenced bit is clear (DESIGN.md §6)."""
+        res = self._res
+        need = (self.used - self._dead_codes) - target_codes
+
+        def candidates(ids: np.ndarray) -> np.ndarray:
+            lens = self._offsets[ids + 1] - self._offsets[ids]
+            rows = self._block2row[ids]
+            cand = self._resident[ids] & (lens > 0) & (rows >= 0)
+            if cand.any():
+                ok = np.zeros_like(cand)
+                ok[cand] = self._row2block[rows[cand]] == ids[cand]
+                cand = ok
+            return cand
+
+        victims = res.sweep(
+            self.n_blocks, need, candidates,
+            lambda ids: self._offsets[ids + 1] - self._offsets[ids],
+            lambda ids: self._ref[ids] != 0,
+            lambda ids: self._ref.__setitem__(ids, 0))
+        if victims.size:
+            self._spill_blocks(victims)
+
+    def _spill_blocks(self, blocks: np.ndarray) -> None:
+        """Write the victims' code runs to disk in arena byte order (one
+        coalesced segment write) and mark them non-resident.  Their
+        in-memory runs become dead bytes until the next rewrite."""
+        res = self._res
+        order = np.argsort(self._offsets[blocks], kind="stable")
+        blocks = blocks[order]
+        starts = self._offsets[blocks]
+        lens = self._offsets[blocks + 1] - starts
+        total = int(lens.sum())
+        new_off = np.zeros(blocks.size + 1, dtype=np.int64)
+        np.cumsum(lens, out=new_off[1:])
+        gather = np.repeat(starts - new_off[:-1], lens) + np.arange(total)
+        base = res.disk.write(self.arena[gather].tobytes())
+        self._disk_off[blocks] = base + 2 * new_off[:-1]
+        self._disk_len[blocks] = lens
+        self._resident[blocks] = False
+        self._dead_codes += total
+        self._spilled_codes += total
+        res.spills += int(blocks.size)
+
+    def _fault_in(self, blocks: np.ndarray) -> None:
+        """Promote spilled blocks: one coalesced disk read, then append the
+        runs back into the memory arena as fresh physical blocks carrying
+        their fast/version tags, and re-point their rows.  The batched
+        decode path then serves them exactly like always-resident blocks —
+        a miss costs one read plus one vectorized decode, never per-row
+        work."""
+        res = self._res
+        lens = self._disk_len[blocks].copy()
+        offs_old = self._disk_off[blocks].copy()
+        payloads = res.disk.read_many(offs_old, 2 * lens)
+        total = int(lens.sum())
+        buf = np.empty(total, dtype=np.uint16)
+        pos = 0
+        for j in range(blocks.size):
+            ln = int(lens[j])
+            buf[pos:pos + ln] = np.frombuffer(payloads[j], dtype=np.uint16)
+            pos += ln
+        n = int(blocks.size)
+        base = self.used
+        self._append_codes(buf)
+        self._grow_index(n)
+        first = self.n_blocks
+        self._offsets[first + 1:first + 1 + n] = base + np.cumsum(lens)
+        self._fast[first:first + n] = self._fast[blocks]
+        self._plan_ver[first:first + n] = self._plan_ver[blocks]
+        rows = self._block2row[blocks]
+        self._init_new_blocks(first, n, rows)
+        self.n_blocks += n
+        self.block_rows.extend([1] * n)
+        self._row2block[rows] = np.arange(first, first + n)
+        # the old slots are orphans now; their disk extents are freed
+        self._block2row[blocks] = -1
+        self._resident[blocks] = True
+        self._disk_off[blocks] = -1
+        self._disk_len[blocks] = 0
+        for o, ln in zip(offs_old.tolist(), lens.tolist()):
+            res.disk.free(o, 2 * ln)
+        self._spilled_codes -= total
+        res.faults += n
+        res.fault_batches += 1
+
+    def _maybe_compact_disk(self) -> None:
+        res = self._res
+        if res is None or not res.disk.needs_compact:
+            return
+        spilled = np.nonzero(~self._resident[:self.n_blocks])[0]
+        new_offs = res.disk.compact(self._disk_off[spilled],
+                                    2 * self._disk_len[spilled])
+        self._disk_off[spilled] = np.asarray(new_offs, dtype=np.int64)
+
+    def residency(self) -> Dict[str, Any]:
+        """Cold-tier observability: budget, resident/spilled split, faults."""
+        if self._res is None:
+            return {}
+        out = self._res.stats()
+        out.update(
+            resident_bytes=self.nbytes,
+            spilled_bytes=self.spilled_bytes,
+            spilled_blocks=int((~self._resident[:self.n_blocks]).sum()),
+        )
+        return out
 
     # -- storage helpers -------------------------------------------------
     def _append_codes(self, codes: np.ndarray) -> None:
@@ -488,6 +689,21 @@ class CompressedTable:
             ver = np.zeros(cap - 1, dtype=np.uint16)
             ver[:self.n_blocks] = self._plan_ver[:self.n_blocks]
             self._plan_ver = ver
+            if self._res is not None:
+                nb = self.n_blocks
+                resident = np.ones(cap - 1, dtype=bool)
+                resident[:nb] = self._resident[:nb]
+                doff = np.full(cap - 1, -1, dtype=np.int64)
+                doff[:nb] = self._disk_off[:nb]
+                dlen = np.zeros(cap - 1, dtype=np.int64)
+                dlen[:nb] = self._disk_len[:nb]
+                ref = np.zeros(cap - 1, dtype=np.uint8)
+                ref[:nb] = self._ref[:nb]
+                b2r = np.full(cap - 1, -1, dtype=np.int64)
+                b2r[:nb] = self._block2row[:nb]
+                self._resident, self._disk_off, self._disk_len = \
+                    resident, doff, dlen
+                self._ref, self._block2row = ref, b2r
 
     def _grow_rows(self, n_new: int) -> None:
         need = self._rows_stored + n_new
@@ -508,6 +724,8 @@ class CompressedTable:
         if self.codec.block_tuples == 1:
             self._grow_rows(n_rows)
             self._row2block[self._rows_stored] = self.n_blocks - 1
+            self._init_new_blocks(self.n_blocks - 1, 1,
+                                  np.asarray([self._rows_stored]))
         self._rows_stored += n_rows
 
     @property
@@ -543,12 +761,16 @@ class CompressedTable:
             base + offsets[1:]
         self._fast[self.n_blocks:self.n_blocks + n] = fast
         self._plan_ver[self.n_blocks:self.n_blocks + n] = self.current_version
+        self._init_new_blocks(self.n_blocks, n,
+                              np.arange(self._rows_stored,
+                                        self._rows_stored + n))
         self._grow_rows(n)
         self._row2block[self._rows_stored:self._rows_stored + n] = \
             np.arange(self.n_blocks, self.n_blocks + n)
         self.n_blocks += n
         self.block_rows.extend([1] * n)
         self._rows_stored += n
+        self._enforce_budget()
 
     def flush(self) -> None:
         if not self._pending:
@@ -561,6 +783,7 @@ class CompressedTable:
                 and plan.row_conforms(rows[0]))
         codes = self.codec._scalar_compress(rows)
         self._append_block(codes, len(rows), fast)
+        self._enforce_budget()
 
     def __len__(self) -> int:
         return self._rows_stored + len(self._pending)
@@ -586,8 +809,24 @@ class CompressedTable:
             return self.get_block(b)[i % bt]
         return dict(self._pending[i - bt * self.n_blocks])
 
+    def _block_codes(self, b: int) -> np.ndarray:
+        """A block's code run — read through to disk for spilled blocks.
+
+        Scalar reads never promote (no row re-pointing): a point lookup of
+        one cold block costs one pread, and the batched :meth:`get_many`
+        path is the one that faults blocks back to residency.
+        """
+        if self._res is not None:
+            if not self._resident[b]:
+                self._res.scalar_faults += 1
+                raw = self._res.disk.read(int(self._disk_off[b]),
+                                          2 * int(self._disk_len[b]))
+                return np.frombuffer(raw, dtype=np.uint16)
+            self._ref[b] = 1
+        return self.arena[self._offsets[b]:self._offsets[b + 1]]
+
     def get_block(self, b: int) -> List[Dict[str, Any]]:
-        codes = self.arena[self._offsets[b]:self._offsets[b + 1]]
+        codes = self._block_codes(b)
         codec = self._codecs[self._plan_ver[b]]  # decode under the block's
         return codec.decompress_block(codes, self.block_rows[b])  # own plan
 
@@ -636,6 +875,17 @@ class CompressedTable:
             in_store = idx_arr < self._rows_stored
             blks = np.full(n, -2, dtype=np.int64)
             blks[in_store] = self._row2block[idx_arr[in_store]]
+            if self._res is not None:
+                # grouped fault-in: every spilled block this batch needs is
+                # promoted with ONE coalesced read, then decoded below by
+                # the same vectorized decode_select as resident blocks
+                sb = blks[blks >= 0]
+                if sb.size:
+                    cold = np.unique(sb[~self._resident[sb]])
+                    if cold.size:
+                        self._fault_in(cold)
+                        blks[in_store] = self._row2block[idx_arr[in_store]]
+                    self._ref[blks[blks >= 0]] = 1  # clock: referenced
             fmask = np.zeros(n, dtype=bool)
             stored = blks >= 0
             if stored.any():
@@ -678,6 +928,8 @@ class CompressedTable:
                 # duplicate indices get independent dicts, matching get()
                 out[j] = blk[off] if off not in seen else dict(blk[off])
                 seen.add(off)
+        if self._res is not None:
+            self._enforce_budget()  # fault-ins may have overrun the budget
         return out
 
     # -- mutation path (DESIGN.md §3; single-tuple granularity only) -----
@@ -688,7 +940,25 @@ class CompressedTable:
                 "share code runs across rows)")
 
     def _retire_blocks(self, blocks: np.ndarray) -> None:
-        """Account the code runs of abandoned physical blocks as dead."""
+        """Account the code runs of abandoned physical blocks as dead.
+
+        A spilled block's in-memory run was already counted dead when it
+        spilled, so retiring it only frees its disk extent."""
+        if not blocks.size:
+            return
+        if self._res is not None:
+            self._block2row[blocks] = -1
+            sp = ~self._resident[blocks]
+            if sp.any():
+                cold = blocks[sp]
+                for o, ln in zip(self._disk_off[cold].tolist(),
+                                 self._disk_len[cold].tolist()):
+                    self._res.disk.free(o, 2 * ln)
+                self._spilled_codes -= int(self._disk_len[cold].sum())
+                self._resident[cold] = True
+                self._disk_off[cold] = -1
+                self._disk_len[cold] = 0
+                blocks = blocks[~sp]
         if blocks.size:
             self._dead_codes += int(
                 (self._offsets[blocks + 1] - self._offsets[blocks]).sum())
@@ -724,6 +994,7 @@ class CompressedTable:
         self._offsets[first + 1:first + 1 + n] = base + offsets[1:]
         self._fast[first:first + n] = fast
         self._plan_ver[first:first + n] = self.current_version
+        self._init_new_blocks(first, n, idx)
         self.n_blocks += n
         self.block_rows.extend([1] * n)
         old = self._row2block[idx]
@@ -731,6 +1002,7 @@ class CompressedTable:
         self._retire_blocks(old[live])
         self._n_deleted -= int(n - np.count_nonzero(live))  # resurrections
         self._row2block[idx] = np.arange(first, first + n)
+        self._enforce_budget()
 
     def delete_many(self, indices: Sequence[int]) -> int:
         """Tombstone rows: their code runs become dead bytes.  Returns the
@@ -770,7 +1042,10 @@ class CompressedTable:
 
     def rewrite(self) -> int:
         """Compact the arena: copy live runs, drop dead ones, renumber
-        physical blocks.  Returns the number of bytes reclaimed."""
+        physical blocks.  Spilled blocks survive as zero-length resident
+        runs carrying their residency tags (disk extent, fast flag, plan
+        version) — compaction never forces a fault-in.  Returns the number
+        of bytes reclaimed."""
         self._require_mutable("rewrite")
         self.flush()
         reclaimed = self.dead_bytes
@@ -779,6 +1054,10 @@ class CompressedTable:
         blks = self._row2block[live_rows]
         starts = self._offsets[blks]
         lens = self._offsets[blks + 1] - starts
+        res = self._res
+        if res is not None:
+            res_mask = self._resident[blks]
+            lens = np.where(res_mask, lens, 0)  # spilled: no memory run
         total = int(lens.sum())
         new_off = np.zeros(live_rows.size + 1, dtype=np.int64)
         np.cumsum(lens, out=new_off[1:])
@@ -792,6 +1071,22 @@ class CompressedTable:
         fast[:nb] = self._fast[blks]
         ver = np.zeros(offs.size - 1, dtype=np.uint16)
         ver[:nb] = self._plan_ver[blks]  # tags survive compaction
+        if res is not None:
+            resident = np.ones(offs.size - 1, dtype=bool)
+            resident[:nb] = res_mask
+            doff = np.full(offs.size - 1, -1, dtype=np.int64)
+            doff[:nb] = np.where(res_mask, -1, self._disk_off[blks])
+            dlen = np.zeros(offs.size - 1, dtype=np.int64)
+            dlen[:nb] = np.where(res_mask, 0, self._disk_len[blks])
+            ref = np.zeros(offs.size - 1, dtype=np.uint8)
+            ref[:nb] = self._ref[blks]
+            b2r = np.full(offs.size - 1, -1, dtype=np.int64)
+            b2r[:nb] = live_rows
+            self._resident, self._disk_off, self._disk_len = \
+                resident, doff, dlen
+            self._ref, self._block2row = ref, b2r
+            # the clock hand's position is meaningless after renumbering
+            res.hand = 0
         self.arena, self.used = arena, total
         self._offsets, self._fast, self.n_blocks = offs, fast, nb
         self._plan_ver = ver
@@ -815,10 +1110,18 @@ class CompressedTable:
         (a single-version table needs no tags).  Dead bytes from replaced
         or deleted runs are *included* — they are held memory until
         :meth:`rewrite` — and reported separately via :attr:`dead_bytes`.
+
+        Under a memory budget this is the *resident* footprint, matching
+        how the paper counts the budget: spilled code runs live on disk
+        and are excluded (reported via :attr:`spilled_bytes`), while the
+        per-block residency metadata (packed disk extent + flags, 9 B per
+        block) is charged here.
         """
         pending = sum(_raw_row_bytes(r) for r in self._pending)
         indirection = (4 * self._rows_stored
                        if self.codec.block_tuples == 1 else 0)
         ver_tags = self.n_blocks if len(self._codecs) > 1 else 0
+        res_meta = 9 * self.n_blocks if self._res is not None else 0
         return (self.used * 2 + 4 * (self.n_blocks + 1)
-                + (self.n_blocks + 7) // 8 + indirection + ver_tags + pending)
+                + (self.n_blocks + 7) // 8 + indirection + ver_tags
+                + res_meta + pending)

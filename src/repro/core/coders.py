@@ -144,17 +144,17 @@ def build_alias(k: np.ndarray) -> AliasTables:
             s = small.pop()
             a = int(rem[s])
             rem[s] = 0
-            l = large.pop()
-            threshold[p], sym_u[p], sym_v[p] = a, s, l
-            rem[l] -= (W - a)
+            lg = large.pop()
+            threshold[p], sym_u[p], sym_v[p] = a, s, lg
+            rem[lg] -= (W - a)
         else:
-            l = large.pop()
-            threshold[p], sym_u[p], sym_v[p] = 0, l, l
-            rem[l] -= W
-        if rem[l] < 0:  # pragma: no cover - defensive
+            lg = large.pop()
+            threshold[p], sym_u[p], sym_v[p] = 0, lg, lg
+            rem[lg] -= W
+        if rem[lg] < 0:  # pragma: no cover - defensive
             raise RuntimeError("alias decomposition went negative")
-        if rem[l] > 0:
-            (small if rem[l] < W else large).append(int(l))
+        if rem[lg] > 0:
+            (small if rem[lg] < W else large).append(int(lg))
     assert not small and not large and (rem == 0).all(), "mass not consumed"
 
     # ---- assemble per-symbol segments in canonical (bucket, part) order ----

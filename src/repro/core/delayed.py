@@ -27,7 +27,7 @@ against this implementation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterator, List, Sequence, Tuple
+from typing import Callable, List, Sequence, Tuple
 
 from .coders import TOTAL, TOTAL_BITS
 

@@ -13,7 +13,7 @@ the first-code/offset table — O(max_len) per symbol.
 from __future__ import annotations
 
 import heapq
-from typing import List, Sequence, Tuple
+from typing import Tuple
 
 import numpy as np
 
@@ -134,7 +134,6 @@ class HuffmanCode:
             prefix = window >> (self.max_len - L)
             fc = int(self.first_code[L])
             if fc <= prefix:
-                nxt = int(self.first_code[L + 1]) << 1 if L < self.max_len else 1 << 62
                 # count of codes at this length bounds prefix - fc
                 idx = int(self.base_index[L]) + (prefix - fc)
                 if idx < len(self.order) and int(self.lengths[self.order[idx]]) == L \

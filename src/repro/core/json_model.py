@@ -16,7 +16,7 @@ the semantic-model property that unseen data stays encodable.
 from __future__ import annotations
 
 import json
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Sequence
 
 from .delayed import BlockDecoder
 from .models import BlockEncoder, CategoricalModel, NumericModel

@@ -18,7 +18,7 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from .coders import TOTAL, TOTAL_BITS, DiscreteCoder, UniformCoder
+from .coders import TOTAL, TOTAL_BITS, UniformCoder
 
 _LOW = TOTAL          # 2**16
 _MASK = TOTAL - 1

@@ -15,7 +15,7 @@ paper's (§5.1) and are asserted here.
 
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 

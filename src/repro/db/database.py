@@ -26,10 +26,17 @@ class Database:
 
     def __init__(self, backend: str | StoreFactory = "blitzcrank",
                  n_shards: int = 1,
-                 store_kwargs: Optional[Dict[str, Any]] = None):
+                 store_kwargs: Optional[Dict[str, Any]] = None,
+                 memory_budget: Optional[int] = None):
         self.backend = backend
         self.n_shards = int(n_shards)
         self.store_kwargs = dict(store_kwargs or {})
+        # Engine-wide default *per-table* memory budget (DESIGN.md §6);
+        # each table splits its budget across its shards.  Table sizes
+        # are not knowable at catalog time, so a proportional split is
+        # the loader's job (see bench_out_of_core's per-table budgets).
+        self.memory_budget = (int(memory_budget)
+                              if memory_budget is not None else None)
         self._tables: Dict[str, Table] = {}
 
     # -- catalog ---------------------------------------------------------
@@ -37,7 +44,8 @@ class Database:
                      backend: str | StoreFactory | None = None,
                      n_shards: Optional[int] = None,
                      sample_rows: Optional[Sequence[Dict[str, Any]]] = None,
-                     store_kwargs: Optional[Dict[str, Any]] = None) -> Table:
+                     store_kwargs: Optional[Dict[str, Any]] = None,
+                     memory_budget: Optional[int] = None) -> Table:
         """Register ``schema`` and build its table (engine defaults apply
         unless overridden).  Re-registering a name raises ``ValueError``."""
         if schema.name in self._tables:
@@ -48,7 +56,9 @@ class Database:
                       backend=self.backend if backend is None else backend,
                       n_shards=self.n_shards if n_shards is None
                       else n_shards,
-                      sample_rows=sample_rows, store_kwargs=kwargs)
+                      sample_rows=sample_rows, store_kwargs=kwargs,
+                      memory_budget=self.memory_budget
+                      if memory_budget is None else memory_budget)
         self._tables[schema.name] = table
         return table
 
@@ -108,7 +118,7 @@ class Database:
 
     def stats(self) -> Dict[str, Any]:
         per_table = {n: t.stats() for n, t in sorted(self._tables.items())}
-        return {
+        out = {
             "n_tables": len(self._tables),
             "n_live": self.n_live,
             "nbytes": self.nbytes,
@@ -117,3 +127,18 @@ class Database:
             "model_bytes": sum(s["model_bytes"] for s in per_table.values()),
             "tables": per_table,
         }
+        res = [s["residency"] for s in per_table.values()
+               if "residency" in s]
+        if res:
+            # whole-database view of the cold tier: nbytes stays resident
+            # memory, spilled bytes live on disk and are summed separately
+            out["spilled_bytes"] = sum(r["spilled_bytes"] for r in res)
+            out["residency"] = {
+                "budget_bytes": sum(r["budget_bytes"] for r in res),
+                "spilled_bytes": out["spilled_bytes"],
+                "spills": sum(r["spills"] for r in res),
+                "faults": sum(r["faults"] for r in res),
+                "fault_batches": sum(r["fault_batches"] for r in res),
+                "disk_file_bytes": sum(r["disk_file_bytes"] for r in res),
+            }
+        return out

@@ -101,13 +101,13 @@ class TableSchema:
             if spec is None:
                 raise ValueError(
                     f"table {self.name!r}: primary-key column {k!r} "
-                    f"is not declared")
+                    "is not declared")
             if spec.kind not in KEYABLE_KINDS:
                 raise ValueError(
                     f"table {self.name!r}: primary-key column {k!r} has "
                     f"kind {spec.kind!r}; keys must be one of "
                     f"{KEYABLE_KINDS} (floats re-quantize on decode and "
-                    f"would re-route)")
+                    "would re-route)")
         object.__setattr__(self, "_by_name", by_name)
 
     # -- lookups ---------------------------------------------------------

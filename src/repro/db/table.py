@@ -61,7 +61,8 @@ class Table:
     def __init__(self, schema: TableSchema, backend: str | StoreFactory
                  = "blitzcrank", n_shards: int = 1,
                  sample_rows: Optional[Sequence[Dict[str, Any]]] = None,
-                 store_kwargs: Optional[Dict[str, Any]] = None):
+                 store_kwargs: Optional[Dict[str, Any]] = None,
+                 memory_budget: Optional[int] = None):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.schema = schema
@@ -69,6 +70,17 @@ class Table:
         self.n_shards = int(n_shards)
         self.backend = backend
         self.store_kwargs = dict(store_kwargs or {})
+        # Out-of-core budget (DESIGN.md §6): a table-level budget is split
+        # evenly across the hash-partitioned shards — placement is a
+        # uniform hash of the key, so each shard carries ~1/N of the data
+        # and deserves ~1/N of the memory.  An explicit per-shard
+        # ``memory_budget`` in store_kwargs wins over the split.
+        self.memory_budget = (int(memory_budget)
+                              if memory_budget is not None else None)
+        if self.memory_budget is not None \
+                and "memory_budget" not in self.store_kwargs:
+            self.store_kwargs["memory_budget"] = max(
+                1, self.memory_budget // self.n_shards)
         self._shards: List[RowStore] = []
         self._dir: Dict[Key, Tuple[int, int]] = {}
         if sample_rows:
@@ -349,6 +361,20 @@ class Table:
             "model_bytes": self.model_bytes,
             "shards": shard_stats,
         }
+        res = [s["residency"] for s in shard_stats if "residency" in s]
+        if res:
+            # nbytes/store_bytes above are *resident* memory; the on-disk
+            # cold tier is aggregated separately (DESIGN.md §6).
+            out["spilled_bytes"] = sum(
+                s.get("spilled_bytes", 0) for s in shard_stats)
+            out["residency"] = {
+                "budget_bytes": sum(r["budget_bytes"] for r in res),
+                "spilled_bytes": out["spilled_bytes"],
+                "spills": sum(r["spills"] for r in res),
+                "faults": sum(r["faults"] for r in res),
+                "fault_batches": sum(r["fault_batches"] for r in res),
+                "disk_file_bytes": sum(r["disk_file_bytes"] for r in res),
+            }
         maint = [s["maintenance"] for s in shard_stats
                  if "maintenance" in s]
         if maint:

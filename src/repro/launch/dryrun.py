@@ -26,7 +26,7 @@ import pathlib
 import time
 import traceback
 
-import jax
+import jax  # noqa: F401  (imported before repro modules: XLA_FLAGS is set)
 
 from repro.analysis import roofline as rf
 from repro.configs import ARCH_IDS, SHAPES, SHAPES_BY_NAME, get_config, shape_applies

@@ -9,7 +9,6 @@ trainer and the benchmarks alike.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -11,7 +11,6 @@ the same flags drive the dry-run meshes):
 """
 
 import argparse
-import dataclasses
 import json
 
 

@@ -11,12 +11,10 @@ arithmetic per (q-block, kv-chunk) tile — never stored whole.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .config import ModelConfig
 
@@ -117,7 +115,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         l0 = jnp.zeros((B, qb, K, G), jnp.float32)
 
         def kv_step(carry, inp):
-            acc, m, l = carry
+            acc, m, lsum = carry
             kc_i, vc_i, kidx = inp
             k_pos = kidx * kc + jnp.arange(kc)
             mask = _tile_mask(q_pos_tile, k_pos, spec, kv_len_valid, window)
@@ -150,15 +148,15 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                                 preferred_element_type=jnp.float32)
                 l_add = jnp.sum(p, axis=-1, dtype=jnp.float32)
             corr = jnp.exp(m - m_new)
-            l = l * corr + l_add
+            lsum = lsum * corr + l_add
             acc = acc * corr[..., None] + pv
-            return (acc, m_new, l), None
+            return (acc, m_new, lsum), None
 
-        (acc, m, l), _ = jax.lax.scan(
+        (acc, m, lsum), _ = jax.lax.scan(
             kv_step, (acc0, m0, l0),
             (jnp.moveaxis(kt, 1, 0), jnp.moveaxis(vt, 1, 0),
              jnp.arange(n_kc)))
-        return acc / jnp.maximum(l[..., None], 1e-30)
+        return acc / jnp.maximum(lsum[..., None], 1e-30)
 
     out = jax.lax.map(lambda args: q_tile(*args),
                       (jnp.moveaxis(qt, 1, 0), qpt))   # [n_qb, B, qb, K, G, D]
@@ -186,9 +184,9 @@ def _partial_decode_attn(q4, k, v, k_pos, position, spec: AttnSpec,
     m = s.max(axis=-1)
     p = jnp.exp(s - m[..., None])
     p = jnp.where(valid, p, 0.0)
-    l = p.sum(axis=-1)
+    lsum = p.sum(axis=-1)
     acc = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
-    return m, l, acc
+    return m, lsum, acc
 
 
 def merge_partial_attn(parts):
@@ -255,12 +253,12 @@ def _partial_decode_attn_quant(q4, kq, ks, vq, vs, k_pos, position,
     m = s.max(axis=-1)
     p = jnp.exp(s - m[..., None])
     p = jnp.where(valid, p, 0.0)
-    l = p.sum(axis=-1)
+    lsum = p.sum(axis=-1)
     pv = p * jnp.moveaxis(vs, 1, 2)[:, :, None, :]
     acc = jnp.einsum("bkgs,bskd->bkgd", pv.astype(jnp.bfloat16),
                      vq.astype(jnp.bfloat16),
                      preferred_element_type=jnp.float32)
-    return m, l, acc
+    return m, lsum, acc
 
 
 def decode_attention_paged_quant(q, kq_pages, ks_pages, vq_pages, vs_pages,

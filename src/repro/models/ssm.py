@@ -14,7 +14,6 @@ exponential gating and a per-head recurrent connection.
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -137,7 +136,6 @@ def mlstm_decode_init(cfg: ModelConfig, B: int) -> dict:
 
 def mlstm_decode_step(p, x: jax.Array, state: dict, cfg: ModelConfig):
     """x: [B, 1, d] -> (y [B, 1, d], new state).  O(1) per token."""
-    B = x.shape[0]
     D = cfg.head_dim
     q = jnp.einsum("bsd,dhx->bshx", x, p["wq"])[:, 0]
     k = jnp.einsum("bsd,dhx->bshx", x, p["wk"])[:, 0]

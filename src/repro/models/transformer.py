@@ -12,8 +12,6 @@ flow.  Sharding is expressed through logical-axis annotations
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -26,7 +24,7 @@ from .config import ModelConfig
 from .layers import (AttnSpec, attn_init, attn_output, attn_project_qkv,
                      chunked_attention, decode_attention,
                      decode_attention_paged, decode_attention_paged_quant,
-                     mlp_apply, mlp_init, rms_norm, rope, softcap)
+                     mlp_apply, mlp_init, rms_norm, softcap)
 from .moe import moe_apply, moe_init
 
 _BIG_WINDOW = 1 << 30

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.adaptive import MaintenanceConfig, MaintenanceScheduler
 from repro.core import ColumnSpec, TableCodec
+from repro.core.arena import ResidencyManager
 from repro.core.blitzcrank import (CompressedTable, _raw_row_bytes,
                                    column_specs)
 from repro.core.huffman import BitReader, BitWriter, HuffmanCode
@@ -164,12 +165,34 @@ class RowStore:
 
 class _BytesRowStore(RowStore):
     """Shared list-of-encoded-tuples plumbing for the baseline stores:
-    one encoded payload per id, tombstones in a side set."""
+    one encoded payload per id, tombstones in a side set.
 
-    def __init__(self, schema: Sequence[ColumnSpec]):
+    ``memory_budget`` enables the same out-of-core cold tier the blitz
+    store has (paper §6.4, DESIGN.md §6), at tuple granularity: when the
+    resident payload bytes exceed the budget, a clock/second-chance sweep
+    over per-row referenced bits spills cold payloads to a
+    :class:`~repro.core.arena.DiskArena` (``rows[i] = None`` + an extent
+    in ``_spilled``); reads fault them back in with one coalesced read per
+    batch.  This is what makes "the uncompressed store at the same
+    absolute budget" a fair baseline in ``bench_out_of_core``.
+    """
+
+    # Per spilled row: 8 B offset + 4 B length + clock bit, rounded up.
+    SPILL_ENTRY_OVERHEAD = 13
+
+    def __init__(self, schema: Sequence[ColumnSpec],
+                 memory_budget: Optional[int] = None,
+                 spill_path: Optional[str] = None):
         super().__init__(schema)
-        self.rows: List[bytes] = []
+        self.rows: List[Optional[bytes]] = []
         self._deleted: set = set()
+        self._res: Optional[ResidencyManager] = None
+        self._spilled: Dict[int, Tuple[int, int]] = {}  # id -> (off, len)
+        self._ref = bytearray()  # clock bits; hand lives in the manager
+        self._resident_bytes = 0
+        self._spilled_payload = 0
+        if memory_budget is not None:
+            self._res = ResidencyManager(memory_budget, spill_path)
 
     def is_live(self, i: int) -> bool:
         i = int(i)
@@ -185,17 +208,136 @@ class _BytesRowStore(RowStore):
     def _decode_row(self, raw: bytes) -> Dict[str, Any]:
         raise NotImplementedError
 
-    def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
+    # -- cold tier -------------------------------------------------------
+    def _append_payloads(self, payloads: List[bytes]) -> range:
         base = len(self.rows)
-        enc = self._encode_row
-        self.rows.extend(enc(r) for r in rows)
+        self.rows.extend(payloads)
+        if self._res is not None:
+            self._ref.extend(b"\x01" * len(payloads))
+            self._resident_bytes += sum(len(p) for p in payloads)
+            self._enforce_budget()
         return range(base, len(self.rows))
+
+    def _put_payload(self, i: int, payload: bytes) -> None:
+        """Overwrite row ``i``'s payload, keeping residency accounting."""
+        old = self.rows[i]
+        if old is None:  # spilled: the old extent is simply dropped
+            off, ln = self._spilled.pop(i)
+            self._res.disk.free(off, ln)
+            self._spilled_payload -= ln
+        elif self._res is not None:
+            self._resident_bytes -= len(old)
+        self.rows[i] = payload
+        if self._res is not None:
+            self._resident_bytes += len(payload)
+            self._ref[i] = 1
+
+    def _fetch_payloads(self, indices: Sequence[int]
+                        ) -> List[Optional[bytes]]:
+        """Payload per id (``None`` for tombstones), faulting spilled rows
+        back in with one coalesced disk read for the whole batch."""
+        dels, rows = self._deleted, self.rows
+        out: List[Optional[bytes]] = [None] * len(indices)
+        cold: List[int] = []
+        for j, i in enumerate(indices):
+            if i in dels:
+                continue
+            p = rows[i]
+            if p is None:
+                cold.append(i)
+            else:
+                out[j] = p
+        if cold:
+            res = self._res
+            ids = sorted(set(cold))
+            extents = [self._spilled[i] for i in ids]
+            payloads = res.disk.read_many([e[0] for e in extents],
+                                          [e[1] for e in extents])
+            for i, (off, ln), p in zip(ids, extents, payloads):
+                rows[i] = p
+                del self._spilled[i]
+                res.disk.free(off, ln)
+                self._resident_bytes += ln
+                self._spilled_payload -= ln
+                self._ref[i] = 1
+            res.faults += len(ids)
+            res.fault_batches += 1
+            for j, i in enumerate(indices):
+                if out[j] is None and i not in dels:
+                    out[j] = rows[i]
+            self._enforce_budget()
+        if self._res is not None:
+            for i in indices:
+                if i not in dels:
+                    self._ref[i] = 1
+        return out
+
+    def _enforce_budget(self) -> None:
+        res = self._res
+        if res is None:
+            return
+        if self._resident_bytes > res.budget:
+            target = int(res.config.low_water * res.budget)
+            rows, dels = self.rows, self._deleted
+
+            def candidates(ids: np.ndarray) -> np.ndarray:
+                # resident live payloads only (None=spilled, b""=deleted)
+                return np.fromiter(
+                    (bool(rows[i]) and i not in dels
+                     for i in ids.tolist()),
+                    dtype=bool, count=ids.size)
+
+            def sizes(ids: np.ndarray) -> np.ndarray:
+                return np.fromiter((len(rows[i]) for i in ids.tolist()),
+                                   dtype=np.int64, count=ids.size)
+
+            # a zero-copy numpy view over the bytearray of clock bits
+            ref = np.frombuffer(self._ref, dtype=np.uint8)
+            victims = res.sweep(
+                len(rows), self._resident_bytes - target, candidates,
+                sizes, lambda ids: ref[ids] != 0,
+                lambda ids: ref.__setitem__(ids, 0))
+            if victims.size:
+                self._spill_rows(victims.tolist())
+        # checked even when under budget: deletes/updates free extents
+        # without spilling, and the file must still shrink
+        if res.disk.needs_compact and self._spilled:
+            ids = list(self._spilled)
+            new_offs = res.disk.compact(
+                [self._spilled[i][0] for i in ids],
+                [self._spilled[i][1] for i in ids])
+            for i, off in zip(ids, new_offs):
+                self._spilled[i] = (off, self._spilled[i][1])
+
+    def _spill_rows(self, ids: List[int]) -> None:
+        """One coalesced segment write for the whole victim set."""
+        res = self._res
+        payloads = [self.rows[i] for i in ids]
+        base = res.disk.write(b"".join(payloads))
+        off = base
+        for i, p in zip(ids, payloads):
+            ln = len(p)
+            self._spilled[i] = (off, ln)
+            off += ln
+            self.rows[i] = None
+            self._resident_bytes -= ln
+            self._spilled_payload += ln
+        res.spills += len(ids)
+
+    # -- batched protocol ------------------------------------------------
+    def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
+        enc = self._encode_row
+        return self._append_payloads([enc(r) for r in rows])
 
     def get_many(self, indices: Sequence[int]
                  ) -> List[Optional[Dict[str, Any]]]:
-        dels, rows, dec = self._deleted, self.rows, self._decode_row
-        return [None if (i := int(j)) in dels else dec(rows[i])
-                for j in indices]
+        idxs = [int(j) for j in indices]
+        dec = self._decode_row
+        if self._res is None:
+            dels, rows = self._deleted, self.rows
+            return [None if i in dels else dec(rows[i]) for i in idxs]
+        return [None if p is None else dec(p)
+                for p in self._fetch_payloads(idxs)]
 
     def update_many(self, indices: Sequence[int],
                     rows: Sequence[Dict[str, Any]]) -> None:
@@ -203,15 +345,19 @@ class _BytesRowStore(RowStore):
         for i, r in zip(idxs, rows):
             if not self.is_live(i):
                 raise KeyError(f"row {i} is deleted")
-            self.rows[i] = self._encode_row(r)
+            self._put_payload(i, self._encode_row(r))
+        if self._res is not None:
+            self._enforce_budget()
 
     def delete_many(self, indices: Sequence[int]) -> int:
         n = 0
         for i in {int(j) for j in indices}:
             if self.is_live(i):
-                self.rows[i] = b""  # reclaim the tuple bytes
+                self._put_payload(i, b"")  # reclaim the tuple bytes
                 self._deleted.add(i)
                 n += 1
+        if n and self._res is not None:
+            self._enforce_budget()  # freed extents may warrant a compact
         return n
 
     def __len__(self) -> int:
@@ -219,15 +365,40 @@ class _BytesRowStore(RowStore):
 
     @property
     def nbytes(self) -> int:
-        return (sum(len(r) for r in self.rows)
+        """Resident footprint: spilled payloads live on disk and are
+        excluded; each spilled row is charged its extent-index entry."""
+        if self._res is None:
+            return (sum(len(r) for r in self.rows)
+                    + TOMBSTONE_BYTES * len(self._deleted))
+        return (self._resident_bytes
+                + self.SPILL_ENTRY_OVERHEAD * len(self._spilled)
                 + TOMBSTONE_BYTES * len(self._deleted))
+
+    @property
+    def spilled_bytes(self) -> int:
+        return self._spilled_payload
+
+    def stats(self) -> Dict[str, Any]:
+        out = super().stats()
+        if self._res is not None:
+            out["spilled_bytes"] = self.spilled_bytes
+            out["residency"] = {
+                **self._res.stats(),
+                "resident_bytes": self.nbytes,
+                "spilled_bytes": self.spilled_bytes,
+                "spilled_rows": len(self._spilled),
+            }
+        return out
 
 
 class UncompressedStore(_BytesRowStore):
     name = "silo"
 
-    def __init__(self, schema: Sequence[ColumnSpec], rows_sample=None):
-        super().__init__(schema)
+    def __init__(self, schema: Sequence[ColumnSpec], rows_sample=None,
+                 memory_budget: Optional[int] = None,
+                 spill_path: Optional[str] = None):
+        super().__init__(schema, memory_budget=memory_budget,
+                         spill_path=spill_path)
 
     def _encode_row(self, row: Dict[str, Any]) -> bytes:
         return json.dumps([row[c.name] for c in self.schema]).encode()
@@ -268,7 +439,9 @@ class BlitzStore(RowStore):
                  auto_merge: bool = True, merge_frac: float = 0.06,
                  rewrite_frac: float = 0.12, merge_min_bytes: int = 1 << 16,
                  adaptive: bool | MaintenanceConfig = False,
-                 codec: Optional[TableCodec] = None):
+                 codec: Optional[TableCodec] = None,
+                 memory_budget: Optional[int] = None,
+                 spill_path: Optional[str] = None):
         super().__init__(schema)
         if codec is None:
             codec = TableCodec.fit(rows_sample, self.schema,
@@ -278,7 +451,12 @@ class BlitzStore(RowStore):
             # A pre-fitted codec (shared across a repro.db Table's shards:
             # same sample => same models, fit once, count model bytes once)
             block_tuples = codec.block_tuples
-        self.table = CompressedTable(codec, use_pallas=use_pallas)
+        # memory_budget (paper §6.4, DESIGN.md §6) bounds the *compressed
+        # arena's* live resident bytes; the bounded delta overlay rides on
+        # top and is folded back by merge() as before.
+        self.table = CompressedTable(codec, use_pallas=use_pallas,
+                                     memory_budget=memory_budget,
+                                     spill_path=spill_path)
         self.block_tuples = block_tuples
         self.auto_merge = bool(auto_merge) and block_tuples == 1
         self.merge_frac = merge_frac
@@ -308,10 +486,13 @@ class BlitzStore(RowStore):
         """Install a refit codec as the new plan version (writes use it)."""
         return self.table.install_codec(codec)
 
-    def migrate(self, limit: int = 1 << 12) -> int:
+    def migrate(self, limit: int = 1 << 12, resident_only: bool = True) -> int:
         """Re-encode up to ``limit`` stale escaped rows under the newest
-        plan (dirty overlay rows migrate through :meth:`merge` instead)."""
-        return self.table.migrate_rows(limit)
+        plan (dirty overlay rows migrate through :meth:`merge` instead).
+        Under a memory budget, ``resident_only`` keeps maintenance from
+        faulting cold blocks in — background work must not thrash the
+        hot set (DESIGN.md §6)."""
+        return self.table.migrate_rows(limit, resident_only=resident_only)
 
     @property
     def n(self) -> int:
@@ -495,6 +676,11 @@ class BlitzStore(RowStore):
             "plan_fallback": (None if plan is not None
                               else self.codec.plan_fallback_reason),
         }
+        if t.memory_budget is not None:
+            # nbytes above is *resident* memory (how the paper counts the
+            # budget); the on-disk cold tier is reported separately.
+            out["spilled_bytes"] = t.spilled_bytes
+            out["residency"] = t.residency()
         if self.maintenance is not None:
             out["maintenance"] = self.maintenance.stats()
         return out
@@ -504,9 +690,12 @@ class ZstdStore(_BytesRowStore):
     name = "zstd"
 
     def __init__(self, schema: Sequence[ColumnSpec], rows_sample,
-                 dict_kb: int = 110, level: int = 3):
+                 dict_kb: int = 110, level: int = 3,
+                 memory_budget: Optional[int] = None,
+                 spill_path: Optional[str] = None):
         import zstandard as zstd
-        super().__init__(schema)
+        super().__init__(schema, memory_budget=memory_budget,
+                         spill_path=spill_path)
         samples = [json.dumps([r[c.name] for c in self.schema]).encode()
                    for r in rows_sample]
         try:
@@ -532,7 +721,6 @@ class ZstdStore(_BytesRowStore):
     def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
         """Bulk insert through ``multi_compress_to_buffer`` when available:
         one C call over all payloads, amortizing context setup."""
-        base = len(self.rows)
         schema = self.schema
         payloads = [json.dumps([r[c.name] for c in schema]).encode()
                     for r in rows]
@@ -547,8 +735,7 @@ class ZstdStore(_BytesRowStore):
         if frames is None:
             comp = self.cctx.compress
             frames = [comp(p) for p in payloads]
-        self.rows.extend(frames)
-        return range(base, len(self.rows))
+        return self._append_payloads(frames)
 
     def get_many(self, indices: Sequence[int]
                  ) -> List[Optional[Dict[str, Any]]]:
@@ -558,7 +745,11 @@ class ZstdStore(_BytesRowStore):
         dels = self._deleted
         live = [j for j, i in enumerate(idxs) if i not in dels]
         out: List[Optional[Dict[str, Any]]] = [None] * len(idxs)
-        frames = [self.rows[idxs[j]] for j in live]
+        if self._res is None:
+            frames = [self.rows[idxs[j]] for j in live]
+        else:
+            fetched = self._fetch_payloads(idxs)
+            frames = [fetched[j] for j in live]
         raws = None
         if len(frames) > 1 and hasattr(self.dctx,
                                        "multi_decompress_to_buffer"):
@@ -591,8 +782,11 @@ class RamanStore(_BytesRowStore):
 
     name = "raman"
 
-    def __init__(self, schema: Sequence[ColumnSpec], rows_sample):
-        super().__init__(schema)
+    def __init__(self, schema: Sequence[ColumnSpec], rows_sample,
+                 memory_budget: Optional[int] = None,
+                 spill_path: Optional[str] = None):
+        super().__init__(schema, memory_budget=memory_budget,
+                         spill_path=spill_path)
         self.columns = {}
         for c in self.schema:
             vals = [r[c.name] for r in rows_sample]

@@ -643,7 +643,6 @@ def run_tpcc_mix(db, n_ops: int, *, seed: int = 0, batch: int = 8,
     customer, item, stock = db["customer"], db["item"], db["stock"]
     orders, order_line = db["orders"], db["order_line"]
 
-    wh_ids = [r["w_id"] for _, r in warehouse.scan()]
     dist_keys = [k for k, _ in district.scan()]
     item_ids = sorted(k for k, _ in item.scan())
     n_items = len(item_ids)

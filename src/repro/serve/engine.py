@@ -104,7 +104,6 @@ class Engine:
         logits, state = self.prefill(jnp.asarray(tokens),
                                      prefix_embeds=prefix_embeds,
                                      encoder_frames=encoder_frames)
-        B = tokens.shape[0]
         key = jax.random.PRNGKey(seed)
         out: List[np.ndarray] = []
         T = state["k_tail"].shape[2] if "k_tail" in state else 0

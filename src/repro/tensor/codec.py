@@ -19,12 +19,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.coders import TOTAL, DiscreteCoder, UniformCoder, quantize_freqs
-from repro.core.vectorized import decode_batch, decode_select, encode_batch
+from repro.core.vectorized import decode_batch, encode_batch
 
 
 @dataclasses.dataclass

@@ -18,12 +18,10 @@ explicit; the in-pod reduction stays GSPMD-implicit.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 BLOCK = 256
 
@@ -55,7 +53,6 @@ def compress_exchange(g: jax.Array, err: jax.Array, axis_name: str
     # int8 + f32-scales on the wire (4x fewer bytes than f32 grads)
     q_all = jax.lax.all_gather(q, axis_name)          # [n_pods, ...]
     s_all = jax.lax.all_gather(scale, axis_name)
-    n = q_all.shape[0]
     deq = jax.vmap(lambda qq, ss: _dequant_block(qq, ss, g.shape))(q_all, s_all)
     synced = deq.mean(axis=0)
     new_err = target - _dequant_block(q, scale, g.shape)

@@ -13,7 +13,7 @@ Two tiers, mirroring the paper's hot/cold split (§6.5's cache + storage):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,8 +62,9 @@ class QuantKVCache:
     def update(self, layer_slice, pos, k_new, v_new):
         """Insert one token (decode step) at ``pos`` for every layer slice."""
         kq, ks, vq, vs = quantize_kv(k_new, v_new)
-        upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
-            buf, val, pos, axis=1)
+        def upd(buf, val):
+            return jax.lax.dynamic_update_slice_in_dim(buf, val, pos,
+                                                       axis=1)
         return dataclasses.replace(
             self,
             kq=upd(self.kq[layer_slice], kq),

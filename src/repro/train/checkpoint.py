@@ -24,7 +24,6 @@ import os
 import pathlib
 import shutil
 import threading
-import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -188,7 +187,7 @@ class CheckpointManager:
             else:
                 arr = np.load(d / "arrays" / f"{i}.npy")
                 if "bitcast" in rec:
-                    import ml_dtypes
+                    import ml_dtypes  # noqa: F401  (registers np dtypes)
                     arr = arr.view(np.dtype(rec["bitcast"]))
             leaves.append(arr)
         tree = jax.tree_util.tree_unflatten(treedef, leaves)

@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.adaptive import (DriftConfig, DriftMonitor, MaintenanceConfig,
-                            MaintenanceScheduler, ReservoirSample, refit_codec)
+                            ReservoirSample, refit_codec)
 from repro.core import ColumnSpec, CompressedTable, TableCodec
 from repro.oltp import tpcc
 from repro.oltp.store import BlitzStore
@@ -314,7 +314,6 @@ class TestScheduler:
 
     def test_futility_freeze_stops_hopeless_columns(self):
         store = self._store()
-        rng = np.random.default_rng(0)
 
         def noise(n, seed):
             r = np.random.default_rng(seed)

@@ -6,7 +6,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import ColumnSpec, CompressedTable, TableCodec, delayed
+from repro.core import ColumnSpec, CompressedTable, TableCodec
 from repro.core.delayed import BlockDecoder, encode_block
 from repro.core.models import (BlockEncoder, ByteMarkov, CategoricalModel,
                                NumericModel, StringModel, TimeSeriesModel)

@@ -10,7 +10,7 @@ import pytest
 from repro.core import ColumnSpec
 from repro.db import (Database, Table, TableSchema, stable_key_hash)
 from repro.oltp import tpcc
-from repro.oltp.store import BlitzStore, UncompressedStore
+from repro.oltp.store import BlitzStore
 
 ORDERLINE = TableSchema(
     "orderline", tpcc.ORDERLINE_SCHEMA, ("ol_o_id", "ol_number"))
@@ -299,8 +299,8 @@ class TestMultiTableTPCC:
             lk = [(ok[0], ok[1], ok[2], ln)
                   for ln in range(1, orow["o_ol_cnt"] + 1)]
             lines = order_line.get_many(lk)
-            assert all(l is not None for l in lines)
-            assert all(l["ol_o_id"] == ok[2] for l in lines)
+            assert all(row is not None for row in lines)
+            assert all(row["ol_o_id"] == ok[2] for row in lines)
 
     def test_mix_deterministic_across_backends(self, pop):
         counts = {}

@@ -56,7 +56,8 @@ def test_multipod_smoke_mesh_compiles():
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
         timeout=600, env={**__import__("os").environ, "PYTHONPATH": "src"})
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT")][0]
     out = json.loads(line[len("RESULT"):])
     assert len(out) == 3
     for cell, rec in out.items():
@@ -76,7 +77,7 @@ def test_production_mesh_shapes():
 def test_dryrun_sets_device_flag_first():
     import pathlib
     text = pathlib.Path("src/repro/launch/dryrun.py").read_text()
-    lines = [l for l in text.splitlines() if l.strip()]
+    lines = [ln for ln in text.splitlines() if ln.strip()]
     assert lines[0] == "import os"
     assert "xla_force_host_platform_device_count=512" in lines[1]
 

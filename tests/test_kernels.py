@@ -54,7 +54,6 @@ class TestDelayedDecodeKernel:
 
     def test_skewed_distributions_stress_virtual_bits(self):
         """Highly skewed slots mark nearly every interval (max virtual use)."""
-        rng = np.random.default_rng(0)
         w = np.ones(3)
         w[0] = 1e6  # one dominant symbol -> k ~ 2**16 -> constant marking
         coders = [DiscreteCoder(quantize_freqs(w)) for _ in range(30)]

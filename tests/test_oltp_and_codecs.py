@@ -5,7 +5,7 @@ import pytest
 
 from repro.oltp import tpcc
 from repro.oltp.store import (BlitzStore, LRUFastPath, RamanStore,
-                              UncompressedStore, ZstdStore)
+                              ZstdStore)
 
 
 def _check_store(store, rows, schema, n=30):
@@ -155,7 +155,7 @@ class TestHloAnalyzer:
         assert st.flops / (2 * 64 * 128 * 128) == pytest.approx(32.0)
 
     def test_collective_parse(self):
-        from repro.analysis.hlo import HloStats, analyze_hlo
+        from repro.analysis.hlo import analyze_hlo
         hlo = """
 HloModule test, entry_computation_layout={()->f32[8]{0}}
 

@@ -49,7 +49,7 @@ def _makers():
     try:
         import zstandard  # noqa: F401
         from repro.oltp.store import ZstdStore
-        makers["zstd"] = lambda s, sample: ZstdStore(s, sample)
+        makers["zstd"] = ZstdStore
     except ImportError:
         pass
     return makers

@@ -12,15 +12,13 @@ pytest.importorskip("repro.dist.sharding")  # dist substrate: future PR
 import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import reduced_config  # noqa: E402
-from repro.data.pipeline import (CompressedExampleStore, SyntheticLM,  # noqa: E402
-                                 batches_from_store)
+from repro.data.pipeline import CompressedExampleStore, SyntheticLM  # noqa: E402
 from repro.launch.mesh import make_host_mesh  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
 from repro.models.config import ShapeConfig  # noqa: E402
 from repro.serve.engine import Engine  # noqa: E402
 from repro.train.checkpoint import CheckpointManager  # noqa: E402
-from repro.train.fault_tolerance import (PreemptionGuard, StepWatchdog,  # noqa: E402
-                                         run_with_restarts)
+from repro.train.fault_tolerance import StepWatchdog, run_with_restarts  # noqa: E402
 from repro.train.loop import Trainer, TrainerConfig  # noqa: E402
 
 SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=4, kind="train")
