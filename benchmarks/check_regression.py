@@ -46,6 +46,7 @@ REQUIRED_BENCHES = [
     "adaptive_refit",
     "db_tpcc",
     "out_of_core",
+    "recovery",
     "sampling",
     "entropy",
     "granularity",
@@ -64,6 +65,7 @@ SMOKE_IDENTICAL = [
     "adaptive_refit_refit_on",
     "db_tpcc_acceptance",
     "out_of_core_acceptance",
+    "recovery_acceptance",
 ]
 
 # (csv name, derived key, lower bound) — loose floors for smoke scale,
@@ -114,6 +116,10 @@ ARTIFACT_RULES: List[Tuple[str, List[str], str, Optional[float]]] = [
     ("BENCH_out_of_core.json", ["acceptance", "sustained_ratio"], "min", 3.0),
     ("BENCH_out_of_core.json", ["acceptance", "reads_identical"], "true", None),
     ("BENCH_batch_decode.json", ["fast_fraction"], "min", 0.95),
+    ("BENCH_recovery.json", ["acceptance", "pass"], "true", None),
+    ("BENCH_recovery.json", ["acceptance", "wal_on_ratio"], "min", 0.7),
+    ("BENCH_recovery.json", ["acceptance", "replay_s"], "max", 5.0),
+    ("BENCH_recovery.json", ["acceptance", "identical"], "true", None),
 ]
 
 

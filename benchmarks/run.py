@@ -28,8 +28,8 @@ def main() -> None:
                             bench_db_tpcc, bench_entropy_coders,
                             bench_fastpath, bench_framework,
                             bench_granularity, bench_out_of_core,
-                            bench_sampling, bench_update_merge,
-                            roofline_report)
+                            bench_recovery, bench_sampling,
+                            bench_update_merge, roofline_report)
 
     if args.smoke:
         artifact.set_smoke(True)
@@ -41,6 +41,7 @@ def main() -> None:
         "adaptive_refit": bench_adaptive_refit,  # DESIGN.md §4 drift/refit
         "db_tpcc": bench_db_tpcc,                # DESIGN.md §5 engine, §6
         "out_of_core": bench_out_of_core,        # DESIGN.md §6 cold tier
+        "recovery": bench_recovery,              # DESIGN.md §7 durability
 
         "sampling": bench_sampling,              # Fig 10
         "entropy": bench_entropy_coders,         # Fig 11

@@ -20,7 +20,7 @@ directly for determinism.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from .monitor import DriftConfig, DriftMonitor
 from .refit import ReservoirSample, refit_codec
@@ -76,6 +76,10 @@ class MaintenanceScheduler:
         self._futile_count: Dict[str, int] = {}
         self._pending_eval: List[str] = []
         self._writes_since_check = 0
+        # Post-step hooks (durability: a refit/migration invalidates the
+        # last checkpoint's codec list, so the db engine requests a fresh
+        # one — deferred to the end of the verb, never taken mid-step).
+        self.on_step: List[Callable[[Dict[str, Any]], None]] = []
 
     # -- write-path hooks (called by the store) --------------------------
     def observe_writes(self, rows: Sequence[Dict[str, Any]]) -> None:
@@ -151,7 +155,7 @@ class MaintenanceScheduler:
             cfg.migrate_rows_per_step,
             resident_only=cfg.migrate_resident_only)
         self.migrated_rows += migrated
-        return {
+        result = {
             "step": self.steps,
             "window_rows": (self.monitor.last_report.window_rows
                             if self.monitor.last_report else 0),
@@ -161,6 +165,29 @@ class MaintenanceScheduler:
             "migrated_rows": migrated,
             "versions": self.store.n_versions,
         }
+        for fn in self.on_step:
+            fn(result)
+        return result
+
+    # -- durability (DESIGN.md §7) ---------------------------------------
+    def snapshot_state(self) -> Dict[str, Any]:
+        """Adaptive state for a checkpoint: config, monitor, reservoir
+        (the Generator pickles, so reservoir sampling stays deterministic
+        across a crash), counters, and the futility bookkeeping."""
+        st = {k: v for k, v in self.__dict__.items()
+              if k not in ("store", "on_step")}
+        st["frozen"] = sorted(self.frozen)
+        return st
+
+    @classmethod
+    def from_state(cls, store,
+                   state: Dict[str, Any]) -> "MaintenanceScheduler":
+        self = cls.__new__(cls)
+        self.store = store
+        self.on_step = []
+        self.__dict__.update(state)
+        self.frozen = set(state["frozen"])
+        return self
 
     def stats(self) -> Dict[str, Any]:
         return {

@@ -34,7 +34,9 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import struct
 import tempfile
+import zlib
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -42,6 +44,94 @@ import numpy as np
 # Spill segments are aligned to this many bytes so compaction and
 # sequential fault-in behave like page I/O rather than byte soup.
 PAGE_BYTES = 4096
+
+# Checksummed extent frame (DESIGN.md §7): every spill payload written via
+# the framed API carries a 12-byte header — magic, payload length, CRC32 —
+# verified on fault-in.  A mismatch means the extent is quarantined and the
+# rows rebuilt from the WAL, never decoded.
+FRAME_MAGIC = 0x53504731  # "SPG1"
+FRAME_HEADER = struct.Struct("<III")
+FRAME_OVERHEAD = FRAME_HEADER.size
+
+
+def framed_len(payload_len: int) -> int:
+    """On-disk length of a framed extent holding ``payload_len`` bytes."""
+    return FRAME_OVERHEAD + int(payload_len)
+
+
+class ArenaError(RuntimeError):
+    """Base class for spill-file I/O failures."""
+
+
+class ArenaReadError(ArenaError):
+    """A ``pread`` returned fewer bytes than the extent length.
+
+    Before this check a truncated spill file silently fed short (garbage)
+    payloads back into the decode path — the checksum layer now converts
+    this into quarantine + WAL rebuild instead of wrong answers.
+    """
+
+    def __init__(self, offset: int, wanted: int, got: int):
+        super().__init__(
+            f"short spill read at offset {offset}: wanted {wanted} bytes, "
+            f"got {got}"
+        )
+        self.offset = int(offset)
+        self.wanted = int(wanted)
+        self.got = int(got)
+
+
+class ExtentCorruptionError(ArenaError):
+    """One or more framed extents failed their magic/length/CRC check.
+
+    ``indices`` are positions into the ``read_many_checked`` request, so
+    the caller can map them back to blocks/rows and quarantine precisely.
+    """
+
+    def __init__(self, indices: Sequence[int]):
+        super().__init__(
+            f"{len(list(indices))} corrupt spill extent(s): "
+            f"{sorted(int(i) for i in indices)[:8]}"
+        )
+        self.indices = [int(i) for i in indices]
+
+
+class SpillCorruptionError(ArenaError):
+    """Store-level view of extent corruption: the affected row ids.
+
+    Raised by stores *before* any state mutation so a durability layer can
+    rebuild the rows from WAL replay and retry the read; without a repair
+    handler it propagates (corrupt data is never returned to the caller).
+    """
+
+    def __init__(self, row_ids: Sequence[int]):
+        super().__init__(
+            f"spill corruption affecting {len(list(row_ids))} row(s)"
+        )
+        self.row_ids = sorted(int(i) for i in row_ids)
+
+
+class _OsIO:
+    """Default I/O provider: direct os calls, crash points are no-ops.
+
+    The durability layer substitutes a fault-injecting implementation with
+    the same four methods; core code never imports ``repro.durability``.
+    """
+
+    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
+        return os.pwrite(fd, data, offset)
+
+    def pread(self, fd: int, length: int, offset: int) -> bytes:
+        return os.pread(fd, length, offset)
+
+    def fsync(self, fd: int) -> None:
+        os.fsync(fd)
+
+    def point(self, name: str) -> None:
+        pass
+
+
+OS_IO = _OsIO()
 
 
 class DiskArena:
@@ -53,15 +143,19 @@ class DiskArena:
     in bytes.
     """
 
-    def __init__(self, path: Optional[str] = None, page_bytes: int = PAGE_BYTES):
+    def __init__(self, path: Optional[str] = None, page_bytes: int = PAGE_BYTES,
+                 io: Optional[Any] = None):
         if page_bytes <= 0:
             raise ValueError("page_bytes must be positive")
         self.page_bytes = int(page_bytes)
+        self.path = path
+        self.io = io if io is not None else OS_IO
         if path is None:
             self._file = tempfile.TemporaryFile(prefix="blitz-spill-")
         else:
             self._file = open(path, "w+b")
         self._fd = self._file.fileno()
+        self.closed = False
         self._tail = 0  # next unallocated byte (page-aligned per segment)
         self._live = 0  # live payload bytes
         self._freed = 0  # dead payload bytes awaiting compaction
@@ -80,12 +174,41 @@ class DiskArena:
         """
         off = -self._tail % self.page_bytes + self._tail
         n = len(payload)
-        os.pwrite(self._fd, payload, off)
+        self.io.pwrite(self._fd, payload, off)
         self._tail = off + n
         self._live += n
         self.writes += 1
         self.bytes_written += n
         return off
+
+    def write_many(self, payloads: Sequence[bytes]) -> List[int]:
+        """Append payloads as CRC32-framed extents in one segment.
+
+        Returns each frame's byte offset (pointing at its header).  The
+        segment is written in two halves around the ``spill.mid_write``
+        crash point so a simulated kill can land inside the write; the
+        callers' metadata only references the new extents after this
+        returns, so a torn segment is dead weight, not corruption.
+        """
+        frames: List[bytes] = []
+        for p in payloads:
+            frames.append(FRAME_HEADER.pack(FRAME_MAGIC, len(p), zlib.crc32(p)))
+            frames.append(p)
+        buf = b"".join(frames)
+        off = -self._tail % self.page_bytes + self._tail
+        half = len(buf) // 2
+        self.io.pwrite(self._fd, buf[:half], off)
+        self.io.point("spill.mid_write")
+        self.io.pwrite(self._fd, buf[half:], off + half)
+        self._tail = off + len(buf)
+        self._live += len(buf)
+        self.writes += 1
+        self.bytes_written += len(buf)
+        offs, pos = [], off
+        for p in payloads:
+            offs.append(pos)
+            pos += FRAME_OVERHEAD + len(p)
+        return offs
 
     def free(self, offset: int, length: int) -> None:
         """Mark ``length`` bytes at ``offset`` dead (reclaimed at compact)."""
@@ -96,7 +219,56 @@ class DiskArena:
     def read(self, offset: int, length: int) -> bytes:
         self.reads += 1
         self.bytes_read += int(length)
-        return os.pread(self._fd, int(length), int(offset))
+        buf = self.io.pread(self._fd, int(length), int(offset))
+        if len(buf) != int(length):
+            raise ArenaReadError(int(offset), int(length), len(buf))
+        return buf
+
+    def read_checked(self, offset: int, payload_len: int) -> bytes:
+        """Read and verify one framed extent, returning its payload."""
+        return self.read_many_checked([offset], [payload_len])[0]
+
+    def read_many_checked(self, offsets: Sequence[int],
+                          payload_lens: Sequence[int]) -> List[bytes]:
+        """Batched framed-extent reads with magic/length/CRC verification.
+
+        ``payload_lens`` are payload byte counts (the frame overhead is
+        added here).  Adjacent frames coalesce into one I/O exactly like
+        :meth:`read_many`.  Any extent failing verification — short read,
+        bad magic, length mismatch, CRC mismatch — raises
+        :class:`ExtentCorruptionError` carrying the request indices of
+        every bad extent; no partial result is returned.
+        """
+        framed = [framed_len(ln) for ln in payload_lens]
+        try:
+            raws: List[Optional[bytes]] = list(
+                self.read_many(offsets, framed))
+        except ArenaReadError:
+            # A coalesced read hit a hole/truncation: retry per-extent so
+            # only the genuinely bad extents are quarantined.
+            raws = []
+            for off, fln in zip(offsets, framed):
+                try:
+                    raws.append(self.read(off, fln))
+                except ArenaReadError:
+                    raws.append(None)
+        out: List[bytes] = []
+        bad: List[int] = []
+        for j, raw in enumerate(raws):
+            payload: Optional[bytes] = None
+            if raw is not None and len(raw) == framed[j]:
+                magic, ln, crc = FRAME_HEADER.unpack_from(raw)
+                body = raw[FRAME_OVERHEAD:]
+                if (magic == FRAME_MAGIC and ln == len(body)
+                        and zlib.crc32(body) == crc):
+                    payload = body
+            if payload is None:
+                bad.append(j)
+                payload = b""
+            out.append(payload)
+        if bad:
+            raise ExtentCorruptionError(bad)
+        return out
 
     def read_many(self, offsets: Sequence[int], lengths: Sequence[int]) -> List[bytes]:
         """Batched extent reads, coalescing adjacent extents into one I/O.
@@ -154,7 +326,8 @@ class DiskArena:
         for m in order:
             off, ln = int(offs[m]), int(lens[m])
             if cursor != off:
-                os.pwrite(self._fd, os.pread(self._fd, ln, off), cursor)
+                self.io.pwrite(self._fd, self.io.pread(self._fd, ln, off),
+                               cursor)
             new_offs[int(m)] = cursor
             cursor += ln
         self._file.truncate(cursor)
@@ -174,11 +347,32 @@ class DiskArena:
         """Allocated file span (live + dead + alignment padding)."""
         return self._tail
 
+    def fsync(self) -> None:
+        self.io.fsync(self._fd)
+
     def close(self) -> None:
+        if self.closed:
+            return
+        self.closed = True
         try:
             self._file.close()
         except Exception:
             pass
+
+    def unlink(self) -> None:
+        """Close and remove a named spill file (no-op for temp arenas)."""
+        self.close()
+        if self.path is not None:
+            try:
+                os.unlink(self.path)
+            except FileNotFoundError:
+                pass
+
+    def __enter__(self) -> "DiskArena":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def __del__(self):  # pragma: no cover - GC timing dependent
         self.close()
@@ -213,18 +407,27 @@ class ResidencyManager:
         budget_bytes: int,
         spill_path: Optional[str] = None,
         config: Optional[ResidencyConfig] = None,
+        io: Optional[Any] = None,
     ):
         if budget_bytes <= 0:
             raise ValueError("memory_budget must be positive")
         self.budget = int(budget_bytes)
         self.config = config or ResidencyConfig()
-        self.disk = DiskArena(spill_path)
+        self.disk = DiskArena(spill_path, io=io)
         self.hand = 0
         self.spills = 0  # blocks spilled
         self.spill_sweeps = 0
         self.faults = 0  # blocks faulted back in
         self.fault_batches = 0
         self.scalar_faults = 0  # read-through scalar block reads
+        self.quarantined = 0  # extents that failed their CRC check
+        self.repaired_rows = 0  # rows rebuilt from WAL after corruption
+
+    def close(self, unlink: bool = False) -> None:
+        if unlink:
+            self.disk.unlink()
+        else:
+            self.disk.close()
 
     # -- budget arithmetic ----------------------------------------------
     @property
@@ -295,6 +498,8 @@ class ResidencyManager:
             "faults": self.faults,
             "fault_batches": self.fault_batches,
             "scalar_faults": self.scalar_faults,
+            "quarantined": self.quarantined,
+            "repaired_rows": self.repaired_rows,
             "disk_live_bytes": self.disk.live_bytes,
             "disk_file_bytes": self.disk.file_bytes,
             "disk_reads": self.disk.reads,

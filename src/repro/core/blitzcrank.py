@@ -19,7 +19,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import delayed
-from .arena import ResidencyConfig, ResidencyManager
+from .arena import (FRAME_OVERHEAD, ArenaReadError, ExtentCorruptionError,
+                    ResidencyConfig, ResidencyManager, SpillCorruptionError,
+                    framed_len)
 from .delayed import BlockDecoder
 from .models import (BlockEncoder, CategoricalModel, ConditionalCategoricalModel,
                      NumericModel, StringModel, TimeSeriesModel)
@@ -218,6 +220,21 @@ class TableCodec:
         self.compile()
         return self._plan_reason
 
+    # -- pickling (durability checkpoints, DESIGN.md §7) ----------------
+    def __getstate__(self) -> Dict[str, Any]:
+        """Drop the compiled plan: it holds prebuilt decode tables that are
+        pure functions of the models, so a restored codec recompiles to an
+        identical plan (escape counters are snapshotted separately by
+        :meth:`CompressedTable.snapshot_state`)."""
+        state = dict(self.__dict__)
+        state["_plan"] = None
+        state["_plan_reason"] = None
+        state["_plan_tried"] = False
+        return state
+
+    def __setstate__(self, state: Dict[str, Any]) -> None:
+        self.__dict__.update(state)
+
     # ------------------------------------------------------------------
     def _reset_block_state(self) -> None:
         for m in self.models.values():
@@ -363,7 +380,8 @@ class CompressedTable:
                  use_pallas: Optional[bool] = None,
                  memory_budget: Optional[int] = None,
                  spill_path: Optional[str] = None,
-                 residency: Optional[ResidencyConfig] = None):
+                 residency: Optional[ResidencyConfig] = None,
+                 spill_io: Optional[Any] = None):
         # Versioned codecs (DESIGN.md §4): writes always encode under the
         # newest codec; every block carries the version it was encoded with
         # so older blocks stay readable after a refit installs a new codec.
@@ -400,7 +418,7 @@ class CompressedTable:
         self._in_enforce = False
         if memory_budget is not None:
             self.set_memory_budget(memory_budget, spill_path=spill_path,
-                                   config=residency)
+                                   config=residency, spill_io=spill_io)
 
     # -- codec versions (DESIGN.md §4) -----------------------------------
     @property
@@ -503,7 +521,8 @@ class CompressedTable:
 
     def set_memory_budget(self, budget: int,
                           spill_path: Optional[str] = None,
-                          config: Optional[ResidencyConfig] = None) -> None:
+                          config: Optional[ResidencyConfig] = None,
+                          spill_io: Optional[Any] = None) -> None:
         """Install a residency manager bounding live resident code bytes.
 
         Single-tuple granularity only (the spill unit is the block and
@@ -516,7 +535,7 @@ class CompressedTable:
         if self._res is not None:
             raise ValueError("memory budget already set")
         self.flush()
-        self._res = ResidencyManager(budget, spill_path, config)
+        self._res = ResidencyManager(budget, spill_path, config, io=spill_io)
         cap = self._offsets.size - 1
         self._resident = np.ones(cap, dtype=bool)
         self._disk_off = np.full(cap, -1, dtype=np.int64)
@@ -584,19 +603,19 @@ class CompressedTable:
 
     def _spill_blocks(self, blocks: np.ndarray) -> None:
         """Write the victims' code runs to disk in arena byte order (one
-        coalesced segment write) and mark them non-resident.  Their
-        in-memory runs become dead bytes until the next rewrite."""
+        coalesced segment write of CRC32-framed extents) and mark them
+        non-resident.  Their in-memory runs become dead bytes until the
+        next rewrite."""
         res = self._res
         order = np.argsort(self._offsets[blocks], kind="stable")
         blocks = blocks[order]
         starts = self._offsets[blocks]
         lens = self._offsets[blocks + 1] - starts
         total = int(lens.sum())
-        new_off = np.zeros(blocks.size + 1, dtype=np.int64)
-        np.cumsum(lens, out=new_off[1:])
-        gather = np.repeat(starts - new_off[:-1], lens) + np.arange(total)
-        base = res.disk.write(self.arena[gather].tobytes())
-        self._disk_off[blocks] = base + 2 * new_off[:-1]
+        payloads = [self.arena[int(s):int(s) + int(ln)].tobytes()
+                    for s, ln in zip(starts, lens)]
+        offs = res.disk.write_many(payloads)
+        self._disk_off[blocks] = np.asarray(offs, dtype=np.int64)
         self._disk_len[blocks] = lens
         self._resident[blocks] = False
         self._dead_codes += total
@@ -613,7 +632,15 @@ class CompressedTable:
         res = self._res
         lens = self._disk_len[blocks].copy()
         offs_old = self._disk_off[blocks].copy()
-        payloads = res.disk.read_many(offs_old, 2 * lens)
+        try:
+            payloads = res.disk.read_many_checked(offs_old, 2 * lens)
+        except ExtentCorruptionError as e:
+            # No state was mutated: surface the affected row ids so a
+            # durability layer can rebuild them from the WAL and retry.
+            bad = blocks[np.asarray(e.indices, dtype=np.int64)]
+            res.quarantined += len(e.indices)
+            raise SpillCorruptionError(
+                self._block2row[bad].tolist()) from e
         total = int(lens.sum())
         buf = np.empty(total, dtype=np.uint16)
         pos = 0
@@ -640,7 +667,7 @@ class CompressedTable:
         self._disk_off[blocks] = -1
         self._disk_len[blocks] = 0
         for o, ln in zip(offs_old.tolist(), lens.tolist()):
-            res.disk.free(o, 2 * ln)
+            res.disk.free(o, framed_len(2 * ln))
         self._spilled_codes -= total
         res.faults += n
         res.fault_batches += 1
@@ -650,8 +677,9 @@ class CompressedTable:
         if res is None or not res.disk.needs_compact:
             return
         spilled = np.nonzero(~self._resident[:self.n_blocks])[0]
-        new_offs = res.disk.compact(self._disk_off[spilled],
-                                    2 * self._disk_len[spilled])
+        new_offs = res.disk.compact(
+            self._disk_off[spilled],
+            2 * self._disk_len[spilled] + FRAME_OVERHEAD)
         self._disk_off[spilled] = np.asarray(new_offs, dtype=np.int64)
 
     def residency(self) -> Dict[str, Any]:
@@ -819,8 +847,13 @@ class CompressedTable:
         if self._res is not None:
             if not self._resident[b]:
                 self._res.scalar_faults += 1
-                raw = self._res.disk.read(int(self._disk_off[b]),
-                                          2 * int(self._disk_len[b]))
+                try:
+                    raw = self._res.disk.read_checked(
+                        int(self._disk_off[b]), 2 * int(self._disk_len[b]))
+                except (ExtentCorruptionError, ArenaReadError) as e:
+                    self._res.quarantined += 1
+                    raise SpillCorruptionError(
+                        [int(self._block2row[b])]) from e
                 return np.frombuffer(raw, dtype=np.uint16)
             self._ref[b] = 1
         return self.arena[self._offsets[b]:self._offsets[b + 1]]
@@ -953,7 +986,7 @@ class CompressedTable:
                 cold = blocks[sp]
                 for o, ln in zip(self._disk_off[cold].tolist(),
                                  self._disk_len[cold].tolist()):
-                    self._res.disk.free(o, 2 * ln)
+                    self._res.disk.free(o, framed_len(2 * ln))
                 self._spilled_codes -= int(self._disk_len[cold].sum())
                 self._resident[cold] = True
                 self._disk_off[cold] = -1
@@ -1096,6 +1129,148 @@ class CompressedTable:
         self._dead_codes = 0
         self.rewrites += 1
         return reclaimed
+
+    # -- durability (DESIGN.md §7) ---------------------------------------
+    def close(self, unlink: bool = False) -> None:
+        """Release the spill file (if any); the table stays readable for
+        resident blocks but must not touch disk afterwards."""
+        if self._res is not None:
+            self._res.close(unlink=unlink)
+
+    def _snapshot_escapes(self) -> Dict[int, Dict[str, Any]]:
+        """Per-version drift counters of every *compiled* plan.
+
+        Plans are stripped from pickled codecs (pure functions of the
+        models), but their escape counters are live adaptive state: replay
+        must resume from the same window or the next drift check would
+        diverge from the pre-crash schedule."""
+        out: Dict[int, Dict[str, Any]] = {}
+        for v, codec in enumerate(self._codecs):
+            plan = codec._plan
+            if plan is None:
+                continue
+            out[v] = {
+                "escape_counts": dict(plan.escape_counts),
+                "window_escapes": dict(plan.window_escapes),
+                "rows_seen": int(plan.rows_seen),
+                "window_rows": int(plan.window_rows),
+            }
+        return out
+
+    def _restore_escapes(self, escapes: Dict[int, Dict[str, Any]]) -> None:
+        for v, st in escapes.items():
+            plan = self._codecs[int(v)].compile()
+            if plan is None:
+                continue
+            plan.escape_counts.update(st["escape_counts"])
+            plan.window_escapes.update(st["window_escapes"])
+            plan.rows_seen = int(st["rows_seen"])
+            plan.window_rows = int(st["window_rows"])
+
+    def snapshot_state(self) -> Dict[str, Any]:
+        """Everything needed to rebuild this table bit-identically.
+
+        Spilled payloads are read back (CRC-verified) and embedded: the
+        snapshot is self-contained, so the spill file itself never needs
+        to survive a crash — recovery writes a fresh one and re-spills the
+        same block set, preserving the resident/cold split.  Corruption
+        found here surfaces as :class:`SpillCorruptionError` so the owner
+        can repair from the WAL and retry."""
+        nb, n = self.n_blocks, self._rows_stored
+        st: Dict[str, Any] = {
+            "codecs": self._codecs,
+            "use_pallas": self.use_pallas,
+            "arena": self.arena[:self.used].copy(),
+            "offsets": self._offsets[:nb + 1].copy(),
+            "fast": self._fast[:nb].copy(),
+            "plan_ver": self._plan_ver[:nb].copy(),
+            "block_rows": list(self.block_rows),
+            "row2block": self._row2block[:n].copy(),
+            "rows_stored": n,
+            "dead_codes": self._dead_codes,
+            "n_deleted": self._n_deleted,
+            "rewrites": self.rewrites,
+            "migrated_rows": self.migrated_rows,
+            "pending": [dict(r) for r in self._pending],
+            "escapes": self._snapshot_escapes(),
+        }
+        if self._res is not None:
+            spilled = np.nonzero(~self._resident[:nb])[0]
+            try:
+                payloads = self._res.disk.read_many_checked(
+                    self._disk_off[spilled], 2 * self._disk_len[spilled])
+            except ExtentCorruptionError as e:
+                bad = spilled[np.asarray(e.indices, dtype=np.int64)]
+                self._res.quarantined += len(e.indices)
+                raise SpillCorruptionError(
+                    self._block2row[bad].tolist()) from e
+            st["residency"] = {
+                "budget": self._res.budget,
+                "config": self._res.config,
+                "resident": self._resident[:nb].copy(),
+                "ref": self._ref[:nb].copy(),
+                "block2row": self._block2row[:nb].copy(),
+                "disk_len": self._disk_len[:nb].copy(),
+                "payloads": {int(b): p for b, p in zip(spilled, payloads)},
+            }
+        return st
+
+    @classmethod
+    def from_state(cls, state: Dict[str, Any],
+                   spill_path: Optional[str] = None,
+                   spill_io: Optional[Any] = None) -> "CompressedTable":
+        """Rebuild a table from :meth:`snapshot_state` output.
+
+        Previously spilled blocks are re-spilled into a fresh spill file,
+        so the resident/cold split (and therefore ``nbytes``) matches the
+        snapshot exactly."""
+        t = cls(state["codecs"][0], use_pallas=state["use_pallas"])
+        t._codecs = list(state["codecs"])
+        arena = np.asarray(state["arena"], dtype=np.uint16)
+        t.arena = np.zeros(max(arena.size, 1024), dtype=np.uint16)
+        t.arena[:arena.size] = arena
+        t.used = int(arena.size)
+        nb = len(state["block_rows"])
+        cap = max(nb + 1, 1024)
+        t._offsets = np.zeros(cap, dtype=np.int64)
+        t._offsets[:nb + 1] = state["offsets"]
+        t._fast = np.zeros(cap - 1, dtype=bool)
+        t._fast[:nb] = state["fast"]
+        t._plan_ver = np.zeros(cap - 1, dtype=np.uint16)
+        t._plan_ver[:nb] = state["plan_ver"]
+        t.n_blocks = nb
+        t.block_rows = list(state["block_rows"])
+        n = int(state["rows_stored"])
+        t._row2block = np.full(max(n, 1024), -1, dtype=np.int64)
+        t._row2block[:n] = state["row2block"]
+        t._rows_stored = n
+        t._dead_codes = int(state["dead_codes"])
+        t._n_deleted = int(state["n_deleted"])
+        t.rewrites = int(state["rewrites"])
+        t.migrated_rows = int(state["migrated_rows"])
+        t._pending = [dict(r) for r in state["pending"]]
+        res_state = state.get("residency")
+        if res_state is not None:
+            t._res = ResidencyManager(res_state["budget"], spill_path,
+                                      res_state.get("config"), io=spill_io)
+            t._resident = np.ones(cap - 1, dtype=bool)
+            t._resident[:nb] = res_state["resident"]
+            t._disk_off = np.full(cap - 1, -1, dtype=np.int64)
+            t._disk_len = np.zeros(cap - 1, dtype=np.int64)
+            t._disk_len[:nb] = res_state["disk_len"]
+            t._ref = np.zeros(cap - 1, dtype=np.uint8)
+            t._ref[:nb] = res_state["ref"]
+            t._block2row = np.full(cap - 1, -1, dtype=np.int64)
+            t._block2row[:nb] = res_state["block2row"]
+            spilled = sorted(res_state["payloads"])
+            if spilled:
+                offs = t._res.disk.write_many(
+                    [res_state["payloads"][b] for b in spilled])
+                t._disk_off[np.asarray(spilled, dtype=np.int64)] = \
+                    np.asarray(offs, dtype=np.int64)
+            t._spilled_codes = int(t._disk_len[:nb].sum())
+        t._restore_escapes(state.get("escapes") or {})
+        return t
 
     @property
     def nbytes(self) -> int:

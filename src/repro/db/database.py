@@ -10,6 +10,7 @@ claim is about, and the one ``benchmarks/bench_db_tpcc.py`` reports.
 
 from __future__ import annotations
 
+import os
 from typing import Any, Dict, Iterator, List, Optional, Sequence
 
 from .schema import TableSchema
@@ -27,7 +28,8 @@ class Database:
     def __init__(self, backend: str | StoreFactory = "blitzcrank",
                  n_shards: int = 1,
                  store_kwargs: Optional[Dict[str, Any]] = None,
-                 memory_budget: Optional[int] = None):
+                 memory_budget: Optional[int] = None,
+                 durability: Optional[Any] = None):
         self.backend = backend
         self.n_shards = int(n_shards)
         self.store_kwargs = dict(store_kwargs or {})
@@ -38,6 +40,25 @@ class Database:
         self.memory_budget = (int(memory_budget)
                               if memory_budget is not None else None)
         self._tables: Dict[str, Table] = {}
+        # Durability (DESIGN.md §7): a DurabilityConfig (or just its root
+        # path) turns on one WAL per table + checkpoints; ``None`` keeps
+        # the engine purely in-memory with zero overhead.
+        self._dur = None
+        self._io = None
+        self._ops_since_ckpt = 0
+        self._ckpt_requested = False
+        self._recovering = False
+        if durability is not None:
+            from repro.durability.config import DurabilityConfig
+            if not isinstance(durability, DurabilityConfig):
+                durability = DurabilityConfig(root=os.fspath(durability))
+            self._dur = durability
+            os.makedirs(durability.root, exist_ok=True)
+            self._io = durability.make_io()
+
+    @property
+    def durable(self) -> bool:
+        return self._dur is not None
 
     # -- catalog ---------------------------------------------------------
     def create_table(self, schema: TableSchema, *,
@@ -52,6 +73,9 @@ class Database:
             raise ValueError(f"table {schema.name!r} already registered")
         kwargs = dict(self.store_kwargs)
         kwargs.update(store_kwargs or {})
+        if self._dur is not None:
+            # fault injection (and crash points) must cover spill I/O too
+            kwargs.setdefault("spill_io", self._io)
         table = Table(schema,
                       backend=self.backend if backend is None else backend,
                       n_shards=self.n_shards if n_shards is None
@@ -60,12 +84,19 @@ class Database:
                       memory_budget=self.memory_budget
                       if memory_budget is None else memory_budget)
         self._tables[schema.name] = table
+        if self._dur is not None:
+            self._attach_durability(table, sample_rows)
         return table
 
     def drop_table(self, name: str) -> None:
+        """Unregister a table, releasing its spill files and (durable) WAL;
+        a durable drop checkpoints so recovery won't resurrect it."""
         if name not in self._tables:
             raise KeyError(f"no table {name!r}")
-        del self._tables[name]
+        table = self._tables.pop(name)
+        table.close(unlink=True)
+        if self._dur is not None:
+            self.checkpoint()
 
     def table(self, name: str) -> Table:
         try:
@@ -105,7 +136,108 @@ class Database:
         return sum(t.migrate(limit_per_table) for t in self._tables.values())
 
     def maintenance_step(self) -> Dict[str, List[Dict[str, Any]]]:
-        return {n: t.maintenance_step() for n, t in self._tables.items()}
+        out = {n: t.maintenance_step() for n, t in self._tables.items()}
+        self._note_ops(0)  # honor a checkpoint request from the steps
+        return out
+
+    # -- durability (DESIGN.md §7) ---------------------------------------
+    def _attach_durability(self, table: Table,
+                           sample_rows: Optional[Sequence[Dict[str, Any]]]
+                           ) -> None:
+        from repro.durability.wal import WriteAheadLog
+
+        wal = WriteAheadLog(
+            os.path.join(self._dur.root, f"{table.name}.wal"),
+            io=self._io, fsync_every=self._dur.fsync_every)
+        table.attach_wal(wal, io=self._io, on_ops=self._note_ops)
+        table._on_shards_built = self._wire_maintenance
+        if table.shards:
+            self._wire_maintenance(table)
+        if wal.lsn == 0:
+            # Fresh log: the catalog event heads it, so a from-zero replay
+            # can rebuild the table (same sample => same seeded model fit
+            # => bit-identical codecs).  On reopen the record is already
+            # there (lsn > 0) and must not be duplicated.
+            wal.log("create", {
+                "schema": table.schema,
+                "backend": table.backend,
+                "n_shards": table.n_shards,
+                "store_kwargs": table.clean_store_kwargs(),
+                "memory_budget": table.memory_budget,
+                "sample_rows": ([dict(r) for r in sample_rows]
+                                if sample_rows else None),
+            })
+
+    def _wire_maintenance(self, table: Table) -> None:
+        """A refit/migration step invalidates the checkpointed codec list;
+        request a fresh checkpoint, taken at the *end* of the current verb
+        (``_note_ops``), never mid-step."""
+        if self._dur is None or not self._dur.checkpoint_on_maintenance:
+            return
+
+        def request(_result: Dict[str, Any]) -> None:
+            self._ckpt_requested = True
+
+        for shard in table.shards:
+            maint = getattr(shard, "maintenance", None)
+            if maint is not None:
+                maint.on_step.append(request)
+
+    def _note_ops(self, n: int) -> None:
+        if self._dur is None or self._recovering:
+            return
+        self._ops_since_ckpt += int(n)
+        every = self._dur.checkpoint_every_ops
+        if self._ckpt_requested or (every > 0
+                                    and self._ops_since_ckpt >= every):
+            self.checkpoint()
+
+    def checkpoint(self) -> int:
+        """Snapshot the whole catalog (atomic replace); returns byte size.
+
+        Each table entry carries its WAL's current LSN, so recovery is
+        checkpoint-load + replay of only the log tail past that offset."""
+        if self._dur is None:
+            raise RuntimeError("checkpoint() requires durability=")
+        from repro.durability.checkpoint import write_checkpoint
+
+        tables: Dict[str, Any] = {}
+        for name, t in self._tables.items():
+            tables[name] = {
+                "snapshot": t.snapshot_state(),
+                "wal_lsn": t._wal.lsn if t._wal is not None else 0,
+            }
+        state = {
+            "format": 1,
+            "engine": {
+                "backend": (self.backend
+                            if isinstance(self.backend, str) else None),
+                "n_shards": self.n_shards,
+                "store_kwargs": {
+                    k: v for k, v in self.store_kwargs.items()
+                    if k not in ("codec", "spill_io")},
+                "memory_budget": self.memory_budget,
+            },
+            "tables": tables,
+        }
+        size = write_checkpoint(self._dur.root, state, io=self._io)
+        self._ops_since_ckpt = 0
+        self._ckpt_requested = False
+        return size
+
+    def close(self) -> None:
+        """Checkpoint (durable) and release every table's files."""
+        if self._dur is not None and self._tables:
+            self.checkpoint()
+        for t in self._tables.values():
+            t.close()
+
+    @classmethod
+    def open(cls, root: str, **kwargs: Any) -> "Database":
+        """Recover a durable database from its checkpoint + WAL tails."""
+        from repro.durability.recovery import open_database
+
+        return open_database(root, **kwargs)
 
     # -- aggregated accounting -------------------------------------------
     @property

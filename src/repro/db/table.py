@@ -83,6 +83,14 @@ class Table:
                 1, self.memory_budget // self.n_shards)
         self._shards: List[RowStore] = []
         self._dir: Dict[Key, Tuple[int, int]] = {}
+        # Durability hooks (DESIGN.md §7), wired by a durable Database via
+        # attach_wal(): the WAL gets every batch verb *before* it applies,
+        # _on_ops drives the checkpoint cadence at verb end, and _io
+        # carries the apply.before crash point.
+        self._wal = None
+        self._io = None
+        self._on_ops: Optional[Callable[[int], None]] = None
+        self._on_shards_built: Optional[Callable[["Table"], None]] = None
         if sample_rows:
             self._build_shards(sample_rows)
 
@@ -103,7 +111,12 @@ class Table:
         except (TypeError, ValueError):  # e.g. builtins without signatures
             can_share = False
         kwargs = dict(self.store_kwargs)
+        spill_base = kwargs.get("spill_path")
         for j in range(self.n_shards):
+            if spill_base is not None and self.n_shards > 1:
+                # each shard owns its spill file — one shared append-only
+                # file under two arenas would interleave their extents
+                kwargs["spill_path"] = f"{spill_base}.s{j}"
             shard = factory(self.schema, sample_rows, **kwargs)
             if j == 0 and self.n_shards > 1 and can_share \
                     and "codec" not in kwargs \
@@ -125,6 +138,10 @@ class Table:
             if maint is not None:
                 maint.label = f"{self.name}/shard{j}"
             self._shards.append(shard)
+        if self._wal is not None:
+            self._install_repair_fns()
+        if self._on_shards_built is not None:
+            self._on_shards_built(self)
 
     @property
     def shards(self) -> List[RowStore]:
@@ -170,12 +187,14 @@ class Table:
             per_shard[s].append(r)
             per_shard_keys[s].append(k)
             keys.append(k)
+        self._log("insert", rows)
         for s, (grp, gkeys) in enumerate(zip(per_shard, per_shard_keys)):
             if not grp:
                 continue
             ids = self._shards[s].insert_many(grp)
             for i, k in zip(ids, gkeys):
                 self._dir[k] = (s, int(i))
+        self._note_ops(len(rows))
         return keys
 
     def get_many(self, keys: Sequence[Key], backend: Optional[str] = None
@@ -227,9 +246,11 @@ class Table:
             s, i = self._route(k)
             per_shard_ids[s].append(i)
             per_shard_rows[s].append(r)
+        self._log("update", list(merged.values()))
         for s, (ids, grp) in enumerate(zip(per_shard_ids, per_shard_rows)):
             if ids:
                 self._shards[s].update_many(ids, grp)
+        self._note_ops(len(merged))
 
     def delete_many(self, keys: Sequence[Key]) -> int:
         """Delete live keys, returning how many were actually deleted
@@ -243,12 +264,15 @@ class Table:
             s, i = slot
             per_shard_ids[s].append(i)
             dropped.append(k)
+        if dropped:
+            self._log("delete", dropped)
         n = 0
         for s, ids in enumerate(per_shard_ids):
             if ids:
                 n += self._shards[s].delete_many(ids)
         for k in dropped:
             del self._dir[k]
+        self._note_ops(len(dropped))
         return n
 
     # -- scalar wrappers -------------------------------------------------
@@ -311,6 +335,132 @@ class Table:
             if maint is not None:
                 out.append(maint.step())
         return out
+
+    # -- durability (DESIGN.md §7) ---------------------------------------
+    def attach_wal(self, wal, io: Optional[Any] = None,
+                   on_ops: Optional[Callable[[int], None]] = None) -> None:
+        """Wire this table to its redo log (one WAL per table).
+
+        From here on every batch verb logs its logical record *before*
+        touching any shard (log-before-apply), and ``on_ops`` fires with
+        the row count at the end of each verb — never mid-apply, so a
+        checkpoint can only observe verb boundaries."""
+        self._wal = wal
+        self._io = io
+        self._on_ops = on_ops
+        if self._shards:
+            self._install_repair_fns()
+
+    def _log(self, op: str, payload: Any) -> None:
+        if self._wal is not None:
+            self._wal.log(op, payload)
+            if self._io is not None:
+                self._io.point("apply.before")
+
+    def _note_ops(self, n: int) -> None:
+        if self._on_ops is not None:
+            self._on_ops(n)
+
+    def _install_repair_fns(self) -> None:
+        for j, shard in enumerate(self._shards):
+            if hasattr(shard, "repair_fn"):
+                shard.repair_fn = self._make_repair_fn(j)
+
+    def _make_repair_fn(self, s: int) -> Callable:
+        """Row rebuilder for shard ``s``: local row ids -> latest logical
+        rows, reconstructed from the retained WAL history.
+
+        A corrupt spilled extent names only local slot ids; the directory
+        maps live slots back to primary keys, and one full WAL scan
+        (insert/update set the key's latest row, delete clears it) yields
+        each key's current value.  Slots no key points at — deleted, or
+        revived elsewhere — resolve to ``None`` and get tombstoned by the
+        caller.  Garbage is never served."""
+        def repair(row_ids: Sequence[int]) -> List[Optional[Dict[str, Any]]]:
+            wanted = {int(i) for i in row_ids}
+            slot2key: Dict[int, Key] = {}
+            for k, (sh, i) in self._dir.items():
+                if sh == s and i in wanted:
+                    slot2key[i] = k
+            need = set(slot2key.values())
+            latest: Dict[Key, Dict[str, Any]] = {}
+            if need and self._wal is not None:
+                key_of = self.schema.key_of
+                for _lsn, op, payload in self._wal.scan(0):
+                    if op in ("insert", "update"):
+                        for r in payload:
+                            k = key_of(r)
+                            if k in need:
+                                latest[k] = r
+                    elif op == "delete":
+                        for k in payload:
+                            if k in need:
+                                latest.pop(k, None)
+            return [latest.get(slot2key.get(int(i))) for i in row_ids]
+        return repair
+
+    def close(self, unlink: bool = False) -> None:
+        """Release shard spill files and the WAL; ``unlink=True`` deletes
+        them (drop_table) instead of keeping them for reopen."""
+        for shard in self._shards:
+            if hasattr(shard, "close"):
+                shard.close(unlink=unlink)
+        if self._wal is not None:
+            if unlink:
+                self._wal.unlink()
+            else:
+                self._wal.close()
+
+    def clean_store_kwargs(self) -> Dict[str, Any]:
+        """store_kwargs safe to persist: live objects (a shared codec, an
+        injected io) are reconstructed, never pickled."""
+        return {k: v for k, v in self.store_kwargs.items()
+                if k not in ("codec", "spill_io")}
+
+    def snapshot_state(self) -> Dict[str, Any]:
+        if not isinstance(self.backend, str):
+            raise ValueError(
+                f"table {self.name!r}: factory backends cannot be "
+                f"checkpointed (pass a STORE_KINDS name)")
+        return {
+            "schema": self.schema,
+            "backend": self.backend,
+            "n_shards": self.n_shards,
+            "store_kwargs": self.clean_store_kwargs(),
+            "memory_budget": self.memory_budget,
+            "dir": dict(self._dir),
+            "shards": ([s.snapshot_state() for s in self._shards]
+                       if self._shards else None),
+        }
+
+    @classmethod
+    def from_snapshot(cls, state: Dict[str, Any],
+                      spill_io: Optional[Any] = None) -> "Table":
+        self = cls.__new__(cls)
+        self.schema = state["schema"]
+        self.name = self.schema.name
+        self.n_shards = state["n_shards"]
+        self.backend = state["backend"]
+        self.store_kwargs = dict(state["store_kwargs"])
+        if spill_io is not None:
+            self.store_kwargs["spill_io"] = spill_io
+        self.memory_budget = state["memory_budget"]
+        self._dir = dict(state["dir"])
+        self._shards = []
+        self._wal = None
+        self._io = None
+        self._on_ops = None
+        self._on_shards_built = None
+        if state["shards"] is not None:
+            store_cls = STORE_KINDS[self.backend]
+            for st in state["shards"]:
+                self._shards.append(store_cls.from_state(
+                    self.schema, st, spill_io=spill_io))
+            for j, shard in enumerate(self._shards):
+                maint = getattr(shard, "maintenance", None)
+                if maint is not None:
+                    maint.label = f"{self.name}/shard{j}"
+        return self
 
     # -- accounting ------------------------------------------------------
     def __len__(self) -> int:

@@ -1,0 +1,31 @@
+"""Durability layer: WAL + checksummed spill + checkpoint + fault injection.
+
+See DESIGN.md §7.  ``Database(durability=...)`` turns the layer on;
+``Database.open(root)`` (or :func:`open_database`) recovers a database
+from its checkpoint and WAL tail after a crash.
+"""
+
+from .checkpoint import load_checkpoint, write_checkpoint
+from .config import DurabilityConfig
+from .io import DurableIO, FaultInjector, SimulatedCrash
+from .wal import WalError, WalPoisonedError, WriteAheadLog
+
+__all__ = [
+    "DurabilityConfig",
+    "DurableIO",
+    "FaultInjector",
+    "SimulatedCrash",
+    "WalError",
+    "WalPoisonedError",
+    "WriteAheadLog",
+    "load_checkpoint",
+    "write_checkpoint",
+    "open_database",
+]
+
+
+def open_database(root, **kwargs):
+    """Recover a durable database from ``root`` (lazy import of recovery)."""
+    from .recovery import open_database as _open
+
+    return _open(root, **kwargs)

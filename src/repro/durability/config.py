@@ -1,0 +1,33 @@
+"""Durability configuration shared by Database, WAL, and checkpointing."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .io import DurableIO
+
+
+@dataclasses.dataclass
+class DurabilityConfig:
+    """Knobs for a durable :class:`~repro.db.Database` (DESIGN.md §7).
+
+    ``root`` is the directory holding one WAL per table plus the
+    checkpoint file.  ``fsync_every`` is the group-commit cadence: fsync
+    after every N-th WAL flush (1 = every batch verb, 0 = never — the OS
+    decides).  ``checkpoint_every_ops`` > 0 auto-checkpoints after that
+    many logged rows; ``checkpoint_on_maintenance`` piggybacks a
+    checkpoint request on every adaptive maintenance step (the refit
+    already paid for a full pass over the store, so snapshotting then is
+    nearly free and keeps replay short).  ``io`` lets tests plug in a
+    fault-injecting :class:`~repro.durability.io.DurableIO`.
+    """
+
+    root: str
+    fsync_every: int = 1
+    checkpoint_every_ops: int = 0
+    checkpoint_on_maintenance: bool = True
+    io: Optional[DurableIO] = None
+
+    def make_io(self) -> DurableIO:
+        return self.io if self.io is not None else DurableIO()

@@ -1,0 +1,146 @@
+"""Deterministic fault injection for durability I/O (DESIGN.md §7).
+
+Every byte the durability layer moves — WAL appends, spill segments,
+checkpoint files — flows through a :class:`DurableIO` shim implementing the
+same four-method protocol ``DiskArena`` expects (``pwrite`` / ``pread`` /
+``fsync`` / ``point``).  With no :class:`FaultInjector` attached the shim is
+a transparent passthrough; with one, two deterministic mechanisms arm:
+
+* **Named crash points** — ``crash_at("wal.before_flush")`` raises
+  :class:`SimulatedCrash` the n-th time execution reaches that point,
+  simulating a process kill at a precisely chosen instant.  The crash-point
+  catalog lives in :data:`repro.durability.harness.CRASH_POINTS`.
+* **Queued I/O faults** — ``add_fault("pread", "bitflip")`` corrupts the
+  next read; short reads, torn writes, ENOSPC, and failed fsync are queued
+  the same way.  Faults drain FIFO per operation, so a scenario is a pure
+  function of (seed, schedule), replayable forever.
+"""
+
+from __future__ import annotations
+
+import errno
+import os
+import random
+from typing import Dict, List, Optional
+
+FAULT_OPS = ("pwrite", "pread", "fsync")
+FAULT_KINDS = ("enospc", "torn", "short", "bitflip", "eio")
+
+
+class SimulatedCrash(BaseException):
+    """Raised at an armed crash point to simulate a process kill.
+
+    Derives from ``BaseException`` so ordinary ``except Exception``
+    cleanup code cannot accidentally swallow the "kill" — only the
+    crash-matrix harness (and tests) catch it.
+    """
+
+    def __init__(self, point: str):
+        super().__init__(f"simulated crash at {point!r}")
+        self.point = point
+
+
+class FaultInjector:
+    """Seedable source of crashes and I/O faults.
+
+    ``crash_at(point, hit=n)`` arms a named crash point to fire on its
+    n-th visit.  ``add_fault(op, kind)`` queues a fault for the next
+    matching I/O call.  ``fired`` records everything that actually
+    triggered, so tests can assert a fault was exercised rather than
+    silently skipped.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(int(seed))
+        self._crash: Dict[str, int] = {}
+        self._faults: Dict[str, List[str]] = {op: [] for op in FAULT_OPS}
+        self.fired: List[str] = []
+        self.points_seen: List[str] = []
+
+    def crash_at(self, point: str, hit: int = 1) -> None:
+        if hit < 1:
+            raise ValueError("hit must be >= 1")
+        self._crash[point] = int(hit)
+
+    def add_fault(self, op: str, kind: str, count: int = 1) -> None:
+        if op not in FAULT_OPS:
+            raise ValueError(f"unknown op {op!r}; expected one of {FAULT_OPS}")
+        if kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault {kind!r}; expected one of {FAULT_KINDS}"
+            )
+        self._faults[op].extend([kind] * int(count))
+
+    # -- hooks called by DurableIO ---------------------------------------
+    def on_point(self, name: str) -> None:
+        self.points_seen.append(name)
+        left = self._crash.get(name)
+        if left is None:
+            return
+        left -= 1
+        if left <= 0:
+            del self._crash[name]
+            self.fired.append(f"crash:{name}")
+            raise SimulatedCrash(name)
+        self._crash[name] = left
+
+    def take(self, op: str) -> Optional[str]:
+        queue = self._faults[op]
+        if not queue:
+            return None
+        kind = queue.pop(0)
+        self.fired.append(f"{op}:{kind}")
+        return kind
+
+
+def _flip_byte(buf: bytes, pos: int) -> bytes:
+    return buf[:pos] + bytes([buf[pos] ^ 0x40]) + buf[pos + 1 :]
+
+
+class DurableIO:
+    """The I/O provider durability code plugs into ``DiskArena``/WAL.
+
+    Implements the four-method protocol of
+    :class:`repro.core.arena._OsIO`; with an injector attached, queued
+    faults and armed crash points fire deterministically.
+    """
+
+    def __init__(self, injector: Optional[FaultInjector] = None):
+        self.injector = injector
+
+    def point(self, name: str) -> None:
+        if self.injector is not None:
+            self.injector.on_point(name)
+
+    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
+        fault = self.injector.take("pwrite") if self.injector else None
+        data = bytes(data)
+        if fault == "enospc":
+            raise OSError(errno.ENOSPC, os.strerror(errno.ENOSPC))
+        if fault == "eio":
+            raise OSError(errno.EIO, os.strerror(errno.EIO))
+        if fault == "torn":
+            # A torn write is a crash mid-pwrite: the prefix lands, the
+            # process dies.  The torn tail must be detected on reopen.
+            os.pwrite(fd, data[: len(data) // 2], offset)
+            raise SimulatedCrash("pwrite.torn")
+        if fault == "bitflip" and data:
+            data = _flip_byte(data, self.injector.rng.randrange(len(data)))
+        return os.pwrite(fd, data, offset)
+
+    def pread(self, fd: int, length: int, offset: int) -> bytes:
+        fault = self.injector.take("pread") if self.injector else None
+        if fault == "eio":
+            raise OSError(errno.EIO, os.strerror(errno.EIO))
+        buf = os.pread(fd, int(length), int(offset))
+        if fault == "short" and buf:
+            buf = buf[: len(buf) // 2]
+        elif fault == "bitflip" and buf:
+            buf = _flip_byte(buf, self.injector.rng.randrange(len(buf)))
+        return buf
+
+    def fsync(self, fd: int) -> None:
+        fault = self.injector.take("fsync") if self.injector else None
+        if fault == "eio":
+            raise OSError(errno.EIO, os.strerror(errno.EIO))
+        os.fsync(fd)

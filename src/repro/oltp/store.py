@@ -27,15 +27,18 @@ are no-ops.
 
 from __future__ import annotations
 
+import contextlib
 import json
 from collections import OrderedDict
-from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, \
+    Tuple
 
 import numpy as np
 
 from repro.adaptive import MaintenanceConfig, MaintenanceScheduler
 from repro.core import ColumnSpec, TableCodec
-from repro.core.arena import ResidencyManager
+from repro.core.arena import (ExtentCorruptionError, ResidencyManager,
+                              SpillCorruptionError, framed_len)
 from repro.core.blitzcrank import (CompressedTable, _raw_row_bytes,
                                    column_specs)
 from repro.core.huffman import BitReader, BitWriter, HuffmanCode
@@ -182,7 +185,8 @@ class _BytesRowStore(RowStore):
 
     def __init__(self, schema: Sequence[ColumnSpec],
                  memory_budget: Optional[int] = None,
-                 spill_path: Optional[str] = None):
+                 spill_path: Optional[str] = None,
+                 spill_io: Optional[Any] = None):
         super().__init__(schema)
         self.rows: List[Optional[bytes]] = []
         self._deleted: set = set()
@@ -191,8 +195,15 @@ class _BytesRowStore(RowStore):
         self._ref = bytearray()  # clock bits; hand lives in the manager
         self._resident_bytes = 0
         self._spilled_payload = 0
+        # Durability hook (DESIGN.md §7): rebuilds rows from the WAL when a
+        # spilled extent fails its CRC check.  Installed by repro.db.Table
+        # on durable databases; without it corruption propagates as
+        # SpillCorruptionError (never as garbage rows).
+        self.repair_fn: Optional[Callable] = None
+        self.repairs = 0
         if memory_budget is not None:
-            self._res = ResidencyManager(memory_budget, spill_path)
+            self._res = ResidencyManager(memory_budget, spill_path,
+                                         io=spill_io)
 
     def is_live(self, i: int) -> bool:
         i = int(i)
@@ -223,7 +234,7 @@ class _BytesRowStore(RowStore):
         old = self.rows[i]
         if old is None:  # spilled: the old extent is simply dropped
             off, ln = self._spilled.pop(i)
-            self._res.disk.free(off, ln)
+            self._res.disk.free(off, framed_len(ln))
             self._spilled_payload -= ln
         elif self._res is not None:
             self._resident_bytes -= len(old)
@@ -250,18 +261,33 @@ class _BytesRowStore(RowStore):
         if cold:
             res = self._res
             ids = sorted(set(cold))
-            extents = [self._spilled[i] for i in ids]
-            payloads = res.disk.read_many([e[0] for e in extents],
-                                          [e[1] for e in extents])
-            for i, (off, ln), p in zip(ids, extents, payloads):
+            for _attempt in range(3):
+                extents = [self._spilled[i] for i in ids]
+                try:
+                    payloads = res.disk.read_many_checked(
+                        [e[0] for e in extents], [e[1] for e in extents])
+                    break
+                except ExtentCorruptionError as e:
+                    # Quarantine the bad extents and rebuild their rows
+                    # from the WAL (repair_fn); repaired rows come back
+                    # resident, the rest retry the checked read.
+                    bad = [ids[j] for j in e.indices]
+                    res.quarantined += len(bad)
+                    self._repair_rows(bad)
+                    ids = [i for i in ids if i in self._spilled]
+                    payloads = []
+            else:
+                raise SpillCorruptionError(ids)
+            for i, p in zip(ids, payloads):
+                off, ln = self._spilled.pop(i)
                 rows[i] = p
-                del self._spilled[i]
-                res.disk.free(off, ln)
+                res.disk.free(off, framed_len(ln))
                 self._resident_bytes += ln
                 self._spilled_payload -= ln
                 self._ref[i] = 1
-            res.faults += len(ids)
-            res.fault_batches += 1
+            if ids:
+                res.faults += len(ids)
+                res.fault_batches += 1
             for j, i in enumerate(indices):
                 if out[j] is None and i not in dels:
                     out[j] = rows[i]
@@ -305,24 +331,46 @@ class _BytesRowStore(RowStore):
             ids = list(self._spilled)
             new_offs = res.disk.compact(
                 [self._spilled[i][0] for i in ids],
-                [self._spilled[i][1] for i in ids])
+                [framed_len(self._spilled[i][1]) for i in ids])
             for i, off in zip(ids, new_offs):
                 self._spilled[i] = (off, self._spilled[i][1])
 
     def _spill_rows(self, ids: List[int]) -> None:
-        """One coalesced segment write for the whole victim set."""
+        """One coalesced segment write (CRC32-framed extents) for the
+        whole victim set."""
         res = self._res
         payloads = [self.rows[i] for i in ids]
-        base = res.disk.write(b"".join(payloads))
-        off = base
-        for i, p in zip(ids, payloads):
+        offs = res.disk.write_many(payloads)
+        for i, off, p in zip(ids, offs, payloads):
             ln = len(p)
             self._spilled[i] = (off, ln)
-            off += ln
             self.rows[i] = None
             self._resident_bytes -= ln
             self._spilled_payload += ln
         res.spills += len(ids)
+
+    def _repair_rows(self, ids: List[int]) -> None:
+        """Rebuild corrupt spilled rows from the WAL via ``repair_fn``.
+
+        Rebuilt rows are re-encoded resident (their corrupt extents are
+        freed); ids the WAL cannot resolve to a live row are tombstoned —
+        their latest logical state is "deleted", and garbage is never
+        served.  Without a repair handler the corruption propagates."""
+        if self.repair_fn is None:
+            raise SpillCorruptionError(ids)
+        fetched = self.repair_fn(list(ids))
+        for i, row in zip(ids, fetched):
+            if row is None:
+                off, ln = self._spilled.pop(i)
+                self._res.disk.free(off, framed_len(ln))
+                self._spilled_payload -= ln
+                self.rows[i] = b""
+                self._ref[i] = 0
+                self._deleted.add(i)
+            else:
+                self._put_payload(i, self._encode_row(row))
+        self.repairs += len(ids)
+        self._res.repaired_rows += len(ids)
 
     # -- batched protocol ------------------------------------------------
     def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
@@ -380,6 +428,8 @@ class _BytesRowStore(RowStore):
 
     def stats(self) -> Dict[str, Any]:
         out = super().stats()
+        if self.repairs:
+            out["repairs"] = self.repairs
         if self._res is not None:
             out["spilled_bytes"] = self.spilled_bytes
             out["residency"] = {
@@ -390,15 +440,98 @@ class _BytesRowStore(RowStore):
             }
         return out
 
+    # -- durability (DESIGN.md §7) ---------------------------------------
+    def close(self, unlink: bool = False) -> None:
+        if self._res is not None:
+            self._res.close(unlink=unlink)
+
+    def _snapshot_model(self) -> Any:
+        """Subclass hook: per-store model state (dict/codes) to pickle."""
+        return None
+
+    def _restore_model(self, state: Any) -> None:
+        pass
+
+    def snapshot_state(self) -> Dict[str, Any]:
+        """Self-contained state: spilled payloads are read back
+        (CRC-verified, repaired from the WAL on mismatch) and embedded."""
+        st: Dict[str, Any] = {
+            "model": self._snapshot_model(),
+        }
+        if self._res is not None:
+            ids = sorted(self._spilled)
+            for _attempt in range(3):
+                extents = [self._spilled[i] for i in ids]
+                try:
+                    payloads = self._res.disk.read_many_checked(
+                        [e[0] for e in extents], [e[1] for e in extents])
+                    break
+                except ExtentCorruptionError as e:
+                    bad = [ids[j] for j in e.indices]
+                    self._res.quarantined += len(bad)
+                    self._repair_rows(bad)
+                    ids = [i for i in ids if i in self._spilled]
+                    payloads = []
+            else:
+                raise SpillCorruptionError(ids)
+            st["residency"] = {
+                "budget": self._res.budget,
+                "config": self._res.config,
+                "ref": bytes(self._ref),
+                "spilled": dict(zip(ids, payloads)),
+            }
+        # after any repairs above so repaired rows snapshot resident
+        st["rows"] = list(self.rows)
+        st["deleted"] = sorted(self._deleted)
+        return st
+
+    @classmethod
+    def from_state(cls, schema: Sequence[ColumnSpec], state: Dict[str, Any],
+                   spill_path: Optional[str] = None,
+                   spill_io: Optional[Any] = None) -> "_BytesRowStore":
+        """Rebuild from :meth:`snapshot_state`; previously spilled rows are
+        re-spilled into a fresh spill file, preserving the residency
+        split."""
+        self = cls.__new__(cls)
+        RowStore.__init__(self, schema)
+        self.rows = list(state["rows"])
+        self._deleted = set(state["deleted"])
+        self._res = None
+        self._spilled = {}
+        self._ref = bytearray()
+        self._resident_bytes = 0
+        self._spilled_payload = 0
+        self.repair_fn = None
+        self.repairs = 0
+        self._restore_model(state["model"])
+        res_state = state.get("residency")
+        if res_state is not None:
+            self._res = ResidencyManager(res_state["budget"], spill_path,
+                                         res_state.get("config"),
+                                         io=spill_io)
+            self._ref = bytearray(res_state["ref"])
+            self._resident_bytes = sum(
+                len(r) for r in self.rows if r is not None)
+            sp = res_state["spilled"]
+            ids = sorted(sp)
+            if ids:
+                offs = self._res.disk.write_many([sp[i] for i in ids])
+                for i, off in zip(ids, offs):
+                    ln = len(sp[i])
+                    self._spilled[i] = (off, ln)
+                    self._spilled_payload += ln
+        return self
+
 
 class UncompressedStore(_BytesRowStore):
     name = "silo"
 
     def __init__(self, schema: Sequence[ColumnSpec], rows_sample=None,
                  memory_budget: Optional[int] = None,
-                 spill_path: Optional[str] = None):
+                 spill_path: Optional[str] = None,
+                 spill_io: Optional[Any] = None):
         super().__init__(schema, memory_budget=memory_budget,
-                         spill_path=spill_path)
+                         spill_path=spill_path, spill_io=spill_io)
 
     def _encode_row(self, row: Dict[str, Any]) -> bytes:
         return json.dumps([row[c.name] for c in self.schema]).encode()
@@ -441,7 +574,8 @@ class BlitzStore(RowStore):
                  adaptive: bool | MaintenanceConfig = False,
                  codec: Optional[TableCodec] = None,
                  memory_budget: Optional[int] = None,
-                 spill_path: Optional[str] = None):
+                 spill_path: Optional[str] = None,
+                 spill_io: Optional[Any] = None):
         super().__init__(schema)
         if codec is None:
             codec = TableCodec.fit(rows_sample, self.schema,
@@ -456,8 +590,12 @@ class BlitzStore(RowStore):
         # top and is folded back by merge() as before.
         self.table = CompressedTable(codec, use_pallas=use_pallas,
                                      memory_budget=memory_budget,
-                                     spill_path=spill_path)
+                                     spill_path=spill_path,
+                                     spill_io=spill_io)
         self.block_tuples = block_tuples
+        # Durability hook, same contract as _BytesRowStore.repair_fn.
+        self.repair_fn: Optional[Callable] = None
+        self.repairs = 0
         self.auto_merge = bool(auto_merge) and block_tuples == 1
         self.merge_frac = merge_frac
         self.rewrite_frac = rewrite_frac
@@ -526,7 +664,14 @@ class BlitzStore(RowStore):
                  backend: str | None = None
                  ) -> List[Optional[Dict[str, Any]]]:
         idxs = [int(i) for i in indices]  # materialize: may be an iterator
-        rows = self.table.get_many(idxs, backend=backend)
+        for _attempt in range(3):
+            try:
+                rows = self.table.get_many(idxs, backend=backend)
+                break
+            except SpillCorruptionError as e:
+                self._repair(e)
+        else:
+            rows = self.table.get_many(idxs, backend=backend)
         if self._overlay or self._tombstones:
             ov, ts = self._overlay, self._tombstones
             rows = [None if i in ts
@@ -603,6 +748,91 @@ class BlitzStore(RowStore):
             self.table.rewrite()
         return self.stats()
 
+    # -- durability (DESIGN.md §7) ---------------------------------------
+    def _repair(self, err: SpillCorruptionError) -> None:
+        """Rebuild rows whose spilled blocks failed their CRC check.
+
+        ``replace_many`` retires the corrupt blocks *without* reading them
+        and re-encodes the WAL-reconstructed rows under the newest plan;
+        ids the WAL resolves to "deleted" are tombstoned.  Escape
+        accounting is paused — repair traffic is not workload drift."""
+        if self.repair_fn is None:
+            raise err
+        ids = list(err.row_ids)
+        fetched = self.repair_fn(ids)
+        alive = [(i, r) for i, r in zip(ids, fetched) if r is not None]
+        dead = [i for i, r in zip(ids, fetched) if r is None]
+        plan = self.table.codec.compile()
+        ctx = (plan.pause_escape_accounting() if plan is not None
+               else contextlib.nullcontext())
+        with ctx:
+            if alive:
+                self.table.replace_many([i for i, _ in alive],
+                                        [r for _, r in alive])
+            if dead:
+                self.table.delete_many(dead)
+        self.repairs += len(ids)
+        if self.table._res is not None:
+            self.table._res.repaired_rows += len(ids)
+
+    def close(self, unlink: bool = False) -> None:
+        self.table.close(unlink=unlink)
+
+    def snapshot_state(self) -> Dict[str, Any]:
+        for _attempt in range(3):
+            try:
+                table_state = self.table.snapshot_state()
+                break
+            except SpillCorruptionError as e:
+                self._repair(e)
+        else:
+            table_state = self.table.snapshot_state()
+        return {
+            "table": table_state,
+            "overlay": {int(i): dict(r)
+                        for i, r in self._overlay.items()},
+            "overlay_bytes": self._overlay_bytes,
+            "tombstones": sorted(self._tombstones),
+            "merges": self.merges,
+            "flags": {
+                "auto_merge": self.auto_merge,
+                "merge_frac": self.merge_frac,
+                "rewrite_frac": self.rewrite_frac,
+                "merge_min_bytes": self.merge_min_bytes,
+                "block_tuples": self.block_tuples,
+            },
+            "maintenance": (self.maintenance.snapshot_state()
+                            if self.maintenance is not None else None),
+        }
+
+    @classmethod
+    def from_state(cls, schema: Sequence[ColumnSpec], state: Dict[str, Any],
+                   spill_path: Optional[str] = None,
+                   spill_io: Optional[Any] = None) -> "BlitzStore":
+        self = cls.__new__(cls)
+        RowStore.__init__(self, schema)
+        self.table = CompressedTable.from_state(state["table"],
+                                                spill_path=spill_path,
+                                                spill_io=spill_io)
+        flags = state["flags"]
+        self.block_tuples = flags["block_tuples"]
+        self.auto_merge = flags["auto_merge"]
+        self.merge_frac = flags["merge_frac"]
+        self.rewrite_frac = flags["rewrite_frac"]
+        self.merge_min_bytes = flags["merge_min_bytes"]
+        self._overlay = {int(i): dict(r)
+                         for i, r in state["overlay"].items()}
+        self._overlay_bytes = state["overlay_bytes"]
+        self._tombstones = set(state["tombstones"])
+        self.merges = state["merges"]
+        self.repair_fn = None
+        self.repairs = 0
+        self.maintenance = None
+        if state.get("maintenance") is not None:
+            self.maintenance = MaintenanceScheduler.from_state(
+                self, state["maintenance"])
+        return self
+
     # -- accounting ------------------------------------------------------
     @property
     def nbytes(self) -> int:
@@ -676,6 +906,8 @@ class BlitzStore(RowStore):
             "plan_fallback": (None if plan is not None
                               else self.codec.plan_fallback_reason),
         }
+        if self.repairs:
+            out["repairs"] = self.repairs
         if t.memory_budget is not None:
             # nbytes above is *resident* memory (how the paper counts the
             # budget); the on-disk cold tier is reported separately.
@@ -692,23 +924,43 @@ class ZstdStore(_BytesRowStore):
     def __init__(self, schema: Sequence[ColumnSpec], rows_sample,
                  dict_kb: int = 110, level: int = 3,
                  memory_budget: Optional[int] = None,
-                 spill_path: Optional[str] = None):
-        import zstandard as zstd
+                 spill_path: Optional[str] = None,
+                 spill_io: Optional[Any] = None):
         super().__init__(schema, memory_budget=memory_budget,
-                         spill_path=spill_path)
+                         spill_path=spill_path, spill_io=spill_io)
+        import zstandard as zstd
+        self.level = level
         samples = [json.dumps([r[c.name] for c in self.schema]).encode()
                    for r in rows_sample]
         try:
             dict_data = zstd.train_dictionary(dict_kb * 1024, samples)
-            self._dict = dict_data
-            self.cctx = zstd.ZstdCompressor(level=level, dict_data=dict_data)
-            self.dctx = zstd.ZstdDecompressor(dict_data=dict_data)
-            self.dict_bytes = len(dict_data.as_bytes())
+            self._set_dict(dict_data.as_bytes())
         except Exception:  # tiny sample sets cannot train a dictionary
+            self._set_dict(None)
+
+    def _set_dict(self, dict_bytes: Optional[bytes]) -> None:
+        import zstandard as zstd
+        if dict_bytes is not None:
+            dict_data = zstd.ZstdCompressionDict(dict_bytes)
+            self._dict = dict_data
+            self.cctx = zstd.ZstdCompressor(level=self.level,
+                                            dict_data=dict_data)
+            self.dctx = zstd.ZstdDecompressor(dict_data=dict_data)
+            self.dict_bytes = len(dict_bytes)
+        else:
             self._dict = None
-            self.cctx = zstd.ZstdCompressor(level=level)
+            self.cctx = zstd.ZstdCompressor(level=self.level)
             self.dctx = zstd.ZstdDecompressor()
             self.dict_bytes = 0
+
+    def _snapshot_model(self) -> Any:
+        return {"level": self.level,
+                "dict": (self._dict.as_bytes()
+                         if self._dict is not None else None)}
+
+    def _restore_model(self, state: Any) -> None:
+        self.level = state["level"]
+        self._set_dict(state["dict"])
 
     def _encode_row(self, row: Dict[str, Any]) -> bytes:
         raw = json.dumps([row[c.name] for c in self.schema]).encode()
@@ -784,9 +1036,10 @@ class RamanStore(_BytesRowStore):
 
     def __init__(self, schema: Sequence[ColumnSpec], rows_sample,
                  memory_budget: Optional[int] = None,
-                 spill_path: Optional[str] = None):
+                 spill_path: Optional[str] = None,
+                 spill_io: Optional[Any] = None):
         super().__init__(schema, memory_budget=memory_budget,
-                         spill_path=spill_path)
+                         spill_path=spill_path, spill_io=spill_io)
         self.columns = {}
         for c in self.schema:
             vals = [r[c.name] for r in rows_sample]
@@ -804,6 +1057,15 @@ class RamanStore(_BytesRowStore):
                                     list(uniq.keys()),
                                     HuffmanCode(np.asarray(counts)))
         # hoisted per-column (name, value->id, esc_id, id->value, code)
+        self._cols = [(c.name, *self.columns[c.name],
+                       self.columns[c.name][0]["\x00<esc>"])
+                      for c in self.schema]
+
+    def _snapshot_model(self) -> Any:
+        return {"columns": self.columns}
+
+    def _restore_model(self, state: Any) -> None:
+        self.columns = state["columns"]
         self._cols = [(c.name, *self.columns[c.name],
                        self.columns[c.name][0]["\x00<esc>"])
                       for c in self.schema]

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core import CompressedTable, TableCodec
-from repro.core.arena import DiskArena
+from repro.core.arena import FRAME_OVERHEAD, DiskArena
 from repro.oltp import tpcc
 from repro.oltp.store import BlitzStore, RamanStore, UncompressedStore
 
@@ -238,7 +238,9 @@ class TestBlitzStoreOutOfCore:
         )
         spilled = ~t._resident[:nb]
         assert t._spilled_codes == int(t._disk_len[:nb][spilled].sum())
-        assert t._res.disk.live_bytes == 2 * t._spilled_codes
+        # each spilled extent carries a CRC32 frame header on disk
+        assert t._res.disk.live_bytes == 2 * t._spilled_codes + \
+            FRAME_OVERHEAD * int(spilled.sum())
 
     def test_migrate_rows_under_budget(self):
         rows = GEN(1500, seed=9)
@@ -307,7 +309,9 @@ class TestBaselineStoresOutOfCore:
         assert capped._spilled_payload == sum(
             ln for _, ln in capped._spilled.values()
         )
-        assert capped._res.disk.live_bytes == capped._spilled_payload
+        assert capped._res.disk.live_bytes == (
+            capped._spilled_payload + FRAME_OVERHEAD * len(capped._spilled)
+        )
 
 
 class TestDbTableBudget:

@@ -1,0 +1,170 @@
+"""Residency accounting invariants (DESIGN.md §6/§7), property-style.
+
+Hypothesis drives random interleavings of the operations that move bytes
+between the resident arena and the spill file — inserts that trigger
+spills, reads that fault cold rows back in, delta merges, arena
+rewrites, and plan migrations — and after every step the incremental
+counters (``resident_bytes``/``spilled_bytes``/disk ``live_bytes``) must
+equal ground truth recomputed from the raw block/row structures.  A
+sweep that double-picks a victim, a fault-in that forgets to free its
+extent, or a rewrite that drops a residency tag shows up here as counter
+drift long before it corrupts a read.
+
+Covers both store shapes: the compressed code arena
+(``CompressedTable`` inside ``BlitzStore``) and the byte-payload stores
+(``_BytesRowStore`` via ``UncompressedStore``).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.adaptive import refit_codec
+from repro.core import TableCodec
+from repro.core.arena import FRAME_OVERHEAD
+from repro.oltp import tpcc
+from repro.oltp.store import BlitzStore, UncompressedStore
+
+SCHEMA, GEN = tpcc.TABLES["orderline"]
+ROWS = GEN(500, seed=21)
+# Rows whose quantity escapes the v0 vocab: gives migrate real work.
+DRIFTED = [dict(r, ol_quantity=520 + (i % 50)) for i, r in enumerate(ROWS)]
+CODEC = TableCodec.fit(ROWS[:256], SCHEMA)
+CODEC_V1 = refit_codec(CODEC, DRIFTED[:256], ["ol_quantity"])
+TINY = 1 << 13
+
+OP = st.one_of(
+    st.tuples(st.just("insert"), st.integers(0, 2**16)),
+    st.tuples(st.just("update"), st.integers(0, 2**16)),
+    st.tuples(st.just("delete"), st.integers(0, 2**16)),
+    st.tuples(st.just("read"), st.integers(0, 2**16)),
+    st.tuples(st.just("merge"), st.just(0)),
+    st.tuples(st.just("rewrite"), st.just(0)),
+    st.tuples(st.just("migrate"), st.just(0)),
+)
+OPS = st.lists(OP, min_size=4, max_size=20)
+
+
+def _fresh_rows(rng, k):
+    out = []
+    for _ in range(k):
+        r = dict(ROWS[int(rng.integers(0, len(ROWS)))])
+        r["ol_quantity"] = int(rng.integers(1, 60))
+        r["ol_amount"] = round(float(rng.uniform(0.01, 9000.0)), 2)
+        out.append(r)
+    return out
+
+
+def _check_table_accounting(store):
+    """CompressedTable counters vs ground truth from the block arrays."""
+    t = store.table
+    nb = t.n_blocks
+    lens = t.block_offsets[1:nb + 1] - t.block_offsets[:nb]
+    resident = t._resident[:nb]
+    live_resident = int(lens[resident].sum())
+    dead_resident = int(lens[resident & (t._block2row[:nb] < 0)].sum())
+    assert t.used - t._dead_codes == live_resident - dead_resident
+    spilled = ~resident
+    assert t._spilled_codes == int(t._disk_len[:nb][spilled].sum())
+    # resident + spilled covers every live code byte exactly once, and
+    # each spilled extent carries one CRC32 frame on disk
+    assert t._res.disk.live_bytes == (
+        2 * t._spilled_codes + FRAME_OVERHEAD * int(spilled.sum()))
+    res = t.residency()
+    assert res["resident_bytes"] == t.nbytes
+    assert res["spilled_bytes"] == 2 * t._spilled_codes
+
+
+def _check_bytes_accounting(store):
+    """_BytesRowStore counters vs ground truth from the row list."""
+    assert store._resident_bytes == sum(
+        len(r) for r in store.rows if r)
+    assert store._spilled_payload == sum(
+        ln for _, ln in store._spilled.values())
+    assert store._res.disk.live_bytes == (
+        store._spilled_payload + FRAME_OVERHEAD * len(store._spilled))
+    assert store.spilled_bytes == store._spilled_payload
+
+
+@settings(max_examples=12, deadline=None)
+@given(ops=OPS)
+def test_compressed_table_accounting_invariant(ops):
+    # Same codec, same verb sequence: the capped store must stay
+    # bit-identical to the uncapped reference while its counters track
+    # ground truth through every spill/fault/merge/rewrite/migrate.
+    ref = BlitzStore(SCHEMA, None, codec=CODEC, auto_merge=False)
+    cap = BlitzStore(SCHEMA, None, codec=CODEC, auto_merge=False,
+                     memory_budget=TINY)
+    for s in (ref, cap):
+        s.insert_many(ROWS)
+        s.insert_many(DRIFTED[:128])  # stale once v1 installs
+        s.install_codec(CODEC_V1)
+    for kind, seed in ops:
+        rng = np.random.default_rng(seed)
+        if kind == "insert":
+            fresh = _fresh_rows(rng, int(rng.integers(1, 16)))
+            assert list(cap.insert_many(fresh)) == list(
+                ref.insert_many(fresh))
+        elif kind == "update":
+            live = [i for i in range(len(ref)) if ref.is_live(i)]
+            if live:
+                picks = rng.choice(len(live), min(8, len(live)),
+                                   replace=False)
+                idxs = [live[int(j)] for j in picks]
+                rows = _fresh_rows(rng, len(idxs))
+                ref.update_many(idxs, rows)
+                cap.update_many(idxs, rows)
+        elif kind == "delete":
+            idxs = rng.integers(0, len(ref), 6).tolist()
+            assert cap.delete_many(idxs) == ref.delete_many(idxs)
+        elif kind == "read":
+            probe = rng.integers(0, len(ref), 48).tolist()
+            assert cap.get_many(probe) == ref.get_many(probe)
+        elif kind == "merge":
+            ref.merge()
+            cap.merge()
+        elif kind == "rewrite":
+            ref.table.rewrite()
+            cap.table.rewrite()
+        elif kind == "migrate":
+            ref.migrate(256, resident_only=False)
+            cap.migrate(256, resident_only=False)
+        _check_table_accounting(cap)
+    every = list(range(len(ref)))
+    assert cap.get_many(every) == ref.get_many(every)
+
+
+@settings(max_examples=12, deadline=None)
+@given(ops=OPS)
+def test_bytes_store_accounting_invariant(ops):
+    ref = UncompressedStore(SCHEMA, ROWS[:64])
+    cap = UncompressedStore(SCHEMA, ROWS[:64], memory_budget=2048)
+    ref.insert_many(ROWS[:256])
+    cap.insert_many(ROWS[:256])
+    for kind, seed in ops:
+        rng = np.random.default_rng(seed)
+        if kind == "insert":
+            fresh = _fresh_rows(rng, int(rng.integers(1, 16)))
+            assert list(cap.insert_many(fresh)) == list(
+                ref.insert_many(fresh))
+        elif kind == "update":
+            live = [i for i in range(len(ref)) if ref.is_live(i)]
+            if live:
+                picks = rng.choice(len(live), min(8, len(live)),
+                                   replace=False)
+                idxs = [live[int(j)] for j in picks]
+                rows = _fresh_rows(rng, len(idxs))
+                ref.update_many(idxs, rows)
+                cap.update_many(idxs, rows)
+        elif kind == "delete":
+            idxs = rng.integers(0, len(ref), 6).tolist()
+            assert cap.delete_many(idxs) == ref.delete_many(idxs)
+        else:  # read / merge / rewrite / migrate: reads fault cold rows
+            probe = rng.integers(0, len(ref), 48).tolist()
+            assert cap.get_many(probe) == ref.get_many(probe)
+        _check_bytes_accounting(cap)
+    every = list(range(len(ref)))
+    assert cap.get_many(every) == ref.get_many(every)
+    cap.close(unlink=True)
