@@ -47,6 +47,7 @@ REQUIRED_BENCHES = [
     "db_tpcc",
     "out_of_core",
     "recovery",
+    "htap",
     "sampling",
     "entropy",
     "granularity",
@@ -66,6 +67,7 @@ SMOKE_IDENTICAL = [
     "db_tpcc_acceptance",
     "out_of_core_acceptance",
     "recovery_acceptance",
+    "htap_acceptance",
 ]
 
 # (csv name, derived key, lower bound) — loose floors for smoke scale,
@@ -120,6 +122,12 @@ ARTIFACT_RULES: List[Tuple[str, List[str], str, Optional[float]]] = [
     ("BENCH_recovery.json", ["acceptance", "wal_on_ratio"], "min", 0.7),
     ("BENCH_recovery.json", ["acceptance", "replay_s"], "max", 5.0),
     ("BENCH_recovery.json", ["acceptance", "identical"], "true", None),
+    ("BENCH_recovery.json", ["acceptance", "ckpt_saved_frac"], "min", 0.5),
+    ("BENCH_htap.json", ["acceptance", "pass"], "true", None),
+    ("BENCH_htap.json", ["acceptance", "speedup_vs_ref"], "min", 3.0),
+    ("BENCH_htap.json", ["acceptance", "identical"], "true", None),
+    ("BENCH_htap.json", ["acceptance", "interference_ratio"], "max", 2.0),
+    ("BENCH_htap.json", ["acceptance", "residency_neutral"], "true", None),
 ]
 
 

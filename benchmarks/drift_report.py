@@ -1,0 +1,174 @@
+"""Benchmark drift report: fresh BENCH_*.json vs the committed stamps.
+
+The nightly CI job refreshes every ``BENCH_*.json`` in place with a full
+(non-smoke) run and then calls this module to diff the refreshed numbers
+against what is committed at ``HEAD``.  The report is a per-metric delta
+table — every numeric leaf of every artifact, with relative change and a
+drift flag — uploaded as a build artifact so slow regressions that stay
+inside the hard ``check_regression`` bounds are still visible as a trend.
+
+This is a *report*, not a gate: it always exits 0 unless an artifact is
+unreadable.  The hard bounds live in ``benchmarks/check_regression.py``.
+
+Usage::
+
+    python -m benchmarks.drift_report                # table to stdout
+    python -m benchmarks.drift_report --out drift.md # and to a file
+    python -m benchmarks.drift_report --ref HEAD~1   # diff another ref
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# Relative change beyond which a metric is flagged.  Wall-clock numbers
+# are noisy between runners, so the flag threshold is deliberately loose;
+# the table itself carries the exact deltas for trend reading.
+FLAG_REL = 0.15
+
+# Bookkeeping leaves that aren't measurements: identity stamps and scale
+# knobs change legitimately and would only add noise to the table.
+SKIP_KEYS = {"git_sha", "schema_name", "mode", "seed"}
+SKIP_TOP = {"scale"}
+
+
+def _leaves(doc: object, prefix: str = "") -> Iterator[Tuple[str, float]]:
+    """Yield ``dotted.path -> value`` for every numeric leaf (bools as
+    0/1 so correctness flips show up as a 100% drift)."""
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            if k in SKIP_KEYS or (not prefix and k in SKIP_TOP):
+                continue
+            yield from _leaves(v, f"{prefix}.{k}" if prefix else k)
+    elif isinstance(doc, list):
+        for i, v in enumerate(doc):
+            yield from _leaves(v, f"{prefix}[{i}]")
+    elif isinstance(doc, bool):
+        yield prefix, float(doc)
+    elif isinstance(doc, (int, float)):
+        yield prefix, float(doc)
+
+
+def _committed(root: Path, ref: str, name: str) -> Optional[dict]:
+    try:
+        blob = subprocess.run(
+            ["git", "-C", str(root), "show", f"{ref}:{name}"],
+            capture_output=True,
+            check=True,
+        ).stdout
+        return json.loads(blob)
+    except (subprocess.CalledProcessError, json.JSONDecodeError):
+        return None  # new artifact this cycle, or ref predates it
+
+
+def diff_artifact(
+    fresh: dict, committed: Optional[dict]
+) -> List[Tuple[str, Optional[float], Optional[float], Optional[float]]]:
+    """Rows of ``(metric, old, new, rel_change)``; ``None`` old marks a
+    metric (or whole artifact) new since the ref."""
+    new_map = dict(_leaves(fresh))
+    old_map = dict(_leaves(committed)) if committed else {}
+    rows = []
+    for key in sorted(set(new_map) | set(old_map)):
+        old, new = old_map.get(key), new_map.get(key)
+        rel = None
+        if old is not None and new is not None:
+            rel = (new - old) / abs(old) if old != 0 else (0.0 if new == 0 else None)
+        rows.append((key, old, new, rel))
+    return rows
+
+
+def _fmt(v: Optional[float]) -> str:
+    if v is None:
+        return "—"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.4g}"
+
+
+def render(
+    per_artifact: Dict[str, List[Tuple]], ref: str, flag_rel: float = FLAG_REL
+) -> str:
+    lines = [
+        f"# Benchmark drift vs `{ref}`",
+        "",
+        f"Flag threshold: ±{flag_rel:.0%} relative change. "
+        "Report only — hard bounds are enforced by `check_regression.py`.",
+        "",
+    ]
+    n_flagged = 0
+    for name, rows in per_artifact.items():
+        flagged = [
+            r for r in rows if r[3] is not None and abs(r[3]) > flag_rel
+        ]
+        n_flagged += len(flagged)
+        status = f"{len(flagged)} flagged" if flagged else "stable"
+        lines += [f"## {name} ({status})", ""]
+        lines += [
+            "| metric | committed | fresh | Δ |",
+            "|---|---:|---:|---:|",
+        ]
+        for key, old, new, rel in rows:
+            mark = ""
+            if rel is not None and abs(rel) > flag_rel:
+                mark = " ⚠"
+            delta = "new" if old is None else (
+                "gone" if new is None else f"{rel:+.1%}" if rel is not None else "?"
+            )
+            lines.append(
+                f"| `{key}` | {_fmt(old)} | {_fmt(new)} | {delta}{mark} |"
+            )
+        lines.append("")
+    lines.insert(1, "")
+    lines.insert(
+        1,
+        f"**{n_flagged} metric(s) flagged** across "
+        f"{len(per_artifact)} artifact(s).",
+    )
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=str(REPO_ROOT))
+    ap.add_argument("--ref", default="HEAD", help="git ref to diff against")
+    ap.add_argument("--out", default=None, help="also write the report here")
+    ap.add_argument(
+        "--flag-rel",
+        type=float,
+        default=FLAG_REL,
+        help="relative change beyond which a metric is flagged",
+    )
+    args = ap.parse_args(argv)
+    root = Path(args.root)
+
+    per_artifact: Dict[str, List[Tuple]] = {}
+    for path in sorted(root.glob("BENCH_*.json")):
+        try:
+            fresh = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            print(f"drift_report: {path.name}: invalid JSON ({e})", file=sys.stderr)
+            return 1
+        per_artifact[path.name] = diff_artifact(
+            fresh, _committed(root, args.ref, path.name)
+        )
+    if not per_artifact:
+        print("drift_report: no BENCH_*.json artifacts found", file=sys.stderr)
+        return 1
+
+    report = render(per_artifact, args.ref, args.flag_rel)
+    print(report)
+    if args.out:
+        Path(args.out).write_text(report + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,9 +27,10 @@ def main() -> None:
                             bench_batch_decode, bench_compression,
                             bench_db_tpcc, bench_entropy_coders,
                             bench_fastpath, bench_framework,
-                            bench_granularity, bench_out_of_core,
-                            bench_recovery, bench_sampling,
-                            bench_update_merge, roofline_report)
+                            bench_granularity, bench_htap,
+                            bench_out_of_core, bench_recovery,
+                            bench_sampling, bench_update_merge,
+                            roofline_report)
 
     if args.smoke:
         artifact.set_smoke(True)
@@ -42,6 +43,7 @@ def main() -> None:
         "db_tpcc": bench_db_tpcc,                # DESIGN.md §5 engine, §6
         "out_of_core": bench_out_of_core,        # DESIGN.md §6 cold tier
         "recovery": bench_recovery,              # DESIGN.md §7 durability
+        "htap": bench_htap,                      # DESIGN.md §8 scan engine
 
         "sampling": bench_sampling,              # Fig 10
         "entropy": bench_entropy_coders,         # Fig 11

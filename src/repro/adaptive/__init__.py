@@ -13,7 +13,11 @@ from .refit import ReservoirSample, refit_codec
 from .scheduler import MaintenanceConfig, MaintenanceScheduler
 
 __all__ = [
-    "DriftConfig", "DriftMonitor", "DriftReport",
-    "ReservoirSample", "refit_codec",
-    "MaintenanceConfig", "MaintenanceScheduler",
+    "DriftConfig",
+    "DriftMonitor",
+    "DriftReport",
+    "ReservoirSample",
+    "refit_codec",
+    "MaintenanceConfig",
+    "MaintenanceScheduler",
 ]

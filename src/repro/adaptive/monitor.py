@@ -71,10 +71,12 @@ class DriftMonitor:
             drifted: List[str] = []
         else:
             drifted = sorted(
-                (name for name, esc in plan.window_escapes.items()
-                 if esc >= cfg.min_escapes
-                 and esc / n >= cfg.rate_threshold),
-                key=lambda name: -rates[name])
-        self.last_report = DriftReport(window_rows=n, rates=rates,
-                                       drifted=drifted)
+                (
+                    name
+                    for name, esc in plan.window_escapes.items()
+                    if esc >= cfg.min_escapes and esc / n >= cfg.rate_threshold
+                ),
+                key=lambda name: -rates[name],
+            )
+        self.last_report = DriftReport(window_rows=n, rates=rates, drifted=drifted)
         return drifted

@@ -25,8 +25,11 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.blitzcrank import TableCodec, fit_column_model
-from repro.core.models import (CategoricalModel, ConditionalCategoricalModel,
-                               NumericModel)
+from repro.core.models import (
+    CategoricalModel,
+    ConditionalCategoricalModel,
+    NumericModel,
+)
 
 
 class ReservoirSample:
@@ -57,8 +60,9 @@ class ReservoirSample:
         return len(self.rows)
 
 
-def _vocab_extras(model: Any, name: str, rows: Sequence[Dict[str, Any]],
-                  headroom: float) -> Optional[List[Any]]:
+def _vocab_extras(
+    model: Any, name: str, rows: Sequence[Dict[str, Any]], headroom: float
+) -> Optional[List[Any]]:
     """Training extras that keep the old model's value set conforming.
 
     Numeric columns additionally get *range headroom*: the refit range is
@@ -90,9 +94,13 @@ def _vocab_extras(model: Any, name: str, rows: Sequence[Dict[str, Any]],
     return None
 
 
-def refit_codec(codec: TableCodec, rows: Sequence[Dict[str, Any]],
-                columns: Sequence[str], preserve_vocab: bool = True,
-                numeric_headroom: float = 0.5) -> TableCodec:
+def refit_codec(
+    codec: TableCodec,
+    rows: Sequence[Dict[str, Any]],
+    columns: Sequence[str],
+    preserve_vocab: bool = True,
+    numeric_headroom: float = 0.5,
+) -> TableCodec:
     """New codec version: drifted ``columns`` refit on ``rows``, rest shared.
 
     The returned codec reuses the outgoing codec's schema, column order,
@@ -117,19 +125,38 @@ def refit_codec(codec: TableCodec, rows: Sequence[Dict[str, Any]],
             if isinstance(old, ConditionalCategoricalModel):
                 # Encode-side conformance is judged per parent group, so
                 # each group's child vocabulary must carry over too.
-                pairs = [(pv, v) for pv, sub in old.cond.items()
-                         for v in sub.id2value]
-        new = fit_column_model(spec, list(rows), parent, codec.block_tuples,
-                               extra_values=extras, extra_pairs=pairs)
-        if (preserve_vocab and isinstance(old, NumericModel)
-                and not isinstance(new, NumericModel)):
+                pairs = [
+                    (pv, v) for pv, sub in old.cond.items() for v in sub.id2value
+                ]
+        new = fit_column_model(
+            spec,
+            list(rows),
+            parent,
+            codec.block_tuples,
+            extra_values=extras,
+            extra_pairs=pairs,
+        )
+        if (
+            preserve_vocab
+            and isinstance(old, NumericModel)
+            and not isinstance(new, NumericModel)
+        ):
             # An int column that drifted down to few distinct reservoir
             # values would flip to categorical, dropping the preserved
             # range (every old in-range value absent from the reservoir
             # would escape).  Keep the model kind stable instead.
-            new = NumericModel([r[name] for r in rows] + list(extras or []),
-                               precision=old.p, T=spec.buckets,
-                               integer=old.integer)
+            new = NumericModel(
+                [r[name] for r in rows] + list(extras or []),
+                precision=old.p,
+                T=spec.buckets,
+                integer=old.integer,
+            )
         models[name] = new
-    return TableCodec(codec.schema, models, list(codec.order), codec.stats,
-                      codec.block_tuples, codec.lam)
+    return TableCodec(
+        codec.schema,
+        models,
+        list(codec.order),
+        codec.stats,
+        codec.block_tuples,
+        codec.lam,
+    )

@@ -29,9 +29,9 @@ from .refit import ReservoirSample, refit_codec
 @dataclasses.dataclass
 class MaintenanceConfig:
     drift: DriftConfig = dataclasses.field(default_factory=DriftConfig)
-    check_every: int = 2048        # writes between automatic steps
-    reservoir_size: int = 4096     # recent-write sample the refitter trains on
-    min_refit_rows: int = 256      # don't refit on a thinner sample
+    check_every: int = 2048  # writes between automatic steps
+    reservoir_size: int = 4096  # recent-write sample the refitter trains on
+    min_refit_rows: int = 256  # don't refit on a thinner sample
     migrate_rows_per_step: int = 1024  # opportunistic migration budget
     # Under a memory budget (DESIGN.md §6), migration only touches
     # *resident* stale blocks: faulting cold blocks in for a background
@@ -39,7 +39,7 @@ class MaintenanceConfig:
     # never thrash the cache.  Spilled stale rows migrate when the
     # workload itself faults them back.
     migrate_resident_only: bool = True
-    max_versions: int = 16         # hard cap on installed plan versions
+    max_versions: int = 16  # hard cap on installed plan versions
     numeric_headroom: float = 0.5  # range padding on numeric refits
     # Futility freeze: after a refit, the column's escape rate in the next
     # full window is compared against the rate that triggered the refit.
@@ -56,8 +56,13 @@ class MaintenanceConfig:
 class MaintenanceScheduler:
     """Drift-detect → refit → migrate, one bounded unit of work per step."""
 
-    def __init__(self, store, config: Optional[MaintenanceConfig] = None,
-                 seed: int = 0, label: str = ""):
+    def __init__(
+        self,
+        store,
+        config: Optional[MaintenanceConfig] = None,
+        seed: int = 0,
+        label: str = "",
+    ):
         self.store = store
         self.config = config or MaintenanceConfig()
         # Which store this scheduler maintains, e.g. "customer/shard3" —
@@ -110,17 +115,16 @@ class MaintenanceScheduler:
         cfg = self.config
         plan = self.store.codec.compile()
         raw_drifted = self.monitor.check(plan)
-        rates = (self.monitor.last_report.rates
-                 if self.monitor.last_report else {})
-        window_rows = (self.monitor.last_report.window_rows
-                       if self.monitor.last_report else 0)
+        rates = self.monitor.last_report.rates if self.monitor.last_report else {}
+        window_rows = (
+            self.monitor.last_report.window_rows if self.monitor.last_report else 0
+        )
         # Verdict on the previous refit, once a full window has accrued:
         # a column still escaping near its trigger rate was refit in vain.
         if self._pending_eval and window_rows >= cfg.drift.min_window_rows:
             for c in self._pending_eval:
                 prev = self._rate_at_refit.get(c, 0.0)
-                if prev > 0.0 and rates.get(c, 0.0) >= \
-                        cfg.futility_frac * prev:
+                if prev > 0.0 and rates.get(c, 0.0) >= cfg.futility_frac * prev:
                     n = self._futile_count.get(c, 0) + 1
                     self._futile_count[c] = n
                     if n >= cfg.futility_patience:
@@ -137,9 +141,12 @@ class MaintenanceScheduler:
             if self.store.n_versions >= cfg.max_versions:
                 plan.reset_escapes()  # at cap: dismiss, don't thrash
             else:
-                new_codec = refit_codec(self.store.codec, self.reservoir.rows,
-                                        drifted,
-                                        numeric_headroom=cfg.numeric_headroom)
+                new_codec = refit_codec(
+                    self.store.codec,
+                    self.reservoir.rows,
+                    drifted,
+                    numeric_headroom=cfg.numeric_headroom,
+                )
                 if new_codec.compile() is None:
                     self.refit_failures += 1
                     plan.reset_escapes()
@@ -152,13 +159,14 @@ class MaintenanceScheduler:
                     for c in drifted:
                         self._rate_at_refit[c] = rates.get(c, 0.0)
         migrated = self.store.migrate(
-            cfg.migrate_rows_per_step,
-            resident_only=cfg.migrate_resident_only)
+            cfg.migrate_rows_per_step, resident_only=cfg.migrate_resident_only
+        )
         self.migrated_rows += migrated
         result = {
             "step": self.steps,
-            "window_rows": (self.monitor.last_report.window_rows
-                            if self.monitor.last_report else 0),
+            "window_rows": (
+                self.monitor.last_report.window_rows if self.monitor.last_report else 0
+            ),
             "drifted": drifted,
             "refit_columns": refit_cols,
             "refits": self.refits,
@@ -174,14 +182,12 @@ class MaintenanceScheduler:
         """Adaptive state for a checkpoint: config, monitor, reservoir
         (the Generator pickles, so reservoir sampling stays deterministic
         across a crash), counters, and the futility bookkeeping."""
-        st = {k: v for k, v in self.__dict__.items()
-              if k not in ("store", "on_step")}
+        st = {k: v for k, v in self.__dict__.items() if k not in ("store", "on_step")}
         st["frozen"] = sorted(self.frozen)
         return st
 
     @classmethod
-    def from_state(cls, store,
-                   state: Dict[str, Any]) -> "MaintenanceScheduler":
+    def from_state(cls, store, state: Dict[str, Any]) -> "MaintenanceScheduler":
         self = cls.__new__(cls)
         self.store = store
         self.on_step = []

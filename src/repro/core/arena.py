@@ -59,6 +59,44 @@ def framed_len(payload_len: int) -> int:
     return FRAME_OVERHEAD + int(payload_len)
 
 
+def read_extents(path: str, offsets: Sequence[int],
+                 payload_lens: Sequence[int]) -> List[Optional[bytes]]:
+    """Verify-and-read framed extents straight from a spill file path.
+
+    Read-only and stateless (no :class:`DiskArena`): checkpoint restore
+    uses it to source extent-referenced payloads from a durable spill file
+    *before* a fresh arena — possibly at the same path, which would
+    truncate it — is opened.  Returns ``None`` for any extent that is
+    missing, short, or fails its magic/length/CRC check; the caller maps
+    those back to rows for WAL repair.
+    """
+    offsets = [int(o) for o in offsets]
+    lens = [int(ln) for ln in payload_lens]
+    try:
+        f = open(path, "rb")
+    except OSError:
+        return [None] * len(offsets)
+    out: List[Optional[bytes]] = []
+    with f:
+        fd = f.fileno()
+        for off, ln in zip(offsets, lens):
+            fln = framed_len(ln)
+            try:
+                raw = os.pread(fd, fln, off)
+            except OSError:
+                out.append(None)
+                continue
+            if len(raw) != fln:
+                out.append(None)
+                continue
+            magic, n, crc = FRAME_HEADER.unpack_from(raw)
+            body = raw[FRAME_OVERHEAD:]
+            ok = (magic == FRAME_MAGIC and n == len(body)
+                  and zlib.crc32(body) == crc)
+            out.append(body if ok else None)
+    return out
+
+
 class ArenaError(RuntimeError):
     """Base class for spill-file I/O failures."""
 

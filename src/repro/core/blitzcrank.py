@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -21,7 +22,7 @@ import numpy as np
 from . import delayed
 from .arena import (FRAME_OVERHEAD, ArenaReadError, ExtentCorruptionError,
                     ResidencyConfig, ResidencyManager, SpillCorruptionError,
-                    framed_len)
+                    framed_len, read_extents)
 from .delayed import BlockDecoder
 from .models import (BlockEncoder, CategoricalModel, ConditionalCategoricalModel,
                      NumericModel, StringModel, TimeSeriesModel)
@@ -343,6 +344,24 @@ class TableCodec:
                    if hasattr(self.models[n], "est_bits"))
 
 
+def _read_spill_extents(path: str, extents: Dict[int, Tuple[int, int]],
+                        block2row: np.ndarray) -> Dict[int, bytes]:
+    """Read extent-referenced spill payloads for an extent-mode checkpoint
+    (see :meth:`CompressedTable.snapshot_state`).  Must run *before* any
+    :class:`ResidencyManager` re-opens (and truncates) the spill path.
+    CRC or length mismatches surface as :class:`SpillCorruptionError`
+    carrying the affected row ids for WAL-backed repair."""
+    blocks = sorted(int(b) for b in extents)
+    offs = [extents[b][0] for b in blocks]
+    lens = [2 * extents[b][1] for b in blocks]
+    payloads = read_extents(path, offs, lens)
+    bad = [b for b, p in zip(blocks, payloads) if p is None]
+    if bad:
+        b2r = np.asarray(block2row, dtype=np.int64)
+        raise SpillCorruptionError([int(b2r[b]) for b in bad])
+    return {b: p for b, p in zip(blocks, payloads)}
+
+
 def _raw_row_bytes(row: Dict[str, Any]) -> int:
     """Silo-style uncompressed footprint of one row (for honest accounting)."""
     total = 0
@@ -375,6 +394,7 @@ class CompressedTable:
     """
 
     PALLAS_MIN_ROWS = 4096  # auto mode: below this, numpy always wins
+    ZONE_CHUNK = 256        # physical blocks per zone-map extent
 
     def __init__(self, codec: TableCodec, capacity_hint: int = 1 << 16,
                  use_pallas: Optional[bool] = None,
@@ -408,6 +428,18 @@ class CompressedTable:
         # set, cold blocks spill their code runs to a DiskArena and fault
         # back in on access.  The per-block arrays below only exist while
         # a ResidencyManager is installed.
+        # Zone maps (DESIGN.md §8): raw-value min/max per *chunk* of
+        # ZONE_CHUNK consecutive physical blocks, over the numeric schema
+        # columns.  The scan engine prunes chunks whose bounds exclude a
+        # range predicate before any decode or disk read.  Bounds are
+        # conservative supersets: they only widen between rewrites (a
+        # rewrite renumbers blocks and rebuilds them as chunk unions), so
+        # pruning is always safe; NaN poisons a chunk (never pruned).
+        self._zone_cols: List[str] = [c.name for c in codec.schema
+                                      if c.kind in ("int", "float", "ts")]
+        self._zcol_idx = {c: j for j, c in enumerate(self._zone_cols)}
+        self._zmin = np.full((0, len(self._zone_cols)), np.inf)
+        self._zmax = np.full((0, len(self._zone_cols)), -np.inf)
         self._res: Optional[ResidencyManager] = None
         self._resident: Optional[np.ndarray] = None   # bool[cap]
         self._disk_off: Optional[np.ndarray] = None   # int64[cap], bytes
@@ -656,6 +688,7 @@ class CompressedTable:
         self._offsets[first + 1:first + 1 + n] = base + np.cumsum(lens)
         self._fast[first:first + n] = self._fast[blocks]
         self._plan_ver[first:first + n] = self._plan_ver[blocks]
+        self._zone_union(first, blocks)
         rows = self._block2row[blocks]
         self._init_new_blocks(first, n, rows)
         self.n_blocks += n
@@ -741,13 +774,130 @@ class CompressedTable:
             r2b[:self._rows_stored] = self._row2block[:self._rows_stored]
             self._row2block = r2b
 
-    def _append_block(self, codes: np.ndarray, n_rows: int, fast: bool) -> None:
+    # -- zone maps (DESIGN.md §8) ----------------------------------------
+    def _zone_chunks(self, n_blocks: int) -> int:
+        return -(-int(n_blocks) // self.ZONE_CHUNK)
+
+    def _zone_ensure(self, n_chunks: int) -> None:
+        if n_chunks > self._zmin.shape[0]:
+            cap = max(n_chunks, 2 * self._zmin.shape[0], 8)
+            zc = len(self._zone_cols)
+            zmin = np.full((cap, zc), np.inf)
+            zmax = np.full((cap, zc), -np.inf)
+            zmin[:self._zmin.shape[0]] = self._zmin
+            zmax[:self._zmax.shape[0]] = self._zmax
+            self._zmin, self._zmax = zmin, zmax
+
+    def _zone_values(self, rows: Sequence[Dict[str, Any]]) -> np.ndarray:
+        """``float64[n, Z]`` raw zone-column values; non-numeric or
+        non-finite entries become NaN (poisoning their chunk)."""
+        n = len(rows)
+        vals = np.full((n, len(self._zone_cols)), np.nan)
+        for j, c in enumerate(self._zone_cols):
+            col = [r.get(c) for r in rows]
+            try:
+                v = np.asarray(col, dtype=np.float64)
+                if v.shape != (n,):
+                    raise ValueError("ragged zone column")
+            except (TypeError, ValueError):
+                v = np.full(n, np.nan)
+                for i, x in enumerate(col):
+                    try:
+                        v[i] = float(x)
+                    except (TypeError, ValueError):
+                        pass
+            vals[:, j] = np.where(np.isfinite(v), v, np.nan)
+        return vals
+
+    def _zone_widen(self, blocks: np.ndarray,
+                    rows: Sequence[Dict[str, Any]]) -> None:
+        """Widen chunk bounds with the raw values of ``rows``, one entry
+        per row landing in the matching ``blocks`` id (ids may repeat for
+        multi-row blocks).  Raw values bound decoded values for escapes
+        exactly and for quantized values within the model's slack, which
+        the pruning test re-adds — so the maps are valid for fast AND
+        slow blocks."""
+        if not self._zone_cols or not len(rows):
+            return
+        blocks = np.asarray(blocks, dtype=np.int64)
+        self._zone_ensure(self._zone_chunks(int(blocks.max()) + 1))
+        chunks = blocks // self.ZONE_CHUNK
+        vals = self._zone_values(rows)
+        np.minimum.at(self._zmin, chunks, vals)
+        np.maximum.at(self._zmax, chunks, vals)
+
+    def _zone_union(self, first: int, old_blocks: np.ndarray) -> None:
+        """Blocks ``[first, first+n)`` now carry the rows of ``old_blocks``
+        (fault-in promotion): union the old chunks' bounds into the new
+        chunks — conservative, and tight when the rows dominated their old
+        chunk."""
+        if not self._zone_cols or not old_blocks.size:
+            return
+        n = int(old_blocks.size)
+        self._zone_ensure(self._zone_chunks(first + n))
+        nc = (first + np.arange(n, dtype=np.int64)) // self.ZONE_CHUNK
+        oc = np.asarray(old_blocks, np.int64) // self.ZONE_CHUNK
+        np.minimum.at(self._zmin, nc, self._zmin[oc])
+        np.maximum.at(self._zmax, nc, self._zmax[oc])
+
+    def _zone_rebuild(self, old_blocks: np.ndarray, nb: int) -> None:
+        """After a rewrite renumbers blocks (new block ``i`` holds old
+        block ``old_blocks[i]``), rebuild chunk bounds as unions of each
+        new chunk's contributing old chunks."""
+        if not self._zone_cols:
+            return
+        zc = len(self._zone_cols)
+        n_chunks = self._zone_chunks(nb)
+        cap = max(n_chunks, 8)
+        zmin = np.full((cap, zc), np.inf)
+        zmax = np.full((cap, zc), -np.inf)
+        if nb:
+            nc = np.arange(nb, dtype=np.int64) // self.ZONE_CHUNK
+            oc = np.asarray(old_blocks, np.int64) // self.ZONE_CHUNK
+            np.minimum.at(zmin, nc, self._zmin[oc])
+            np.maximum.at(zmax, nc, self._zmax[oc])
+        self._zmin, self._zmax = zmin, zmax
+
+    @property
+    def zone_columns(self) -> List[str]:
+        """Columns with zone maps (numeric schema kinds)."""
+        return list(self._zone_cols)
+
+    def zone_block_mask(self, column: str, lo: Optional[float] = None,
+                        hi: Optional[float] = None,
+                        slack: float = 0.0) -> Optional[np.ndarray]:
+        """Keep-mask ``bool[n_blocks]``: False = zone maps prove no row of
+        the block can satisfy ``lo <= value <= hi`` (widened by ``slack``,
+        the worst-case quantization error of the predicate's decoded
+        values).  ``None`` when the column has no zone map; NaN-poisoned
+        chunks always keep."""
+        j = self._zcol_idx.get(column)
+        if j is None:
+            return None
+        nc = self._zone_chunks(self.n_blocks)
+        self._zone_ensure(nc)
+        zmin = self._zmin[:nc, j]
+        zmax = self._zmax[:nc, j]
+        drop = np.zeros(nc, dtype=bool)
+        if lo is not None and math.isfinite(lo):
+            drop |= zmax < (float(lo) - slack)   # NaN compares False: keep
+        if hi is not None and math.isfinite(hi):
+            drop |= zmin > (float(hi) + slack)
+        blocks = np.arange(self.n_blocks, dtype=np.int64)
+        return ~drop[blocks // self.ZONE_CHUNK]
+
+    def _append_block(self, codes: np.ndarray, n_rows: int, fast: bool,
+                      rows: Optional[Sequence[Dict[str, Any]]] = None
+                      ) -> None:
         self._append_codes(codes)
         self._grow_index(1)
         self.n_blocks += 1
         self._offsets[self.n_blocks] = self.used
         self._fast[self.n_blocks - 1] = fast
         self._plan_ver[self.n_blocks - 1] = self.current_version
+        if rows is not None:
+            self._zone_widen(
+                np.full(len(rows), self.n_blocks - 1, np.int64), rows)
         self.block_rows.append(n_rows)
         if self.codec.block_tuples == 1:
             self._grow_rows(n_rows)
@@ -789,6 +939,7 @@ class CompressedTable:
             base + offsets[1:]
         self._fast[self.n_blocks:self.n_blocks + n] = fast
         self._plan_ver[self.n_blocks:self.n_blocks + n] = self.current_version
+        self._zone_widen(np.arange(self.n_blocks, self.n_blocks + n), rows)
         self._init_new_blocks(self.n_blocks, n,
                               np.arange(self._rows_stored,
                                         self._rows_stored + n))
@@ -810,7 +961,7 @@ class CompressedTable:
         fast = (plan is not None and len(rows) == 1
                 and plan.row_conforms(rows[0]))
         codes = self.codec._scalar_compress(rows)
-        self._append_block(codes, len(rows), fast)
+        self._append_block(codes, len(rows), fast, rows=rows)
         self._enforce_budget()
 
     def __len__(self) -> int:
@@ -1027,6 +1178,7 @@ class CompressedTable:
         self._offsets[first + 1:first + 1 + n] = base + offsets[1:]
         self._fast[first:first + n] = fast
         self._plan_ver[first:first + n] = self.current_version
+        self._zone_widen(np.arange(first, first + n), list(rows))
         self._init_new_blocks(first, n, idx)
         self.n_blocks += n
         self.block_rows.extend([1] * n)
@@ -1123,6 +1275,7 @@ class CompressedTable:
         self.arena, self.used = arena, total
         self._offsets, self._fast, self.n_blocks = offs, fast, nb
         self._plan_ver = ver
+        self._zone_rebuild(blks, nb)
         self.block_rows = [1] * nb
         self._row2block[:nrows] = -1
         self._row2block[live_rows] = np.arange(nb)
@@ -1167,15 +1320,21 @@ class CompressedTable:
             plan.rows_seen = int(st["rows_seen"])
             plan.window_rows = int(st["window_rows"])
 
-    def snapshot_state(self) -> Dict[str, Any]:
+    def snapshot_state(self,
+                       embed_spilled: Optional[bool] = None
+                       ) -> Dict[str, Any]:
         """Everything needed to rebuild this table bit-identically.
 
-        Spilled payloads are read back (CRC-verified) and embedded: the
-        snapshot is self-contained, so the spill file itself never needs
-        to survive a crash — recovery writes a fresh one and re-spills the
-        same block set, preserving the resident/cold split.  Corruption
-        found here surfaces as :class:`SpillCorruptionError` so the owner
-        can repair from the WAL and retry."""
+        Spilled payloads are handled one of two ways.  *Embedded* mode
+        reads them back (CRC-verified) into the snapshot: self-contained,
+        so the spill file never needs to survive a crash.  *Extent* mode
+        (the default whenever the spill file is a named durable path)
+        records only ``(offset, length)`` references — the spill file's
+        own CRC frames already protect the payloads, so re-embedding them
+        would double the checkpoint for no extra safety; the file is
+        fsynced first so the references are durable.  Corruption found
+        here surfaces as :class:`SpillCorruptionError` so the owner can
+        repair from the WAL and retry."""
         nb, n = self.n_blocks, self._rows_stored
         st: Dict[str, Any] = {
             "codecs": self._codecs,
@@ -1193,26 +1352,43 @@ class CompressedTable:
             "migrated_rows": self.migrated_rows,
             "pending": [dict(r) for r in self._pending],
             "escapes": self._snapshot_escapes(),
+            "zones": {
+                "chunk": self.ZONE_CHUNK,
+                "cols": list(self._zone_cols),
+                "zmin": self._zmin[:self._zone_chunks(nb)].copy(),
+                "zmax": self._zmax[:self._zone_chunks(nb)].copy(),
+            },
         }
         if self._res is not None:
             spilled = np.nonzero(~self._resident[:nb])[0]
-            try:
-                payloads = self._res.disk.read_many_checked(
-                    self._disk_off[spilled], 2 * self._disk_len[spilled])
-            except ExtentCorruptionError as e:
-                bad = spilled[np.asarray(e.indices, dtype=np.int64)]
-                self._res.quarantined += len(e.indices)
-                raise SpillCorruptionError(
-                    self._block2row[bad].tolist()) from e
-            st["residency"] = {
+            res_st: Dict[str, Any] = {
                 "budget": self._res.budget,
                 "config": self._res.config,
                 "resident": self._resident[:nb].copy(),
                 "ref": self._ref[:nb].copy(),
                 "block2row": self._block2row[:nb].copy(),
                 "disk_len": self._disk_len[:nb].copy(),
-                "payloads": {int(b): p for b, p in zip(spilled, payloads)},
             }
+            embed = (embed_spilled if embed_spilled is not None
+                     else self._res.disk.path is None)
+            if embed:
+                try:
+                    payloads = self._res.disk.read_many_checked(
+                        self._disk_off[spilled], 2 * self._disk_len[spilled])
+                except ExtentCorruptionError as e:
+                    bad = spilled[np.asarray(e.indices, dtype=np.int64)]
+                    self._res.quarantined += len(e.indices)
+                    raise SpillCorruptionError(
+                        self._block2row[bad].tolist()) from e
+                res_st["payloads"] = {
+                    int(b): p for b, p in zip(spilled, payloads)}
+            else:
+                self._res.disk.fsync()
+                res_st["spill_file"] = self._res.disk.path
+                res_st["extents"] = {
+                    int(b): (int(self._disk_off[b]), int(self._disk_len[b]))
+                    for b in spilled}
+            st["residency"] = res_st
         return st
 
     @classmethod
@@ -1251,6 +1427,16 @@ class CompressedTable:
         t._pending = [dict(r) for r in state["pending"]]
         res_state = state.get("residency")
         if res_state is not None:
+            payload_map = res_state.get("payloads")
+            if payload_map is None:
+                # Extent-mode checkpoint: payloads live in the (durable)
+                # spill file referenced by the snapshot.  Read them out
+                # BEFORE constructing the ResidencyManager — opening a
+                # named spill path truncates it, and recovery commonly
+                # reuses the same path.
+                payload_map = _read_spill_extents(
+                    res_state["spill_file"], res_state["extents"],
+                    res_state["block2row"])
             t._res = ResidencyManager(res_state["budget"], spill_path,
                                       res_state.get("config"), io=spill_io)
             t._resident = np.ones(cap - 1, dtype=bool)
@@ -1262,13 +1448,27 @@ class CompressedTable:
             t._ref[:nb] = res_state["ref"]
             t._block2row = np.full(cap - 1, -1, dtype=np.int64)
             t._block2row[:nb] = res_state["block2row"]
-            spilled = sorted(res_state["payloads"])
+            spilled = sorted(payload_map)
             if spilled:
                 offs = t._res.disk.write_many(
-                    [res_state["payloads"][b] for b in spilled])
+                    [payload_map[b] for b in spilled])
                 t._disk_off[np.asarray(spilled, dtype=np.int64)] = \
                     np.asarray(offs, dtype=np.int64)
             t._spilled_codes = int(t._disk_len[:nb].sum())
+        zst = state.get("zones")
+        if (zst is not None and zst["chunk"] == t.ZONE_CHUNK
+                and zst["cols"] == t._zone_cols):
+            t._zone_ensure(max(t._zone_chunks(nb), 8))
+            nc = np.asarray(zst["zmin"]).shape[0]
+            t._zmin[:nc] = zst["zmin"]
+            t._zmax[:nc] = zst["zmax"]
+        elif t._zone_cols and nb:
+            # Older snapshot (or layout change): poison every chunk so
+            # pruning is disabled but never wrong; fresh inserts land in
+            # new chunks and prune normally.
+            t._zone_ensure(t._zone_chunks(nb))
+            t._zmin[:t._zone_chunks(nb)] = np.nan
+            t._zmax[:t._zone_chunks(nb)] = np.nan
         t._restore_escapes(state.get("escapes") or {})
         return t
 
@@ -1297,6 +1497,8 @@ class CompressedTable:
                        if self.codec.block_tuples == 1 else 0)
         ver_tags = self.n_blocks if len(self._codecs) > 1 else 0
         res_meta = 9 * self.n_blocks if self._res is not None else 0
+        zone_bytes = (16 * len(self._zone_cols)
+                      * self._zone_chunks(self.n_blocks))
         return (self.used * 2 + 4 * (self.n_blocks + 1)
                 + (self.n_blocks + 7) // 8 + indirection + ver_tags
-                + res_meta + pending)
+                + res_meta + zone_bytes + pending)

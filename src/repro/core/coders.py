@@ -232,6 +232,20 @@ class DiscreteCoder:
         self._lut_a = None
         self._lut_k = None
 
+    def __getstate__(self):
+        # The cdf and 2**16-entry LUT caches are pure functions of the
+        # alias tables but dominate a pickled coder ~100x once any decode
+        # has built them — drop them and rebuild lazily after unpickling
+        # (checkpoint shrink, DESIGN.md §8).
+        return self.tables
+
+    def __setstate__(self, tables):
+        self.tables = tables
+        self._cdf = None
+        self._lut_sym = None
+        self._lut_a = None
+        self._lut_k = None
+
     # -- scalar API (reference path) -------------------------------------
     def k(self, sym: int) -> int:
         return int(self.tables.k_of[sym])

@@ -368,6 +368,7 @@ class TablePlan:
         self.codec = codec
         self.order = list(codec.order)
         self.lowerings = lowerings
+        self.by_column = {name: (cp, off) for name, cp, off in lowerings}
         self.lam = codec.lam
         # Per-column escape counters (§5-style dynamic value sets): how many
         # values failed to lower at encode time — the signal the adaptive
@@ -535,18 +536,196 @@ class TablePlan:
             self._tables, self._m_bits = pack_slot_tables(self.coders)
         return self._tables, self._m_bits
 
-    def decode_syms_to_rows(self, syms: np.ndarray) -> List[Dict[str, Any]]:
-        """Symbols -> row dicts (vectorized per-column reconstruction)."""
+    def decode_syms_to_rows(self, syms: np.ndarray,
+                            columns: Optional[Sequence[str]] = None
+                            ) -> List[Dict[str, Any]]:
+        """Symbols -> row dicts (vectorized per-column reconstruction).
+
+        ``columns`` restricts materialization to a projection: only the
+        requested columns (plus any conditional-parent ancestors their
+        decode needs for context) are reconstructed, and the returned
+        dicts hold exactly the requested columns.
+        """
         ctx: Dict[str, Any] = {}
+        need: Optional[set] = None
+        if columns is not None:
+            unknown = set(columns) - set(self.order)
+            if unknown:
+                raise KeyError(f"unknown columns: {sorted(unknown)}")
+            need = set(columns)
+            # Parents precede children in lowering order, so a reversed
+            # walk closes the ancestor chain in one pass.
+            for name, cp, _ in reversed(self.lowerings):
+                if name in need and isinstance(cp, _CondPlan):
+                    need.add(cp.m.parent)
         for name, cp, off in self.lowerings:
+            if need is not None and name not in need:
+                continue
             ctx[name] = cp.decode(syms[:, off:off + cp.n_slots], ctx)
-        names = self.order
+        names = (self.order if columns is None
+                 else [n for n in self.order if n in set(columns)])
         # Bulk-convert numpy columns to Python objects (ints/floats/strs):
         # much faster than boxing one numpy scalar per field, and the row
         # dicts then hold the same native types the scalar decoder emits.
         cols = [c.tolist() if isinstance(c, np.ndarray) else list(c)
                 for c in (ctx[nm] for nm in names)]
         return [dict(zip(names, vals)) for vals in zip(*cols)]
+
+
+# ---------------------------------------------------------------------------
+# Code-space predicate lowering (scan engine, DESIGN.md §8)
+#
+# The scan engine (repro.scan) translates value-space predicates into this
+# plan version's symbol space once per scan, then evaluates them against raw
+# code streams / decoded symbol prefixes without materializing rows.  The
+# helpers live here because they reach into the per-column lowering internals
+# (_CatPlan vocabularies, _NumPlan quantization grids).
+# ---------------------------------------------------------------------------
+
+def scan_lowering(plan: TablePlan, name: str) -> Optional[Tuple[str, Any, int]]:
+    """``('cat'|'num', colplan, slot_offset)`` when predicates on column
+    ``name`` are code-space evaluable under ``plan``, else None (string and
+    conditional columns fall back to decode-then-filter)."""
+    ent = plan.by_column.get(name)
+    if ent is None:
+        return None
+    cp, off = ent
+    if isinstance(cp, _CatPlan):
+        return ("cat", cp, off)
+    if isinstance(cp, _NumPlan):
+        return ("num", cp, off)
+    return None
+
+
+def lower_cat_ids(cp: _CatPlan, values: Sequence[Any]) -> np.ndarray:
+    """Translate literal values to this version's category ids (sorted).
+
+    Literals outside the vocabulary are dropped: a *fast* row always encodes
+    an in-vocabulary id, so a missing literal can never match a fast block.
+    """
+    ids = set()
+    for v in values:
+        i = _safe_get(cp.m.value2id.get, v)
+        if i >= 0:
+            ids.add(int(i))
+    return np.asarray(sorted(ids), dtype=np.int64)
+
+
+def lower_cat_range_ids(cp: _CatPlan, lo: Any, hi: Any
+                        ) -> Optional[np.ndarray]:
+    """Ids of vocabulary values inside ``[lo, hi]`` — range predicates on
+    int columns that specialized to a categorical vocabulary.  ``None`` when
+    the vocabulary does not compare against the bounds (mixed types)."""
+    ids = []
+    try:
+        for i, v in enumerate(cp.m.id2value):
+            if (lo is None or v >= lo) and (hi is None or v <= hi):
+                ids.append(i)
+    except TypeError:
+        return None
+    return np.asarray(ids, dtype=np.int64)
+
+
+def _num_decoded_at(m: NumericModel, q: int) -> float:
+    """The value the decoder reconstructs for quantized step ``q``."""
+    if m.integer:
+        return float(int(round(m.vmin + q * m.p)))
+    return m.vmin + (q + 0.5) * m.p
+
+
+def lower_num_interval(m: NumericModel, lo: Optional[float],
+                       hi: Optional[float]) -> Optional[Tuple[int, int]]:
+    """``(qlo, qhi)`` with decoded(q) ∈ [lo, hi]  ⇔  qlo <= q <= qhi.
+
+    Decode is monotone non-decreasing in q, so a value-space interval maps
+    to one q-interval: seed each endpoint with the quantization guess, then
+    correct against the actual decoded values (never off by more than a
+    step or two).  ``None`` bounds are open; returns ``None`` when no
+    conforming value can match.
+    """
+    steps = m.total_steps
+    if lo is None:
+        qlo = 0
+    else:
+        flo = float(lo)
+        g = min(max(int(math.floor((flo - m.vmin) / m.p + 1e-9)), 0),
+                steps - 1)
+        while g > 0 and _num_decoded_at(m, g - 1) >= flo:
+            g -= 1
+        while g < steps and _num_decoded_at(m, g) < flo:
+            g += 1
+        qlo = g
+    if hi is None:
+        qhi = steps - 1
+    else:
+        fhi = float(hi)
+        g = min(max(int(math.floor((fhi - m.vmin) / m.p + 1e-9)), 0),
+                steps - 1)
+        while g < steps - 1 and _num_decoded_at(m, g + 1) <= fhi:
+            g += 1
+        while g >= 0 and _num_decoded_at(m, g) > fhi:
+            g -= 1
+        qhi = g
+    if qlo >= steps or qhi < 0 or qlo > qhi:
+        return None
+    return (int(qlo), int(qhi))
+
+
+def num_q_of_syms(cp: _NumPlan, syms: np.ndarray) -> np.ndarray:
+    """Quantized step q per row from a numeric column's symbol slots."""
+    m = cp.m
+    q = syms[:, 0] * m.G
+    for t, w in enumerate(m.radix):
+        q = q + syms[:, 1 + t] * w
+    return q
+
+
+def slot0_match_lut(coder, match_ids: np.ndarray) -> Optional[np.ndarray]:
+    """``bool[TOTAL]``: does a raw slot-0 stream code decode to a match id?
+
+    Valid because slot 0 is always physical (delayed coding starts with an
+    option-count product of 1, below any lambda) and ``_lut_sym[code]`` is
+    that code's exact slot-0 symbol regardless of the delayed payload its
+    remaining bits carry — so gathering the LUT at each block's first code
+    evaluates the predicate without decoding anything.
+    """
+    if not isinstance(coder, DiscreteCoder):
+        return None
+    if coder._lut_sym is None:
+        coder.build_lut()
+    return np.isin(coder._lut_sym,
+                   np.asarray(match_ids, dtype=np.int64))
+
+
+def quantize_slack(model: Any) -> Optional[float]:
+    """Worst-case ``|decoded - raw|`` for conforming values under ``model``.
+
+    Zone maps hold *raw* value bounds while predicates match *decoded*
+    values, so pruning must widen the zone test by this slack or a value
+    quantized across a bound would be falsely pruned.  ``None`` = unbounded
+    (never zone-prune on a column using this model); escapes decode to the
+    exact raw value and need no slack.
+    """
+    if isinstance(model, (CategoricalModel, ConditionalCategoricalModel)):
+        return 0.0
+    if isinstance(model, NumericModel):
+        return float(model.p)
+    return None
+
+
+def decode_select_prefix(plan: TablePlan, codes: np.ndarray,
+                         offsets: np.ndarray, rows: np.ndarray,
+                         upto: int) -> np.ndarray:
+    """Truncated random-access decode of the first ``upto`` slots.
+
+    Delayed coding reads the stream strictly forward, so a slot prefix
+    consumes a prefix of each row's code run: ``decode_batch`` over the
+    truncated coder list with an explicit ``n_tuples`` (which skips the
+    full-stream alignment assert) decodes it exactly.  Predicate
+    evaluation uses this to touch only the slots the predicates name.
+    """
+    return vectorized.decode_select(codes, offsets, plan.coders[:upto],
+                                    np.asarray(rows, np.int64), plan.lam)
 
 
 def compile_plan(codec) -> TablePlan:

@@ -14,17 +14,33 @@ Public API — import everything from here, never from the private modules:
 """
 
 from repro.core.blitzcrank import ColumnSpec
-from repro.oltp.store import (STORE_KINDS, BlitzStore, RamanStore, RowStore,
-                              UncompressedStore, ZstdStore)
+from repro.oltp.store import (
+    STORE_KINDS,
+    BlitzStore,
+    RamanStore,
+    RowStore,
+    UncompressedStore,
+    ZstdStore,
+)
 
 from .database import Database
 from .schema import KEYABLE_KINDS, Key, TableSchema, stable_key_hash
 from .table import INDEX_ENTRY_OVERHEAD, StoreFactory, Table
 
 __all__ = [
-    "Database", "Table", "TableSchema", "ColumnSpec",
-    "Key", "KEYABLE_KINDS", "stable_key_hash",
-    "StoreFactory", "INDEX_ENTRY_OVERHEAD",
-    "RowStore", "BlitzStore", "UncompressedStore", "RamanStore",
-    "ZstdStore", "STORE_KINDS",
+    "Database",
+    "Table",
+    "TableSchema",
+    "ColumnSpec",
+    "Key",
+    "KEYABLE_KINDS",
+    "stable_key_hash",
+    "StoreFactory",
+    "INDEX_ENTRY_OVERHEAD",
+    "RowStore",
+    "BlitzStore",
+    "UncompressedStore",
+    "RamanStore",
+    "ZstdStore",
+    "STORE_KINDS",
 ]

@@ -25,11 +25,14 @@ class Database:
     >>> db["customer"].get_many(keys)
     """
 
-    def __init__(self, backend: str | StoreFactory = "blitzcrank",
-                 n_shards: int = 1,
-                 store_kwargs: Optional[Dict[str, Any]] = None,
-                 memory_budget: Optional[int] = None,
-                 durability: Optional[Any] = None):
+    def __init__(
+        self,
+        backend: str | StoreFactory = "blitzcrank",
+        n_shards: int = 1,
+        store_kwargs: Optional[Dict[str, Any]] = None,
+        memory_budget: Optional[int] = None,
+        durability: Optional[Any] = None,
+    ):
         self.backend = backend
         self.n_shards = int(n_shards)
         self.store_kwargs = dict(store_kwargs or {})
@@ -37,8 +40,7 @@ class Database:
         # each table splits its budget across its shards.  Table sizes
         # are not knowable at catalog time, so a proportional split is
         # the loader's job (see bench_out_of_core's per-table budgets).
-        self.memory_budget = (int(memory_budget)
-                              if memory_budget is not None else None)
+        self.memory_budget = int(memory_budget) if memory_budget is not None else None
         self._tables: Dict[str, Table] = {}
         # Durability (DESIGN.md §7): a DurabilityConfig (or just its root
         # path) turns on one WAL per table + checkpoints; ``None`` keeps
@@ -50,6 +52,7 @@ class Database:
         self._recovering = False
         if durability is not None:
             from repro.durability.config import DurabilityConfig
+
             if not isinstance(durability, DurabilityConfig):
                 durability = DurabilityConfig(root=os.fspath(durability))
             self._dur = durability
@@ -61,12 +64,16 @@ class Database:
         return self._dur is not None
 
     # -- catalog ---------------------------------------------------------
-    def create_table(self, schema: TableSchema, *,
-                     backend: str | StoreFactory | None = None,
-                     n_shards: Optional[int] = None,
-                     sample_rows: Optional[Sequence[Dict[str, Any]]] = None,
-                     store_kwargs: Optional[Dict[str, Any]] = None,
-                     memory_budget: Optional[int] = None) -> Table:
+    def create_table(
+        self,
+        schema: TableSchema,
+        *,
+        backend: str | StoreFactory | None = None,
+        n_shards: Optional[int] = None,
+        sample_rows: Optional[Sequence[Dict[str, Any]]] = None,
+        store_kwargs: Optional[Dict[str, Any]] = None,
+        memory_budget: Optional[int] = None,
+    ) -> Table:
         """Register ``schema`` and build its table (engine defaults apply
         unless overridden).  Re-registering a name raises ``ValueError``."""
         if schema.name in self._tables:
@@ -76,13 +83,16 @@ class Database:
         if self._dur is not None:
             # fault injection (and crash points) must cover spill I/O too
             kwargs.setdefault("spill_io", self._io)
-        table = Table(schema,
-                      backend=self.backend if backend is None else backend,
-                      n_shards=self.n_shards if n_shards is None
-                      else n_shards,
-                      sample_rows=sample_rows, store_kwargs=kwargs,
-                      memory_budget=self.memory_budget
-                      if memory_budget is None else memory_budget)
+        table = Table(
+            schema,
+            backend=self.backend if backend is None else backend,
+            n_shards=self.n_shards if n_shards is None else n_shards,
+            sample_rows=sample_rows,
+            store_kwargs=kwargs,
+            memory_budget=(
+                self.memory_budget if memory_budget is None else memory_budget
+            ),
+        )
         self._tables[schema.name] = table
         if self._dur is not None:
             self._attach_durability(table, sample_rows)
@@ -103,8 +113,8 @@ class Database:
             return self._tables[name]
         except KeyError:
             raise KeyError(
-                f"no table {name!r}; registered: "
-                f"{sorted(self._tables)}") from None
+                f"no table {name!r}; registered: {sorted(self._tables)}"
+            ) from None
 
     def __getitem__(self, name: str) -> Table:
         return self.table(name)
@@ -126,6 +136,40 @@ class Database:
     def schemas(self) -> Dict[str, TableSchema]:
         return {n: t.schema for n, t in self._tables.items()}
 
+    # -- analytics entry point (DESIGN.md §8) ----------------------------
+    def query(
+        self,
+        table: str,
+        predicates: Sequence[Any] = (),
+        columns: Optional[Sequence[str]] = None,
+        group_by: Sequence[str] = (),
+        aggs: Optional[Dict[str, Any]] = None,
+        pushdown: bool = True,
+        backend: Optional[str] = None,
+    ) -> Any:
+        """One-stop OLAP entry point over a registered table.
+
+        Without ``aggs`` this is a filtered projection —
+        ``Table.scan_where`` returning ``(key, row)`` pairs.  With
+        ``aggs`` (``{name: (op, column)}``, op in count/sum/avg/min/max)
+        it runs the streaming group-by aggregation instead and returns
+        ``{group key tuple: {name: value}}``.  ``pushdown=False`` forces
+        the decode-everything reference path on every shard (the
+        correctness oracle the scan tests diff against).
+        """
+        t = self.table(table)
+        if aggs is not None or group_by:
+            return t.aggregate(
+                predicates,
+                group_by=group_by,
+                aggs=aggs,
+                pushdown=pushdown,
+                backend=backend,
+            )
+        return t.scan_where(
+            predicates, columns=columns, pushdown=pushdown, backend=backend
+        )
+
     # -- engine-wide maintenance -----------------------------------------
     def merge_all(self) -> None:
         """Fold every table's delta overlay back into its arenas."""
@@ -141,14 +185,16 @@ class Database:
         return out
 
     # -- durability (DESIGN.md §7) ---------------------------------------
-    def _attach_durability(self, table: Table,
-                           sample_rows: Optional[Sequence[Dict[str, Any]]]
-                           ) -> None:
+    def _attach_durability(
+        self, table: Table, sample_rows: Optional[Sequence[Dict[str, Any]]]
+    ) -> None:
         from repro.durability.wal import WriteAheadLog
 
         wal = WriteAheadLog(
             os.path.join(self._dur.root, f"{table.name}.wal"),
-            io=self._io, fsync_every=self._dur.fsync_every)
+            io=self._io,
+            fsync_every=self._dur.fsync_every,
+        )
         table.attach_wal(wal, io=self._io, on_ops=self._note_ops)
         table._on_shards_built = self._wire_maintenance
         if table.shards:
@@ -158,15 +204,19 @@ class Database:
             # can rebuild the table (same sample => same seeded model fit
             # => bit-identical codecs).  On reopen the record is already
             # there (lsn > 0) and must not be duplicated.
-            wal.log("create", {
-                "schema": table.schema,
-                "backend": table.backend,
-                "n_shards": table.n_shards,
-                "store_kwargs": table.clean_store_kwargs(),
-                "memory_budget": table.memory_budget,
-                "sample_rows": ([dict(r) for r in sample_rows]
-                                if sample_rows else None),
-            })
+            wal.log(
+                "create",
+                {
+                    "schema": table.schema,
+                    "backend": table.backend,
+                    "n_shards": table.n_shards,
+                    "store_kwargs": table.clean_store_kwargs(),
+                    "memory_budget": table.memory_budget,
+                    "sample_rows": (
+                        [dict(r) for r in sample_rows] if sample_rows else None
+                    ),
+                },
+            )
 
     def _wire_maintenance(self, table: Table) -> None:
         """A refit/migration step invalidates the checkpointed codec list;
@@ -188,8 +238,7 @@ class Database:
             return
         self._ops_since_ckpt += int(n)
         every = self._dur.checkpoint_every_ops
-        if self._ckpt_requested or (every > 0
-                                    and self._ops_since_ckpt >= every):
+        if self._ckpt_requested or (every > 0 and self._ops_since_ckpt >= every):
             self.checkpoint()
 
     def checkpoint(self) -> int:
@@ -210,12 +259,13 @@ class Database:
         state = {
             "format": 1,
             "engine": {
-                "backend": (self.backend
-                            if isinstance(self.backend, str) else None),
+                "backend": (self.backend if isinstance(self.backend, str) else None),
                 "n_shards": self.n_shards,
                 "store_kwargs": {
-                    k: v for k, v in self.store_kwargs.items()
-                    if k not in ("codec", "spill_io")},
+                    k: v
+                    for k, v in self.store_kwargs.items()
+                    if k not in ("codec", "spill_io")
+                },
                 "memory_budget": self.memory_budget,
             },
             "tables": tables,
@@ -259,8 +309,7 @@ class Database:
             "model_bytes": sum(s["model_bytes"] for s in per_table.values()),
             "tables": per_table,
         }
-        res = [s["residency"] for s in per_table.values()
-               if "residency" in s]
+        res = [s["residency"] for s in per_table.values() if "residency" in s]
         if res:
             # whole-database view of the cold tier: nbytes stays resident
             # memory, spilled bytes live on disk and are summed separately

@@ -50,7 +50,8 @@ def stable_key_hash(key: Key) -> int:
             data, tag = part.encode("utf-8"), 0x73
         else:
             raise TypeError(
-                f"unroutable key component {part!r} ({type(part).__name__})")
+                f"unroutable key component {part!r} ({type(part).__name__})"
+            )
         for b in (tag, len(data) & 0xFF):
             h = ((h ^ b) * _FNV_PRIME) & _MASK
         for b in data:
@@ -74,11 +75,14 @@ class TableSchema:
     columns: Tuple[ColumnSpec, ...]
     primary_key: Tuple[str, ...]
 
-    def __init__(self, name: str, columns: Sequence[ColumnSpec],
-                 primary_key: Union[str, Sequence[str]]):
+    def __init__(
+        self,
+        name: str,
+        columns: Sequence[ColumnSpec],
+        primary_key: Union[str, Sequence[str]],
+    ):
         cols = tuple(column_specs(columns))
-        pk = ((primary_key,) if isinstance(primary_key, str)
-              else tuple(primary_key))
+        pk = (primary_key,) if isinstance(primary_key, str) else tuple(primary_key)
         object.__setattr__(self, "name", str(name))
         object.__setattr__(self, "columns", cols)
         object.__setattr__(self, "primary_key", pk)
@@ -89,25 +93,26 @@ class TableSchema:
         for c in self.columns:
             if c.name in by_name:
                 raise ValueError(
-                    f"table {self.name!r}: duplicate column {c.name!r}")
+                    f"table {self.name!r}: duplicate column {c.name!r}"
+                )
             by_name[c.name] = c
         if not self.primary_key:
             raise ValueError(f"table {self.name!r}: empty primary key")
         if len(set(self.primary_key)) != len(self.primary_key):
-            raise ValueError(
-                f"table {self.name!r}: repeated primary-key column")
+            raise ValueError(f"table {self.name!r}: repeated primary-key column")
         for k in self.primary_key:
             spec = by_name.get(k)
             if spec is None:
                 raise ValueError(
-                    f"table {self.name!r}: primary-key column {k!r} "
-                    "is not declared")
+                    f"table {self.name!r}: primary-key column {k!r} is not declared"
+                )
             if spec.kind not in KEYABLE_KINDS:
                 raise ValueError(
                     f"table {self.name!r}: primary-key column {k!r} has "
                     f"kind {spec.kind!r}; keys must be one of "
                     f"{KEYABLE_KINDS} (floats re-quantize on decode and "
-                    "would re-route)")
+                    "would re-route)"
+                )
         object.__setattr__(self, "_by_name", by_name)
 
     # -- lookups ---------------------------------------------------------
@@ -119,8 +124,7 @@ class TableSchema:
         try:
             return self._by_name[name]
         except KeyError:
-            raise KeyError(f"table {self.name!r} has no column {name!r}") \
-                from None
+            raise KeyError(f"table {self.name!r} has no column {name!r}") from None
 
     # -- key handling ----------------------------------------------------
     def key_of(self, row: Dict[str, Any]) -> Key:
@@ -141,4 +145,5 @@ class TableSchema:
         for c in self.columns:
             if c.name not in row:
                 raise KeyError(
-                    f"table {self.name!r}: row missing column {c.name!r}")
+                    f"table {self.name!r}: row missing column {c.name!r}"
+                )

@@ -30,8 +30,7 @@ dense ids: ``get_many`` returns ``None`` for unknown/deleted keys, scalar
 from __future__ import annotations
 
 import inspect
-from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
-                    Tuple)
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.oltp.store import STORE_KINDS, RowStore
 from .schema import Key, TableSchema, stable_key_hash
@@ -58,11 +57,15 @@ class Table:
     model bytes and makes shard stats incomparable.
     """
 
-    def __init__(self, schema: TableSchema, backend: str | StoreFactory
-                 = "blitzcrank", n_shards: int = 1,
-                 sample_rows: Optional[Sequence[Dict[str, Any]]] = None,
-                 store_kwargs: Optional[Dict[str, Any]] = None,
-                 memory_budget: Optional[int] = None):
+    def __init__(
+        self,
+        schema: TableSchema,
+        backend: str | StoreFactory = "blitzcrank",
+        n_shards: int = 1,
+        sample_rows: Optional[Sequence[Dict[str, Any]]] = None,
+        store_kwargs: Optional[Dict[str, Any]] = None,
+        memory_budget: Optional[int] = None,
+    ):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.schema = schema
@@ -75,12 +78,11 @@ class Table:
         # uniform hash of the key, so each shard carries ~1/N of the data
         # and deserves ~1/N of the memory.  An explicit per-shard
         # ``memory_budget`` in store_kwargs wins over the split.
-        self.memory_budget = (int(memory_budget)
-                              if memory_budget is not None else None)
-        if self.memory_budget is not None \
-                and "memory_budget" not in self.store_kwargs:
+        self.memory_budget = int(memory_budget) if memory_budget is not None else None
+        if self.memory_budget is not None and "memory_budget" not in self.store_kwargs:
             self.store_kwargs["memory_budget"] = max(
-                1, self.memory_budget // self.n_shards)
+                1, self.memory_budget // self.n_shards
+            )
         self._shards: List[RowStore] = []
         self._dir: Dict[Key, Tuple[int, int]] = {}
         # Durability hooks (DESIGN.md §7), wired by a durable Database via
@@ -105,7 +107,8 @@ class Table:
             except KeyError:
                 raise ValueError(
                     f"unknown backend {self.backend!r}; expected one of "
-                    f"{sorted(STORE_KINDS)} or a factory") from None
+                    f"{sorted(STORE_KINDS)} or a factory"
+                ) from None
         try:  # probe, don't catch build errors: those must propagate
             can_share = "codec" in inspect.signature(factory).parameters
         except (TypeError, ValueError):  # e.g. builtins without signatures
@@ -118,10 +121,14 @@ class Table:
                 # file under two arenas would interleave their extents
                 kwargs["spill_path"] = f"{spill_base}.s{j}"
             shard = factory(self.schema, sample_rows, **kwargs)
-            if j == 0 and self.n_shards > 1 and can_share \
-                    and "codec" not in kwargs \
-                    and not kwargs.get("adaptive") \
-                    and getattr(shard, "codec", None) is not None:
+            if (
+                j == 0
+                and self.n_shards > 1
+                and can_share
+                and "codec" not in kwargs
+                and not kwargs.get("adaptive")
+                and getattr(shard, "codec", None) is not None
+            ):
                 # Every shard fits on the same sample, so fit once and
                 # share the codec (BlitzStore accepts a pre-fitted one):
                 # N identical model sets would multiply both fit time and
@@ -156,8 +163,8 @@ class Table:
             return self._dir[key]
         except KeyError:
             raise KeyError(
-                f"table {self.name!r}: no live row for key {key!r}") \
-                from None
+                f"table {self.name!r}: no live row for key {key!r}"
+            ) from None
 
     # -- batched verbs (one RowStore call per touched shard) -------------
     def insert_many(self, rows: Sequence[Dict[str, Any]]) -> List[Key]:
@@ -181,7 +188,8 @@ class Table:
             k = self.schema.key_of(r)
             if k in self._dir or k in batch_seen:
                 raise ValueError(
-                    f"table {self.name!r}: duplicate insert of key {k!r}")
+                    f"table {self.name!r}: duplicate insert of key {k!r}"
+                )
             batch_seen.add(k)
             s = self.shard_of(k)
             per_shard[s].append(r)
@@ -197,8 +205,9 @@ class Table:
         self._note_ops(len(rows))
         return keys
 
-    def get_many(self, keys: Sequence[Key], backend: Optional[str] = None
-                 ) -> List[Optional[Dict[str, Any]]]:
+    def get_many(
+        self, keys: Sequence[Key], backend: Optional[str] = None
+    ) -> List[Optional[Dict[str, Any]]]:
         """Batched point reads in request order; ``None`` for missing keys.
 
         ``backend`` forces the decode backend ("numpy"/"pallas") on shards
@@ -227,8 +236,7 @@ class Table:
                 out[pos] = row
         return out
 
-    def update_many(self, keys: Sequence[Key],
-                    rows: Sequence[Dict[str, Any]]) -> None:
+    def update_many(self, keys: Sequence[Key], rows: Sequence[Dict[str, Any]]) -> None:
         """In-place updates (last write wins on duplicate keys); the primary
         key of each row must match its key — keys are immutable."""
         merged: Dict[Key, Dict[str, Any]] = {}
@@ -237,11 +245,11 @@ class Table:
             if self.schema.key_of(r) != k:
                 raise ValueError(
                     f"table {self.name!r}: update changes primary key "
-                    f"{k!r} -> {self.schema.key_of(r)!r}")
+                    f"{k!r} -> {self.schema.key_of(r)!r}"
+                )
             merged[k] = r
         per_shard_ids: List[List[int]] = [[] for _ in self._shards]
-        per_shard_rows: List[List[Dict[str, Any]]] = \
-            [[] for _ in self._shards]
+        per_shard_rows: List[List[Dict[str, Any]]] = [[] for _ in self._shards]
         for k, r in merged.items():
             s, i = self._route(k)
             per_shard_ids[s].append(i)
@@ -292,8 +300,7 @@ class Table:
     def __contains__(self, key: Key) -> bool:
         return key in self._dir
 
-    def scan(self, batch: int = 1024
-             ) -> Iterator[Tuple[Key, Dict[str, Any]]]:
+    def scan(self, batch: int = 1024) -> Iterator[Tuple[Key, Dict[str, Any]]]:
         """Yield ``(key, row)`` for every live row, shard by shard, one
         batched ``get_many`` per chunk.
 
@@ -313,6 +320,139 @@ class Table:
                     k = key_of(row)
                     if self._dir.get(k) == (s, i):
                         yield k, row
+
+    # -- analytics scans (DESIGN.md §8) ----------------------------------
+    def _shard_scan(
+        self,
+        predicates: Sequence[Any],
+        columns: Optional[Sequence[str]],
+        pushdown: bool,
+        backend: Optional[str],
+    ) -> Iterator[Tuple[int, Key, Dict[str, Any], Any]]:
+        """Fan a filtered scan across shards, yielding live
+        ``(shard, key, row, shard_stats)`` tuples.
+
+        The shard-level projection is augmented with the primary-key
+        columns so each hit can be checked against the directory — a slot
+        whose key was deleted and revived elsewhere is stale and must be
+        skipped (same rule as :meth:`scan`).  ``shard_stats`` is yielded
+        once per shard (with the first row) for aggregation by callers.
+        """
+        key_of = self.schema.key_of
+        need = columns
+        if columns is not None:
+            need = list(dict.fromkeys(list(columns) + list(self.schema.primary_key)))
+        for s, shard in enumerate(self._shards):
+            res = shard.scan_where(
+                predicates, columns=need, pushdown=pushdown, backend=backend
+            )
+            first = res.stats
+            for i, row in zip(res.ids, res.rows):
+                k = key_of(row)
+                if self._dir.get(k) == (s, i):
+                    yield s, k, row, first
+                    first = None
+            if first is not None:  # no rows matched: still surface stats
+                yield s, None, None, first
+
+    def scan_where(
+        self,
+        predicates: Sequence[Any],
+        columns: Optional[Sequence[str]] = None,
+        pushdown: bool = True,
+        backend: Optional[str] = None,
+        with_stats: bool = False,
+    ):
+        """Filtered scan -> ``(key, projected row)`` pairs across shards.
+
+        One :meth:`RowStore.scan_where` call per shard (predicate pushdown
+        with zone-map pruning on blitz shards; ``pushdown=False`` forces
+        the decode-everything reference).  Results carry exactly the
+        requested ``columns`` and are merged into global primary-key
+        order, so the pushdown and reference paths agree as *lists*, not
+        merely as sets.  ``with_stats=True`` returns ``(hits, merged
+        ScanStats)``.
+        """
+        from repro.scan import ScanStats
+
+        hits: List[Tuple[Key, Dict[str, Any]]] = []
+        total = ScanStats()
+        cols = list(columns) if columns is not None else None
+        for _s, k, row, st in self._shard_scan(predicates, cols, pushdown, backend):
+            if st is not None:
+                total.merge(st)
+            if k is None:
+                continue
+            if cols is not None:
+                row = {c: row[c] for c in cols}
+            hits.append((k, row))
+        # pk values are homogeneous within a table, so the sort is total;
+        # per-shard results arrive id-ordered already, making this a
+        # nearly-sorted merge for timsort.
+        hits.sort(key=lambda kv: kv[0])
+        total.rows_matched = len(hits)
+        return (hits, total) if with_stats else hits
+
+    def aggregate(
+        self,
+        predicates: Sequence[Any],
+        group_by: Sequence[str] = (),
+        aggs: Optional[Dict[str, Tuple[str, Optional[str]]]] = None,
+        pushdown: bool = True,
+        backend: Optional[str] = None,
+    ) -> Dict[Tuple[Any, ...], Dict[str, Any]]:
+        """Filtered group-by aggregation: ``{group key: {name: value}}``.
+
+        ``aggs`` maps output names to ``(op, column)`` with op one of
+        ``count`` (column ignored, may be None), ``sum``, ``avg``, ``min``,
+        ``max``.  Partial aggregates accumulate per shard as rows stream
+        out of the pushdown scan — only the group table is materialized,
+        never the matching row set — and merge trivially because every
+        op is decomposable (avg is carried as sum+count until finalize).
+        """
+        aggs = dict(aggs or {"count": ("count", None)})
+        group_by = list(group_by)
+        need_cols = list(
+            dict.fromkeys(group_by + [c for _, c in aggs.values() if c is not None])
+        )
+        # state per group: [count, {name: accumulator}]
+        groups: Dict[Tuple[Any, ...], List[Any]] = {}
+        for _s, k, row, _st in self._shard_scan(
+            predicates, need_cols, pushdown, backend
+        ):
+            if k is None:
+                continue
+            g = tuple(row[c] for c in group_by)
+            st = groups.get(g)
+            if st is None:
+                st = groups[g] = [0, {}]
+            st[0] += 1
+            acc = st[1]
+            for name, (op, col) in aggs.items():
+                if op == "count":
+                    continue
+                v = row[col]
+                cur = acc.get(name)
+                if op in ("sum", "avg"):
+                    acc[name] = v if cur is None else cur + v
+                elif op == "min":
+                    acc[name] = v if cur is None or v < cur else cur
+                elif op == "max":
+                    acc[name] = v if cur is None or v > cur else cur
+                else:
+                    raise ValueError(f"unknown aggregate op {op!r}")
+        out: Dict[Tuple[Any, ...], Dict[str, Any]] = {}
+        for g, (n, acc) in groups.items():
+            row_out: Dict[str, Any] = {}
+            for name, (op, _col) in aggs.items():
+                if op == "count":
+                    row_out[name] = n
+                elif op == "avg":
+                    row_out[name] = acc[name] / n
+                else:
+                    row_out[name] = acc[name]
+            out[g] = row_out
+        return out
 
     # -- maintenance (DESIGN.md §3/§4, fanned across shards) -------------
     def merge(self) -> None:
@@ -337,8 +477,12 @@ class Table:
         return out
 
     # -- durability (DESIGN.md §7) ---------------------------------------
-    def attach_wal(self, wal, io: Optional[Any] = None,
-                   on_ops: Optional[Callable[[int], None]] = None) -> None:
+    def attach_wal(
+        self,
+        wal,
+        io: Optional[Any] = None,
+        on_ops: Optional[Callable[[int], None]] = None,
+    ) -> None:
         """Wire this table to its redo log (one WAL per table).
 
         From here on every batch verb logs its logical record *before*
@@ -376,6 +520,7 @@ class Table:
         each key's current value.  Slots no key points at — deleted, or
         revived elsewhere — resolve to ``None`` and get tombstoned by the
         caller.  Garbage is never served."""
+
         def repair(row_ids: Sequence[int]) -> List[Optional[Dict[str, Any]]]:
             wanted = {int(i) for i in row_ids}
             slot2key: Dict[int, Key] = {}
@@ -397,6 +542,7 @@ class Table:
                             if k in need:
                                 latest.pop(k, None)
             return [latest.get(slot2key.get(int(i))) for i in row_ids]
+
         return repair
 
     def close(self, unlink: bool = False) -> None:
@@ -414,14 +560,16 @@ class Table:
     def clean_store_kwargs(self) -> Dict[str, Any]:
         """store_kwargs safe to persist: live objects (a shared codec, an
         injected io) are reconstructed, never pickled."""
-        return {k: v for k, v in self.store_kwargs.items()
-                if k not in ("codec", "spill_io")}
+        return {
+            k: v for k, v in self.store_kwargs.items() if k not in ("codec", "spill_io")
+        }
 
     def snapshot_state(self) -> Dict[str, Any]:
         if not isinstance(self.backend, str):
             raise ValueError(
                 f"table {self.name!r}: factory backends cannot be "
-                f"checkpointed (pass a STORE_KINDS name)")
+                f"checkpointed (pass a STORE_KINDS name)"
+            )
         return {
             "schema": self.schema,
             "backend": self.backend,
@@ -429,13 +577,15 @@ class Table:
             "store_kwargs": self.clean_store_kwargs(),
             "memory_budget": self.memory_budget,
             "dir": dict(self._dir),
-            "shards": ([s.snapshot_state() for s in self._shards]
-                       if self._shards else None),
+            "shards": (
+                [s.snapshot_state() for s in self._shards] if self._shards else None
+            ),
         }
 
     @classmethod
-    def from_snapshot(cls, state: Dict[str, Any],
-                      spill_io: Optional[Any] = None) -> "Table":
+    def from_snapshot(
+        cls, state: Dict[str, Any], spill_io: Optional[Any] = None
+    ) -> "Table":
         self = cls.__new__(cls)
         self.schema = state["schema"]
         self.name = self.schema.name
@@ -453,9 +603,19 @@ class Table:
         self._on_shards_built = None
         if state["shards"] is not None:
             store_cls = STORE_KINDS[self.backend]
-            for st in state["shards"]:
-                self._shards.append(store_cls.from_state(
-                    self.schema, st, spill_io=spill_io))
+            spill_base = self.store_kwargs.get("spill_path")
+            for j, st in enumerate(state["shards"]):
+                # same per-shard suffixing as _build_shards, so a durable
+                # named spill file (extent-mode checkpoints) survives the
+                # reopen instead of degrading to an anonymous temp file
+                sp = spill_base
+                if sp is not None and self.n_shards > 1:
+                    sp = f"{spill_base}.s{j}"
+                self._shards.append(
+                    store_cls.from_state(
+                        self.schema, st, spill_path=sp, spill_io=spill_io
+                    )
+                )
             for j, shard in enumerate(self._shards):
                 maint = getattr(shard, "maintenance", None)
                 if maint is not None:
@@ -500,8 +660,11 @@ class Table:
         shard_stats = [s.stats() for s in self._shards]
         out: Dict[str, Any] = {
             "table": self.name,
-            "backend": (self.backend if isinstance(self.backend, str)
-                        else getattr(self.backend, "__name__", "factory")),
+            "backend": (
+                self.backend
+                if isinstance(self.backend, str)
+                else getattr(self.backend, "__name__", "factory")
+            ),
             "n_shards": self.n_shards,
             "n_live": self.n_live,
             "n_ids": sum(s["n_ids"] for s in shard_stats),
@@ -515,8 +678,7 @@ class Table:
         if res:
             # nbytes/store_bytes above are *resident* memory; the on-disk
             # cold tier is aggregated separately (DESIGN.md §6).
-            out["spilled_bytes"] = sum(
-                s.get("spilled_bytes", 0) for s in shard_stats)
+            out["spilled_bytes"] = sum(s.get("spilled_bytes", 0) for s in shard_stats)
             out["residency"] = {
                 "budget_bytes": sum(r["budget_bytes"] for r in res),
                 "spilled_bytes": out["spilled_bytes"],
@@ -525,14 +687,14 @@ class Table:
                 "fault_batches": sum(r["fault_batches"] for r in res),
                 "disk_file_bytes": sum(r["disk_file_bytes"] for r in res),
             }
-        maint = [s["maintenance"] for s in shard_stats
-                 if "maintenance" in s]
+        maint = [s["maintenance"] for s in shard_stats if "maintenance" in s]
         if maint:
             out["maintenance"] = {
                 "refits": sum(m["refits"] for m in maint),
                 "migrated_rows": sum(m["migrated_rows"] for m in maint),
                 "steps": sum(m["steps"] for m in maint),
                 "frozen_columns": sorted(
-                    {c for m in maint for c in m["frozen_columns"]}),
+                    {c for m in maint for c in m["frozen_columns"]}
+                ),
             }
         return out

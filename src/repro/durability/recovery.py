@@ -22,6 +22,7 @@ from __future__ import annotations
 import os
 from typing import Any, Optional
 
+from repro.core.arena import SpillCorruptionError
 from repro.db.database import Database
 from repro.db.table import Table
 
@@ -56,57 +57,89 @@ def _adopt(db: Database, table: Table, wal: WriteAheadLog) -> None:
         db._wire_maintenance(table)
 
 
-def open_database(root: str, io: Optional[Any] = None, fsync_every: int = 1,
-                  checkpoint_every_ops: int = 0,
-                  checkpoint_on_maintenance: bool = True) -> Database:
+def _rebuild_from_log(db: Database, wal: WriteAheadLog) -> bool:
+    """Rebuild one table from its WAL's full history, starting at the
+    ``create`` record that heads every log.  Returns False when nothing
+    durable ever reached the log (the create itself was lost)."""
+    first = next(wal.scan(0), None)
+    if first is None or first[1] != "create":
+        wal.close()
+        return False
+    lsn, _op, meta = first
+    kwargs = dict(meta["store_kwargs"])
+    kwargs["spill_io"] = db._io
+    table = Table(
+        meta["schema"],
+        backend=meta["backend"],
+        n_shards=meta["n_shards"],
+        sample_rows=meta["sample_rows"],
+        store_kwargs=kwargs,
+        memory_budget=meta["memory_budget"],
+    )
+    _adopt(db, table, wal)
+    _replay(table, wal, lsn)
+    return True
+
+
+def open_database(
+    root: str,
+    io: Optional[Any] = None,
+    fsync_every: int = 1,
+    checkpoint_every_ops: int = 0,
+    checkpoint_on_maintenance: bool = True,
+) -> Database:
     """Recover the durable database at ``root``.
 
     Safe on a fresh or empty root (returns an empty durable database) and
     idempotent: recovering twice yields the same state, because replay
     never appends to the log it reads.
     """
-    cfg = DurabilityConfig(root=os.fspath(root), fsync_every=fsync_every,
-                           checkpoint_every_ops=checkpoint_every_ops,
-                           checkpoint_on_maintenance=checkpoint_on_maintenance,
-                           io=io)
+    cfg = DurabilityConfig(
+        root=os.fspath(root),
+        fsync_every=fsync_every,
+        checkpoint_every_ops=checkpoint_every_ops,
+        checkpoint_on_maintenance=checkpoint_on_maintenance,
+        io=io,
+    )
     ck = load_checkpoint(cfg.root)
     engine = (ck or {}).get("engine") or {}
-    db = Database(backend=engine.get("backend") or "blitzcrank",
-                  n_shards=engine.get("n_shards", 1),
-                  store_kwargs=engine.get("store_kwargs") or {},
-                  memory_budget=engine.get("memory_budget"),
-                  durability=cfg)
+    db = Database(
+        backend=engine.get("backend") or "blitzcrank",
+        n_shards=engine.get("n_shards", 1),
+        store_kwargs=engine.get("store_kwargs") or {},
+        memory_budget=engine.get("memory_budget"),
+        durability=cfg,
+    )
     db._recovering = True
     try:
         if ck:
             for name, entry in ck["tables"].items():
-                table = Table.from_snapshot(entry["snapshot"],
-                                            spill_io=db._io)
-                wal = WriteAheadLog(os.path.join(cfg.root, f"{name}.wal"),
-                                    io=db._io, fsync_every=fsync_every)
-                _adopt(db, table, wal)
-                _replay(table, wal, entry["wal_lsn"])
+                wal = WriteAheadLog(
+                    os.path.join(cfg.root, f"{name}.wal"),
+                    io=db._io,
+                    fsync_every=fsync_every,
+                )
+                try:
+                    table = Table.from_snapshot(entry["snapshot"], spill_io=db._io)
+                    _adopt(db, table, wal)
+                    _replay(table, wal, entry["wal_lsn"])
+                except SpillCorruptionError:
+                    # An extent-mode checkpoint references spill-file
+                    # ranges that a post-checkpoint disk compaction moved
+                    # (or the crash tore).  The WAL keeps full history
+                    # exactly for this: drop the snapshot and rebuild the
+                    # table from its create record forward.
+                    db._tables.pop(name, None)
+                    _rebuild_from_log(db, wal)
         for fn in sorted(os.listdir(cfg.root)):
             if not fn.endswith(".wal") or fn[:-4] in db:
                 continue
-            wal = WriteAheadLog(os.path.join(cfg.root, fn), io=db._io,
-                                fsync_every=fsync_every)
-            first = next(wal.scan(0), None)
-            if first is None or first[1] != "create":
-                # nothing durable ever reached this log (the create record
-                # itself was lost to the crash): the table never existed
-                wal.close()
-                continue
-            lsn, _op, meta = first
-            kwargs = dict(meta["store_kwargs"])
-            kwargs["spill_io"] = db._io
-            table = Table(meta["schema"], backend=meta["backend"],
-                          n_shards=meta["n_shards"],
-                          sample_rows=meta["sample_rows"],
-                          store_kwargs=kwargs,
-                          memory_budget=meta["memory_budget"])
-            _adopt(db, table, wal)
-            _replay(table, wal, lsn)
+            # a table created after the last checkpoint: nothing but its
+            # log exists, so replay it from zero
+            wal = WriteAheadLog(
+                os.path.join(cfg.root, fn), io=db._io, fsync_every=fsync_every
+            )
+            _rebuild_from_log(db, wal)
     finally:
         db._recovering = False
     db._ops_since_ckpt = 0

@@ -113,6 +113,32 @@ class RowStore:
                 if r is not None:
                     yield i, r
 
+    def scan_where(self, predicates: Sequence[Any],
+                   columns: Optional[Sequence[str]] = None,
+                   pushdown: bool = True,
+                   backend: Optional[str] = None) -> "Any":
+        """Filtered scan -> :class:`repro.scan.ScanResult` (ids ascending).
+
+        The base implementation is the decode-everything reference:
+        decode every live row through :meth:`scan`, filter in value space,
+        project.  Stores with a pushdown path override this;
+        ``pushdown=False`` forces the reference everywhere (the
+        comparability baseline in ``bench_htap``).
+        """
+        from repro.scan import ScanResult, ScanStats, match_all
+        preds = list(predicates)
+        ids: List[int] = []
+        rows: List[Dict[str, Any]] = []
+        stats = ScanStats()
+        for i, r in self.scan():
+            stats.rows_decoded += 1
+            if match_all(preds, r):
+                ids.append(i)
+                rows.append(r if columns is None
+                            else {c: r[c] for c in columns})
+        stats.rows_matched = len(ids)
+        return ScanResult(ids, rows, stats)
+
     def stats(self) -> Dict[str, Any]:
         return {
             "name": self.name,
@@ -697,6 +723,51 @@ class BlitzStore(RowStore):
             self.maintenance.observe_writes(rows)
             self.maintenance.maybe_step()
 
+    def scan_where(self, predicates: Sequence[Any],
+                   columns: Optional[Sequence[str]] = None,
+                   pushdown: bool = True,
+                   backend: str | None = None) -> "Any":
+        """Predicate-pushdown scan over the code arena (DESIGN.md §8).
+
+        The arena scan (``repro.scan.scan_table``) evaluates predicates in
+        code space with zone-map pruning and decodes only survivors,
+        reading cold blocks through without promoting them.  Arena hits
+        shadowed by the delta overlay or store-level tombstones are
+        dropped and the overlay is re-filtered in value space, so the
+        result matches the reference scan exactly at any merge state.
+        ``pushdown=False`` falls back to the decode-everything baseline.
+        """
+        if not pushdown:
+            return super().scan_where(predicates, columns=columns,
+                                      pushdown=False, backend=backend)
+        from repro.scan import ScanResult, match_all, scan_table
+        preds = list(predicates)
+        for _attempt in range(3):
+            try:
+                res = scan_table(self.table, preds, columns=columns,
+                                 backend=backend)
+                break
+            except SpillCorruptionError as e:
+                self._repair(e)
+        else:
+            res = scan_table(self.table, preds, columns=columns,
+                             backend=backend)
+        if not self._overlay and not self._tombstones:
+            return res
+        ov, ts = self._overlay, self._tombstones
+        proj = (columns if columns is not None
+                else list(self.table.codec.order))
+        merged: List[Tuple[int, Dict[str, Any]]] = [
+            (i, r) for i, r in zip(res.ids, res.rows)
+            if i not in ts and i not in ov]
+        for i, r in ov.items():
+            if match_all(preds, r):
+                merged.append((int(i), {c: r[c] for c in proj}))
+        merged.sort(key=lambda h: h[0])
+        res.stats.rows_matched = len(merged)
+        return ScanResult([h[0] for h in merged],
+                          [h[1] for h in merged], res.stats)
+
     def delete_many(self, indices: Sequence[int]) -> int:
         if self.block_tuples != 1:
             raise ValueError("delete_many requires block_tuples == 1")
@@ -1231,6 +1302,14 @@ class LRUFastPath(RowStore):
              batch: int = 1024) -> Iterator[Tuple[int, Dict[str, Any]]]:
         self.sync()  # the underlying store must see dirty rows
         return self.store.scan(start, stop, batch)
+
+    def scan_where(self, predicates: Sequence[Any],
+                   columns: Optional[Sequence[str]] = None,
+                   pushdown: bool = True,
+                   backend: Optional[str] = None) -> "Any":
+        self.sync()  # the underlying store must see dirty rows
+        return self.store.scan_where(predicates, columns=columns,
+                                     pushdown=pushdown, backend=backend)
 
     def is_live(self, i: int) -> bool:
         return int(i) in self.cache or self.store.is_live(i)

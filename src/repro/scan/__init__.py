@@ -1,0 +1,24 @@
+"""Columnar scan engine: predicate pushdown on compressed code streams.
+
+See DESIGN.md §8.  Public surface:
+
+- :class:`Eq` / :class:`In` / :class:`Range` — value-space predicates
+- :func:`scan_table` — pushdown scan of one ``CompressedTable``
+- :func:`match_row` / :func:`match_all` — the value-space reference
+  semantics every lowered path must agree with
+"""
+
+from .engine import ScanResult, ScanStats, scan_table
+from .predicates import Eq, In, Predicate, Range, match_all, match_row
+
+__all__ = [
+    "Eq",
+    "In",
+    "Range",
+    "Predicate",
+    "ScanResult",
+    "ScanStats",
+    "scan_table",
+    "match_all",
+    "match_row",
+]

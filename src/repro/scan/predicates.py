@@ -1,0 +1,85 @@
+"""Value-space predicates for the columnar scan engine (DESIGN.md §8).
+
+Predicates are declared against *decoded* column values — the semantics are
+exactly "decode every row, then filter".  The engine (`repro.scan.engine`)
+lowers them into code-space forms per plan version when it can (category-id
+compares, quantized-step intervals) and falls back to these value-space
+matchers for pending rows, slow blocks, and non-lowerable versions, so both
+paths agree by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+_MISSING = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class Eq:
+    """``row[column] == value``."""
+
+    column: str
+    value: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class In:
+    """``row[column] in values``."""
+
+    column: str
+    values: Tuple[Any, ...]
+
+    def __init__(self, column: str, values: Sequence[Any]):
+        object.__setattr__(self, "column", column)
+        object.__setattr__(self, "values", tuple(values))
+
+
+@dataclasses.dataclass(frozen=True)
+class Range:
+    """``lo <= row[column] <= hi`` (inclusive; ``None`` bounds are open)."""
+
+    column: str
+    lo: Optional[Any] = None
+    hi: Optional[Any] = None
+
+
+Predicate = Any  # Eq | In | Range
+
+
+def match_row(pred: Predicate, row: Dict[str, Any]) -> bool:
+    """Value-space evaluation of one predicate against a decoded row.
+
+    Incomparable values (``TypeError``) and missing columns never match —
+    the same convention the code-space lowerings implement by dropping
+    out-of-vocabulary literals.
+    """
+    v = row.get(pred.column, _MISSING)
+    if v is _MISSING:
+        return False
+    if isinstance(pred, Eq):
+        try:
+            return bool(v == pred.value)
+        except TypeError:
+            return False
+    if isinstance(pred, In):
+        try:
+            return v in pred.values
+        except TypeError:
+            return False
+    if isinstance(pred, Range):
+        try:
+            if pred.lo is not None and v < pred.lo:
+                return False
+            if pred.hi is not None and v > pred.hi:
+                return False
+        except TypeError:
+            return False
+        return True
+    raise TypeError(f"unknown predicate type {type(pred).__name__}")
+
+
+def match_all(preds: Sequence[Predicate], row: Dict[str, Any]) -> bool:
+    """Conjunction of ``preds`` over one row (empty = match)."""
+    return all(match_row(p, row) for p in preds)
