@@ -27,6 +27,7 @@ from typing import Dict
 import numpy as np
 
 from benchmarks.artifact import write_bench_json
+from repro import telemetry
 from repro.oltp import tpcc
 
 ACCEPT_FACTOR = 2.0
@@ -54,9 +55,13 @@ def _run_backend(backend: str, population, n_shards: int, n_ops: int,
     load_s = time.perf_counter() - t0
     post_load = db.stats()
 
+    hist_base = telemetry.REGISTRY.hist_seconds()
     t0 = time.perf_counter()
     counts = tpcc.run_tpcc_mix(db, n_ops, seed=seed)
     mix_s = time.perf_counter() - t0
+    # per-phase wall-time breakdown of the mix: where a txn's time goes
+    # (encode / decode / jit-compile / fsync / fault-in / python glue)
+    phases = telemetry.phase_breakdown(mix_s, since=hist_base)
     db.merge_all()  # steady state: overlays folded back into the arenas
 
     identical = None
@@ -72,6 +77,7 @@ def _run_backend(backend: str, population, n_shards: int, n_ops: int,
         "load_s": round(load_s, 2),
         "mix_s": round(mix_s, 2),
         "mix_us_per_txn": round(1e6 * mix_s / n_ops, 1),
+        "phases": phases,
         "point_get_us": round(read_us, 1),
         "counts": counts,
         "post_load_bytes": post_load["nbytes"],
@@ -142,6 +148,9 @@ def run(n_warehouses: int = 4, districts_per_wh: int = 10,
         "n_tables": len(population),
         "load_raw_bytes": raw_bytes,
         "arms": arms,
+        # headline breakdown = the blitzcrank arm's mix (gated in CI:
+        # coverage >= 0.9 with the kernel phases separately present)
+        "phases": blitz["phases"],
         "acceptance": {
             "bound": ACCEPT_FACTOR,
             "factor_vs_silo": blitz["factor_vs_silo"],

@@ -36,6 +36,7 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from benchmarks.artifact import write_bench_json
+from repro import telemetry
 from repro.oltp import tpcc
 
 ACCEPT_RATIO = 3.0
@@ -153,7 +154,11 @@ def run(n_warehouses: int = 2, districts_per_wh: int = 10,
     # ---- capped arms: same absolute budget for both stores ----
     for backend in ("blitzcrank", "silo"):
         db = _build(backend, population, n_shards, budgets)
+        hist_base = telemetry.REGISTRY.hist_seconds()
         counts, rates, total_s = _mix_with_windows(db, n_ops, seed, window)
+        # where the capped mix's wall time goes — under a budget the
+        # fault_in/spill phases should dominate the delta vs uncapped
+        phases = telemetry.phase_breakdown(total_s, since=hist_base)
         ref_rate = arms[backend + "_resident"]["ref_rate_tps"]
         sustained = _sustained_ops(rates, window, ref_rate, n_ops)
         db.merge_all()
@@ -168,6 +173,7 @@ def run(n_warehouses: int = 2, districts_per_wh: int = 10,
             # cold-tier path must measure (ref_rate_tps is the uncapped
             # reference it is judged against)
             "median_rate_tps": round(float(np.median(rates)), 1),
+            "phases": phases,
             "sustained_ops": sustained,
             "final_bytes": s["nbytes"],
             "store_bytes": s["store_bytes"],
@@ -200,6 +206,7 @@ def run(n_warehouses: int = 2, districts_per_wh: int = 10,
         "budget_bytes": total_budget,
         "per_table_budgets": budgets,
         "arms": arms,
+        "phases": arms["blitzcrank_capped"]["phases"],
         "acceptance": {
             "bound": ACCEPT_RATIO,
             "sustained_blitz": blitz["sustained_ops"],

@@ -48,6 +48,7 @@ REQUIRED_BENCHES = [
     "out_of_core",
     "recovery",
     "htap",
+    "telemetry",
     "sampling",
     "entropy",
     "granularity",
@@ -68,6 +69,8 @@ SMOKE_IDENTICAL = [
     "out_of_core_acceptance",
     "recovery_acceptance",
     "htap_acceptance",
+    # enabled vs disabled telemetry must leave bit-identical db contents
+    "telemetry_acceptance",
 ]
 
 # (csv name, derived key, lower bound) — loose floors for smoke scale,
@@ -128,6 +131,14 @@ ARTIFACT_RULES: List[Tuple[str, List[str], str, Optional[float]]] = [
     ("BENCH_htap.json", ["acceptance", "identical"], "true", None),
     ("BENCH_htap.json", ["acceptance", "interference_ratio"], "max", 2.0),
     ("BENCH_htap.json", ["acceptance", "residency_neutral"], "true", None),
+    # telemetry must be ~free (enabled >= 0.97x disabled throughput) and
+    # behaviour-neutral; the TPC-C phase breakdown must account for the
+    # mix's wall time (coverage ~1.0; >>1 means double-counting timers)
+    ("BENCH_telemetry.json", ["acceptance", "pass"], "true", None),
+    ("BENCH_telemetry.json", ["acceptance", "overhead_ratio"], "min", 0.97),
+    ("BENCH_telemetry.json", ["acceptance", "identical"], "true", None),
+    ("BENCH_db_tpcc.json", ["phases", "coverage"], "min", 0.9),
+    ("BENCH_db_tpcc.json", ["phases", "coverage"], "max", 1.25),
 ]
 
 

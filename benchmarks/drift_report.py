@@ -135,6 +135,40 @@ def render(
     return "\n".join(lines)
 
 
+def render_phases(
+    fresh_docs: Dict[str, dict], committed_docs: Dict[str, Optional[dict]]
+) -> str:
+    """Per-phase wall-time section (DESIGN.md §9.4): each artifact that
+    carries a top-level ``phases`` dict gets a table of where its measured
+    wall time went, with the committed fraction alongside so a phase
+    quietly swallowing the budget (fsync creep, a cold jit cache) is
+    visible as a trend even when total wall moved less than the flag."""
+    lines: List[str] = []
+    for name, doc in fresh_docs.items():
+        ph = doc.get("phases")
+        if not isinstance(ph, dict) or "phases_s" not in ph:
+            continue
+        old = (committed_docs.get(name) or {}).get("phases") or {}
+        old_frac = old.get("phase_frac", {})
+        lines += [
+            f"### {name} — wall {_fmt(ph.get('wall_s'))}s, "
+            f"coverage {_fmt(ph.get('coverage'))}",
+            "",
+            "| phase | seconds | frac | committed frac |",
+            "|---|---:|---:|---:|",
+        ]
+        fracs = ph.get("phase_frac", {})
+        for phase, secs in ph["phases_s"].items():
+            lines.append(
+                f"| {phase} | {_fmt(secs)} | {_fmt(fracs.get(phase))} "
+                f"| {_fmt(old_frac.get(phase))} |"
+            )
+        lines.append("")
+    if not lines:
+        return ""
+    return "\n".join(["## Phase breakdown", ""] + lines)
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--root", default=str(REPO_ROOT))
@@ -150,20 +184,25 @@ def main(argv: Optional[List[str]] = None) -> int:
     root = Path(args.root)
 
     per_artifact: Dict[str, List[Tuple]] = {}
+    fresh_docs: Dict[str, dict] = {}
+    committed_docs: Dict[str, Optional[dict]] = {}
     for path in sorted(root.glob("BENCH_*.json")):
         try:
             fresh = json.loads(path.read_text())
         except json.JSONDecodeError as e:
             print(f"drift_report: {path.name}: invalid JSON ({e})", file=sys.stderr)
             return 1
-        per_artifact[path.name] = diff_artifact(
-            fresh, _committed(root, args.ref, path.name)
-        )
+        fresh_docs[path.name] = fresh
+        committed_docs[path.name] = _committed(root, args.ref, path.name)
+        per_artifact[path.name] = diff_artifact(fresh, committed_docs[path.name])
     if not per_artifact:
         print("drift_report: no BENCH_*.json artifacts found", file=sys.stderr)
         return 1
 
     report = render(per_artifact, args.ref, args.flag_rel)
+    phases = render_phases(fresh_docs, committed_docs)
+    if phases:
+        report = report + "\n" + phases
     print(report)
     if args.out:
         Path(args.out).write_text(report + "\n")

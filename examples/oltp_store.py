@@ -22,6 +22,10 @@ Run:  PYTHONPATH=src python examples/oltp_store.py
       PYTHONPATH=src python examples/oltp_store.py --crash-demo # kill the
                                                            # process at a crash
                                                            # point, recover
+      PYTHONPATH=src python examples/oltp_store.py --metrics # telemetry
+                                                           # snapshot: counters,
+                                                           # percentiles, phase
+                                                           # breakdown (§9)
 """
 
 import argparse
@@ -277,6 +281,58 @@ def crash_demo(point="apply.before"):
     print("spill corruption repaired, reads clean:", not errs)
 
 
+def metrics_demo(n_ops=1200, json_path=None):
+    """Telemetry demo (DESIGN.md §9): run a short multi-table TPC-C mix
+    with the always-on instrumentation, then pretty-print the registry —
+    top counters, latency percentiles per hot path, and the per-phase
+    wall-time breakdown that locates the OLTP speed gap."""
+    import json as _json
+
+    from repro import telemetry
+
+    telemetry.reset()
+    db, _ = tpcc.build_tpcc_database(
+        backend="blitzcrank", n_shards=2, n_warehouses=2,
+        districts_per_wh=4, customers_per_district=80, n_items=400,
+        orders_per_district=20)
+    base = telemetry.REGISTRY.hist_seconds()
+    t0 = time.perf_counter()
+    counts = tpcc.run_tpcc_mix(db, n_ops, seed=11)
+    wall = time.perf_counter() - t0
+    print(f"{n_ops} transactions in {wall:.2f}s "
+          f"({1e6 * wall / n_ops:.0f} us/txn): {counts}\n")
+
+    snap = telemetry.snapshot()
+    top = sorted(snap["counters"].items(), key=lambda kv: -kv[1])[:12]
+    print(f"{'counter':40s} {'value':>12s}")
+    for name, value in top:
+        print(f"{name:40s} {value:12d}")
+
+    print(f"\n{'histogram':40s} {'count':>8s} {'p50 us':>9s} "
+          f"{'p95 us':>9s} {'p99 us':>9s}")
+    hists = sorted(snap["histograms"].items(),
+                   key=lambda kv: -kv[1]["total_s"])[:12]
+    for name, h in hists:
+        print(f"{name:40s} {h['count']:8d} {h['p50_us']:9.1f} "
+              f"{h['p95_us']:9.1f} {h['p99_us']:9.1f}")
+
+    bd = telemetry.phase_breakdown(wall, since=base)
+    print(f"\nper-phase breakdown of the mix "
+          f"(coverage {bd['coverage']:.2f}):")
+    for phase, frac in sorted(bd["phase_frac"].items(),
+                              key=lambda kv: -kv[1]):
+        bar = "#" * int(50 * frac)
+        print(f"  {phase:12s} {100 * frac:5.1f}%  {bar}")
+    print("\npython_glue is interpreter time between instrumented "
+          "kernels — the 7.5x-gap residual (DESIGN.md §9.4).")
+
+    if json_path:
+        doc = dict(snap, phases=bd)
+        with open(json_path, "w") as f:
+            _json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"full snapshot written to {json_path}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mix", action="store_true",
@@ -297,8 +353,17 @@ def main():
     ap.add_argument("--crash-demo", action="store_true",
                     help="fault injection: kill at a named crash point, "
                          "recover, verify against a reference (§7)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="short TPC-C mix + telemetry snapshot: top "
+                         "counters, latency percentiles, phase "
+                         "breakdown (DESIGN.md §9)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="with --metrics: also write the full telemetry "
+                         "snapshot as JSON")
     args = ap.parse_args()
-    if args.crash_demo:
+    if args.metrics:
+        metrics_demo(json_path=args.json)
+    elif args.crash_demo:
         crash_demo()
     elif args.durable:
         durable()

@@ -11,15 +11,23 @@ Public API:
 """
 
 from .coders import DiscreteCoder, UniformCoder, quantize_freqs, TOTAL
-from .delayed import (BlockDecoder, Slot, decode_block, encode_block,
-                      encode_symbols, LAMBDA_DEFAULT)
+from .delayed import (
+    BlockDecoder, Slot, decode_block, encode_block, encode_symbols, LAMBDA_DEFAULT
+)
 from .vectorized import CondSlot, decode_batch, decode_select, encode_batch
-from .models import (BlockEncoder, ByteMarkov, CategoricalModel,
-                     ConditionalCategoricalModel, NumericModel, StringModel,
-                     TimeSeriesModel)
+from .models import (
+    BlockEncoder,
+    ByteMarkov,
+    CategoricalModel,
+    ConditionalCategoricalModel,
+    NumericModel,
+    StringModel,
+    TimeSeriesModel,
+)
 from .arena import DiskArena, ResidencyConfig, ResidencyManager
-from .blitzcrank import (ColumnSpec, CompressedTable, FitStats, TableCodec,
-                         fit_column_model)
+from .blitzcrank import (
+    ColumnSpec, CompressedTable, FitStats, TableCodec, fit_column_model
+)
 from .plan import PlanFallback, TablePlan, compile_plan
 from .structure import learn_order
 

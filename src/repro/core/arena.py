@@ -59,8 +59,9 @@ def framed_len(payload_len: int) -> int:
     return FRAME_OVERHEAD + int(payload_len)
 
 
-def read_extents(path: str, offsets: Sequence[int],
-                 payload_lens: Sequence[int]) -> List[Optional[bytes]]:
+def read_extents(
+    path: str, offsets: Sequence[int], payload_lens: Sequence[int]
+) -> List[Optional[bytes]]:
     """Verify-and-read framed extents straight from a spill file path.
 
     Read-only and stateless (no :class:`DiskArena`): checkpoint restore
@@ -91,8 +92,7 @@ def read_extents(path: str, offsets: Sequence[int],
                 continue
             magic, n, crc = FRAME_HEADER.unpack_from(raw)
             body = raw[FRAME_OVERHEAD:]
-            ok = (magic == FRAME_MAGIC and n == len(body)
-                  and zlib.crc32(body) == crc)
+            ok = (magic == FRAME_MAGIC and n == len(body) and zlib.crc32(body) == crc)
             out.append(body if ok else None)
     return out
 
@@ -111,8 +111,7 @@ class ArenaReadError(ArenaError):
 
     def __init__(self, offset: int, wanted: int, got: int):
         super().__init__(
-            f"short spill read at offset {offset}: wanted {wanted} bytes, "
-            f"got {got}"
+            f"short spill read at offset {offset}: wanted {wanted} bytes, " f"got {got}"
         )
         self.offset = int(offset)
         self.wanted = int(wanted)
@@ -143,9 +142,7 @@ class SpillCorruptionError(ArenaError):
     """
 
     def __init__(self, row_ids: Sequence[int]):
-        super().__init__(
-            f"spill corruption affecting {len(list(row_ids))} row(s)"
-        )
+        super().__init__(f"spill corruption affecting {len(list(row_ids))} row(s)")
         self.row_ids = sorted(int(i) for i in row_ids)
 
 
@@ -181,8 +178,12 @@ class DiskArena:
     in bytes.
     """
 
-    def __init__(self, path: Optional[str] = None, page_bytes: int = PAGE_BYTES,
-                 io: Optional[Any] = None):
+    def __init__(
+        self,
+        path: Optional[str] = None,
+        page_bytes: int = PAGE_BYTES,
+        io: Optional[Any] = None,
+    ):
         if page_bytes <= 0:
             raise ValueError("page_bytes must be positive")
         self.page_bytes = int(page_bytes)
@@ -266,8 +267,9 @@ class DiskArena:
         """Read and verify one framed extent, returning its payload."""
         return self.read_many_checked([offset], [payload_len])[0]
 
-    def read_many_checked(self, offsets: Sequence[int],
-                          payload_lens: Sequence[int]) -> List[bytes]:
+    def read_many_checked(
+        self, offsets: Sequence[int], payload_lens: Sequence[int]
+    ) -> List[bytes]:
         """Batched framed-extent reads with magic/length/CRC verification.
 
         ``payload_lens`` are payload byte counts (the frame overhead is
@@ -279,8 +281,7 @@ class DiskArena:
         """
         framed = [framed_len(ln) for ln in payload_lens]
         try:
-            raws: List[Optional[bytes]] = list(
-                self.read_many(offsets, framed))
+            raws: List[Optional[bytes]] = list(self.read_many(offsets, framed))
         except ArenaReadError:
             # A coalesced read hit a hole/truncation: retry per-extent so
             # only the genuinely bad extents are quarantined.
@@ -297,8 +298,9 @@ class DiskArena:
             if raw is not None and len(raw) == framed[j]:
                 magic, ln, crc = FRAME_HEADER.unpack_from(raw)
                 body = raw[FRAME_OVERHEAD:]
-                if (magic == FRAME_MAGIC and ln == len(body)
-                        and zlib.crc32(body) == crc):
+                if (
+                    magic == FRAME_MAGIC and ln == len(body) and zlib.crc32(body) == crc
+                ):
                     payload = body
             if payload is None:
                 bad.append(j)
@@ -364,8 +366,7 @@ class DiskArena:
         for m in order:
             off, ln = int(offs[m]), int(lens[m])
             if cursor != off:
-                self.io.pwrite(self._fd, self.io.pread(self._fd, ln, off),
-                               cursor)
+                self.io.pwrite(self._fd, self.io.pread(self._fd, ln, off), cursor)
             new_offs[int(m)] = cursor
             cursor += ln
         self._file.truncate(cursor)

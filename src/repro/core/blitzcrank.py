@@ -19,14 +19,44 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import telemetry
+
 from . import delayed
-from .arena import (FRAME_OVERHEAD, ArenaReadError, ExtentCorruptionError,
-                    ResidencyConfig, ResidencyManager, SpillCorruptionError,
-                    framed_len, read_extents)
+from .arena import (
+    FRAME_OVERHEAD,
+    ArenaReadError,
+    ExtentCorruptionError,
+    ResidencyConfig,
+    ResidencyManager,
+    SpillCorruptionError,
+    framed_len,
+    read_extents,
+)
 from .delayed import BlockDecoder
-from .models import (BlockEncoder, CategoricalModel, ConditionalCategoricalModel,
-                     NumericModel, StringModel, TimeSeriesModel)
+from .models import (
+    BlockEncoder,
+    CategoricalModel,
+    ConditionalCategoricalModel,
+    NumericModel,
+    StringModel,
+    TimeSeriesModel,
+)
 from .structure import discretize_column, learn_order
+
+# Telemetry handles (DESIGN.md §9).  Scalar encode/decode and
+# spill/fault-in are leaf phases of the wall-time breakdown; plan-cache
+# hit/miss and maintenance verbs are counters the gap hunt reads.
+_H_ENC_SCALAR = telemetry.histogram("repro.core.encode.scalar_block")
+_H_DEC_SCALAR = telemetry.histogram("repro.core.decode.scalar_block")
+_H_COMPILE = telemetry.histogram("repro.plan.compile")
+_C_PLAN_HIT = telemetry.counter("repro.plan.cache.hit")
+_C_PLAN_MISS = telemetry.counter("repro.plan.cache.miss")
+_H_SPILL = telemetry.histogram("repro.residency.spill")
+_H_FAULT = telemetry.histogram("repro.residency.fault_in")
+_C_SPILL_BLOCKS = telemetry.counter("repro.residency.spill.blocks")
+_C_FAULT_BLOCKS = telemetry.counter("repro.residency.fault_in.blocks")
+_H_REWRITE = telemetry.histogram("repro.store.rewrite")
+_C_MIGRATED = telemetry.counter("repro.store.migrate.rows")
 
 
 @dataclasses.dataclass
@@ -69,11 +99,14 @@ class FitStats:
     parents: Dict[str, Optional[str]] = dataclasses.field(default_factory=dict)
 
 
-def fit_column_model(spec: ColumnSpec, rows: Sequence[Dict[str, Any]],
-                     parent: Optional[str] = None, block_tuples: int = 1,
-                     extra_values: Optional[Sequence[Any]] = None,
-                     extra_pairs: Optional[Sequence[Tuple[Any, Any]]] = None
-                     ) -> Any:
+def fit_column_model(
+    spec: ColumnSpec,
+    rows: Sequence[Dict[str, Any]],
+    parent: Optional[str] = None,
+    block_tuples: int = 1,
+    extra_values: Optional[Sequence[Any]] = None,
+    extra_pairs: Optional[Sequence[Tuple[Any, Any]]] = None,
+) -> Any:
     """Fit one column's semantic model (Semantic Learner step 2, per column).
 
     Shared by :meth:`TableCodec.fit` and the adaptive per-column refitter
@@ -137,9 +170,15 @@ def fit_column_model(spec: ColumnSpec, rows: Sequence[Dict[str, Any]],
 class TableCodec:
     """Compresses/decompresses rows (dicts or tuples in schema order)."""
 
-    def __init__(self, schema: Sequence[ColumnSpec], models: Dict[str, Any],
-                 order: List[str], stats: FitStats,
-                 block_tuples: int = 1, lam: int = delayed.LAMBDA_DEFAULT):
+    def __init__(
+        self,
+        schema: Sequence[ColumnSpec],
+        models: Dict[str, Any],
+        order: List[str],
+        stats: FitStats,
+        block_tuples: int = 1,
+        lam: int = delayed.LAMBDA_DEFAULT,
+    ):
         self.schema = column_specs(schema)
         self.by_name = {c.name: c for c in self.schema}
         self.models = models
@@ -153,10 +192,16 @@ class TableCodec:
 
     # ------------------------------------------------------------------
     @classmethod
-    def fit(cls, rows: Sequence[Dict[str, Any]], schema: Sequence[ColumnSpec],
-            correlation: bool = False, sample: int = 1 << 15,
-            block_tuples: int = 1, seed: int = 0,
-            lam: int = delayed.LAMBDA_DEFAULT) -> "TableCodec":
+    def fit(
+        cls,
+        rows: Sequence[Dict[str, Any]],
+        schema: Sequence[ColumnSpec],
+        correlation: bool = False,
+        sample: int = 1 << 15,
+        block_tuples: int = 1,
+        seed: int = 0,
+        lam: int = delayed.LAMBDA_DEFAULT,
+    ) -> "TableCodec":
         schema = column_specs(schema)
         rng = np.random.default_rng(seed)
         n = len(rows)
@@ -189,8 +234,9 @@ class TableCodec:
         t0 = time.perf_counter()
         models: Dict[str, Any] = {}
         for c in schema:
-            models[c.name] = fit_column_model(c, rows, parents.get(c.name),
-                                              block_tuples)
+            models[c.name] = fit_column_model(
+                c, rows, parents.get(c.name), block_tuples
+            )
         stats.generation_s = time.perf_counter() - t0
         return cls(schema, models, order, stats, block_tuples, lam)
 
@@ -207,6 +253,8 @@ class TableCodec:
         """
         if not self._plan_tried or force:
             self._plan_tried = True
+            _C_PLAN_MISS.inc()
+            t0 = telemetry.clock()
             from .plan import PlanFallback, compile_plan
             try:
                 self._plan = compile_plan(self)
@@ -214,6 +262,9 @@ class TableCodec:
             except PlanFallback as e:
                 self._plan = None
                 self._plan_reason = str(e)
+            _H_COMPILE.observe_since(t0)
+        else:
+            _C_PLAN_HIT.inc()
         return self._plan
 
     @property
@@ -243,6 +294,7 @@ class TableCodec:
                 m.reset_block()
 
     def _scalar_compress(self, rows: Sequence[Dict[str, Any]]) -> np.ndarray:
+        t0 = telemetry.clock()
         self._reset_block_state()
         enc = BlockEncoder()
         for r in rows:
@@ -251,6 +303,7 @@ class TableCodec:
                 self.models[name].encode_value(r[name], enc, ctx)
                 ctx[name] = r[name]
         codes = delayed.encode_block(enc.slots, self.lam)
+        _H_ENC_SCALAR.observe_since(t0)
         return np.asarray(codes, dtype=np.uint16)
 
     def compress_block(self, rows: Sequence[Dict[str, Any]]) -> np.ndarray:
@@ -264,8 +317,9 @@ class TableCodec:
         """
         return self._scalar_compress(rows)
 
-    def compress_rows(self, rows: Sequence[Dict[str, Any]]
-                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def compress_rows(
+        self, rows: Sequence[Dict[str, Any]]
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Batch-compress rows at single-tuple granularity.
 
         Returns ``(codes uint16, offsets int64[N+1], fast bool[N])`` — a CSR
@@ -299,13 +353,18 @@ class TableCodec:
             chunks.append(c)
             pos += len(c)
             offsets[r + 1] = pos
-        codes = (np.concatenate(chunks) if chunks
-                 else np.zeros(0, np.uint16)).astype(np.uint16)
+        codes = (np.concatenate(chunks) if chunks else np.zeros(0, np.uint16)).astype(
+            np.uint16
+        )
         return codes, offsets, fast
 
-    def decompress_rows(self, codes: np.ndarray, offsets: np.ndarray,
-                        indices: Sequence[int], backend: str = "numpy"
-                        ) -> List[Dict[str, Any]]:
+    def decompress_rows(
+        self,
+        codes: np.ndarray,
+        offsets: np.ndarray,
+        indices: Sequence[int],
+        backend: str = "numpy",
+    ) -> List[Dict[str, Any]]:
         """Batch random-access decode from a CSR arena (compiled codecs only).
 
         Every indexed row must have been encoded on the fast path (its codes
@@ -314,25 +373,28 @@ class TableCodec:
         """
         plan = self.compile()
         if plan is None:
-            raise RuntimeError(
-                f"codec did not compile: {self._plan_reason}")
-        syms = plan.decode_select(np.asarray(codes, np.uint16),
-                                  np.asarray(offsets, np.int64),
-                                  np.asarray(indices, np.int64),
-                                  backend=backend)
+            raise RuntimeError(f"codec did not compile: {self._plan_reason}")
+        syms = plan.decode_select(
+            np.asarray(codes, np.uint16),
+            np.asarray(offsets, np.int64),
+            np.asarray(indices, np.int64),
+            backend=backend,
+        )
         return plan.decode_syms_to_rows(syms)
 
-    def decompress_block(self, codes: np.ndarray, n_rows: int
-                         ) -> List[Dict[str, Any]]:
+    def decompress_block(self, codes: np.ndarray, n_rows: int) -> List[Dict[str, Any]]:
+        t0 = telemetry.clock()
         self._reset_block_state()
-        dec = BlockDecoder(codes.tolist() if isinstance(codes, np.ndarray)
-                           else codes, self.lam)
+        dec = BlockDecoder(
+            codes.tolist() if isinstance(codes, np.ndarray) else codes, self.lam
+        )
         out = []
         for _ in range(n_rows):
             ctx: Dict[str, Any] = {}
             for name in self.order:
                 ctx[name] = self.models[name].decode_value(dec, ctx)
             out.append(ctx)
+        _H_DEC_SCALAR.observe_since(t0)
         return out
 
     # ------------------------------------------------------------------
@@ -344,8 +406,9 @@ class TableCodec:
                    if hasattr(self.models[n], "est_bits"))
 
 
-def _read_spill_extents(path: str, extents: Dict[int, Tuple[int, int]],
-                        block2row: np.ndarray) -> Dict[int, bytes]:
+def _read_spill_extents(
+    path: str, extents: Dict[int, Tuple[int, int]], block2row: np.ndarray
+) -> Dict[int, bytes]:
     """Read extent-referenced spill payloads for an extent-mode checkpoint
     (see :meth:`CompressedTable.snapshot_state`).  Must run *before* any
     :class:`ResidencyManager` re-opens (and truncates) the spill path.
@@ -396,12 +459,16 @@ class CompressedTable:
     PALLAS_MIN_ROWS = 4096  # auto mode: below this, numpy always wins
     ZONE_CHUNK = 256        # physical blocks per zone-map extent
 
-    def __init__(self, codec: TableCodec, capacity_hint: int = 1 << 16,
-                 use_pallas: Optional[bool] = None,
-                 memory_budget: Optional[int] = None,
-                 spill_path: Optional[str] = None,
-                 residency: Optional[ResidencyConfig] = None,
-                 spill_io: Optional[Any] = None):
+    def __init__(
+        self,
+        codec: TableCodec,
+        capacity_hint: int = 1 << 16,
+        use_pallas: Optional[bool] = None,
+        memory_budget: Optional[int] = None,
+        spill_path: Optional[str] = None,
+        residency: Optional[ResidencyConfig] = None,
+        spill_io: Optional[Any] = None,
+    ):
         # Versioned codecs (DESIGN.md §4): writes always encode under the
         # newest codec; every block carries the version it was encoded with
         # so older blocks stay readable after a refit installs a new codec.
@@ -449,8 +516,12 @@ class CompressedTable:
         self._spilled_codes = 0
         self._in_enforce = False
         if memory_budget is not None:
-            self.set_memory_budget(memory_budget, spill_path=spill_path,
-                                   config=residency, spill_io=spill_io)
+            self.set_memory_budget(
+                memory_budget,
+                spill_path=spill_path,
+                config=residency,
+                spill_io=spill_io,
+            )
 
     # -- codec versions (DESIGN.md §4) -----------------------------------
     @property
@@ -499,8 +570,7 @@ class CompressedTable:
         vers, counts = np.unique(self._plan_ver[live], return_counts=True)
         return {int(v): int(c) for v, c in zip(vers, counts)}
 
-    def migrate_rows(self, limit: int = 1 << 12,
-                     resident_only: bool = True) -> int:
+    def migrate_rows(self, limit: int = 1 << 12, resident_only: bool = True) -> int:
         """Re-encode up to ``limit`` stale rows under the newest plan.
 
         Candidates are live rows whose block is tagged with an older version
@@ -522,8 +592,7 @@ class CompressedTable:
         r2b = self._row2block[:self._rows_stored]
         live = r2b >= 0
         blks = r2b[live]
-        stale = (self._plan_ver[blks] < self.current_version) \
-            & ~self._fast[blks]
+        stale = (self._plan_ver[blks] < self.current_version) & ~self._fast[blks]
         if resident_only and self._res is not None:
             stale &= self._resident[blks]
         rows_idx = np.nonzero(live)[0][stale][:limit]
@@ -539,6 +608,7 @@ class CompressedTable:
         with ctx:
             self.replace_many(rows_idx, rows)
         self.migrated_rows += int(rows_idx.size)
+        _C_MIGRATED.add(int(rows_idx.size))
         return int(rows_idx.size)
 
     # -- out-of-core residency (DESIGN.md §6) ----------------------------
@@ -551,10 +621,13 @@ class CompressedTable:
         """Compressed payload bytes currently living on disk (not memory)."""
         return 2 * self._spilled_codes
 
-    def set_memory_budget(self, budget: int,
-                          spill_path: Optional[str] = None,
-                          config: Optional[ResidencyConfig] = None,
-                          spill_io: Optional[Any] = None) -> None:
+    def set_memory_budget(
+        self,
+        budget: int,
+        spill_path: Optional[str] = None,
+        config: Optional[ResidencyConfig] = None,
+        spill_io: Optional[Any] = None,
+    ) -> None:
         """Install a residency manager bounding live resident code bytes.
 
         Single-tuple granularity only (the spill unit is the block and
@@ -579,8 +652,7 @@ class CompressedTable:
         self._spilled_codes = 0
         self._enforce_budget()
 
-    def _init_new_blocks(self, first: int, n: int,
-                         rows: Optional[np.ndarray]) -> None:
+    def _init_new_blocks(self, first: int, n: int, rows: Optional[np.ndarray]) -> None:
         """Fresh blocks are resident and referenced (recently written)."""
         if self._res is None:
             return
@@ -602,8 +674,7 @@ class CompressedTable:
                 self._spill_until(res.target_codes)
             # Spilled/dead residue stays in the memory arena until a
             # rewrite; force one when physical footprint passes the slack.
-            if self._dead_codes and 2 * self.used > res.budget \
-                    + res.slack_bytes:
+            if self._dead_codes and 2 * self.used > res.budget + res.slack_bytes:
                 self.rewrite()
             self._maybe_compact_disk()
         finally:
@@ -638,14 +709,16 @@ class CompressedTable:
         coalesced segment write of CRC32-framed extents) and mark them
         non-resident.  Their in-memory runs become dead bytes until the
         next rewrite."""
+        t0 = telemetry.clock()
         res = self._res
         order = np.argsort(self._offsets[blocks], kind="stable")
         blocks = blocks[order]
         starts = self._offsets[blocks]
         lens = self._offsets[blocks + 1] - starts
         total = int(lens.sum())
-        payloads = [self.arena[int(s):int(s) + int(ln)].tobytes()
-                    for s, ln in zip(starts, lens)]
+        payloads = [
+            self.arena[int(s):int(s) + int(ln)].tobytes() for s, ln in zip(starts, lens)
+        ]
         offs = res.disk.write_many(payloads)
         self._disk_off[blocks] = np.asarray(offs, dtype=np.int64)
         self._disk_len[blocks] = lens
@@ -653,6 +726,8 @@ class CompressedTable:
         self._dead_codes += total
         self._spilled_codes += total
         res.spills += int(blocks.size)
+        _C_SPILL_BLOCKS.add(int(blocks.size))
+        _H_SPILL.observe_since(t0)
 
     def _fault_in(self, blocks: np.ndarray) -> None:
         """Promote spilled blocks: one coalesced disk read, then append the
@@ -661,6 +736,7 @@ class CompressedTable:
         decode path then serves them exactly like always-resident blocks —
         a miss costs one read plus one vectorized decode, never per-row
         work."""
+        t0 = telemetry.clock()
         res = self._res
         lens = self._disk_len[blocks].copy()
         offs_old = self._disk_off[blocks].copy()
@@ -671,8 +747,7 @@ class CompressedTable:
             # durability layer can rebuild them from the WAL and retry.
             bad = blocks[np.asarray(e.indices, dtype=np.int64)]
             res.quarantined += len(e.indices)
-            raise SpillCorruptionError(
-                self._block2row[bad].tolist()) from e
+            raise SpillCorruptionError(self._block2row[bad].tolist()) from e
         total = int(lens.sum())
         buf = np.empty(total, dtype=np.uint16)
         pos = 0
@@ -704,6 +779,8 @@ class CompressedTable:
         self._spilled_codes -= total
         res.faults += n
         res.fault_batches += 1
+        _C_FAULT_BLOCKS.add(n)
+        _H_FAULT.observe_since(t0)
 
     def _maybe_compact_disk(self) -> None:
         res = self._res
@@ -711,8 +788,8 @@ class CompressedTable:
             return
         spilled = np.nonzero(~self._resident[:self.n_blocks])[0]
         new_offs = res.disk.compact(
-            self._disk_off[spilled],
-            2 * self._disk_len[spilled] + FRAME_OVERHEAD)
+            self._disk_off[spilled], 2 * self._disk_len[spilled] + FRAME_OVERHEAD
+        )
         self._disk_off[spilled] = np.asarray(new_offs, dtype=np.int64)
 
     def residency(self) -> Dict[str, Any]:
@@ -762,8 +839,7 @@ class CompressedTable:
                 ref[:nb] = self._ref[:nb]
                 b2r = np.full(cap - 1, -1, dtype=np.int64)
                 b2r[:nb] = self._block2row[:nb]
-                self._resident, self._disk_off, self._disk_len = \
-                    resident, doff, dlen
+                self._resident, self._disk_off, self._disk_len = resident, doff, dlen
                 self._ref, self._block2row = ref, b2r
 
     def _grow_rows(self, n_new: int) -> None:
@@ -809,8 +885,7 @@ class CompressedTable:
             vals[:, j] = np.where(np.isfinite(v), v, np.nan)
         return vals
 
-    def _zone_widen(self, blocks: np.ndarray,
-                    rows: Sequence[Dict[str, Any]]) -> None:
+    def _zone_widen(self, blocks: np.ndarray, rows: Sequence[Dict[str, Any]]) -> None:
         """Widen chunk bounds with the raw values of ``rows``, one entry
         per row landing in the matching ``blocks`` id (ids may repeat for
         multi-row blocks).  Raw values bound decoded values for escapes
@@ -863,9 +938,13 @@ class CompressedTable:
         """Columns with zone maps (numeric schema kinds)."""
         return list(self._zone_cols)
 
-    def zone_block_mask(self, column: str, lo: Optional[float] = None,
-                        hi: Optional[float] = None,
-                        slack: float = 0.0) -> Optional[np.ndarray]:
+    def zone_block_mask(
+        self,
+        column: str,
+        lo: Optional[float] = None,
+        hi: Optional[float] = None,
+        slack: float = 0.0,
+    ) -> Optional[np.ndarray]:
         """Keep-mask ``bool[n_blocks]``: False = zone maps prove no row of
         the block can satisfy ``lo <= value <= hi`` (widened by ``slack``,
         the worst-case quantization error of the predicate's decoded
@@ -886,9 +965,13 @@ class CompressedTable:
         blocks = np.arange(self.n_blocks, dtype=np.int64)
         return ~drop[blocks // self.ZONE_CHUNK]
 
-    def _append_block(self, codes: np.ndarray, n_rows: int, fast: bool,
-                      rows: Optional[Sequence[Dict[str, Any]]] = None
-                      ) -> None:
+    def _append_block(
+        self,
+        codes: np.ndarray,
+        n_rows: int,
+        fast: bool,
+        rows: Optional[Sequence[Dict[str, Any]]] = None,
+    ) -> None:
         self._append_codes(codes)
         self._grow_index(1)
         self.n_blocks += 1
@@ -896,14 +979,12 @@ class CompressedTable:
         self._fast[self.n_blocks - 1] = fast
         self._plan_ver[self.n_blocks - 1] = self.current_version
         if rows is not None:
-            self._zone_widen(
-                np.full(len(rows), self.n_blocks - 1, np.int64), rows)
+            self._zone_widen(np.full(len(rows), self.n_blocks - 1, np.int64), rows)
         self.block_rows.append(n_rows)
         if self.codec.block_tuples == 1:
             self._grow_rows(n_rows)
             self._row2block[self._rows_stored] = self.n_blocks - 1
-            self._init_new_blocks(self.n_blocks - 1, 1,
-                                  np.asarray([self._rows_stored]))
+            self._init_new_blocks(self.n_blocks - 1, 1, np.asarray([self._rows_stored]))
         self._rows_stored += n_rows
 
     @property
@@ -935,17 +1016,17 @@ class CompressedTable:
         self._append_codes(codes)
         n = len(rows)
         self._grow_index(n)
-        self._offsets[self.n_blocks + 1:self.n_blocks + 1 + n] = \
-            base + offsets[1:]
+        self._offsets[self.n_blocks + 1:self.n_blocks + 1 + n] = base + offsets[1:]
         self._fast[self.n_blocks:self.n_blocks + n] = fast
         self._plan_ver[self.n_blocks:self.n_blocks + n] = self.current_version
         self._zone_widen(np.arange(self.n_blocks, self.n_blocks + n), rows)
-        self._init_new_blocks(self.n_blocks, n,
-                              np.arange(self._rows_stored,
-                                        self._rows_stored + n))
+        self._init_new_blocks(
+            self.n_blocks, n, np.arange(self._rows_stored, self._rows_stored + n)
+        )
         self._grow_rows(n)
-        self._row2block[self._rows_stored:self._rows_stored + n] = \
-            np.arange(self.n_blocks, self.n_blocks + n)
+        self._row2block[self._rows_stored:self._rows_stored + n] = np.arange(
+            self.n_blocks, self.n_blocks + n
+        )
         self.n_blocks += n
         self.block_rows.extend([1] * n)
         self._rows_stored += n
@@ -958,8 +1039,7 @@ class CompressedTable:
         # Scalar encode (cheapest for one row; identical codes either way),
         # plus a cheap pure-Python conformance probe for the fast flag.
         plan = self.codec.compile()
-        fast = (plan is not None and len(rows) == 1
-                and plan.row_conforms(rows[0]))
+        fast = (plan is not None and len(rows) == 1 and plan.row_conforms(rows[0]))
         codes = self.codec._scalar_compress(rows)
         self._append_block(codes, len(rows), fast, rows=rows)
         self._enforce_budget()
@@ -1000,11 +1080,11 @@ class CompressedTable:
                 self._res.scalar_faults += 1
                 try:
                     raw = self._res.disk.read_checked(
-                        int(self._disk_off[b]), 2 * int(self._disk_len[b]))
+                        int(self._disk_off[b]), 2 * int(self._disk_len[b])
+                    )
                 except (ExtentCorruptionError, ArenaReadError) as e:
                     self._res.quarantined += 1
-                    raise SpillCorruptionError(
-                        [int(self._block2row[b])]) from e
+                    raise SpillCorruptionError([int(self._block2row[b])]) from e
                 return np.frombuffer(raw, dtype=np.uint16)
             self._ref[b] = 1
         return self.arena[self._offsets[b]:self._offsets[b + 1]]
@@ -1014,8 +1094,9 @@ class CompressedTable:
         codec = self._codecs[self._plan_ver[b]]  # decode under the block's
         return codec.decompress_block(codes, self.block_rows[b])  # own plan
 
-    def _resolve_backend(self, backend: Optional[str], n_rows: int,
-                         codec: Optional[TableCodec] = None) -> str:
+    def _resolve_backend(
+        self, backend: Optional[str], n_rows: int, codec: Optional[TableCodec] = None
+    ) -> str:
         plan = (codec or self.codec).compile()
         if backend in ("numpy", "pallas"):
             # Explicit request; quietly downgrade when the plan has
@@ -1036,9 +1117,9 @@ class CompressedTable:
                 pass
         return "numpy"
 
-    def get_many(self, indices: Sequence[int],
-                 backend: Optional[str] = None
-                 ) -> List[Optional[Dict[str, Any]]]:
+    def get_many(
+        self, indices: Sequence[int], backend: Optional[str] = None
+    ) -> List[Optional[Dict[str, Any]]]:
         """Batched point gets (``None`` for tombstoned rows).
 
         Rows in plan-conforming single-tuple blocks decode with ONE
@@ -1083,17 +1164,17 @@ class CompressedTable:
                     sel = fast_pos[vers == v]
                     codec_v = self._codecs[v]
                     rows = codec_v.decompress_rows(
-                        self.arena[:self.used], self.block_offsets,
+                        self.arena[:self.used],
+                        self.block_offsets,
                         blks[sel],
-                        backend=self._resolve_backend(backend, sel.size,
-                                                      codec_v))
+                        backend=self._resolve_backend(backend, sel.size, codec_v),
+                    )
                     for j, r in zip(sel.tolist(), rows):
                         out[j] = r
             for j in np.nonzero(~fmask)[0].tolist():
                 b = int(blks[j])
                 if b == -2:
-                    out[j] = dict(
-                        self._pending[int(idx_arr[j]) - self._rows_stored])
+                    out[j] = dict(self._pending[int(idx_arr[j]) - self._rows_stored])
                 elif b >= 0:
                     scalar_blocks.setdefault(b, []).append((j, 0))
                 # b == -1: tombstone, leave None
@@ -1135,8 +1216,9 @@ class CompressedTable:
             sp = ~self._resident[blocks]
             if sp.any():
                 cold = blocks[sp]
-                for o, ln in zip(self._disk_off[cold].tolist(),
-                                 self._disk_len[cold].tolist()):
+                for o, ln in zip(
+                    self._disk_off[cold].tolist(), self._disk_len[cold].tolist()
+                ):
                     self._res.disk.free(o, framed_len(2 * ln))
                 self._spilled_codes -= int(self._disk_len[cold].sum())
                 self._resident[cold] = True
@@ -1145,10 +1227,12 @@ class CompressedTable:
                 blocks = blocks[~sp]
         if blocks.size:
             self._dead_codes += int(
-                (self._offsets[blocks + 1] - self._offsets[blocks]).sum())
+                (self._offsets[blocks + 1] - self._offsets[blocks]).sum()
+            )
 
-    def replace_many(self, indices: Sequence[int],
-                     rows: Sequence[Dict[str, Any]]) -> None:
+    def replace_many(
+        self, indices: Sequence[int], rows: Sequence[Dict[str, Any]]
+    ) -> None:
         """Re-encode ``rows`` in place of ``indices`` (delta-merge step).
 
         New code runs are appended to the arena through the bulk
@@ -1231,6 +1315,7 @@ class CompressedTable:
         runs carrying their residency tags (disk extent, fast flag, plan
         version) — compaction never forces a fault-in.  Returns the number
         of bytes reclaimed."""
+        t0 = telemetry.clock()
         self._require_mutable("rewrite")
         self.flush()
         reclaimed = self.dead_bytes
@@ -1267,8 +1352,7 @@ class CompressedTable:
             ref[:nb] = self._ref[blks]
             b2r = np.full(offs.size - 1, -1, dtype=np.int64)
             b2r[:nb] = live_rows
-            self._resident, self._disk_off, self._disk_len = \
-                resident, doff, dlen
+            self._resident, self._disk_off, self._disk_len = resident, doff, dlen
             self._ref, self._block2row = ref, b2r
             # the clock hand's position is meaningless after renumbering
             res.hand = 0
@@ -1281,6 +1365,7 @@ class CompressedTable:
         self._row2block[live_rows] = np.arange(nb)
         self._dead_codes = 0
         self.rewrites += 1
+        _H_REWRITE.observe_since(t0)
         return reclaimed
 
     # -- durability (DESIGN.md §7) ---------------------------------------
@@ -1320,9 +1405,7 @@ class CompressedTable:
             plan.rows_seen = int(st["rows_seen"])
             plan.window_rows = int(st["window_rows"])
 
-    def snapshot_state(self,
-                       embed_spilled: Optional[bool] = None
-                       ) -> Dict[str, Any]:
+    def snapshot_state(self, embed_spilled: Optional[bool] = None) -> Dict[str, Any]:
         """Everything needed to rebuild this table bit-identically.
 
         Spilled payloads are handled one of two ways.  *Embedded* mode
@@ -1374,14 +1457,13 @@ class CompressedTable:
             if embed:
                 try:
                     payloads = self._res.disk.read_many_checked(
-                        self._disk_off[spilled], 2 * self._disk_len[spilled])
+                        self._disk_off[spilled], 2 * self._disk_len[spilled]
+                    )
                 except ExtentCorruptionError as e:
                     bad = spilled[np.asarray(e.indices, dtype=np.int64)]
                     self._res.quarantined += len(e.indices)
-                    raise SpillCorruptionError(
-                        self._block2row[bad].tolist()) from e
-                res_st["payloads"] = {
-                    int(b): p for b, p in zip(spilled, payloads)}
+                    raise SpillCorruptionError(self._block2row[bad].tolist()) from e
+                res_st["payloads"] = {int(b): p for b, p in zip(spilled, payloads)}
             else:
                 self._res.disk.fsync()
                 res_st["spill_file"] = self._res.disk.path
@@ -1392,9 +1474,12 @@ class CompressedTable:
         return st
 
     @classmethod
-    def from_state(cls, state: Dict[str, Any],
-                   spill_path: Optional[str] = None,
-                   spill_io: Optional[Any] = None) -> "CompressedTable":
+    def from_state(
+        cls,
+        state: Dict[str, Any],
+        spill_path: Optional[str] = None,
+        spill_io: Optional[Any] = None,
+    ) -> "CompressedTable":
         """Rebuild a table from :meth:`snapshot_state` output.
 
         Previously spilled blocks are re-spilled into a fresh spill file,
@@ -1437,8 +1522,9 @@ class CompressedTable:
                 payload_map = _read_spill_extents(
                     res_state["spill_file"], res_state["extents"],
                     res_state["block2row"])
-            t._res = ResidencyManager(res_state["budget"], spill_path,
-                                      res_state.get("config"), io=spill_io)
+            t._res = ResidencyManager(
+                res_state["budget"], spill_path, res_state.get("config"), io=spill_io
+            )
             t._resident = np.ones(cap - 1, dtype=bool)
             t._resident[:nb] = res_state["resident"]
             t._disk_off = np.full(cap - 1, -1, dtype=np.int64)
@@ -1450,10 +1536,10 @@ class CompressedTable:
             t._block2row[:nb] = res_state["block2row"]
             spilled = sorted(payload_map)
             if spilled:
-                offs = t._res.disk.write_many(
-                    [payload_map[b] for b in spilled])
-                t._disk_off[np.asarray(spilled, dtype=np.int64)] = \
-                    np.asarray(offs, dtype=np.int64)
+                offs = t._res.disk.write_many([payload_map[b] for b in spilled])
+                t._disk_off[np.asarray(spilled, dtype=np.int64)] = np.asarray(
+                    offs, dtype=np.int64
+                )
             t._spilled_codes = int(t._disk_len[:nb].sum())
         zst = state.get("zones")
         if (zst is not None and zst["chunk"] == t.ZONE_CHUNK
@@ -1493,12 +1579,10 @@ class CompressedTable:
         block) is charged here.
         """
         pending = sum(_raw_row_bytes(r) for r in self._pending)
-        indirection = (4 * self._rows_stored
-                       if self.codec.block_tuples == 1 else 0)
+        indirection = (4 * self._rows_stored if self.codec.block_tuples == 1 else 0)
         ver_tags = self.n_blocks if len(self._codecs) > 1 else 0
         res_meta = 9 * self.n_blocks if self._res is not None else 0
-        zone_bytes = (16 * len(self._zone_cols)
-                      * self._zone_chunks(self.n_blocks))
+        zone_bytes = (16 * len(self._zone_cols) * self._zone_chunks(self.n_blocks))
         return (self.used * 2 + 4 * (self.n_blocks + 1)
                 + (self.n_blocks + 7) // 8 + indirection + ver_tags
                 + res_meta + zone_bytes + pending)

@@ -314,7 +314,8 @@ class DiscreteCoder:
     def cdf(self) -> np.ndarray:
         if self._cdf is None:
             self._cdf = np.concatenate(
-                [[0], np.cumsum(self.tables.k_of.astype(np.int64))])
+                [[0], np.cumsum(self.tables.k_of.astype(np.int64))]
+            )
         return self._cdf
 
     # -- direct 2**16 LUT (the "decoding map" variant of Fig 11) ---------

@@ -119,16 +119,18 @@ class BlockDecoder:
         return self.pos
 
 
-def decode_block(codes: Sequence[int], coders: Sequence, lam: int = LAMBDA_DEFAULT
-                 ) -> Tuple[List[int], int]:
+def decode_block(
+    codes: Sequence[int], coders: Sequence, lam: int = LAMBDA_DEFAULT
+) -> Tuple[List[int], int]:
     """Decode a fixed, known sequence of slot coders. Returns (symbols, used)."""
     dec = BlockDecoder(codes, lam)
     syms = [dec.next_symbol(c) for c in coders]
     return syms, dec.codes_consumed()
 
 
-def encode_symbols(syms: Sequence[int], coders: Sequence,
-                   lam: int = LAMBDA_DEFAULT) -> List[int]:
+def encode_symbols(
+    syms: Sequence[int], coders: Sequence, lam: int = LAMBDA_DEFAULT
+) -> List[int]:
     """Convenience: encode a symbol per coder (fixed-slot blocks)."""
     slots = [Slot(k=c.k(sym),
                   code_for=(lambda a, c=c, sym=sym: c.code_for(sym, a)))

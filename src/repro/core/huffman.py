@@ -136,8 +136,9 @@ class HuffmanCode:
             if fc <= prefix:
                 # count of codes at this length bounds prefix - fc
                 idx = int(self.base_index[L]) + (prefix - fc)
-                if idx < len(self.order) and int(self.lengths[self.order[idx]]) == L \
-                        and int(self.codes[self.order[idx]]) == prefix:
+                if idx < len(self.order) and int(
+                    self.lengths[self.order[idx]]
+                ) == L and int(self.codes[self.order[idx]]) == prefix:
                     br.skip(L)
                     return int(self.order[idx])
         raise ValueError("bad Huffman stream")

@@ -47,7 +47,8 @@ class JsonNodeModel:
         self.optional = present < total
         if self.optional:
             self.exist = CategoricalModel(
-                [True] * max(present, 1) + [False] * max(total - present, 1))
+                [True] * max(present, 1) + [False] * max(total - present, 1)
+            )
         types = [_type_of(v) for v in values] or ["null"]
         self.type_model = CategoricalModel(types)
         self.by_type: Dict[str, Any] = {}
@@ -56,11 +57,11 @@ class JsonNodeModel:
             if t == "bool":
                 self.by_type[t] = CategoricalModel([bool(v) for v in tv])
             elif t == "int":
-                self.by_type[t] = NumericModel([int(v) for v in tv],
-                                               precision=1, integer=True)
+                self.by_type[t] = NumericModel(
+                    [int(v) for v in tv], precision=1, integer=True
+                )
             elif t == "float":
-                self.by_type[t] = NumericModel([float(v) for v in tv],
-                                               precision=1e-6)
+                self.by_type[t] = NumericModel([float(v) for v in tv], precision=1e-6)
             elif t == "str":
                 self.by_type[t] = CategoricalModel([str(v) for v in tv])
             elif t == "object":
@@ -72,13 +73,14 @@ class JsonNodeModel:
                     k2: JsonNodeModel(vals, present=len(vals), total=len(tv))
                     for k2, vals in sorted(keys.items())}
                 self._known_keys = CategoricalModel(
-                    [k2 for obj in tv for k2 in obj] or [""])
+                    [k2 for obj in tv for k2 in obj] or [""]
+                )
             elif t == "array":
                 lens = [len(v) for v in tv]
                 self.by_type[t] = (
                     NumericModel(lens or [0], precision=1, integer=True),
-                    JsonNodeModel([x for v in tv for x in v],
-                                  present=1, total=1))
+                    JsonNodeModel([x for v in tv for x in v], present=1, total=1),
+                )
 
     # ------------------------------------------------------------------
     def encode(self, v: Any, enc: BlockEncoder, present: bool = True) -> None:
@@ -150,8 +152,9 @@ class JsonCodec:
     """Collection-level facade: fit on sample objects, encode/decode each."""
 
     def __init__(self, samples: Sequence[Any]):
-        self.root = JsonNodeModel(list(samples), present=len(samples),
-                                  total=len(samples))
+        self.root = JsonNodeModel(
+            list(samples), present=len(samples), total=len(samples)
+        )
 
     def encode(self, obj: Any):
         from . import delayed

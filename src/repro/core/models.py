@@ -32,7 +32,8 @@ class BlockEncoder:
 
     def add(self, coder, sym: int) -> None:
         self.slots.append(
-            Slot(k=coder.k(sym), code_for=lambda a, c=coder, s=sym: c.code_for(s, a)))
+            Slot(k=coder.k(sym), code_for=lambda a, c=coder, s=sym: c.code_for(s, a))
+        )
 
 
 _RAW64 = UniformCoder(TOTAL)  # raw 16-bit payload slot
@@ -153,15 +154,21 @@ class NumericModel:
 
     ESC_NAME = "<esc>"
 
-    def __init__(self, values: Sequence[float], precision: float = 1.0,
-                 T: int = 512, integer: bool = False):
+    def __init__(
+        self,
+        values: Sequence[float],
+        precision: float = 1.0,
+        T: int = 512,
+        integer: bool = False,
+    ):
         vals = np.asarray([v for v in values], dtype=np.float64)
         if vals.size == 0:
             vals = np.zeros(1)
         self.p = float(precision)
         self.integer = bool(integer)
-        self.vmin = float(np.floor(vals.min() / self.p) * self.p) if self.integer \
-            else float(vals.min())
+        self.vmin = float(
+            np.floor(vals.min() / self.p) * self.p
+        ) if self.integer else float(vals.min())
         vmax = float(vals.max())
         total_steps = int(math.floor((vmax - self.vmin) / self.p + 1e-9)) + 1
         self.total_steps = total_steps
@@ -191,8 +198,9 @@ class NumericModel:
             w *= c.G
 
     def _quantize(self, v) -> np.ndarray:
-        return np.floor((np.asarray(v, dtype=np.float64) - self.vmin) / self.p
-                        + 1e-9).astype(np.int64)
+        return np.floor(
+            (np.asarray(v, dtype=np.float64) - self.vmin) / self.p + 1e-9
+        ).astype(np.int64)
 
     def encode_value(self, v: float, enc: BlockEncoder, ctx=None) -> None:
         fv = float(v)
@@ -325,8 +333,13 @@ class StringModel:
     K = 4
     MIN_PREFIX = 4
 
-    def __init__(self, values: Sequence[str], dict_min_count: int = 2,
-                 dict_cap: int = 4096, block_tuples: int = 1):
+    def __init__(
+        self,
+        values: Sequence[str],
+        dict_min_count: int = 2,
+        dict_cap: int = 4096,
+        block_tuples: int = 1,
+    ):
         values = [v if isinstance(v, str) else str(v) for v in values]
         # Simulate the queue with the SAME block structure used at encode
         # time (the queue resets per block for random access): otherwise the
@@ -358,19 +371,21 @@ class StringModel:
         # Segment-count histogram: the slot-plan compiler (plan.py) uses it
         # to derive a fixed word/delimiter template for format-fixed columns.
         self.n_words_counts = Counter(nseg)
-        self.i_model = DiscreteCoder(quantize_freqs(
-            np.bincount(i_seen, minlength=self.K + 1) + 0.5))
-        self.h_model = NumericModel(h_seen or [self.MIN_PREFIX], precision=1,
-                                    T=256, integer=True)
+        self.i_model = DiscreteCoder(
+            quantize_freqs(np.bincount(i_seen, minlength=self.K + 1) + 0.5)
+        )
+        self.h_model = NumericModel(
+            h_seen or [self.MIN_PREFIX], precision=1, T=256, integer=True
+        )
         self.n_model = NumericModel(nseg or [1], precision=1, T=64, integer=True)
         self.delim_model = CategoricalModel(delims or [" "])
         wc = Counter(words_all)
         common = {w for w, c in wc.most_common(dict_cap) if c >= dict_min_count}
         self.dict_model = CategoricalModel(
             [w for w in words_all if w in common] or [b""],
-            esc_weight=max(1.0, sum(c for w, c in wc.items() if w not in common)))
-        self.markov = ByteMarkov([w for w in words_all if w not in common]
-                                 or [b"a"])
+            esc_weight=max(1.0, sum(c for w, c in wc.items() if w not in common)),
+        )
+        self.markov = ByteMarkov([w for w in words_all if w not in common] or [b"a"])
         self._block_queue: deque = deque(maxlen=self.K)
 
     @staticmethod
@@ -438,11 +453,13 @@ class StringModel:
         for t in range(n_words):
             sym = dec.next_symbol(self.dict_model.coder)
             if sym == self.dict_model.esc:
-                parts.append(self.markov.decode_word(dec).decode("utf-8",
-                                                                 errors="replace"))
+                parts.append(
+                    self.markov.decode_word(dec).decode("utf-8", errors="replace")
+                )
             else:
-                parts.append(self.dict_model.id2value[sym].decode("utf-8",
-                                                                  errors="replace"))
+                parts.append(
+                    self.dict_model.id2value[sym].decode("utf-8", errors="replace")
+                )
             if t < n_words - 1:
                 parts.append(self.delim_model.decode_value(dec))
         s = prefix + "".join(parts)
@@ -482,8 +499,13 @@ class ConditionalCategoricalModel:
     the marginal model.
     """
 
-    def __init__(self, pairs: Sequence, parent_name: str,
-                 min_group: int = 8, max_groups: int = 4096):
+    def __init__(
+        self,
+        pairs: Sequence,
+        parent_name: str,
+        min_group: int = 8,
+        max_groups: int = 4096,
+    ):
         self.parent = parent_name
         values = [v for _, v in pairs]
         self.marginal = CategoricalModel(values)
@@ -526,8 +548,7 @@ class TimeSeriesModel:
     random access (needs the previous row), matching the paper's caveat.
     """
 
-    def __init__(self, values: Sequence[float], precision: float = 1.0,
-                 T: int = 512):
+    def __init__(self, values: Sequence[float], precision: float = 1.0, T: int = 512):
         v = np.asarray(values, dtype=np.float64)
         if v.size < 3:
             v = np.zeros(3)

@@ -35,13 +35,30 @@ import math
 import numpy as np
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro import telemetry
+
 from . import vectorized
 from .coders import TOTAL, DiscreteCoder, UniformCoder
-from .models import (CategoricalModel, ConditionalCategoricalModel,
-                     NumericModel, StringModel, TimeSeriesModel)
+from .models import (
+    CategoricalModel,
+    ConditionalCategoricalModel,
+    NumericModel,
+    StringModel,
+    TimeSeriesModel,
+)
 from .vectorized import CondSlot
 
 MAX_COND_KEYS = 1 << 16  # cap on enumerated parent-chain combinations
+
+# Hot-path metric handles (DESIGN.md §9): encode/decode are leaf phases
+# of the wall-time breakdown, pallas_pack is a jit-compile event.
+_H_ENCODE = telemetry.histogram("repro.core.encode")
+_H_ENCODE_SCALAR = telemetry.histogram("repro.core.encode.scalar")
+_H_DECODE = telemetry.histogram("repro.core.decode")
+_C_ENCODE_ROWS = telemetry.counter("repro.core.encode.rows")
+_C_DECODE_ROWS = telemetry.counter("repro.core.decode.rows")
+_H_PALLAS_PACK = telemetry.histogram("repro.plan.pallas_pack")
+_C_PALLAS_PACK = telemetry.counter("repro.plan.pallas_pack.events")
 
 
 class PlanFallback(Exception):
@@ -88,11 +105,11 @@ class _CatPlan:
     def coders(self) -> List:
         return [self.m.coder]
 
-    def encode(self, vals: Sequence, ctx: Dict[str, Sequence]
-               ) -> Tuple[np.ndarray, np.ndarray]:
+    def encode(
+        self, vals: Sequence, ctx: Dict[str, Sequence]
+    ) -> Tuple[np.ndarray, np.ndarray]:
         get = self.m.value2id.get
-        ids = np.fromiter((_safe_get(get, v) for v in vals),
-                          np.int64, len(vals))
+        ids = np.fromiter((_safe_get(get, v) for v in vals), np.int64, len(vals))
         return ids[:, None], ids >= 0
 
     def decode(self, syms: np.ndarray, ctx: Dict[str, Any]) -> np.ndarray:
@@ -112,8 +129,9 @@ class _NumPlan:
     def coders(self) -> List:
         return [self.m.l1] + list(self.m.l2)
 
-    def encode(self, vals: Sequence, ctx: Dict[str, Sequence]
-               ) -> Tuple[np.ndarray, np.ndarray]:
+    def encode(
+        self, vals: Sequence, ctx: Dict[str, Sequence]
+    ) -> Tuple[np.ndarray, np.ndarray]:
         m = self.m
         n = len(vals)
         syms = np.zeros((n, self.n_slots), np.int64)
@@ -176,9 +194,13 @@ class _CondPlan:
 
     n_slots = 1
 
-    def __init__(self, model: ConditionalCategoricalModel,
-                 chain_slots: Tuple[int, ...], bases: Tuple[int, ...],
-                 sub_by_tuple: Dict[Tuple[int, ...], CategoricalModel]):
+    def __init__(
+        self,
+        model: ConditionalCategoricalModel,
+        chain_slots: Tuple[int, ...],
+        bases: Tuple[int, ...],
+        sub_by_tuple: Dict[Tuple[int, ...], CategoricalModel],
+    ):
         self.m = model
         self.chain_slots = chain_slots
         self.bases = bases
@@ -186,14 +208,14 @@ class _CondPlan:
         packed_coders = {}
         for key_t, sm in sub_by_tuple.items():
             packed_coders[_pack_key(key_t, bases)] = sm.coder
-        self.slot = CondSlot(chain_slots, bases, packed_coders,
-                             model.marginal.coder)
+        self.slot = CondSlot(chain_slots, bases, packed_coders, model.marginal.coder)
 
     def coders(self) -> List:
         return [self.slot]
 
-    def encode(self, vals: Sequence, ctx: Dict[str, Sequence]
-               ) -> Tuple[np.ndarray, np.ndarray]:
+    def encode(
+        self, vals: Sequence, ctx: Dict[str, Sequence]
+    ) -> Tuple[np.ndarray, np.ndarray]:
         m = self.m
         pvals = ctx[m.parent]
         ids = np.empty(len(vals), np.int64)
@@ -214,8 +236,9 @@ class _CondPlan:
 
     def conforms(self, v, row) -> bool:
         pv = row[self.m.parent]
-        sub = (self.m.cond.get(pv, self.m.marginal) if _hashable(pv)
-               else self.m.marginal)
+        sub = (
+            self.m.cond.get(pv, self.m.marginal) if _hashable(pv) else self.m.marginal
+        )
         return v in sub.value2id
 
 
@@ -253,8 +276,9 @@ class _StrPlan:
         self._nn = len(n_syms)
         self.n_slots = 1 + self._nn + 2 * self.W - 1
         self._words = _obj_array(
-            [wb.decode("utf-8", errors="replace") for wb in
-             m.dict_model.id2value], pad="")
+            [wb.decode("utf-8", errors="replace") for wb in m.dict_model.id2value],
+            pad="",
+        )
         self._delims = _obj_array(list(m.delim_model.id2value), pad="")
 
     def coders(self) -> List:
@@ -266,8 +290,9 @@ class _StrPlan:
                 out.append(m.delim_model.coder)
         return out
 
-    def encode(self, vals: Sequence, ctx: Dict[str, Sequence]
-               ) -> Tuple[np.ndarray, np.ndarray]:
+    def encode(
+        self, vals: Sequence, ctx: Dict[str, Sequence]
+    ) -> Tuple[np.ndarray, np.ndarray]:
         m, W = self.m, self.W
         n = len(vals)
         syms = np.zeros((n, self.n_slots), np.int64)
@@ -299,8 +324,7 @@ class _StrPlan:
             cols.append(tab[np.minimum(syms[:, base + t], len(tab) - 1)])
         if len(cols) == 1:
             return cols[0]
-        return np.asarray(["".join(parts) for parts in zip(*cols)],
-                          dtype=object)
+        return np.asarray(["".join(parts) for parts in zip(*cols)], dtype=object)
 
     def conforms(self, v, row) -> bool:
         s = v if isinstance(v, str) else str(v)
@@ -329,8 +353,9 @@ def _pack_key(key_t: Tuple[int, ...], bases: Tuple[int, ...]) -> int:
     return out
 
 
-def _parent_enum(plan_of: Dict[str, Tuple[Any, int]], parent: str
-                 ) -> Tuple[Tuple[int, ...], List[Tuple[Tuple[int, ...], Any]]]:
+def _parent_enum(
+    plan_of: Dict[str, Tuple[Any, int]], parent: str
+) -> Tuple[Tuple[int, ...], List[Tuple[Tuple[int, ...], Any]]]:
     """Enumerate (chain-symbol tuple, parent value) pairs for a parent column."""
     cp, off = plan_of[parent]
     if isinstance(cp, _CatPlan):
@@ -342,22 +367,23 @@ def _parent_enum(plan_of: Dict[str, Tuple[Any, int]], parent: str
             for i, v in enumerate(sub.id2value):
                 out.append((key_t + (i,), v))
         return chain, out
-    raise PlanFallback(
-        f"conditional parent {parent!r} is not a categorical column")
+    raise PlanFallback(f"conditional parent {parent!r} is not a categorical column")
 
 
-def _build_cond(model: ConditionalCategoricalModel,
-                plan_of: Dict[str, Tuple[Any, int]], name: str) -> _CondPlan:
+def _build_cond(
+    model: ConditionalCategoricalModel, plan_of: Dict[str, Tuple[Any, int]], name: str
+) -> _CondPlan:
     if model.parent not in plan_of:
         raise PlanFallback(
-            f"column {name!r}: parent {model.parent!r} not ordered before it")
+            f"column {name!r}: parent {model.parent!r} not ordered before it"
+        )
     chain, enum = _parent_enum(plan_of, model.parent)
     if len(enum) > MAX_COND_KEYS:
         raise PlanFallback(
-            f"column {name!r}: {len(enum)} parent combinations exceed cap")
+            f"column {name!r}: {len(enum)} parent combinations exceed cap"
+        )
     bases = tuple(max(k[i] for k, _ in enum) + 2 for i in range(len(chain)))
-    sub_by_tuple = {key_t: model.cond.get(pv, model.marginal)
-                    for key_t, pv in enum}
+    sub_by_tuple = {key_t: model.cond.get(pv, model.marginal) for key_t, pv in enum}
     return _CondPlan(model, chain, bases, sub_by_tuple)
 
 
@@ -450,6 +476,7 @@ class TablePlan:
     def encode_rows(self, rows: Sequence[Dict[str, Any]]
                     ) -> Tuple[np.ndarray, np.ndarray]:
         """Rows -> (syms int64[N, S], conforming bool[N])."""
+        t0 = telemetry.clock()
         n = len(rows)
         self._note_rows(n)
         cols = {name: [r[name] for r in rows] for name in self.order}
@@ -467,12 +494,17 @@ class TablePlan:
             if misses:
                 self._charge(name, misses)
             ok &= o
+        _H_ENCODE_SCALAR.observe_since(t0)
         return syms, ok
 
     def encode_batch(self, syms: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """Symbols -> CSR ``(codes uint16, offsets int64[N+1])``."""
+        t0 = telemetry.clock()
         codes, offsets = vectorized.encode_batch(syms, self.coders, self.lam)
-        return codes.astype(np.uint16), offsets
+        codes = codes.astype(np.uint16)
+        _C_ENCODE_ROWS.add(syms.shape[0])
+        _H_ENCODE.observe_since(t0)
+        return codes, offsets
 
     def row_conforms(self, row: Dict[str, Any]) -> bool:
         """Cheap scalar check: would this row take the fast path?
@@ -498,19 +530,30 @@ class TablePlan:
     # -- decode ----------------------------------------------------------
     def decode_batch(self, codes: np.ndarray, offsets: np.ndarray,
                      n_tuples: Optional[int] = None) -> np.ndarray:
-        return vectorized.decode_batch(codes, offsets, self.coders,
-                                       n_tuples=n_tuples, lam=self.lam)
+        return vectorized.decode_batch(
+            codes, offsets, self.coders, n_tuples=n_tuples, lam=self.lam
+        )
 
-    def decode_select(self, codes: np.ndarray, offsets: np.ndarray,
-                      rows: np.ndarray, backend: str = "numpy") -> np.ndarray:
+    def decode_select(
+        self,
+        codes: np.ndarray,
+        offsets: np.ndarray,
+        rows: np.ndarray,
+        backend: str = "numpy",
+    ) -> np.ndarray:
         """Random-access decode of selected tuples -> syms int64[R, S]."""
+        t0 = telemetry.clock()
         if backend == "pallas":
-            return self._decode_select_pallas(codes, offsets, rows)
-        return vectorized.decode_select(codes, offsets, self.coders,
-                                        rows, self.lam)
+            out = self._decode_select_pallas(codes, offsets, rows)
+        else:
+            out = vectorized.decode_select(codes, offsets, self.coders, rows, self.lam)
+        _C_DECODE_ROWS.add(int(np.size(rows)))
+        _H_DECODE.observe_since(t0)
+        return out
 
-    def _decode_select_pallas(self, codes: np.ndarray, offsets: np.ndarray,
-                              rows: np.ndarray) -> np.ndarray:
+    def _decode_select_pallas(
+        self, codes: np.ndarray, offsets: np.ndarray, rows: np.ndarray
+    ) -> np.ndarray:
         if not self.pallas_ok:
             raise PlanFallback("plan has conditional slots; Pallas ineligible")
         import jax.numpy as jnp
@@ -523,8 +566,9 @@ class TablePlan:
         cols = np.arange(self.S)[None, :]
         idx = starts[:, None] + np.minimum(cols, np.maximum(lens[:, None] - 1, 0))
         idx = np.minimum(idx, max(codes.size - 1, 0))
-        dense = np.where(cols < lens[:, None],
-                         np.asarray(codes)[idx], 0).astype(np.int32)
+        dense = np.where(cols < lens[:, None], np.asarray(codes)[idx], 0).astype(
+            np.int32
+        )
         tables, m_bits = self.pallas_tables()
         out = delayed_decode(jnp.asarray(dense), tables, m_bits)
         return np.asarray(out).astype(np.int64)
@@ -532,13 +576,16 @@ class TablePlan:
     def pallas_tables(self):
         """Lazy ``(tables f32[S, M, 7], m_bits)`` in the kernel's layout."""
         if self._tables is None:
+            t0 = telemetry.clock()
             from repro.kernels.ops import pack_slot_tables
             self._tables, self._m_bits = pack_slot_tables(self.coders)
+            _C_PALLAS_PACK.inc()
+            _H_PALLAS_PACK.observe_since(t0)
         return self._tables, self._m_bits
 
-    def decode_syms_to_rows(self, syms: np.ndarray,
-                            columns: Optional[Sequence[str]] = None
-                            ) -> List[Dict[str, Any]]:
+    def decode_syms_to_rows(
+        self, syms: np.ndarray, columns: Optional[Sequence[str]] = None
+    ) -> List[Dict[str, Any]]:
         """Symbols -> row dicts (vectorized per-column reconstruction).
 
         ``columns`` restricts materialization to a projection: only the
@@ -611,8 +658,7 @@ def lower_cat_ids(cp: _CatPlan, values: Sequence[Any]) -> np.ndarray:
     return np.asarray(sorted(ids), dtype=np.int64)
 
 
-def lower_cat_range_ids(cp: _CatPlan, lo: Any, hi: Any
-                        ) -> Optional[np.ndarray]:
+def lower_cat_range_ids(cp: _CatPlan, lo: Any, hi: Any) -> Optional[np.ndarray]:
     """Ids of vocabulary values inside ``[lo, hi]`` — range predicates on
     int columns that specialized to a categorical vocabulary.  ``None`` when
     the vocabulary does not compare against the bounds (mixed types)."""
@@ -633,8 +679,9 @@ def _num_decoded_at(m: NumericModel, q: int) -> float:
     return m.vmin + (q + 0.5) * m.p
 
 
-def lower_num_interval(m: NumericModel, lo: Optional[float],
-                       hi: Optional[float]) -> Optional[Tuple[int, int]]:
+def lower_num_interval(
+    m: NumericModel, lo: Optional[float], hi: Optional[float]
+) -> Optional[Tuple[int, int]]:
     """``(qlo, qhi)`` with decoded(q) ∈ [lo, hi]  ⇔  qlo <= q <= qhi.
 
     Decode is monotone non-decreasing in q, so a value-space interval maps
@@ -648,8 +695,7 @@ def lower_num_interval(m: NumericModel, lo: Optional[float],
         qlo = 0
     else:
         flo = float(lo)
-        g = min(max(int(math.floor((flo - m.vmin) / m.p + 1e-9)), 0),
-                steps - 1)
+        g = min(max(int(math.floor((flo - m.vmin) / m.p + 1e-9)), 0), steps - 1)
         while g > 0 and _num_decoded_at(m, g - 1) >= flo:
             g -= 1
         while g < steps and _num_decoded_at(m, g) < flo:
@@ -659,8 +705,7 @@ def lower_num_interval(m: NumericModel, lo: Optional[float],
         qhi = steps - 1
     else:
         fhi = float(hi)
-        g = min(max(int(math.floor((fhi - m.vmin) / m.p + 1e-9)), 0),
-                steps - 1)
+        g = min(max(int(math.floor((fhi - m.vmin) / m.p + 1e-9)), 0), steps - 1)
         while g < steps - 1 and _num_decoded_at(m, g + 1) <= fhi:
             g += 1
         while g >= 0 and _num_decoded_at(m, g) > fhi:
@@ -693,8 +738,7 @@ def slot0_match_lut(coder, match_ids: np.ndarray) -> Optional[np.ndarray]:
         return None
     if coder._lut_sym is None:
         coder.build_lut()
-    return np.isin(coder._lut_sym,
-                   np.asarray(match_ids, dtype=np.int64))
+    return np.isin(coder._lut_sym, np.asarray(match_ids, dtype=np.int64))
 
 
 def quantize_slack(model: Any) -> Optional[float]:
@@ -713,9 +757,9 @@ def quantize_slack(model: Any) -> Optional[float]:
     return None
 
 
-def decode_select_prefix(plan: TablePlan, codes: np.ndarray,
-                         offsets: np.ndarray, rows: np.ndarray,
-                         upto: int) -> np.ndarray:
+def decode_select_prefix(
+    plan: TablePlan, codes: np.ndarray, offsets: np.ndarray, rows: np.ndarray, upto: int
+) -> np.ndarray:
     """Truncated random-access decode of the first ``upto`` slots.
 
     Delayed coding reads the stream strictly forward, so a slot prefix
@@ -724,8 +768,9 @@ def decode_select_prefix(plan: TablePlan, codes: np.ndarray,
     full-stream alignment assert) decodes it exactly.  Predicate
     evaluation uses this to touch only the slots the predicates name.
     """
-    return vectorized.decode_select(codes, offsets, plan.coders[:upto],
-                                    np.asarray(rows, np.int64), plan.lam)
+    return vectorized.decode_select(
+        codes, offsets, plan.coders[:upto], np.asarray(rows, np.int64), plan.lam
+    )
 
 
 def compile_plan(codec) -> TablePlan:
@@ -749,10 +794,12 @@ def compile_plan(codec) -> TablePlan:
             cp = _StrPlan(m)
         elif isinstance(m, TimeSeriesModel):
             raise PlanFallback(
-                f"column {name!r}: time-series model is stateful across rows")
+                f"column {name!r}: time-series model is stateful across rows"
+            )
         else:
             raise PlanFallback(
-                f"column {name!r}: {type(m).__name__} has no slot lowering")
+                f"column {name!r}: {type(m).__name__} has no slot lowering"
+            )
         lowerings.append((name, cp, offset))
         plan_of[name] = (cp, offset)
         offset += cp.n_slots

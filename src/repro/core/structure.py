@@ -27,8 +27,9 @@ def _entropy(counter: Counter, total: int) -> float:
     return h
 
 
-def discretize_column(values: Sequence, kind: str, max_card: int = 4096
-                      ) -> Optional[List]:
+def discretize_column(
+    values: Sequence, kind: str, max_card: int = 4096
+) -> Optional[List]:
     """Map a column to discrete ids for dependency estimation (or None)."""
     if kind in ("cat", "int", "str"):
         ids = list(values)
@@ -45,9 +46,9 @@ def discretize_column(values: Sequence, kind: str, max_card: int = 4096
     return ids
 
 
-def learn_order(columns: Dict[str, List], n_rows: int,
-                model_cost_weight: float = 16.0
-                ) -> Tuple[List[str], Dict[str, Optional[str]]]:
+def learn_order(
+    columns: Dict[str, List], n_rows: int, model_cost_weight: float = 16.0
+) -> Tuple[List[str], Dict[str, Optional[str]]]:
     """Greedy ordering; returns (order, parent-of map).
 
     ``columns``: name -> discretized ids (same length).  Columns that could

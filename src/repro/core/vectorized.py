@@ -80,8 +80,9 @@ def _k_of_batch(coder, syms: np.ndarray) -> np.ndarray:
     return np.array([coder.k(int(s)) for s in syms], dtype=np.int64)
 
 
-def encode_batch(syms: np.ndarray, coders: Sequence,
-                 lam: int = LAMBDA_DEFAULT) -> Tuple[np.ndarray, np.ndarray]:
+def encode_batch(
+    syms: np.ndarray, coders: Sequence, lam: int = LAMBDA_DEFAULT
+) -> Tuple[np.ndarray, np.ndarray]:
     """Encode ``syms[N, S]`` -> (codes uint16 flat, offsets int64[N+1]).
 
     Vectorized Algorithm 4 across the N tuples.
@@ -139,9 +140,13 @@ def encode_batch(syms: np.ndarray, coders: Sequence,
     return codes, offsets
 
 
-def decode_batch(codes: np.ndarray, offsets: np.ndarray, coders: Sequence,
-                 n_tuples: int | None = None, lam: int = LAMBDA_DEFAULT
-                 ) -> np.ndarray:
+def decode_batch(
+    codes: np.ndarray,
+    offsets: np.ndarray,
+    coders: Sequence,
+    n_tuples: int | None = None,
+    lam: int = LAMBDA_DEFAULT,
+) -> np.ndarray:
     """Decode the CSR store back to ``syms[N, S]`` (vectorized Algorithm 5)."""
     # All decode arithmetic is int64: the §5.1 invariant keeps the virtual
     # counters < 2**32 and every product < 2**48, so int64 is exact and we
@@ -184,8 +189,13 @@ def decode_batch(codes: np.ndarray, offsets: np.ndarray, coders: Sequence,
     return syms
 
 
-def decode_select(codes: np.ndarray, offsets: np.ndarray, coders: Sequence,
-                  rows: np.ndarray, lam: int = LAMBDA_DEFAULT) -> np.ndarray:
+def decode_select(
+    codes: np.ndarray,
+    offsets: np.ndarray,
+    coders: Sequence,
+    rows: np.ndarray,
+    lam: int = LAMBDA_DEFAULT,
+) -> np.ndarray:
     """Random-access decode of a subset of tuples (the paper's point query).
 
     Gathers each selected tuple's code run (lengths vary, padded to the max)

@@ -13,6 +13,8 @@ from __future__ import annotations
 import os
 from typing import Any, Dict, Iterator, List, Optional, Sequence
 
+from repro import telemetry
+
 from .schema import TableSchema
 from .table import StoreFactory, Table
 
@@ -322,4 +324,6 @@ class Database:
                 "fault_batches": sum(r["fault_batches"] for r in res),
                 "disk_file_bytes": sum(r["disk_file_bytes"] for r in res),
             }
+        # whole-engine view: the registry is global, so no prefix filter
+        out["telemetry"] = telemetry.snapshot()
         return out

@@ -32,8 +32,19 @@ from __future__ import annotations
 import inspect
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
+from repro import telemetry
 from repro.oltp.store import STORE_KINDS, RowStore
 from .schema import Key, TableSchema, stable_key_hash
+
+# Batched-verb telemetry (DESIGN.md §9): one span per Table verb call
+# (the transaction hot path's outermost engine region) plus row and
+# shard fan-out counters — `shard_calls / verb count` is the fan-out the
+# 7.5x gap hunt watches.
+_C_SHARD_CALLS = telemetry.counter("repro.db.shard_calls")
+_C_INSERT_ROWS = telemetry.counter("repro.db.insert_many.rows")
+_C_GET_ROWS = telemetry.counter("repro.db.get_many.rows")
+_C_UPDATE_ROWS = telemetry.counter("repro.db.update_many.rows")
+_C_DELETE_ROWS = telemetry.counter("repro.db.delete_many.rows")
 
 # Per-entry directory charge: 8 B key hash + 8 B packed (shard, slot)
 # pointer, the footprint of an open-addressed C hash index.  Key payload
@@ -177,6 +188,7 @@ class Table:
         rows = list(rows)
         if not rows:
             return []
+        t0 = telemetry.clock()
         if not self._shards:
             self._build_shards(rows)
         keys: List[Key] = []
@@ -199,10 +211,13 @@ class Table:
         for s, (grp, gkeys) in enumerate(zip(per_shard, per_shard_keys)):
             if not grp:
                 continue
+            _C_SHARD_CALLS.inc()
             ids = self._shards[s].insert_many(grp)
             for i, k in zip(ids, gkeys):
                 self._dir[k] = (s, int(i))
         self._note_ops(len(rows))
+        _C_INSERT_ROWS.add(len(rows))
+        telemetry.record("repro.db.insert_many", t0)
         return keys
 
     def get_many(
@@ -216,6 +231,7 @@ class Table:
         out: List[Optional[Dict[str, Any]]] = [None] * len(keys)
         if not self._shards:
             return out
+        t0 = telemetry.clock()
         per_shard_pos: List[List[int]] = [[] for _ in self._shards]
         per_shard_ids: List[List[int]] = [[] for _ in self._shards]
         for pos, k in enumerate(keys):
@@ -228,17 +244,21 @@ class Table:
         for s, (poss, ids) in enumerate(zip(per_shard_pos, per_shard_ids)):
             if not ids:
                 continue
+            _C_SHARD_CALLS.inc()
             if backend is None:
                 got = self._shards[s].get_many(ids)
             else:
                 got = self._shards[s].get_many(ids, backend=backend)
             for pos, row in zip(poss, got):
                 out[pos] = row
+        _C_GET_ROWS.add(len(keys))
+        telemetry.record("repro.db.get_many", t0)
         return out
 
     def update_many(self, keys: Sequence[Key], rows: Sequence[Dict[str, Any]]) -> None:
         """In-place updates (last write wins on duplicate keys); the primary
         key of each row must match its key — keys are immutable."""
+        t0 = telemetry.clock()
         merged: Dict[Key, Dict[str, Any]] = {}
         for k, r in zip(keys, rows):
             self.schema.validate_row(r)  # fail here, not in a later merge
@@ -257,12 +277,16 @@ class Table:
         self._log("update", list(merged.values()))
         for s, (ids, grp) in enumerate(zip(per_shard_ids, per_shard_rows)):
             if ids:
+                _C_SHARD_CALLS.inc()
                 self._shards[s].update_many(ids, grp)
         self._note_ops(len(merged))
+        _C_UPDATE_ROWS.add(len(merged))
+        telemetry.record("repro.db.update_many", t0)
 
     def delete_many(self, keys: Sequence[Key]) -> int:
         """Delete live keys, returning how many were actually deleted
         (missing/repeated keys are no-ops, matching RowStore)."""
+        t0 = telemetry.clock()
         per_shard_ids: List[List[int]] = [[] for _ in self._shards]
         dropped: List[Key] = []
         for k in dict.fromkeys(keys):  # dedup, keep order
@@ -277,10 +301,13 @@ class Table:
         n = 0
         for s, ids in enumerate(per_shard_ids):
             if ids:
+                _C_SHARD_CALLS.inc()
                 n += self._shards[s].delete_many(ids)
         for k in dropped:
             del self._dir[k]
         self._note_ops(len(dropped))
+        _C_DELETE_ROWS.add(len(dropped))
+        telemetry.record("repro.db.delete_many", t0)
         return n
 
     # -- scalar wrappers -------------------------------------------------
@@ -697,4 +724,5 @@ class Table:
                     {c for m in maint for c in m["frozen_columns"]}
                 ),
             }
+        out["telemetry"] = telemetry.snapshot(prefix=("repro.db.", "repro.scan."))
         return out

@@ -29,10 +29,17 @@ import struct
 import zlib
 from typing import Any, Iterator, Optional, Tuple
 
+from repro import telemetry
 from repro.core.arena import OS_IO
 
 RECORD_MAGIC = 0x57414C31  # "WAL1"
 RECORD_HEADER = struct.Struct("<III")
+
+_H_APPEND = telemetry.histogram("repro.wal.append")
+_H_FSYNC = telemetry.histogram("repro.wal.fsync")
+_C_RECORDS = telemetry.counter("repro.wal.records")
+_C_BYTES = telemetry.counter("repro.wal.bytes")
+_C_FSYNCS = telemetry.counter("repro.wal.fsyncs")
 
 
 class WalError(RuntimeError):
@@ -97,16 +104,22 @@ class WriteAheadLog:
         buf = b"".join(self._pending)
         self.io.point("wal.before_flush")
         try:
+            t0 = telemetry.clock()
             self.io.pwrite(self._fd, buf, self._tail)
+            _H_APPEND.observe_since(t0)
             self._flushes += 1
             if self.fsync_every and self._flushes % self.fsync_every == 0:
                 self.io.point("wal.before_fsync")
+                t0 = telemetry.clock()
                 self.io.fsync(self._fd)
+                _H_FSYNC.observe_since(t0)
+                _C_FSYNCS.inc()
         except OSError:
             self.poisoned = True
             raise
         self._pending.clear()
         self._tail += len(buf)
+        _C_BYTES.add(len(buf))
         self.io.point("wal.after_flush")
 
     def log(self, op: str, payload: Any) -> None:
@@ -116,6 +129,7 @@ class WriteAheadLog:
         self.append(op, payload)
         self.flush()
         self.records += 1
+        _C_RECORDS.inc()
 
     @contextlib.contextmanager
     def suspend(self):

@@ -44,9 +44,9 @@ def _alias_kernel(m_bits: int, codes_ref, table_ref, sym_ref, a_ref, k_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("m_bits", "interpret"))
-def alias_decode(codes: jax.Array, table: jax.Array, m_bits: int,
-                 interpret: bool = True
-                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+def alias_decode(
+    codes: jax.Array, table: jax.Array, m_bits: int, interpret: bool = True
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """codes int32[N] + table f32[M, 7] -> (sym, a, k) int32[N]."""
     N = codes.shape[0]
     n_blocks = -(-N // BLOCK)

@@ -20,15 +20,26 @@ Inputs are the dense per-tuple layout produced by the host encoder
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Set, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import telemetry
+
 TOTAL_BITS = 16
 LAM = 1 << 16  # python literal; materialized inside the kernel
 BLOCK_T = 256
+
+# jit-compile observability (DESIGN.md §9): the first call for a new
+# (shape, m_bits) signature traces + compiles; later calls replay.  The
+# first-call wall time is attributed to the jit_compile phase (it is
+# compile-dominated), cache hits are counted separately.
+_SEEN_SIGS: Set[Tuple] = set()
+_H_JIT = telemetry.histogram("repro.plan.compile.pallas_jit")
+_C_JIT_MISS = telemetry.counter("repro.plan.cache.pallas_miss")
+_C_JIT_HIT = telemetry.counter("repro.plan.cache.pallas_hit")
 
 
 def _delayed_kernel(m_bits: Tuple[int, ...], codes_ref, tables_ref, out_ref):
@@ -56,10 +67,10 @@ def _delayed_kernel(m_bits: Tuple[int, ...], codes_ref, tables_ref, out_ref):
         shift = TOTAL_BITS - m_bits[s]
         p = code >> shift
         low = code & ((1 << shift) - 1)
-        onehot = (p[:, None] == jax.lax.broadcasted_iota(
-            jnp.int32, (1, M), 1)).astype(jnp.float32)
-        rows = jnp.dot(onehot, tables[s],
-                       preferred_element_type=jnp.float32)
+        onehot = (p[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, M), 1)).astype(
+            jnp.float32
+        )
+        rows = jnp.dot(onehot, tables[s], preferred_element_type=jnp.float32)
         hit = low < rows[:, 0].astype(jnp.int32)
         sym = jnp.where(hit, rows[:, 1], rows[:, 2]).astype(jnp.int32)
         a = code - jnp.where(hit, rows[:, 3], rows[:, 4]).astype(jnp.int32)
@@ -77,16 +88,40 @@ def _delayed_kernel(m_bits: Tuple[int, ...], codes_ref, tables_ref, out_ref):
     out_ref[...] = jnp.stack(syms, axis=1)
 
 
+def delayed_decode(
+    codes_dense: jax.Array,
+    tables: jax.Array,
+    m_bits: Tuple[int, ...],
+    interpret: bool = True,
+) -> jax.Array:
+    """codes int32[T, S] + tables f32[S, M, 7] -> syms int32[T, S].
+
+    Thin telemetry shim over the jitted kernel: counts plan-cache
+    hits/misses per trace signature and books first-call (compile) time.
+    """
+    sig = (codes_dense.shape, tables.shape, tuple(m_bits), bool(interpret))
+    if sig in _SEEN_SIGS:
+        _C_JIT_HIT.inc()
+        return _delayed_decode_jit(codes_dense, tables, m_bits, interpret)
+    _SEEN_SIGS.add(sig)
+    _C_JIT_MISS.inc()
+    t0 = telemetry.clock()
+    out = _delayed_decode_jit(codes_dense, tables, m_bits, interpret)
+    _H_JIT.observe_since(t0)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("m_bits", "interpret"))
-def delayed_decode(codes_dense: jax.Array, tables: jax.Array,
-                   m_bits: Tuple[int, ...], interpret: bool = True
-                   ) -> jax.Array:
-    """codes int32[T, S] + tables f32[S, M, 7] -> syms int32[T, S]."""
+def _delayed_decode_jit(
+    codes_dense: jax.Array,
+    tables: jax.Array,
+    m_bits: Tuple[int, ...],
+    interpret: bool = True,
+) -> jax.Array:
     T, S = codes_dense.shape
     n_blocks = -(-T // BLOCK_T)
     padded = n_blocks * BLOCK_T
-    codes_p = jnp.pad(codes_dense.astype(jnp.int32),
-                      ((0, padded - T), (0, 0)))
+    codes_p = jnp.pad(codes_dense.astype(jnp.int32), ((0, padded - T), (0, 0)))
     M = tables.shape[1]
     out = pl.pallas_call(
         functools.partial(_delayed_kernel, tuple(m_bits)),

@@ -23,8 +23,20 @@ from jax.experimental.pallas import tpu as pltpu
 NEG = -1e30
 
 
-def _flash_kernel(scale: float, causal: bool, window: int, sq: int, sk: int,
-                  q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+def _flash_kernel(
+    scale: float,
+    causal: bool,
+    window: int,
+    sq: int,
+    sk: int,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+):
     qi = pl.program_id(0)
     kj = pl.program_id(1)
     nk = pl.num_programs(1)
@@ -57,23 +69,31 @@ def _flash_kernel(scale: float, causal: bool, window: int, sq: int, sk: int,
     p = jnp.where(mask[None, :, None, None, :], p, 0.0)
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
-    acc_ref[...] = acc_ref[...] * corr[..., None] + \
-        jnp.einsum("bqkgc,bckd->bqkgd", p, v)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "bqkgc,bckd->bqkgd", p, v
+    )
     m_ref[...] = m_new
 
     @pl.when(kj == nk - 1)
     def _fin():
-        o_ref[...] = (acc_ref[...] /
-                      jnp.maximum(l_ref[...], 1e-30)[..., None]
-                      ).astype(o_ref.dtype)
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]).astype(
+            o_ref.dtype
+        )
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "q_block", "kv_chunk", "interpret"))
-def flash_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                            causal: bool = True, window: int = 0,
-                            q_block: int = 512, kv_chunk: int = 512,
-                            interpret: bool = True) -> jax.Array:
+@ functools.partial(
+    jax.jit, static_argnames= ("causal", "window", "q_block", "kv_chunk", "interpret")
+)
+def flash_prefill_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    q_block: int = 512,
+    kv_chunk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
     """q: [B, Sq, H, D]; k/v: [B, Sk, K, D].  Returns [B, Sq, H, D]."""
     B, Sq, H, D = q.shape
     _, Sk, K, _ = k.shape
@@ -81,8 +101,9 @@ def flash_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     qb = min(q_block, Sq)
     kc = min(kv_chunk, Sk)
     nq, nk = -(-Sq // qb), -(-Sk // kc)
-    qr = jnp.pad(q.reshape(B, Sq, K, G, D),
-                 ((0, 0), (0, nq * qb - Sq), (0, 0), (0, 0), (0, 0)))
+    qr = jnp.pad(
+        q.reshape(B, Sq, K, G, D), ((0, 0), (0, nq * qb - Sq), (0, 0), (0, 0), (0, 0))
+    )
     kr = jnp.pad(k, ((0, 0), (0, nk * kc - Sk), (0, 0), (0, 0)))
     vr = jnp.pad(v, ((0, 0), (0, nk * kc - Sk), (0, 0), (0, 0)))
 

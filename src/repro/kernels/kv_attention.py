@@ -23,9 +23,19 @@ NEG = -1e30
 CHUNK = 512
 
 
-def _kv_attn_kernel(scale_q: float, length: int,
-                    q_ref, kq_ref, ks_ref, vq_ref, vs_ref,
-                    o_ref, acc_ref, m_ref, l_ref):
+def _kv_attn_kernel(
+    scale_q: float,
+    length: int,
+    q_ref,
+    kq_ref,
+    ks_ref,
+    vq_ref,
+    vs_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+):
     ci = pl.program_id(0)
     nc = pl.num_programs(0)
 
@@ -53,22 +63,25 @@ def _kv_attn_kernel(scale_q: float, length: int,
     p = jnp.exp(s - m_new[..., None])
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
-    acc_ref[...] = acc_ref[...] * corr[..., None] + \
-        jnp.einsum("bkgc,bckd->bkgd", p, vf)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum("bkgc,bckd->bkgd", p, vf)
     m_ref[...] = m_new
 
     @pl.when(ci == nc - 1)
     def _fin():
-        o_ref[...] = (acc_ref[...] /
-                      jnp.maximum(l_ref[...], 1e-30)[..., None])
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None])
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("length_static", "interpret", "chunk"))
-def kv_attention_int8(q: jax.Array, kq: jax.Array, ks: jax.Array,
-                      vq: jax.Array, vs: jax.Array,
-                      length_static: int, chunk: int = CHUNK,
-                      interpret: bool = True) -> jax.Array:
+@ functools.partial(jax.jit, static_argnames= ("length_static", "interpret", "chunk"))
+def kv_attention_int8(
+    q: jax.Array,
+    kq: jax.Array,
+    ks: jax.Array,
+    vq: jax.Array,
+    vs: jax.Array,
+    length_static: int,
+    chunk: int = CHUNK,
+    interpret: bool = True,
+) -> jax.Array:
     """Flash-decoding over int8 KV. Returns [B, H, D] float32.
 
     q: [B, H, D]; kq/vq: int8[B, S, K, D]; ks/vs: f32[B, S, K];

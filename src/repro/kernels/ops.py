@@ -19,12 +19,17 @@ from .delayed_decode import delayed_decode
 from .flash_prefill import flash_prefill_attention
 from .kv_attention import kv_attention_int8
 
-__all__ = ["alias_decode", "delayed_decode", "kv_attention_int8",
-           "flash_prefill_attention", "pack_slot_tables", "dense_codes"]
+__all__ = [
+    "alias_decode",
+    "delayed_decode",
+    "kv_attention_int8",
+    "flash_prefill_attention",
+    "pack_slot_tables",
+    "dense_codes",
+]
 
 
-def pack_slot_tables(coders: Sequence
-                     ) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+def pack_slot_tables(coders: Sequence) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
     """Stack per-slot decode tables into [S, M_max, 7] (padded) + m_bits.
 
     Accepts a mix of :class:`DiscreteCoder` (alias layout, Appendix C) and
@@ -50,8 +55,7 @@ def pack_slot_tables(coders: Sequence
     return jnp.asarray(out), tuple(mbits)
 
 
-def dense_codes(codes: np.ndarray, offsets: np.ndarray, n_slots: int
-                ) -> np.ndarray:
+def dense_codes(codes: np.ndarray, offsets: np.ndarray, n_slots: int) -> np.ndarray:
     """CSR (codes, offsets) -> dense [T, S] int32, left-justified."""
     T = offsets.size - 1
     out = np.zeros((T, n_slots), np.int32)

@@ -28,8 +28,9 @@ def pack_tables(coder) -> Tuple[jnp.ndarray, int]:
     t = coder.tables
     k_u = t.k_of[t.sym_u].astype(np.int64)
     k_v = t.k_of[t.sym_v].astype(np.int64)
-    tab = np.stack([t.threshold.astype(np.int64), t.sym_u, t.sym_v,
-                    t.ja, t.jb, k_u, k_v], axis=1).astype(np.float32)
+    tab = np.stack(
+        [t.threshold.astype(np.int64), t.sym_u, t.sym_v, t.ja, t.jb, k_u, k_v], axis=1
+    ).astype(np.float32)
     return jnp.asarray(tab), int(t.m_bits)
 
 
@@ -62,8 +63,9 @@ def pack_tables_uniform(coder) -> Tuple[jnp.ndarray, int]:
     return jnp.asarray(tab), m
 
 
-def alias_decode_ref(codes: jax.Array, table: jax.Array, m_bits: int
-                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+def alias_decode_ref(
+    codes: jax.Array, table: jax.Array, m_bits: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """codes int32[N] -> (sym, a, k) int32 — Algorithm 6 / Inv-Translate."""
     codes = codes.astype(jnp.int32)
     shift = TOTAL_BITS - m_bits
@@ -77,8 +79,9 @@ def alias_decode_ref(codes: jax.Array, table: jax.Array, m_bits: int
     return sym, a, k
 
 
-def delayed_decode_ref(codes_dense: jax.Array, tables: jax.Array,
-                       m_bits: Tuple[int, ...]) -> jax.Array:
+def delayed_decode_ref(
+    codes_dense: jax.Array, tables: jax.Array, m_bits: Tuple[int, ...]
+) -> jax.Array:
     """Batched delayed decoding (Algorithm 5), division-free uint32 math.
 
     codes_dense: int32[T, S] physical codes, left-justified per tuple.
@@ -94,8 +97,7 @@ def delayed_decode_ref(codes_dense: jax.Array, tables: jax.Array,
     out = []
     lam = jnp.uint32(TOTAL)
     for s in range(S):
-        stream = jnp.take_along_axis(codes_dense, cursor[:, None],
-                                     axis=1)[:, 0]
+        stream = jnp.take_along_axis(codes_dense, cursor[:, None], axis=1)[:, 0]
         code = jnp.where(pending, pend_code, stream)
         cursor = cursor + jnp.where(pending, 0, 1)
         sym, a, k = alias_decode_ref(code, tables[s], m_bits[s])
@@ -110,16 +112,22 @@ def delayed_decode_ref(codes_dense: jax.Array, tables: jax.Array,
     return jnp.stack(out, axis=1)
 
 
-def twolevel_dequant_ref(bucket: jax.Array, digit: jax.Array, vmin: float,
-                         p: float, G: int) -> jax.Array:
+def twolevel_dequant_ref(
+    bucket: jax.Array, digit: jax.Array, vmin: float, p: float, G: int
+) -> jax.Array:
     """Two-level numeric reconstruction (§4.2): v = vmin + (i*G + j + .5)p."""
     q = bucket.astype(jnp.float32) * G + digit.astype(jnp.float32)
     return vmin + (q + 0.5) * p
 
 
-def kv_attention_int8_ref(q: jax.Array, kq: jax.Array, vq: jax.Array,
-                          k_scale: jax.Array, v_scale: jax.Array,
-                          length: jax.Array) -> jax.Array:
+def kv_attention_int8_ref(
+    q: jax.Array,
+    kq: jax.Array,
+    vq: jax.Array,
+    k_scale: jax.Array,
+    v_scale: jax.Array,
+    length: jax.Array,
+) -> jax.Array:
     """Decode attention over int8-quantized KV with per-(token, head) scales.
 
     q: [B, H, D] (bf16/f32); kq/vq: int8[B, S, K, D];

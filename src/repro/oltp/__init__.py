@@ -13,13 +13,32 @@ Public API:
            build_tpcc_database, run_tpcc_mix, database_row_bytes
 """
 
-from .store import (STORE_KINDS, BlitzStore, LRUFastPath, RamanStore,
-                    RowStore, UncompressedStore, ZstdStore)
-from .tpcc import (TABLES, TPCC_TABLES, batched_point_gets,
-                   build_tpcc_database, customer_row, database_row_bytes,
-                   drifting_customer_row, gen_customer, gen_orderline,
-                   gen_stock, generate_tpcc, row_bytes, run_tpcc_mix,
-                   run_transaction_mix, zipf_keys)
+from .store import (
+    STORE_KINDS,
+    BlitzStore,
+    LRUFastPath,
+    RamanStore,
+    RowStore,
+    UncompressedStore,
+    ZstdStore,
+)
+from .tpcc import (
+    TABLES,
+    TPCC_TABLES,
+    batched_point_gets,
+    build_tpcc_database,
+    customer_row,
+    database_row_bytes,
+    drifting_customer_row,
+    gen_customer,
+    gen_orderline,
+    gen_stock,
+    generate_tpcc,
+    row_bytes,
+    run_tpcc_mix,
+    run_transaction_mix,
+    zipf_keys,
+)
 
 __all__ = [
     "RowStore", "BlitzStore", "ZstdStore", "RamanStore",

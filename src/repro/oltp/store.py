@@ -30,17 +30,17 @@ from __future__ import annotations
 import contextlib
 import json
 from collections import OrderedDict
-from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, \
-    Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import telemetry
 from repro.adaptive import MaintenanceConfig, MaintenanceScheduler
 from repro.core import ColumnSpec, TableCodec
-from repro.core.arena import (ExtentCorruptionError, ResidencyManager,
-                              SpillCorruptionError, framed_len)
-from repro.core.blitzcrank import (CompressedTable, _raw_row_bytes,
-                                   column_specs)
+from repro.core.arena import (
+    ExtentCorruptionError, ResidencyManager, SpillCorruptionError, framed_len
+)
+from repro.core.blitzcrank import CompressedTable, _raw_row_bytes, column_specs
 from repro.core.huffman import BitReader, BitWriter, HuffmanCode
 
 # Per-entry charge of an uncompressed dict overlay / cache slot: 8 B key +
@@ -48,6 +48,17 @@ from repro.core.huffman import BitReader, BitWriter, HuffmanCode
 OVERLAY_ENTRY_OVERHEAD = 16
 # A pending tombstone is one id in a hash set.
 TOMBSTONE_BYTES = 8
+
+# Telemetry handles (DESIGN.md §9): delta-merge and the byte-store's
+# cold-tier spill/fault-in, which shares phase prefixes with the
+# CompressedTable block paths.
+_H_MERGE = telemetry.histogram("repro.store.merge")
+_C_MERGES = telemetry.counter("repro.store.merge.events")
+_C_OVERLAY_HITS = telemetry.counter("repro.store.overlay.hits")
+_H_ROW_FAULT = telemetry.histogram("repro.residency.fault_in.rows")
+_H_ROW_SPILL = telemetry.histogram("repro.residency.spill.rows")
+_C_ROW_FAULTS = telemetry.counter("repro.residency.fault_in.rows.count")
+_C_ROW_SPILLS = telemetry.counter("repro.residency.spill.rows.count")
 
 
 class RowStore:
@@ -91,19 +102,20 @@ class RowStore:
     def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
         raise NotImplementedError
 
-    def get_many(self, indices: Sequence[int]
-                 ) -> List[Optional[Dict[str, Any]]]:
+    def get_many(self, indices: Sequence[int]) -> List[Optional[Dict[str, Any]]]:
         raise NotImplementedError
 
-    def update_many(self, indices: Sequence[int],
-                    rows: Sequence[Dict[str, Any]]) -> None:
+    def update_many(
+        self, indices: Sequence[int], rows: Sequence[Dict[str, Any]]
+    ) -> None:
         raise NotImplementedError
 
     def delete_many(self, indices: Sequence[int]) -> int:
         raise NotImplementedError
 
-    def scan(self, start: int = 0, stop: Optional[int] = None,
-             batch: int = 1024) -> Iterator[Tuple[int, Dict[str, Any]]]:
+    def scan(
+        self, start: int = 0, stop: Optional[int] = None, batch: int = 1024
+    ) -> Iterator[Tuple[int, Dict[str, Any]]]:
         """Yield ``(id, row)`` for live rows in id order, a batch at a time."""
         n = len(self)
         stop = n if stop is None else min(stop, n)
@@ -113,10 +125,13 @@ class RowStore:
                 if r is not None:
                     yield i, r
 
-    def scan_where(self, predicates: Sequence[Any],
-                   columns: Optional[Sequence[str]] = None,
-                   pushdown: bool = True,
-                   backend: Optional[str] = None) -> "Any":
+    def scan_where(
+        self,
+        predicates: Sequence[Any],
+        columns: Optional[Sequence[str]] = None,
+        pushdown: bool = True,
+        backend: Optional[str] = None,
+    ) -> "Any":
         """Filtered scan -> :class:`repro.scan.ScanResult` (ids ascending).
 
         The base implementation is the decode-everything reference:
@@ -134,10 +149,15 @@ class RowStore:
             stats.rows_decoded += 1
             if match_all(preds, r):
                 ids.append(i)
-                rows.append(r if columns is None
-                            else {c: r[c] for c in columns})
+                rows.append(r if columns is None else {c: r[c] for c in columns})
         stats.rows_matched = len(ids)
         return ScanResult(ids, rows, stats)
+
+    # Registry prefixes a store-level stats() view reports: encode/decode
+    # kernels, plan cache, residency, delta merge — not db/scan/wal, which
+    # belong to the table- and engine-level sections (DESIGN.md §9).
+    TELEMETRY_PREFIXES = ("repro.core.", "repro.plan.",
+                          "repro.residency.", "repro.store.")
 
     def stats(self) -> Dict[str, Any]:
         return {
@@ -147,6 +167,7 @@ class RowStore:
             "n_deleted": len(self) - self.n_live,
             "nbytes": self.nbytes,
             "model_bytes": getattr(self, "model_bytes", 0),
+            "telemetry": telemetry.snapshot(prefix=self.TELEMETRY_PREFIXES),
         }
 
     # -- scalar wrappers -------------------------------------------------
@@ -183,8 +204,9 @@ class RowStore:
         raise NotImplementedError
 
     @staticmethod
-    def _dedup_last(indices: Sequence[int], rows: Sequence[Dict[str, Any]]
-                    ) -> Tuple[List[int], List[Dict[str, Any]]]:
+    def _dedup_last(
+        indices: Sequence[int], rows: Sequence[Dict[str, Any]]
+    ) -> Tuple[List[int], List[Dict[str, Any]]]:
         """Unique (id, row) pairs, last write wins (update_many contract)."""
         m: Dict[int, Dict[str, Any]] = {}
         for i, r in zip(indices, rows):
@@ -209,10 +231,13 @@ class _BytesRowStore(RowStore):
     # Per spilled row: 8 B offset + 4 B length + clock bit, rounded up.
     SPILL_ENTRY_OVERHEAD = 13
 
-    def __init__(self, schema: Sequence[ColumnSpec],
-                 memory_budget: Optional[int] = None,
-                 spill_path: Optional[str] = None,
-                 spill_io: Optional[Any] = None):
+    def __init__(
+        self,
+        schema: Sequence[ColumnSpec],
+        memory_budget: Optional[int] = None,
+        spill_path: Optional[str] = None,
+        spill_io: Optional[Any] = None,
+    ):
         super().__init__(schema)
         self.rows: List[Optional[bytes]] = []
         self._deleted: set = set()
@@ -228,8 +253,7 @@ class _BytesRowStore(RowStore):
         self.repair_fn: Optional[Callable] = None
         self.repairs = 0
         if memory_budget is not None:
-            self._res = ResidencyManager(memory_budget, spill_path,
-                                         io=spill_io)
+            self._res = ResidencyManager(memory_budget, spill_path, io=spill_io)
 
     def is_live(self, i: int) -> bool:
         i = int(i)
@@ -269,8 +293,7 @@ class _BytesRowStore(RowStore):
             self._resident_bytes += len(payload)
             self._ref[i] = 1
 
-    def _fetch_payloads(self, indices: Sequence[int]
-                        ) -> List[Optional[bytes]]:
+    def _fetch_payloads(self, indices: Sequence[int]) -> List[Optional[bytes]]:
         """Payload per id (``None`` for tombstones), faulting spilled rows
         back in with one coalesced disk read for the whole batch."""
         dels, rows = self._deleted, self.rows
@@ -285,13 +308,15 @@ class _BytesRowStore(RowStore):
             else:
                 out[j] = p
         if cold:
+            t0 = telemetry.clock()
             res = self._res
             ids = sorted(set(cold))
             for _attempt in range(3):
                 extents = [self._spilled[i] for i in ids]
                 try:
                     payloads = res.disk.read_many_checked(
-                        [e[0] for e in extents], [e[1] for e in extents])
+                        [e[0] for e in extents], [e[1] for e in extents]
+                    )
                     break
                 except ExtentCorruptionError as e:
                     # Quarantine the bad extents and rebuild their rows
@@ -314,10 +339,12 @@ class _BytesRowStore(RowStore):
             if ids:
                 res.faults += len(ids)
                 res.fault_batches += 1
+                _C_ROW_FAULTS.add(len(ids))
             for j, i in enumerate(indices):
                 if out[j] is None and i not in dels:
                     out[j] = rows[i]
             self._enforce_budget()
+            _H_ROW_FAULT.observe_since(t0)
         if self._res is not None:
             for i in indices:
                 if i not in dels:
@@ -340,8 +367,9 @@ class _BytesRowStore(RowStore):
                     dtype=bool, count=ids.size)
 
             def sizes(ids: np.ndarray) -> np.ndarray:
-                return np.fromiter((len(rows[i]) for i in ids.tolist()),
-                                   dtype=np.int64, count=ids.size)
+                return np.fromiter(
+                    (len(rows[i]) for i in ids.tolist()), dtype=np.int64, count=ids.size
+                )
 
             # a zero-copy numpy view over the bytearray of clock bits
             ref = np.frombuffer(self._ref, dtype=np.uint8)
@@ -357,13 +385,15 @@ class _BytesRowStore(RowStore):
             ids = list(self._spilled)
             new_offs = res.disk.compact(
                 [self._spilled[i][0] for i in ids],
-                [framed_len(self._spilled[i][1]) for i in ids])
+                [framed_len(self._spilled[i][1]) for i in ids],
+            )
             for i, off in zip(ids, new_offs):
                 self._spilled[i] = (off, self._spilled[i][1])
 
     def _spill_rows(self, ids: List[int]) -> None:
         """One coalesced segment write (CRC32-framed extents) for the
         whole victim set."""
+        t0 = telemetry.clock()
         res = self._res
         payloads = [self.rows[i] for i in ids]
         offs = res.disk.write_many(payloads)
@@ -374,6 +404,8 @@ class _BytesRowStore(RowStore):
             self._resident_bytes -= ln
             self._spilled_payload += ln
         res.spills += len(ids)
+        _C_ROW_SPILLS.add(len(ids))
+        _H_ROW_SPILL.observe_since(t0)
 
     def _repair_rows(self, ids: List[int]) -> None:
         """Rebuild corrupt spilled rows from the WAL via ``repair_fn``.
@@ -403,18 +435,17 @@ class _BytesRowStore(RowStore):
         enc = self._encode_row
         return self._append_payloads([enc(r) for r in rows])
 
-    def get_many(self, indices: Sequence[int]
-                 ) -> List[Optional[Dict[str, Any]]]:
+    def get_many(self, indices: Sequence[int]) -> List[Optional[Dict[str, Any]]]:
         idxs = [int(j) for j in indices]
         dec = self._decode_row
         if self._res is None:
             dels, rows = self._deleted, self.rows
             return [None if i in dels else dec(rows[i]) for i in idxs]
-        return [None if p is None else dec(p)
-                for p in self._fetch_payloads(idxs)]
+        return [None if p is None else dec(p) for p in self._fetch_payloads(idxs)]
 
-    def update_many(self, indices: Sequence[int],
-                    rows: Sequence[Dict[str, Any]]) -> None:
+    def update_many(
+        self, indices: Sequence[int], rows: Sequence[Dict[str, Any]]
+    ) -> None:
         idxs, rows = self._dedup_last(indices, rows)
         for i, r in zip(idxs, rows):
             if not self.is_live(i):
@@ -442,8 +473,9 @@ class _BytesRowStore(RowStore):
         """Resident footprint: spilled payloads live on disk and are
         excluded; each spilled row is charged its extent-index entry."""
         if self._res is None:
-            return (sum(len(r) for r in self.rows)
-                    + TOMBSTONE_BYTES * len(self._deleted))
+            return (
+                sum(len(r) for r in self.rows) + TOMBSTONE_BYTES * len(self._deleted)
+            )
         return (self._resident_bytes
                 + self.SPILL_ENTRY_OVERHEAD * len(self._spilled)
                 + TOMBSTONE_BYTES * len(self._deleted))
@@ -490,7 +522,8 @@ class _BytesRowStore(RowStore):
                 extents = [self._spilled[i] for i in ids]
                 try:
                     payloads = self._res.disk.read_many_checked(
-                        [e[0] for e in extents], [e[1] for e in extents])
+                        [e[0] for e in extents], [e[1] for e in extents]
+                    )
                     break
                 except ExtentCorruptionError as e:
                     bad = [ids[j] for j in e.indices]
@@ -512,9 +545,13 @@ class _BytesRowStore(RowStore):
         return st
 
     @classmethod
-    def from_state(cls, schema: Sequence[ColumnSpec], state: Dict[str, Any],
-                   spill_path: Optional[str] = None,
-                   spill_io: Optional[Any] = None) -> "_BytesRowStore":
+    def from_state(
+        cls,
+        schema: Sequence[ColumnSpec],
+        state: Dict[str, Any],
+        spill_path: Optional[str] = None,
+        spill_io: Optional[Any] = None,
+    ) -> "_BytesRowStore":
         """Rebuild from :meth:`snapshot_state`; previously spilled rows are
         re-spilled into a fresh spill file, preserving the residency
         split."""
@@ -532,12 +569,11 @@ class _BytesRowStore(RowStore):
         self._restore_model(state["model"])
         res_state = state.get("residency")
         if res_state is not None:
-            self._res = ResidencyManager(res_state["budget"], spill_path,
-                                         res_state.get("config"),
-                                         io=spill_io)
+            self._res = ResidencyManager(
+                res_state["budget"], spill_path, res_state.get("config"), io=spill_io
+            )
             self._ref = bytearray(res_state["ref"])
-            self._resident_bytes = sum(
-                len(r) for r in self.rows if r is not None)
+            self._resident_bytes = sum(len(r) for r in self.rows if r is not None)
             sp = res_state["spilled"]
             ids = sorted(sp)
             if ids:
@@ -552,12 +588,20 @@ class _BytesRowStore(RowStore):
 class UncompressedStore(_BytesRowStore):
     name = "silo"
 
-    def __init__(self, schema: Sequence[ColumnSpec], rows_sample=None,
-                 memory_budget: Optional[int] = None,
-                 spill_path: Optional[str] = None,
-                 spill_io: Optional[Any] = None):
-        super().__init__(schema, memory_budget=memory_budget,
-                         spill_path=spill_path, spill_io=spill_io)
+    def __init__(
+        self,
+        schema: Sequence[ColumnSpec],
+        rows_sample=None,
+        memory_budget: Optional[int] = None,
+        spill_path: Optional[str] = None,
+        spill_io: Optional[Any] = None,
+    ):
+        super().__init__(
+            schema,
+            memory_budget=memory_budget,
+            spill_path=spill_path,
+            spill_io=spill_io,
+        )
 
     def _encode_row(self, row: Dict[str, Any]) -> bytes:
         return json.dumps([row[c.name] for c in self.schema]).encode()
@@ -592,21 +636,33 @@ class BlitzStore(RowStore):
 
     name = "blitzcrank"
 
-    def __init__(self, schema: Sequence[ColumnSpec], rows_sample,
-                 correlation: bool = False, block_tuples: int = 1,
-                 sample: int = 1 << 15, use_pallas: bool | None = None,
-                 auto_merge: bool = True, merge_frac: float = 0.06,
-                 rewrite_frac: float = 0.12, merge_min_bytes: int = 1 << 16,
-                 adaptive: bool | MaintenanceConfig = False,
-                 codec: Optional[TableCodec] = None,
-                 memory_budget: Optional[int] = None,
-                 spill_path: Optional[str] = None,
-                 spill_io: Optional[Any] = None):
+    def __init__(
+        self,
+        schema: Sequence[ColumnSpec],
+        rows_sample,
+        correlation: bool = False,
+        block_tuples: int = 1,
+        sample: int = 1 << 15,
+        use_pallas: bool | None = None,
+        auto_merge: bool = True,
+        merge_frac: float = 0.06,
+        rewrite_frac: float = 0.12,
+        merge_min_bytes: int = 1 << 16,
+        adaptive: bool | MaintenanceConfig = False,
+        codec: Optional[TableCodec] = None,
+        memory_budget: Optional[int] = None,
+        spill_path: Optional[str] = None,
+        spill_io: Optional[Any] = None,
+    ):
         super().__init__(schema)
         if codec is None:
-            codec = TableCodec.fit(rows_sample, self.schema,
-                                   correlation=correlation,
-                                   sample=sample, block_tuples=block_tuples)
+            codec = TableCodec.fit(
+                rows_sample,
+                self.schema,
+                correlation=correlation,
+                sample=sample,
+                block_tuples=block_tuples,
+            )
         else:
             # A pre-fitted codec (shared across a repro.db Table's shards:
             # same sample => same models, fit once, count model bytes once)
@@ -632,8 +688,7 @@ class BlitzStore(RowStore):
         self.merges = 0
         self.maintenance: MaintenanceScheduler | None = None
         if adaptive and block_tuples == 1:
-            cfg = (adaptive if isinstance(adaptive, MaintenanceConfig)
-                   else None)
+            cfg = (adaptive if isinstance(adaptive, MaintenanceConfig) else None)
             self.maintenance = MaintenanceScheduler(self, cfg)
 
     # -- codec versions (DESIGN.md §4) -----------------------------------
@@ -686,9 +741,9 @@ class BlitzStore(RowStore):
             self.maintenance.maybe_step()
         return range(base, len(self.table))
 
-    def get_many(self, indices: Sequence[int],
-                 backend: str | None = None
-                 ) -> List[Optional[Dict[str, Any]]]:
+    def get_many(
+        self, indices: Sequence[int], backend: str | None = None
+    ) -> List[Optional[Dict[str, Any]]]:
         idxs = [int(i) for i in indices]  # materialize: may be an iterator
         for _attempt in range(3):
             try:
@@ -703,18 +758,19 @@ class BlitzStore(RowStore):
             rows = [None if i in ts
                     else (dict(ov[i]) if i in ov else r)
                     for i, r in zip(idxs, rows)]
+            _C_OVERLAY_HITS.add(sum(1 for i in idxs if i in ov))
         return rows
 
-    def update_many(self, indices: Sequence[int],
-                    rows: Sequence[Dict[str, Any]]) -> None:
+    def update_many(
+        self, indices: Sequence[int], rows: Sequence[Dict[str, Any]]
+    ) -> None:
         idxs, rows = self._dedup_last(indices, rows)
         for i, r in zip(idxs, rows):
             if not self.is_live(i):
                 raise KeyError(f"row {i} is deleted")
             old = self._overlay.get(i)
             if old is not None:
-                self._overlay_bytes -= \
-                    _raw_row_bytes(old) + OVERLAY_ENTRY_OVERHEAD
+                self._overlay_bytes -= _raw_row_bytes(old) + OVERLAY_ENTRY_OVERHEAD
             r = dict(r)
             self._overlay[i] = r
             self._overlay_bytes += _raw_row_bytes(r) + OVERLAY_ENTRY_OVERHEAD
@@ -723,10 +779,13 @@ class BlitzStore(RowStore):
             self.maintenance.observe_writes(rows)
             self.maintenance.maybe_step()
 
-    def scan_where(self, predicates: Sequence[Any],
-                   columns: Optional[Sequence[str]] = None,
-                   pushdown: bool = True,
-                   backend: str | None = None) -> "Any":
+    def scan_where(
+        self,
+        predicates: Sequence[Any],
+        columns: Optional[Sequence[str]] = None,
+        pushdown: bool = True,
+        backend: str | None = None,
+    ) -> "Any":
         """Predicate-pushdown scan over the code arena (DESIGN.md §8).
 
         The arena scan (``repro.scan.scan_table``) evaluates predicates in
@@ -738,35 +797,32 @@ class BlitzStore(RowStore):
         ``pushdown=False`` falls back to the decode-everything baseline.
         """
         if not pushdown:
-            return super().scan_where(predicates, columns=columns,
-                                      pushdown=False, backend=backend)
+            return super().scan_where(
+                predicates, columns=columns, pushdown=False, backend=backend
+            )
         from repro.scan import ScanResult, match_all, scan_table
         preds = list(predicates)
         for _attempt in range(3):
             try:
-                res = scan_table(self.table, preds, columns=columns,
-                                 backend=backend)
+                res = scan_table(self.table, preds, columns=columns, backend=backend)
                 break
             except SpillCorruptionError as e:
                 self._repair(e)
         else:
-            res = scan_table(self.table, preds, columns=columns,
-                             backend=backend)
+            res = scan_table(self.table, preds, columns=columns, backend=backend)
         if not self._overlay and not self._tombstones:
             return res
         ov, ts = self._overlay, self._tombstones
-        proj = (columns if columns is not None
-                else list(self.table.codec.order))
+        proj = (columns if columns is not None else list(self.table.codec.order))
         merged: List[Tuple[int, Dict[str, Any]]] = [
-            (i, r) for i, r in zip(res.ids, res.rows)
-            if i not in ts and i not in ov]
+            (i, r) for i, r in zip(res.ids, res.rows) if i not in ts and i not in ov
+        ]
         for i, r in ov.items():
             if match_all(preds, r):
                 merged.append((int(i), {c: r[c] for c in proj}))
         merged.sort(key=lambda h: h[0])
         res.stats.rows_matched = len(merged)
-        return ScanResult([h[0] for h in merged],
-                          [h[1] for h in merged], res.stats)
+        return ScanResult([h[0] for h in merged], [h[1] for h in merged], res.stats)
 
     def delete_many(self, indices: Sequence[int]) -> int:
         if self.block_tuples != 1:
@@ -777,8 +833,7 @@ class BlitzStore(RowStore):
                 continue
             old = self._overlay.pop(i, None)
             if old is not None:
-                self._overlay_bytes -= \
-                    _raw_row_bytes(old) + OVERLAY_ENTRY_OVERHEAD
+                self._overlay_bytes -= _raw_row_bytes(old) + OVERLAY_ENTRY_OVERHEAD
             self._tombstones.add(i)
             n += 1
         self._maybe_merge()
@@ -788,10 +843,8 @@ class BlitzStore(RowStore):
     def _maybe_merge(self) -> None:
         if not self.auto_merge:
             return
-        delta = (self._overlay_bytes
-                 + TOMBSTONE_BYTES * len(self._tombstones))
-        if delta > max(self.merge_min_bytes,
-                       self.merge_frac * 2 * self.table.used):
+        delta = (self._overlay_bytes + TOMBSTONE_BYTES * len(self._tombstones))
+        if delta > max(self.merge_min_bytes, self.merge_frac * 2 * self.table.used):
             self.merge()
 
     def merge(self) -> Dict[str, Any]:
@@ -804,6 +857,7 @@ class BlitzStore(RowStore):
         """
         if self.block_tuples != 1:
             raise ValueError("merge requires block_tuples == 1")
+        t0 = telemetry.clock()
         if self._tombstones:
             self.table.delete_many(sorted(self._tombstones))
             self._tombstones.clear()
@@ -813,10 +867,12 @@ class BlitzStore(RowStore):
             self._overlay.clear()
             self._overlay_bytes = 0
         self.merges += 1
-        if self.table.dead_bytes > max(self.merge_min_bytes,
-                                       self.rewrite_frac
-                                       * 2 * self.table.used):
+        _C_MERGES.inc()
+        if self.table.dead_bytes > max(
+            self.merge_min_bytes, self.rewrite_frac * 2 * self.table.used
+        ):
             self.table.rewrite()
+        _H_MERGE.observe_since(t0)
         return self.stats()
 
     # -- durability (DESIGN.md §7) ---------------------------------------
@@ -838,8 +894,7 @@ class BlitzStore(RowStore):
                else contextlib.nullcontext())
         with ctx:
             if alive:
-                self.table.replace_many([i for i, _ in alive],
-                                        [r for _, r in alive])
+                self.table.replace_many([i for i, _ in alive], [r for _, r in alive])
             if dead:
                 self.table.delete_many(dead)
         self.repairs += len(ids)
@@ -877,22 +932,25 @@ class BlitzStore(RowStore):
         }
 
     @classmethod
-    def from_state(cls, schema: Sequence[ColumnSpec], state: Dict[str, Any],
-                   spill_path: Optional[str] = None,
-                   spill_io: Optional[Any] = None) -> "BlitzStore":
+    def from_state(
+        cls,
+        schema: Sequence[ColumnSpec],
+        state: Dict[str, Any],
+        spill_path: Optional[str] = None,
+        spill_io: Optional[Any] = None,
+    ) -> "BlitzStore":
         self = cls.__new__(cls)
         RowStore.__init__(self, schema)
-        self.table = CompressedTable.from_state(state["table"],
-                                                spill_path=spill_path,
-                                                spill_io=spill_io)
+        self.table = CompressedTable.from_state(
+            state["table"], spill_path=spill_path, spill_io=spill_io
+        )
         flags = state["flags"]
         self.block_tuples = flags["block_tuples"]
         self.auto_merge = flags["auto_merge"]
         self.merge_frac = flags["merge_frac"]
         self.rewrite_frac = flags["rewrite_frac"]
         self.merge_min_bytes = flags["merge_min_bytes"]
-        self._overlay = {int(i): dict(r)
-                         for i, r in state["overlay"].items()}
+        self._overlay = {int(i): dict(r) for i, r in state["overlay"].items()}
         self._overlay_bytes = state["overlay_bytes"]
         self._tombstones = set(state["tombstones"])
         self.merges = state["merges"]
@@ -901,7 +959,8 @@ class BlitzStore(RowStore):
         self.maintenance = None
         if state.get("maintenance") is not None:
             self.maintenance = MaintenanceScheduler.from_state(
-                self, state["maintenance"])
+                self, state["maintenance"]
+            )
         return self
 
     # -- accounting ------------------------------------------------------
@@ -977,6 +1036,7 @@ class BlitzStore(RowStore):
             "plan_fallback": (None if plan is not None
                               else self.codec.plan_fallback_reason),
         }
+        out["telemetry"] = telemetry.snapshot(prefix=self.TELEMETRY_PREFIXES)
         if self.repairs:
             out["repairs"] = self.repairs
         if t.memory_budget is not None:
@@ -992,17 +1052,27 @@ class BlitzStore(RowStore):
 class ZstdStore(_BytesRowStore):
     name = "zstd"
 
-    def __init__(self, schema: Sequence[ColumnSpec], rows_sample,
-                 dict_kb: int = 110, level: int = 3,
-                 memory_budget: Optional[int] = None,
-                 spill_path: Optional[str] = None,
-                 spill_io: Optional[Any] = None):
-        super().__init__(schema, memory_budget=memory_budget,
-                         spill_path=spill_path, spill_io=spill_io)
+    def __init__(
+        self,
+        schema: Sequence[ColumnSpec],
+        rows_sample,
+        dict_kb: int = 110,
+        level: int = 3,
+        memory_budget: Optional[int] = None,
+        spill_path: Optional[str] = None,
+        spill_io: Optional[Any] = None,
+    ):
+        super().__init__(
+            schema,
+            memory_budget=memory_budget,
+            spill_path=spill_path,
+            spill_io=spill_io,
+        )
         import zstandard as zstd
         self.level = level
-        samples = [json.dumps([r[c.name] for c in self.schema]).encode()
-                   for r in rows_sample]
+        samples = [
+            json.dumps([r[c.name] for c in self.schema]).encode() for r in rows_sample
+        ]
         try:
             dict_data = zstd.train_dictionary(dict_kb * 1024, samples)
             self._set_dict(dict_data.as_bytes())
@@ -1014,8 +1084,7 @@ class ZstdStore(_BytesRowStore):
         if dict_bytes is not None:
             dict_data = zstd.ZstdCompressionDict(dict_bytes)
             self._dict = dict_data
-            self.cctx = zstd.ZstdCompressor(level=self.level,
-                                            dict_data=dict_data)
+            self.cctx = zstd.ZstdCompressor(level=self.level, dict_data=dict_data)
             self.dctx = zstd.ZstdDecompressor(dict_data=dict_data)
             self.dict_bytes = len(dict_bytes)
         else:
@@ -1025,9 +1094,10 @@ class ZstdStore(_BytesRowStore):
             self.dict_bytes = 0
 
     def _snapshot_model(self) -> Any:
-        return {"level": self.level,
-                "dict": (self._dict.as_bytes()
-                         if self._dict is not None else None)}
+        return {
+            "level": self.level,
+            "dict": (self._dict.as_bytes() if self._dict is not None else None),
+        }
 
     def _restore_model(self, state: Any) -> None:
         self.level = state["level"]
@@ -1045,11 +1115,9 @@ class ZstdStore(_BytesRowStore):
         """Bulk insert through ``multi_compress_to_buffer`` when available:
         one C call over all payloads, amortizing context setup."""
         schema = self.schema
-        payloads = [json.dumps([r[c.name] for c in schema]).encode()
-                    for r in rows]
+        payloads = [json.dumps([r[c.name] for c in schema]).encode() for r in rows]
         frames = None
-        if len(payloads) > 1 and hasattr(self.cctx,
-                                         "multi_compress_to_buffer"):
+        if len(payloads) > 1 and hasattr(self.cctx, "multi_compress_to_buffer"):
             try:
                 segs = self.cctx.multi_compress_to_buffer(payloads)
                 frames = [segs[i].tobytes() for i in range(len(segs))]
@@ -1060,8 +1128,7 @@ class ZstdStore(_BytesRowStore):
             frames = [comp(p) for p in payloads]
         return self._append_payloads(frames)
 
-    def get_many(self, indices: Sequence[int]
-                 ) -> List[Optional[Dict[str, Any]]]:
+    def get_many(self, indices: Sequence[int]) -> List[Optional[Dict[str, Any]]]:
         """Batched point gets: one ``multi_decompress_to_buffer`` C call for
         the whole batch when the library supports it."""
         idxs = [int(i) for i in indices]
@@ -1074,8 +1141,7 @@ class ZstdStore(_BytesRowStore):
             fetched = self._fetch_payloads(idxs)
             frames = [fetched[j] for j in live]
         raws = None
-        if len(frames) > 1 and hasattr(self.dctx,
-                                       "multi_decompress_to_buffer"):
+        if len(frames) > 1 and hasattr(self.dctx, "multi_decompress_to_buffer"):
             try:
                 segs = self.dctx.multi_decompress_to_buffer(frames)
                 raws = [segs[i].tobytes() for i in range(len(segs))]
@@ -1105,12 +1171,20 @@ class RamanStore(_BytesRowStore):
 
     name = "raman"
 
-    def __init__(self, schema: Sequence[ColumnSpec], rows_sample,
-                 memory_budget: Optional[int] = None,
-                 spill_path: Optional[str] = None,
-                 spill_io: Optional[Any] = None):
-        super().__init__(schema, memory_budget=memory_budget,
-                         spill_path=spill_path, spill_io=spill_io)
+    def __init__(
+        self,
+        schema: Sequence[ColumnSpec],
+        rows_sample,
+        memory_budget: Optional[int] = None,
+        spill_path: Optional[str] = None,
+        spill_io: Optional[Any] = None,
+    ):
+        super().__init__(
+            schema,
+            memory_budget=memory_budget,
+            spill_path=spill_path,
+            spill_io=spill_io,
+        )
         self.columns = {}
         for c in self.schema:
             vals = [r[c.name] for r in rows_sample]
@@ -1124,9 +1198,9 @@ class RamanStore(_BytesRowStore):
             # reserve an escape symbol
             uniq["\x00<esc>"] = len(uniq)
             counts.append(max(1.0, 0.01 * len(vals)))
-            self.columns[c.name] = (uniq,
-                                    list(uniq.keys()),
-                                    HuffmanCode(np.asarray(counts)))
+            self.columns[c.name] = (
+                uniq, list(uniq.keys()), HuffmanCode(np.asarray(counts))
+            )
         # hoisted per-column (name, value->id, esc_id, id->value, code)
         self._cols = [(c.name, *self.columns[c.name],
                        self.columns[c.name][0]["\x00<esc>"])
@@ -1251,8 +1325,7 @@ class LRUFastPath(RowStore):
     def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
         return self.store.insert_many(rows)
 
-    def get_many(self, indices: Sequence[int]
-                 ) -> List[Optional[Dict[str, Any]]]:
+    def get_many(self, indices: Sequence[int]) -> List[Optional[Dict[str, Any]]]:
         idxs = [int(i) for i in indices]
         out: List[Optional[Dict[str, Any]]] = [None] * len(idxs)
         miss_pos: List[int] = []
@@ -1280,8 +1353,9 @@ class LRUFastPath(RowStore):
             self._evict()
         return out
 
-    def update_many(self, indices: Sequence[int],
-                    rows: Sequence[Dict[str, Any]]) -> None:
+    def update_many(
+        self, indices: Sequence[int], rows: Sequence[Dict[str, Any]]
+    ) -> None:
         idxs, rows = self._dedup_last(indices, rows)
         for i, r in zip(idxs, rows):
             if not self.is_live(i):
@@ -1298,18 +1372,23 @@ class LRUFastPath(RowStore):
             self.dirty.discard(i)
         return self.store.delete_many(idxs)
 
-    def scan(self, start: int = 0, stop: Optional[int] = None,
-             batch: int = 1024) -> Iterator[Tuple[int, Dict[str, Any]]]:
+    def scan(
+        self, start: int = 0, stop: Optional[int] = None, batch: int = 1024
+    ) -> Iterator[Tuple[int, Dict[str, Any]]]:
         self.sync()  # the underlying store must see dirty rows
         return self.store.scan(start, stop, batch)
 
-    def scan_where(self, predicates: Sequence[Any],
-                   columns: Optional[Sequence[str]] = None,
-                   pushdown: bool = True,
-                   backend: Optional[str] = None) -> "Any":
+    def scan_where(
+        self,
+        predicates: Sequence[Any],
+        columns: Optional[Sequence[str]] = None,
+        pushdown: bool = True,
+        backend: Optional[str] = None,
+    ) -> "Any":
         self.sync()  # the underlying store must see dirty rows
-        return self.store.scan_where(predicates, columns=columns,
-                                     pushdown=pushdown, backend=backend)
+        return self.store.scan_where(
+            predicates, columns=columns, pushdown=pushdown, backend=backend
+        )
 
     def is_live(self, i: int) -> bool:
         return int(i) in self.cache or self.store.is_live(i)
@@ -1324,8 +1403,8 @@ class LRUFastPath(RowStore):
     @property
     def nbytes(self) -> int:
         return self.store.nbytes + sum(
-            _raw_row_bytes(r) + OVERLAY_ENTRY_OVERHEAD
-            for r in self.cache.values())
+            _raw_row_bytes(r) + OVERLAY_ENTRY_OVERHEAD for r in self.cache.values()
+        )
 
     def stats(self) -> Dict[str, Any]:
         s = dict(self.store.stats())

@@ -29,16 +29,70 @@ import numpy as np
 from repro.core import ColumnSpec
 from repro.db.schema import TableSchema
 
-_FIRST = ["Taylor", "Alex", "Jordan", "Morgan", "Riley", "Casey", "Avery",
-          "Quinn", "Hayden", "Rowan", "Emerson", "Skyler", "Dakota", "Reese",
-          "Finley", "Sawyer", "Charlie", "Emery", "Tatum", "Ellis", "Mary",
-          "James", "Patricia", "Robert", "Jennifer", "Michael", "Linda",
-          "David", "Elizabeth", "William", "Barbara", "Richard", "Susan",
-          "Joseph", "Jessica", "Thomas", "Sarah", "Daniel", "Karen", "Lisa"]
-_STREET_NAME = ["Main", "Oak", "Pine", "Maple", "Cedar", "Elm", "Washington",
-                "Lake", "Hill", "Walnut", "Spring", "North", "Ridge",
-                "Church", "Willow", "Mill", "Sunset", "Railroad", "Jackson",
-                "River"]
+_FIRST = [
+    "Taylor",
+    "Alex",
+    "Jordan",
+    "Morgan",
+    "Riley",
+    "Casey",
+    "Avery",
+    "Quinn",
+    "Hayden",
+    "Rowan",
+    "Emerson",
+    "Skyler",
+    "Dakota",
+    "Reese",
+    "Finley",
+    "Sawyer",
+    "Charlie",
+    "Emery",
+    "Tatum",
+    "Ellis",
+    "Mary",
+    "James",
+    "Patricia",
+    "Robert",
+    "Jennifer",
+    "Michael",
+    "Linda",
+    "David",
+    "Elizabeth",
+    "William",
+    "Barbara",
+    "Richard",
+    "Susan",
+    "Joseph",
+    "Jessica",
+    "Thomas",
+    "Sarah",
+    "Daniel",
+    "Karen",
+    "Lisa",
+]
+_STREET_NAME = [
+    "Main",
+    "Oak",
+    "Pine",
+    "Maple",
+    "Cedar",
+    "Elm",
+    "Washington",
+    "Lake",
+    "Hill",
+    "Walnut",
+    "Spring",
+    "North",
+    "Ridge",
+    "Church",
+    "Willow",
+    "Mill",
+    "Sunset",
+    "Railroad",
+    "Jackson",
+    "River",
+]
 _STREET_KIND = ["St", "Ave", "Blvd", "Dr", "Ln", "Rd", "Way", "Ct"]
 _STATES = ["CA", "TX", "NY", "FL", "IL", "PA", "OH", "GA", "NC", "MI"]
 # real-world hierarchy: city names are state-specific, zips city-specific
@@ -48,9 +102,20 @@ _CITIES: Dict[str, List[str]] = {
          for i, name in enumerate(_STREET_NAME[si % 7:si % 7 + 4 + si % 4])]
     for si, st in enumerate(_STATES)
 }
-_CORP = ["Acme Corp", "Globex LLC", "Initech Inc", "Umbrella Co",
-         "Stark Industries", "Wayne Enterprises", "Hooli", "Vandelay Industries",
-         "Wonka Factory", "Cyberdyne Systems", "Tyrell Corp", "Soylent Corp"]
+_CORP = [
+    "Acme Corp",
+    "Globex LLC",
+    "Initech Inc",
+    "Umbrella Co",
+    "Stark Industries",
+    "Wayne Enterprises",
+    "Hooli",
+    "Vandelay Industries",
+    "Wonka Factory",
+    "Cyberdyne Systems",
+    "Tyrell Corp",
+    "Soylent Corp",
+]
 
 
 def _zipf_choice(rng, items, size, a=1.3):
@@ -148,9 +213,16 @@ _DRIFT_CITIES: Dict[str, List[str]] = {
     st: [f"New {name} Heights {st}" for name in _STREET_NAME[si % 5:si % 5 + 3]]
     for si, st in enumerate(_STATES)
 }
-_DRIFT_CORP = ["Nimbus Dynamics", "Quasar Holdings", "Vertex Biotech",
-               "Aurora Freight", "Helios Mining", "Zenith Robotics",
-               "Meridian Foods", "Polaris Media"]
+_DRIFT_CORP = [
+    "Nimbus Dynamics",
+    "Quasar Holdings",
+    "Vertex Biotech",
+    "Aurora Freight",
+    "Helios Mining",
+    "Zenith Robotics",
+    "Meridian Foods",
+    "Polaris Media",
+]
 
 
 def drifting_customer_row(rng, i: int, progress: float = 0.0) -> Dict:
@@ -256,14 +328,24 @@ def batched_point_gets(store, keys, batch: int = 256) -> List[Dict]:
     return out
 
 
-def run_transaction_mix(store, n_ops: int, *, seed: int = 0, batch: int = 64,
-                        zipf_a: float = 1.1,
-                        p_payment: float = 0.5, p_order_status: float = 0.35,
-                        p_new_order: float = 0.10, p_delivery: float = 0.05,
-                        balance_col: str = "c_balance",
-                        amount: float = 100.0,
-                        new_row_fn=None, drift: float = 0.0,
-                        sample_every: int = 0, on_sample=None) -> Dict:
+def run_transaction_mix(
+    store,
+    n_ops: int,
+    *,
+    seed: int = 0,
+    batch: int = 64,
+    zipf_a: float = 1.1,
+    p_payment: float = 0.5,
+    p_order_status: float = 0.35,
+    p_new_order: float = 0.10,
+    p_delivery: float = 0.05,
+    balance_col: str = "c_balance",
+    amount: float = 100.0,
+    new_row_fn=None,
+    drift: float = 0.0,
+    sample_every: int = 0,
+    on_sample=None,
+) -> Dict:
     """Drive a TPC-C-style transaction mix through the RowStore protocol.
 
     Four transaction shapes over Zipfian keys (paper §7 dynamic traffic):
@@ -290,8 +372,9 @@ def run_transaction_mix(store, n_ops: int, *, seed: int = 0, batch: int = 64,
     if new_row_fn is None:
         p_order_status += p_new_order
         p_new_order = 0.0
-    counts = {"ops": 0, "payments": 0, "reads": 0, "inserts": 0,
-              "deletes": 0, "aborts": 0}
+    counts = {
+        "ops": 0, "payments": 0, "reads": 0, "inserts": 0, "deletes": 0, "aborts": 0
+    }
     next_sample = sample_every
     while counts["ops"] < n_ops:
         k = min(batch, n_ops - counts["ops"])
@@ -313,8 +396,8 @@ def run_transaction_mix(store, n_ops: int, *, seed: int = 0, batch: int = 64,
                     continue
                 seen.add(key)
                 r[balance_col] = round(
-                    float(r[balance_col])
-                    + float(rng.uniform(-amt, amt)), 2)
+                    float(r[balance_col]) + float(rng.uniform(-amt, amt)), 2
+                )
                 upd_i.append(key)
                 upd_r.append(r)
             store.update_many(upd_i, upd_r)
@@ -337,8 +420,7 @@ def run_transaction_mix(store, n_ops: int, *, seed: int = 0, batch: int = 64,
             keys = rng.integers(0, span, max(1, k // 8))
             counts["deletes"] += store.delete_many(keys)
         counts["ops"] += k
-        if sample_every and on_sample is not None \
-                and counts["ops"] >= next_sample:
+        if sample_every and on_sample is not None and counts["ops"] >= next_sample:
             on_sample(counts["ops"])
             next_sample += sample_every
     return counts
@@ -369,10 +451,33 @@ def row_bytes(rows: List[Dict]) -> int:
 
 _ITEM_ADJ = ["Small", "Large", "Deluxe", "Rustic", "Sleek", "Durable",
              "Gorgeous", "Practical", "Refined", "Ergonomic", "Compact"]
-_ITEM_NOUN = ["Widget", "Gadget", "Bracket", "Fitting", "Sprocket", "Gear",
-              "Lamp", "Chair", "Table", "Clock", "Knob", "Panel", "Valve"]
-_ITEM_MAT = ["Steel", "Wooden", "Granite", "Cotton", "Rubber", "Copper",
-             "Bronze", "Marble", "Plastic", "Linen"]
+_ITEM_NOUN = [
+    "Widget",
+    "Gadget",
+    "Bracket",
+    "Fitting",
+    "Sprocket",
+    "Gear",
+    "Lamp",
+    "Chair",
+    "Table",
+    "Clock",
+    "Knob",
+    "Panel",
+    "Valve",
+]
+_ITEM_MAT = [
+    "Steel",
+    "Wooden",
+    "Granite",
+    "Cotton",
+    "Rubber",
+    "Copper",
+    "Bronze",
+    "Marble",
+    "Plastic",
+    "Linen",
+]
 
 # growth=: headroom for append-mostly columns (ColumnSpec.growth) — minted
 # order ids, advancing dates and accumulating ytd counters must keep
@@ -489,10 +594,13 @@ def item_row(rng, i: int) -> Dict:
             f"{int(rng.integers(1000, 9999))}")
     if rng.random() < 0.1:  # TPC-C: ~10% of items carry ORIGINAL
         data += " ORIGINAL"
-    return {"i_id": i, "i_im_id": int(rng.integers(1, 10000)),
-            "i_name": name,
-            "i_price": float(np.round(rng.uniform(1.0, 100.0), 2)),
-            "i_data": data}
+    return {
+        "i_id": i,
+        "i_im_id": int(rng.integers(1, 10000)),
+        "i_name": name,
+        "i_price": float(np.round(rng.uniform(1.0, 100.0), 2)),
+        "i_data": data,
+    }
 
 
 def stock_db_row(rng, w: int, i: int) -> Dict:
@@ -512,15 +620,29 @@ def customer_db_row(rng, w: int, d: int, c: int) -> Dict:
     return {"c_w_id": w, "c_d_id": d, **row}
 
 
-def order_rows(rng, w: int, d: int, o_id: int, c_id: int, n_items: int,
-               item_ids, entry_d: int, delivered: bool
-               ) -> Tuple[Dict, List[Dict]]:
+def order_rows(
+    rng,
+    w: int,
+    d: int,
+    o_id: int,
+    c_id: int,
+    n_items: int,
+    item_ids,
+    entry_d: int,
+    delivered: bool,
+) -> Tuple[Dict, List[Dict]]:
     """One order + its order lines (shared by the loader and NewOrder)."""
     ol_cnt = int(rng.integers(5, 16))
-    order = {"o_w_id": w, "o_d_id": d, "o_id": o_id, "o_c_id": c_id,
-             "o_entry_d": entry_d,
-             "o_carrier_id": int(rng.integers(1, 11)) if delivered else 0,
-             "o_ol_cnt": ol_cnt, "o_all_local": 1}
+    order = {
+        "o_w_id": w,
+        "o_d_id": d,
+        "o_id": o_id,
+        "o_c_id": c_id,
+        "o_entry_d": entry_d,
+        "o_carrier_id": int(rng.integers(1, 11)) if delivered else 0,
+        "o_ol_cnt": ol_cnt,
+        "o_all_local": 1,
+    }
     lines = []
     for ln in range(1, ol_cnt + 1):
         i_id = item_ids[int(rng.zipf(1.2)) % n_items]
@@ -535,10 +657,14 @@ def order_rows(rng, w: int, d: int, o_id: int, c_id: int, n_items: int,
     return order, lines
 
 
-def generate_tpcc(n_warehouses: int = 2, districts_per_wh: int = 4,
-                  customers_per_district: int = 60, n_items: int = 200,
-                  orders_per_district: int = 30, seed: int = 0
-                  ) -> Dict[str, List[Dict]]:
+def generate_tpcc(
+    n_warehouses: int = 2,
+    districts_per_wh: int = 4,
+    customers_per_district: int = 60,
+    n_items: int = 200,
+    orders_per_district: int = 30,
+    seed: int = 0,
+) -> Dict[str, List[Dict]]:
     """Generate a scaled-down TPC-C population, one row list per table.
 
     Structure matches the spec (10 districts/warehouse, 3k customers/
@@ -578,19 +704,29 @@ def generate_tpcc(n_warehouses: int = 2, districts_per_wh: int = 4,
             for o_id in range(1, orders_per_district + 1):
                 c_id = int(rng.integers(1, customers_per_district + 1))
                 order, lines = order_rows(
-                    rng, w, d, o_id, c_id, n_items, item_ids,
+                    rng,
+                    w,
+                    d,
+                    o_id,
+                    c_id,
+                    n_items,
+                    item_ids,
                     ENTRY_DAY0 + int(rng.integers(0, 60)),
-                    delivered=o_id < first_new)
+                    delivered=o_id < first_new,
+                )
                 pop["orders"].append(order)
                 pop["order_line"].extend(lines)
     return pop
 
 
-def build_tpcc_database(backend: str = "blitzcrank", n_shards: int = 1,
-                        population: Optional[Dict[str, List[Dict]]] = None,
-                        store_kwargs: Optional[Dict[str, Any]] = None,
-                        per_table_kwargs: Optional[Dict[str, Dict]] = None,
-                        **gen_kwargs):
+def build_tpcc_database(
+    backend: str = "blitzcrank",
+    n_shards: int = 1,
+    population: Optional[Dict[str, List[Dict]]] = None,
+    store_kwargs: Optional[Dict[str, Any]] = None,
+    per_table_kwargs: Optional[Dict[str, Dict]] = None,
+    **gen_kwargs
+):
     """Build a loaded multi-table TPC-C :class:`~repro.db.Database`.
 
     Every table is created with the generated population as its model-fit
@@ -601,8 +737,7 @@ def build_tpcc_database(backend: str = "blitzcrank", n_shards: int = 1,
     from repro.db.database import Database  # deferred: avoids import cycle
     if population is None:
         population = generate_tpcc(**gen_kwargs)
-    db = Database(backend=backend, n_shards=n_shards,
-                  store_kwargs=store_kwargs)
+    db = Database(backend=backend, n_shards=n_shards, store_kwargs=store_kwargs)
     for name, schema in TPCC_TABLES.items():
         rows = population[name]
         kwargs = (per_table_kwargs or {}).get(name, {})
@@ -611,11 +746,20 @@ def build_tpcc_database(backend: str = "blitzcrank", n_shards: int = 1,
     return db, population
 
 
-def run_tpcc_mix(db, n_ops: int, *, seed: int = 0, batch: int = 8,
-                 p_new_order: float = 0.45, p_payment: float = 0.43,
-                 p_order_status: float = 0.08, p_delivery: float = 0.04,
-                 entry_day: int = ENTRY_DAY0 + 60,
-                 sample_every: int = 0, on_sample=None) -> Dict[str, int]:
+def run_tpcc_mix(
+    db,
+    n_ops: int,
+    *,
+    seed: int = 0,
+    batch: int = 8,
+    p_new_order: float = 0.45,
+    p_payment: float = 0.43,
+    p_order_status: float = 0.08,
+    p_delivery: float = 0.04,
+    entry_day: int = ENTRY_DAY0 + 60,
+    sample_every: int = 0,
+    on_sample=None,
+) -> Dict[str, int]:
     """Drive the cross-table TPC-C mix through a loaded Database.
 
     Transaction shapes (default weights are the spec's §5.2.3 mix, with
@@ -656,60 +800,111 @@ def run_tpcc_mix(db, n_ops: int, *, seed: int = 0, batch: int = 8,
     for _, orow in orders.scan():
         if orow["o_carrier_id"] == 0:
             wd = (orow["o_w_id"], orow["o_d_id"])
-            first_undelivered[wd] = min(first_undelivered[wd],
-                                        orow["o_id"])
+            first_undelivered[wd] = min(first_undelivered[wd], orow["o_id"])
     cust_per_district = len(customer) // max(1, len(dist_keys))
 
     def zipf_customer(wd: Tuple[int, int]) -> Tuple[int, int, int]:
         c = 1 + int(rng.zipf(1.1) - 1) % cust_per_district
         return (wd[0], wd[1], c)
 
-    counts = {"ops": 0, "new_orders": 0, "payments": 0, "order_status": 0,
-              "deliveries": 0, "order_lines": 0, "aborts": 0}
+    counts = {
+        "ops": 0,
+        "new_orders": 0,
+        "payments": 0,
+        "order_status": 0,
+        "deliveries": 0,
+        "order_lines": 0,
+        "aborts": 0,
+    }
     next_sample = sample_every
-    thresholds = np.cumsum([p_new_order, p_payment, p_order_status,
-                            p_delivery])
+    thresholds = np.cumsum([p_new_order, p_payment, p_order_status, p_delivery])
     while counts["ops"] < n_ops:
         k = min(batch, n_ops - counts["ops"])
         u = float(rng.random())
         if u < thresholds[0]:
-            _tpcc_new_order(rng, k, dist_keys, next_o_id, district,
-                            customer, item, stock, orders, order_line,
-                            item_ids, n_items, cust_per_district,
-                            entry_day, counts)
+            _tpcc_new_order(
+                rng,
+                k,
+                dist_keys,
+                next_o_id,
+                district,
+                customer,
+                item,
+                stock,
+                orders,
+                order_line,
+                item_ids,
+                n_items,
+                cust_per_district,
+                entry_day,
+                counts,
+            )
         elif u < thresholds[1]:
-            _tpcc_payment(rng, k, dist_keys, warehouse, district, customer,
-                          zipf_customer, counts)
+            _tpcc_payment(
+                rng, k, dist_keys, warehouse, district, customer, zipf_customer, counts
+            )
         elif u < thresholds[2]:
-            _tpcc_order_status(rng, k, dist_keys, next_o_id, customer,
-                               orders, order_line, zipf_customer, counts)
+            _tpcc_order_status(
+                rng,
+                k,
+                dist_keys,
+                next_o_id,
+                customer,
+                orders,
+                order_line,
+                zipf_customer,
+                counts,
+            )
         elif u < thresholds[3]:
-            _tpcc_delivery(rng, k, dist_keys, next_o_id, first_undelivered,
-                           orders, order_line, customer, entry_day, counts)
+            _tpcc_delivery(
+                rng,
+                k,
+                dist_keys,
+                next_o_id,
+                first_undelivered,
+                orders,
+                order_line,
+                customer,
+                entry_day,
+                counts,
+            )
         else:
             # probability mass past the four weights (zero at the default
             # weights, which sum to 1): read-only OrderStatus traffic
             _tpcc_order_status(rng, k, dist_keys, next_o_id, customer,
                                orders, order_line, zipf_customer, counts)
         counts["ops"] += k
-        if sample_every and on_sample is not None \
-                and counts["ops"] >= next_sample:
+        if sample_every and on_sample is not None and counts["ops"] >= next_sample:
             on_sample(counts["ops"])
             next_sample += sample_every
     return counts
 
 
-def _tpcc_new_order(rng, k, dist_keys, next_o_id, district, customer,
-                    item, stock, orders, order_line, item_ids, n_items,
-                    cust_per_district, entry_day, counts) -> None:
+def _tpcc_new_order(
+    rng,
+    k,
+    dist_keys,
+    next_o_id,
+    district,
+    customer,
+    item,
+    stock,
+    orders,
+    order_line,
+    item_ids,
+    n_items,
+    cust_per_district,
+    entry_day,
+    counts,
+) -> None:
     """k NewOrder transactions batched: one get_many/update_many/insert_many
     per touched table."""
-    picks = [dist_keys[int(rng.integers(0, len(dist_keys)))]
-             for _ in range(k)]
+    picks = [dist_keys[int(rng.integers(0, len(dist_keys)))] for _ in range(k)]
     new_orders: List[Dict] = []
     new_lines: List[Dict] = []
-    dist_rows = {wd: r for wd, r in
-                 zip(picks, district.get_many(picks)) if r is not None}
+    dist_rows = {
+        wd: r for wd, r in zip(picks, district.get_many(picks)) if r is not None
+    }
     for wd in picks:
         drow = dist_rows.get(wd)
         if drow is None:  # pragma: no cover - districts are never deleted
@@ -719,8 +914,9 @@ def _tpcc_new_order(rng, k, dist_keys, next_o_id, district, customer,
         next_o_id[wd] = o_id + 1
         drow["d_next_o_id"] = o_id + 1
         c_id = 1 + int(rng.zipf(1.1) - 1) % cust_per_district
-        order, lines = order_rows(rng, wd[0], wd[1], o_id, c_id, n_items,
-                                  item_ids, entry_day, delivered=False)
+        order, lines = order_rows(
+            rng, wd[0], wd[1], o_id, c_id, n_items, item_ids, entry_day, delivered=False
+        )
         new_orders.append(order)
         new_lines.extend(lines)
     district.update_many(list(dist_rows), list(dist_rows.values()))
@@ -730,12 +926,12 @@ def _tpcc_new_order(rng, k, dist_keys, next_o_id, district, customer,
     # stock RMW: dedup keys so two lines on the same (w, i) both apply
     stock_keys = [(ln["ol_supply_w_id"], ln["ol_i_id"])
                   for ln in new_lines]
-    srows = {kk: r for kk, r in
-             zip(stock_keys, stock.get_many(stock_keys)) if r is not None}
+    srows = {
+        kk: r for kk, r in zip(stock_keys, stock.get_many(stock_keys)) if r is not None
+    }
     for ln, irow in zip(new_lines, got_items):
         if irow is not None:  # amount = qty * live item price
-            ln["ol_amount"] = float(
-                np.round(ln["ol_quantity"] * irow["i_price"], 2))
+            ln["ol_amount"] = float(np.round(ln["ol_quantity"] * irow["i_price"], 2))
         srow = srows.get((ln["ol_supply_w_id"], ln["ol_i_id"]))
         if srow is None:
             continue
@@ -750,11 +946,11 @@ def _tpcc_new_order(rng, k, dist_keys, next_o_id, district, customer,
     counts["order_lines"] += len(new_lines)
 
 
-def _tpcc_payment(rng, k, dist_keys, warehouse, district, customer,
-                  zipf_customer, counts) -> None:
+def _tpcc_payment(
+    rng, k, dist_keys, warehouse, district, customer, zipf_customer, counts
+) -> None:
     """k Payments batched: RMW across warehouse, district and customer."""
-    picks = [dist_keys[int(rng.integers(0, len(dist_keys)))]
-             for _ in range(k)]
+    picks = [dist_keys[int(rng.integers(0, len(dist_keys)))] for _ in range(k)]
     amounts: Dict[Tuple[int, int], float] = {}
     cust_updates: Dict[Tuple[int, int, int], float] = {}
     pick_cks: List[Tuple[int, int, int]] = []
@@ -769,8 +965,7 @@ def _tpcc_payment(rng, k, dist_keys, warehouse, district, customer,
     for wd, amt in amounts.items():
         w_rows[wd[0]]["w_ytd"] = round(w_rows[wd[0]]["w_ytd"] + amt, 2)
     warehouse.update_many(list(w_rows), list(w_rows.values()))
-    d_rows = {wd: r for wd, r in
-              zip(list(amounts), district.get_many(list(amounts)))}
+    d_rows = {wd: r for wd, r in zip(list(amounts), district.get_many(list(amounts)))}
     for wd, amt in amounts.items():
         d_rows[wd]["d_ytd"] = round(d_rows[wd]["d_ytd"] + amt, 2)
     district.update_many(list(d_rows), list(d_rows.values()))
@@ -782,8 +977,7 @@ def _tpcc_payment(rng, k, dist_keys, warehouse, district, customer,
         if crow is None:
             aborted.add(ck)
             continue
-        crow["c_balance"] = round(
-            float(crow["c_balance"]) - cust_updates[ck], 2)
+        crow["c_balance"] = round(float(crow["c_balance"]) - cust_updates[ck], 2)
         upd_k.append(ck)
         upd_r.append(crow)
     customer.update_many(upd_k, upd_r)
@@ -792,11 +986,11 @@ def _tpcc_payment(rng, k, dist_keys, warehouse, district, customer,
     counts["payments"] += sum(ck not in aborted for ck in pick_cks)
 
 
-def _tpcc_order_status(rng, k, dist_keys, next_o_id, customer, orders,
-                       order_line, zipf_customer, counts) -> None:
+def _tpcc_order_status(
+    rng, k, dist_keys, next_o_id, customer, orders, order_line, zipf_customer, counts
+) -> None:
     """k OrderStatus transactions: customer + recent order + its lines."""
-    picks = [dist_keys[int(rng.integers(0, len(dist_keys)))]
-             for _ in range(k)]
+    picks = [dist_keys[int(rng.integers(0, len(dist_keys)))] for _ in range(k)]
     customer.get_many([zipf_customer(wd) for wd in picks])
     o_keys = []
     for wd in picks:
@@ -809,15 +1003,26 @@ def _tpcc_order_status(rng, k, dist_keys, next_o_id, customer, orders,
         if orow is None:
             counts["aborts"] += 1
             continue
-        line_keys.extend((ok[0], ok[1], ok[2], ln)
-                         for ln in range(1, orow["o_ol_cnt"] + 1))
+        line_keys.extend(
+            (ok[0], ok[1], ok[2], ln) for ln in range(1, orow["o_ol_cnt"] + 1)
+        )
     if line_keys:
         order_line.get_many(line_keys)
     counts["order_status"] += len(o_keys)
 
 
-def _tpcc_delivery(rng, k, dist_keys, next_o_id, first_undelivered,
-                   orders, order_line, customer, entry_day, counts) -> None:
+def _tpcc_delivery(
+    rng,
+    k,
+    dist_keys,
+    next_o_id,
+    first_undelivered,
+    orders,
+    order_line,
+    customer,
+    entry_day,
+    counts,
+) -> None:
     """k Delivery transactions: oldest undelivered order per district."""
     o_keys = []
     for _ in range(k):
@@ -830,15 +1035,15 @@ def _tpcc_delivery(rng, k, dist_keys, next_o_id, first_undelivered,
         o_keys.append((wd[0], wd[1], o_id))
     if not o_keys:
         return
-    o_rows = {ok: r for ok, r in zip(o_keys, orders.get_many(o_keys))
-              if r is not None}
+    o_rows = {ok: r for ok, r in zip(o_keys, orders.get_many(o_keys)) if r is not None}
     carrier = int(rng.integers(1, 11))
     line_keys: List[Tuple[int, int, int, int]] = []
     cust_credit: Dict[Tuple[int, int, int], float] = {}
     for ok, orow in o_rows.items():
         orow["o_carrier_id"] = carrier
-        line_keys.extend((ok[0], ok[1], ok[2], ln)
-                         for ln in range(1, orow["o_ol_cnt"] + 1))
+        line_keys.extend(
+            (ok[0], ok[1], ok[2], ln) for ln in range(1, orow["o_ol_cnt"] + 1)
+        )
     orders.update_many(list(o_rows), list(o_rows.values()))
     l_rows = {lk: r for lk, r in
               zip(line_keys, order_line.get_many(line_keys))
@@ -853,8 +1058,7 @@ def _tpcc_delivery(rng, k, dist_keys, next_o_id, first_undelivered,
     for ck, crow in zip(cks, customer.get_many(cks)):
         if crow is None:
             continue
-        crow["c_balance"] = round(
-            float(crow["c_balance"]) + cust_credit[ck], 2)
+        crow["c_balance"] = round(float(crow["c_balance"]) + cust_credit[ck], 2)
         upd_k.append(ck)
         upd_r.append(crow)
     customer.update_many(upd_k, upd_r)

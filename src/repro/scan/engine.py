@@ -29,6 +29,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import telemetry
 from repro.core.arena import ExtentCorruptionError, SpillCorruptionError
 from repro.core.plan import (
     decode_select_prefix,
@@ -48,24 +49,72 @@ _FALLBACK = "fallback"  # can't lower every predicate: decode + filter
 _IMPOSSIBLE = "impossible"  # no conforming row can match: skip fast blocks
 
 
-@dataclasses.dataclass
 class ScanStats:
-    """Observability for one scan (accumulated across shards by callers)."""
+    """Observability for one scan (accumulated across shards by callers).
 
-    blocks_total: int = 0  # live candidate blocks before pruning
-    blocks_pruned: int = 0  # dropped by zone maps alone
-    blocks_lut: int = 0  # evaluated via the slot-0 LUT gather
-    rows_prefix_decoded: int = 0  # rows through the slot-prefix decode
-    blocks_fallback: int = 0  # full decode + value filter (no lowering)
-    blocks_scalar: int = 0  # slow blocks: per-block scalar decode
-    spilled_reads: int = 0  # cold blocks read through (not promoted)
-    rows_decoded: int = 0  # rows fully materialized
-    rows_matched: int = 0
-    versions: int = 0  # plan versions seen among fast blocks
+    Backed by the shared telemetry registry (DESIGN.md §9): every field
+    write flows its *delta* into the ``repro.scan.<field>`` counter, so
+    the registry carries engine-wide scan totals while each instance
+    keeps its per-scan view.  :meth:`merge` folds another instance's
+    local values in WITHOUT touching the registry — the merged-in scan
+    already registered its deltas when they happened, so cross-shard
+    aggregation can never double-count globally (the old
+    dataclass-``merge`` duplication risk).  The attribute API (reads,
+    ``+=``, plain assignment) is unchanged; fields are thin properties.
+    """
+
+    _FIELDS = (
+        "blocks_total",  # live candidate blocks before pruning
+        "blocks_pruned",  # dropped by zone maps alone
+        "blocks_lut",  # evaluated via the slot-0 LUT gather
+        "rows_prefix_decoded",  # rows through the slot-prefix decode
+        "blocks_fallback",  # full decode + value filter (no lowering)
+        "blocks_scalar",  # slow blocks: per-block scalar decode
+        "spilled_reads",  # cold blocks read through (not promoted)
+        "rows_decoded",  # rows fully materialized
+        "rows_matched",
+        "versions",  # plan versions seen among fast blocks
+    )
+    __slots__ = ("_v",)
+
+    def __init__(self, **fields: int) -> None:
+        object.__setattr__(self, "_v", dict.fromkeys(self._FIELDS, 0))
+        for name, value in fields.items():
+            setattr(self, name, value)  # through the property: registers
 
     def merge(self, other: "ScanStats") -> None:
-        for f in dataclasses.fields(self):
-            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+        """Fold ``other``'s local values in; registry-neutral (see class
+        docstring)."""
+        v, ov = self._v, other._v
+        for f in self._FIELDS:
+            v[f] += ov[f]
+
+    def __repr__(self) -> str:  # dataclass-style, for test/debug output
+        body = ", ".join(f"{f}={self._v[f]}" for f in self._FIELDS)
+        return f"ScanStats({body})"
+
+    def __eq__(self, other: object) -> bool:
+        return isinstance(other, ScanStats) and self._v == other._v
+
+
+def _scan_stat_property(name: str) -> property:
+    counter = telemetry.counter(f"repro.scan.{name}")
+
+    def _get(self: ScanStats) -> int:
+        return self._v[name]
+
+    def _set(self: ScanStats, value: int) -> None:
+        delta = value - self._v[name]
+        self._v[name] = value
+        if delta:
+            counter.add(delta)
+
+    return property(_get, _set)
+
+
+for _f in ScanStats._FIELDS:
+    setattr(ScanStats, _f, _scan_stat_property(_f))
+del _f
 
 
 @dataclasses.dataclass
@@ -305,6 +354,7 @@ def scan_table(
     filtering in value space.  Read-only: never flushes pending rows,
     faults in cold blocks, or advances the clock.
     """
+    t0 = telemetry.clock()
     preds = list(predicates)
     stats = ScanStats()
     order = list(table.codec.order)
@@ -336,6 +386,7 @@ def scan_table(
         for i, r in enumerate(table._pending):
             _value_filtered(table._rows_stored + i, r)
         stats.rows_matched = len(hits)
+        telemetry.record("repro.scan.scan_table", t0)
         return ScanResult([h[0] for h in hits], [h[1] for h in hits], stats)
 
     nrows = table._rows_stored
@@ -424,4 +475,5 @@ def scan_table(
 
     hits.sort(key=lambda h: h[0])
     stats.rows_matched = len(hits)
+    telemetry.record("repro.scan.scan_table", t0)
     return ScanResult([h[0] for h in hits], [h[1] for h in hits], stats)

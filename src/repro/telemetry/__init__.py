@@ -1,0 +1,70 @@
+"""Unified telemetry layer (DESIGN.md §9): one engine-wide metrics
+registry, nestable trace spans over a ring-buffer event log, and
+snapshot exporters.
+
+Quickstart::
+
+    from repro import telemetry
+
+    H = telemetry.histogram("repro.db.get_many")   # cached handle
+    t0 = telemetry.clock()                         # 0 when disabled
+    ...hot path...
+    H.observe_since(t0)                            # no-op on 0
+
+    telemetry.snapshot()        # counters + histogram percentiles
+    telemetry.to_prometheus()   # scrape-format text
+    telemetry.set_enabled(False)  # near-zero-cost off switch
+
+Metric names follow ``repro.<subsystem>.<verb>``; durations are stored
+in nanoseconds and exported in microseconds.
+"""
+
+from .export import (
+    PHASE_SOURCES,
+    dumps,
+    phase_breakdown,
+    snapshot,
+    to_prometheus,
+)
+from .metrics import (
+    BUCKETS_PER_OCTAVE,
+    N_BUCKETS,
+    REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    bucket_index,
+    bucket_lo,
+    clock,
+    enabled,
+    set_enabled,
+)
+from .spans import (
+    EVENTS,
+    EventLog,
+    Span,
+    SpanEvent,
+    events_snapshot,
+    record,
+    span,
+)
+
+
+def counter(name: str) -> Counter:
+    """Get-or-create a counter in the engine-wide registry."""
+    return REGISTRY.counter(name)
+
+
+def gauge(name: str) -> Gauge:
+    return REGISTRY.gauge(name)
+
+
+def histogram(name: str) -> Histogram:
+    return REGISTRY.histogram(name)
+
+
+def reset() -> None:
+    """Zero the engine-wide registry and event ring (handles stay valid)."""
+    REGISTRY.reset()
+    EVENTS.reset()

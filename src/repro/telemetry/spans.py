@@ -1,0 +1,154 @@
+"""Nestable trace spans over a fixed-size ring-buffer event log.
+
+A span times one logical region (``with span("repro.db.get_many"):``),
+feeds its duration into the same-named registry histogram, and appends
+a compact event tuple to a bounded ring buffer — the last N operations
+are always inspectable without unbounded memory growth.  Nesting is
+tracked per thread; the recorded ``depth`` reconstructs the call tree.
+
+Disabled mode returns one shared no-op span object: no allocation, no
+clock reads, no ring writes.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, NamedTuple, Optional
+
+from .metrics import REGISTRY, Registry, _state
+
+DEFAULT_EVENT_CAPACITY = 1024
+
+
+class SpanEvent(NamedTuple):
+    seq: int  # monotonically increasing across wraparound
+    name: str
+    depth: int  # nesting level at the time the span ran
+    start_ns: int  # perf_counter_ns at entry
+    dur_ns: int
+
+
+class EventLog:
+    """Fixed-capacity ring buffer of :class:`SpanEvent` s.
+
+    ``append`` overwrites the oldest entry once full; ``total`` keeps
+    counting, so ``total - len(self)`` is the number of dropped events.
+    """
+
+    def __init__(self, capacity: int = DEFAULT_EVENT_CAPACITY) -> None:
+        if capacity <= 0:
+            raise ValueError("EventLog capacity must be positive")
+        self.capacity = capacity
+        self._buf: List[Optional[SpanEvent]] = [None] * capacity
+        self._next = 0
+        self.total = 0
+
+    def append(self, ev: SpanEvent) -> None:
+        self._buf[self._next] = ev
+        self._next = (self._next + 1) % self.capacity
+        self.total += 1
+
+    def __len__(self) -> int:
+        return min(self.total, self.capacity)
+
+    def events(self) -> List[SpanEvent]:
+        """Retained events, oldest first (wraparound unrolled)."""
+        if self.total <= self.capacity:
+            return [e for e in self._buf[: self.total] if e is not None]
+        return [
+            e
+            for e in self._buf[self._next :] + self._buf[: self._next]
+            if e is not None
+        ]
+
+    def reset(self) -> None:
+        self._buf = [None] * self.capacity
+        self._next = 0
+        self.total = 0
+
+
+EVENTS = EventLog()
+
+_tls = threading.local()
+
+
+class Span:
+    """One active timed region; re-entrant use creates nested events."""
+
+    __slots__ = ("name", "registry", "log", "_t0", "_depth")
+
+    def __init__(self, name: str, registry: Registry, log: EventLog) -> None:
+        self.name = name
+        self.registry = registry
+        self.log = log
+        self._t0 = 0
+        self._depth = 0
+
+    def __enter__(self) -> "Span":
+        self._depth = getattr(_tls, "depth", 0)
+        _tls.depth = self._depth + 1
+        self._t0 = time.perf_counter_ns()
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        dur = time.perf_counter_ns() - self._t0
+        _tls.depth = self._depth
+        self.registry.histogram(self.name).observe(dur)
+        self.log.append(
+            SpanEvent(self.log.total, self.name, self._depth, self._t0, dur)
+        )
+
+
+class _NullSpan:
+    """Shared do-nothing span handed out while telemetry is disabled."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        pass
+
+
+_NULL = _NullSpan()
+
+
+def span(name: str, registry: Optional[Registry] = None, log: Optional[EventLog] = None):
+    """Context manager timing one region into histogram ``name`` and the
+    event ring.  Returns a shared no-op when telemetry is disabled."""
+    if not _state.enabled:
+        return _NULL
+    return Span(name, registry or REGISTRY, log or EVENTS)
+
+
+def record(
+    name: str,
+    t0_ns: int,
+    registry: Optional[Registry] = None,
+    log: Optional[EventLog] = None,
+) -> None:
+    """Manual span close for code that can't use ``with`` (multiple
+    returns, no reindent): pair with a :func:`repro.telemetry.clock`
+    start.  No-op when the start was taken disabled (``t0_ns == 0``)."""
+    if not t0_ns:
+        return
+    dur = time.perf_counter_ns() - t0_ns
+    (registry or REGISTRY).histogram(name).observe(dur)
+    elog = log or EVENTS
+    elog.append(SpanEvent(elog.total, name, getattr(_tls, "depth", 0), t0_ns, dur))
+
+
+def events_snapshot(log: Optional[EventLog] = None, limit: int = 64) -> List[Dict]:
+    """Last ``limit`` retained events as JSON-friendly dicts (newest last)."""
+    evs = (log or EVENTS).events()[-limit:]
+    return [
+        {
+            "seq": e.seq,
+            "name": e.name,
+            "depth": e.depth,
+            "dur_us": round(e.dur_ns / 1e3, 3),
+        }
+        for e in evs
+    ]

@@ -1,0 +1,320 @@
+"""Telemetry layer (DESIGN.md §9): metric primitives, spans, exporters.
+
+The load-bearing invariants: histogram merge is lossless (commutative,
+associative, equal to observing the concatenated stream), the event ring
+survives wraparound with ordering intact, ScanStats keeps its attribute
+API while flowing deltas into shared registry counters without
+double-counting on merge, and — most importantly — disabling telemetry
+changes *nothing* about engine behaviour: an enabled and a disabled run
+produce bit-identical store state.
+"""
+
+import dataclasses
+import pickle
+import random
+
+import pytest
+
+from repro import telemetry
+from repro.core.blitzcrank import ColumnSpec
+from repro.oltp.store import BlitzStore
+from repro.scan.engine import ScanStats
+from repro.telemetry import (
+    N_BUCKETS,
+    EventLog,
+    Histogram,
+    Registry,
+    SpanEvent,
+    bucket_index,
+    bucket_lo,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    """Each test sees a zeroed global registry and enabled telemetry."""
+    prev = telemetry.set_enabled(True)
+    telemetry.reset()
+    yield
+    telemetry.set_enabled(prev)
+    telemetry.reset()
+
+
+# -- histogram geometry ---------------------------------------------------
+
+
+def test_bucket_boundaries():
+    assert bucket_index(0) == 0
+    assert bucket_index(0.5) == 0
+    assert bucket_index(1.0) == 0
+    # a point safely inside bucket i lands in bucket i (buckets are a
+    # factor 2**0.25 ~ 1.19 wide, so *1.1 stays inside)
+    for i in range(0, 220, 7):
+        inside = bucket_lo(i) * 1.1
+        assert bucket_index(inside) == i
+        assert bucket_lo(i) <= inside < bucket_lo(i + 1)
+    # durations beyond the last edge clamp instead of overflowing
+    assert bucket_index(1e30) == N_BUCKETS - 1
+
+
+def test_histogram_observe_and_percentiles():
+    h = Histogram("t")
+    for ns in (100, 200, 300, 400, 1_000_000):
+        h.observe(ns)
+    assert h.count == 5
+    assert h.sum_ns == 1_001_000
+    assert h.min_ns == 100 and h.max_ns == 1_000_000
+    # p50 lands near the middle observations, clamped to observed range
+    assert 100 <= h.percentile(0.5) <= 400 * 1.2
+    # the top quantile reports its bucket's midpoint: within one bucket
+    # width (2**0.25 ~ 19%) of the true max, never above it
+    assert 1_000_000 / 1.2 <= h.percentile(1.0) <= 1_000_000
+
+
+def test_empty_histogram_percentiles_are_zero():
+    h = Histogram("empty")
+    for q in (0.0, 0.5, 0.95, 0.99, 1.0):
+        assert h.percentile(q) == 0.0
+    s = h.summary()
+    assert s["count"] == 0 and s["p99_us"] == 0.0
+
+
+def _hist_from(samples):
+    h = Histogram("x")
+    for s in samples:
+        h.observe(s)
+    return h
+
+
+def _hist_eq(a, b):
+    return (
+        a.count == b.count
+        and a.sum_ns == b.sum_ns
+        and a.min_ns == b.min_ns
+        and a.max_ns == b.max_ns
+        and a.buckets == b.buckets
+    )
+
+
+def test_merge_is_lossless_commutative_associative():
+    rng = random.Random(7)
+    sa = [rng.randrange(1, 10**9) for _ in range(200)]
+    sb = [rng.randrange(1, 10**6) for _ in range(50)]
+    sc = [rng.randrange(10**3, 10**12) for _ in range(80)]
+
+    # merge == observing the concatenated stream
+    ab = _hist_from(sa)
+    ab.merge(_hist_from(sb))
+    assert _hist_eq(ab, _hist_from(sa + sb))
+
+    # commutative
+    ba = _hist_from(sb)
+    ba.merge(_hist_from(sa))
+    assert _hist_eq(ab, ba)
+
+    # associative
+    left = _hist_from(sa)
+    left.merge(_hist_from(sb))
+    left.merge(_hist_from(sc))
+    bc = _hist_from(sb)
+    bc.merge(_hist_from(sc))
+    right = _hist_from(sa)
+    right.merge(bc)
+    assert _hist_eq(left, right)
+
+    # merging an empty histogram is the identity
+    before = _hist_from(sa)
+    before.merge(Histogram("e"))
+    assert _hist_eq(before, _hist_from(sa))
+
+
+# -- event ring -----------------------------------------------------------
+
+
+def test_event_log_wraparound():
+    log = EventLog(capacity=8)
+    n = 2 * 8 + 3
+    for i in range(n):
+        log.append(SpanEvent(i, f"ev{i}", 0, i * 10, 5))
+    assert len(log) == 8
+    assert log.total == n
+    evs = log.events()
+    # oldest dropped, order kept: the retained tail is the last 8 appends
+    assert [e.seq for e in evs] == list(range(n - 8, n))
+
+
+def test_span_nesting_depth_and_histogram():
+    with telemetry.span("repro.test.outer"):
+        with telemetry.span("repro.test.inner"):
+            pass
+    evs = [e for e in telemetry.EVENTS.events() if e.name.startswith("repro.test.")]
+    # inner closes first, one level deeper
+    assert [(e.name, e.depth) for e in evs] == [
+        ("repro.test.inner", 1),
+        ("repro.test.outer", 0),
+    ]
+    assert telemetry.REGISTRY.histogram("repro.test.outer").count == 1
+
+
+def test_disabled_mode_is_inert():
+    c = telemetry.counter("repro.test.c")
+    h = telemetry.histogram("repro.test.h")
+    prev = telemetry.set_enabled(False)
+    try:
+        assert telemetry.clock() == 0
+        c.add(5)
+        h.observe(123)
+        h.observe_since(0)
+        telemetry.record("repro.test.h", 0)
+        with telemetry.span("repro.test.h"):
+            pass
+        assert c.value == 0
+        assert h.count == 0
+        assert telemetry.EVENTS.total == 0
+    finally:
+        telemetry.set_enabled(prev)
+
+
+# -- ScanStats on shared registry counters --------------------------------
+
+
+def test_scan_stats_attribute_api_and_registry():
+    c = telemetry.counter("repro.scan.rows_decoded")
+    s = ScanStats()
+    assert s.rows_decoded == 0
+    s.rows_decoded = 5
+    assert s.rows_decoded == 5
+    assert c.value == 5
+    # overwriting flows the *delta*, so the registry nets to the final value
+    s.rows_decoded = 3
+    assert c.value == 3
+    s2 = ScanStats(rows_decoded=4, blocks_total=2)
+    assert c.value == 7
+
+
+def test_scan_stats_merge_does_not_double_count():
+    c = telemetry.counter("repro.scan.blocks_pruned")
+    a = ScanStats(blocks_pruned=3)
+    b = ScanStats(blocks_pruned=4)
+    assert c.value == 7  # both scans registered their deltas when they ran
+    a.merge(b)
+    assert a.blocks_pruned == 7
+    # merge is registry-neutral: folding per-shard stats into a table
+    # total must not re-register work the shards already counted
+    assert c.value == 7
+
+
+def test_scan_stats_equality_and_repr():
+    a = ScanStats(rows_decoded=2)
+    b = ScanStats(rows_decoded=2)
+    assert a == b
+    assert "rows_decoded" in repr(a)
+
+
+# -- exporters ------------------------------------------------------------
+
+
+def test_snapshot_prefix_filter():
+    telemetry.counter("repro.db.x").add(1)
+    telemetry.counter("repro.wal.y").add(2)
+    snap = telemetry.snapshot(prefix="repro.db.")
+    assert "repro.db.x" in snap["counters"]
+    assert "repro.wal.y" not in snap["counters"]
+    snap2 = telemetry.snapshot(prefix=("repro.db.", "repro.wal."))
+    assert {"repro.db.x", "repro.wal.y"} <= set(snap2["counters"])
+
+
+def test_prometheus_exposition_format():
+    telemetry.counter("repro.db.get_many.rows").add(3)
+    telemetry.histogram("repro.db.get_many").observe(1500)
+    text = telemetry.to_prometheus()
+    assert "repro_db_get_many_rows_total 3" in text
+    assert 'repro_db_get_many_us{quantile="0.5"}' in text
+    assert "repro_db_get_many_us_count 1" in text
+
+
+def test_phase_breakdown_folds_and_covers():
+    reg = Registry()
+    reg.histogram("repro.core.encode").observe(0.2e9)
+    reg.histogram("repro.core.decode").observe(0.1e9)
+    reg.histogram("repro.wal.fsync").observe(0.1e9)
+    bd = telemetry.phase_breakdown(0.5, registry=reg)
+    assert bd["phases_s"]["encode"] == pytest.approx(0.2)
+    assert bd["phases_s"]["decode"] == pytest.approx(0.1)
+    assert bd["phases_s"]["fsync"] == pytest.approx(0.1)
+    assert bd["phases_s"]["python_glue"] == pytest.approx(0.1)
+    assert bd["coverage"] == 1.0
+    assert sum(bd["phases_s"].values()) == pytest.approx(0.5)
+
+    # `since` scopes the fold to work done after the captured baseline
+    base = reg.hist_seconds()
+    reg.histogram("repro.core.encode").observe(0.3e9)
+    bd2 = telemetry.phase_breakdown(0.4, registry=reg, since=base)
+    assert bd2["phases_s"]["encode"] == pytest.approx(0.3)
+    assert bd2["phases_s"]["python_glue"] == pytest.approx(0.1)
+
+
+def test_registry_reset_keeps_handles_valid():
+    c = telemetry.counter("repro.test.reset")
+    c.add(9)
+    telemetry.reset()
+    assert c.value == 0
+    c.add(2)
+    assert telemetry.counter("repro.test.reset") is c
+    assert c.value == 2
+
+
+# -- disabled telemetry changes nothing about engine behaviour ------------
+
+COLS = [
+    ColumnSpec("w", "cat"),
+    ColumnSpec("id", "int", growth=8.0),
+    ColumnSpec("qty", "int"),
+    ColumnSpec("amt", "float", precision=0.01),
+]
+
+
+def _drive_store(enabled: bool):
+    prev = telemetry.set_enabled(enabled)
+    try:
+        rng = random.Random(1234)
+        rows = [
+            {
+                "w": f"w{rng.randrange(6)}",
+                "id": i,
+                "qty": rng.randrange(1, 50),
+                "amt": round(rng.uniform(0, 1000), 2),
+            }
+            for i in range(400)
+        ]
+        store = BlitzStore(COLS, rows, merge_min_bytes=1 << 10)
+        store.insert_many(rows)
+        for i in range(0, 400, 7):
+            # stores take full rows; partial-update merging is Table's job
+            store.update_many([i], [dict(rows[i], qty=99)])
+        store.delete_many(list(range(0, 400, 13)))
+        store.merge()
+        live = [i for i in range(400) if i % 13]
+        got = store.get_many(live[:100])
+        return store.snapshot_state(), got
+    finally:
+        telemetry.set_enabled(prev)
+
+
+def _neutralize_fit_timings(state):
+    # FitStats carries wall-clock fit timings — run-dependent metadata,
+    # not store contents.  Zero them so the comparison is about data.
+    for codec in state["table"]["codecs"]:
+        codec.stats = dataclasses.replace(
+            codec.stats, structuring_s=0.0, generation_s=0.0
+        )
+    return state
+
+
+def test_enabled_vs_disabled_bit_identical_state():
+    state_on, got_on = _drive_store(True)
+    state_off, got_off = _drive_store(False)
+    assert got_on == got_off
+    on = pickle.dumps(_neutralize_fit_timings(state_on))
+    off = pickle.dumps(_neutralize_fit_timings(state_off))
+    assert on == off
