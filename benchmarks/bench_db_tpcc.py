@@ -105,8 +105,9 @@ def _blitz_reads_identical(db, seed: int) -> bool:
         table = db[name]
         keys = [k for k, _ in table.scan()]
         picks = [keys[int(i)] for i in rng.integers(0, len(keys), 300)]
-        if table.get_many(picks, backend="numpy") \
-                != table.get_many(picks, backend="pallas"):
+        if table.get_many(picks, backend="numpy") != table.get_many(
+            picks, backend="pallas"
+        ):
             return False
     return True
 

@@ -101,14 +101,16 @@ def _blitz_identity(capped, reference, seed: int, pallas_sample: int = 256):
     for name in tpcc.TPCC_TABLES:
         table, ref = capped[name], reference[name]
         keys = [k for k, _ in ref.scan()]
-        if table.get_many(keys, backend="numpy") \
-                != ref.get_many(keys, backend="numpy"):
+        if table.get_many(keys, backend="numpy") != ref.get_many(
+            keys, backend="numpy"
+        ):
             return False
         if keys:
             picks = [keys[int(i)]
                      for i in rng.integers(0, len(keys), pallas_sample)]
-            if table.get_many(picks, backend="pallas") \
-                    != ref.get_many(picks, backend="numpy"):
+            if table.get_many(picks, backend="pallas") != ref.get_many(
+                picks, backend="numpy"
+            ):
                 return False
     return True
 

@@ -1,0 +1,156 @@
+"""Sanitizer overhead note (ISSUE 9): sanitize-off must be free.
+
+Every boundary check site guards on ``sanitize.ENABLED`` before doing
+any work, so the default (off) hot path pays one module-attribute load
+and a falsy branch per boundary.  This bench pins that claim two ways:
+
+1. **Primitive**: ns/call for ``CompressedTable.sanitize_boundary`` in
+   both modes on a spilled, zone-mapped table — the off cost is the
+   guard alone, the on cost is the full vectorized invariant sweep.
+   The gate is on the *off* number: a boundary guard that grows real
+   work shows up here, not as a mystery OLTP slowdown later.
+2. **Mix**: the seeded TPC-C mix run in interleaved chunks with the
+   sanitizer toggled per chunk (same drift-cancelling design as
+   ``bench_telemetry``).  The on/off throughput ratio is reported as
+   the *cost of turning it on* — informational, since CI runs tier-1
+   both ways and correctness there is the point, not speed.
+
+Emits ``BENCH_sanitize.json`` and ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict, List
+
+from benchmarks.artifact import write_bench_json
+from repro import sanitize
+from repro.core import TableCodec
+from repro.core.blitzcrank import CompressedTable
+from repro.oltp import tpcc
+
+# The off-path guard must stay under a microsecond per boundary; the
+# measured cost is a ~100 ns Python call + attribute load.
+OFF_NS_BOUND = 1_000.0
+
+
+def _primitive_ns(n: int = 20_000) -> Dict[str, float]:
+    """ns/call for a full boundary sweep, sanitize on and off."""
+    schema, gen = tpcc.TABLES["orderline"]
+    rows = gen(1500, seed=7)
+    codec = TableCodec.fit(rows[:256], schema)
+    t = CompressedTable(codec, memory_budget=1 << 13)
+    t.extend(rows)
+    out: Dict[str, float] = {}
+    for mode in ("enabled", "disabled"):
+        with sanitize.override(mode == "enabled"):
+            t0 = time.perf_counter_ns()
+            for _ in range(n):
+                t.sanitize_boundary("bench")
+            out[f"boundary_{mode}_ns"] = round(
+                (time.perf_counter_ns() - t0) / n, 2
+            )
+    return out
+
+
+def _build(population, n_shards: int):
+    db, _ = tpcc.build_tpcc_database(backend="blitzcrank",
+                                     n_shards=n_shards,
+                                     population=population)
+    return db
+
+
+def _chunk(db, n_ops: int, seed: int, enabled: bool) -> float:
+    with sanitize.override(enabled):
+        t0 = time.perf_counter()
+        tpcc.run_tpcc_mix(db, n_ops, seed=seed)
+        return time.perf_counter() - t0
+
+
+def run(n_warehouses: int = 2, districts_per_wh: int = 10,
+        customers_per_district: int = 150, n_items: int = 1000,
+        orders_per_district: int = 50, n_shards: int = 2,
+        n_ops: int = 6000, chunks: int = 24, seed: int = 13) -> Dict:
+    population = tpcc.generate_tpcc(
+        n_warehouses=n_warehouses, districts_per_wh=districts_per_wh,
+        customers_per_district=customers_per_district, n_items=n_items,
+        orders_per_district=orders_per_district, seed=seed)
+
+    db_a = _build(population, n_shards)
+    db_b = _build(population, n_shards)
+    warm = max(50, n_ops // chunks // 2)
+    _chunk(db_a, warm, seed - 1, True)
+    _chunk(db_b, warm, seed - 1, False)
+
+    chunk_ops = max(20, n_ops // chunks)
+    chunk_ratios: List[float] = []
+    t_on_total = t_off_total = 0.0
+    for i in range(chunks):
+        cs = seed + 1 + i
+        a_enabled = i % 2 == 0
+        a_first = (i // 2) % 2 == 0
+        seq = [(db_a, a_enabled), (db_b, not a_enabled)]
+        if not a_first:
+            seq.reverse()
+        times = {}
+        for db, e in seq:
+            times[e] = _chunk(db, chunk_ops, cs, e)
+        t_on_total += times[True]
+        t_off_total += times[False]
+        chunk_ratios.append(times[False] / times[True])  # tps_on / tps_off
+
+    trim = max(0, len(chunk_ratios) // 8)
+    kept = sorted(chunk_ratios)[trim: len(chunk_ratios) - trim]
+    on_cost_ratio = statistics.geometric_mean(kept)
+    prim = _primitive_ns()
+    report = {
+        "scale": {"n_warehouses": n_warehouses,
+                  "districts_per_wh": districts_per_wh,
+                  "customers_per_district": customers_per_district,
+                  "n_items": n_items,
+                  "orders_per_district": orders_per_district,
+                  "n_shards": n_shards, "n_ops": n_ops,
+                  "chunks": chunks},
+        "sanitize_on_tps": round(chunks * chunk_ops / t_on_total, 1),
+        "sanitize_off_tps": round(chunks * chunk_ops / t_off_total, 1),
+        "chunk_ratios": [round(r, 4) for r in chunk_ratios],
+        "primitives": prim,
+        "acceptance": {
+            "off_ns_bound": OFF_NS_BOUND,
+            "boundary_disabled_ns": prim["boundary_disabled_ns"],
+            "on_cost_ratio": round(on_cost_ratio, 4),
+            "pass": bool(prim["boundary_disabled_ns"] <= OFF_NS_BOUND),
+        },
+    }
+    return report
+
+
+def main(quick: bool = True, smoke: bool = False) -> Dict:
+    if smoke:
+        report = run(n_warehouses=2, districts_per_wh=2,
+                     customers_per_district=30, n_items=100,
+                     orders_per_district=12, n_shards=2,
+                     n_ops=80, chunks=2)
+    elif quick:
+        report = run(n_ops=1200, chunks=6)
+    else:
+        report = run()
+    report["mode"] = "smoke" if smoke else ("quick" if quick else "full")
+    artifact = write_bench_json("sanitize", report, schema="tpcc_multi")
+    acc = report["acceptance"]
+    prim = report["primitives"]
+    us_on = 1e6 / report["sanitize_on_tps"]
+    us_off = 1e6 / report["sanitize_off_tps"]
+    print(f"sanitize_on,{us_on:.1f},tps={report['sanitize_on_tps']}")
+    print(f"sanitize_off,{us_off:.1f},tps={report['sanitize_off_tps']}")
+    print(f"sanitize_boundary,{prim['boundary_enabled_ns'] / 1e3},"
+          f"disabled_ns={prim['boundary_disabled_ns']}")
+    print(f"sanitize_acceptance,{acc['on_cost_ratio']},"
+          f"off_ns={acc['boundary_disabled_ns']};"
+          f"bound_ns={acc['off_ns_bound']};pass={acc['pass']}")
+    return report
+
+
+if __name__ == "__main__":
+    main(quick=False)

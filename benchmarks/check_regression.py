@@ -137,6 +137,10 @@ ARTIFACT_RULES: List[Tuple[str, List[str], str, Optional[float]]] = [
     ("BENCH_telemetry.json", ["acceptance", "pass"], "true", None),
     ("BENCH_telemetry.json", ["acceptance", "overhead_ratio"], "min", 0.97),
     ("BENCH_telemetry.json", ["acceptance", "identical"], "true", None),
+    # the boundary sanitizer's off path must stay a falsy branch: the
+    # disabled sweep call is bounded in ns (DESIGN.md §10)
+    ("BENCH_sanitize.json", ["acceptance", "pass"], "true", None),
+    ("BENCH_sanitize.json", ["acceptance", "boundary_disabled_ns"], "max", 1000.0),
     ("BENCH_db_tpcc.json", ["phases", "coverage"], "min", 0.9),
     ("BENCH_db_tpcc.json", ["phases", "coverage"], "max", 1.25),
 ]

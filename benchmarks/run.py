@@ -29,8 +29,9 @@ def main() -> None:
                             bench_fastpath, bench_framework,
                             bench_granularity, bench_htap,
                             bench_out_of_core, bench_recovery,
-                            bench_sampling, bench_telemetry,
-                            bench_update_merge, roofline_report)
+                            bench_sampling, bench_sanitize,
+                            bench_telemetry, bench_update_merge,
+                            roofline_report)
 
     if args.smoke:
         artifact.set_smoke(True)
@@ -45,6 +46,7 @@ def main() -> None:
         "recovery": bench_recovery,              # DESIGN.md §7 durability
         "htap": bench_htap,                      # DESIGN.md §8 scan engine
         "telemetry": bench_telemetry,            # DESIGN.md §9 overhead gate
+        "sanitize": bench_sanitize,              # DESIGN.md §10 overhead note
 
         "sampling": bench_sampling,              # Fig 10
         "entropy": bench_entropy_coders,         # Fig 11

@@ -423,9 +423,11 @@ def analyze_hlo(text: str, default_group: int) -> HloStats:
                 st.collective_counts[kind] = st.collective_counts.get(kind, 0) + m
                 st.collective_bytes[kind] = st.collective_bytes.get(kind, 0.0) + b * m
                 st.collective_wire_bytes += b * m
-            if cname not in fusion_bodies and \
-                    inst.opcode not in _SKIP_BYTES_OPS and \
-                    not inst.opcode.endswith("-done"):
+            if (
+                cname not in fusion_bodies
+                and inst.opcode not in _SKIP_BYTES_OPS
+                and not inst.opcode.endswith("-done")
+            ):
                 st.bytes_accessed += m * _memory_bytes(inst, comp.defs,
                                                        fusion_mem)
         if comp_flops:

@@ -37,7 +37,7 @@ import os
 import struct
 import tempfile
 import zlib
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -109,7 +109,7 @@ class ArenaReadError(ArenaError):
     this into quarantine + WAL rebuild instead of wrong answers.
     """
 
-    def __init__(self, offset: int, wanted: int, got: int):
+    def __init__(self, offset: int, wanted: int, got: int) -> None:
         super().__init__(
             f"short spill read at offset {offset}: wanted {wanted} bytes, " f"got {got}"
         )
@@ -125,7 +125,7 @@ class ExtentCorruptionError(ArenaError):
     the caller can map them back to blocks/rows and quarantine precisely.
     """
 
-    def __init__(self, indices: Sequence[int]):
+    def __init__(self, indices: Sequence[int]) -> None:
         super().__init__(
             f"{len(list(indices))} corrupt spill extent(s): "
             f"{sorted(int(i) for i in indices)[:8]}"
@@ -141,7 +141,7 @@ class SpillCorruptionError(ArenaError):
     handler it propagates (corrupt data is never returned to the caller).
     """
 
-    def __init__(self, row_ids: Sequence[int]):
+    def __init__(self, row_ids: Sequence[int]) -> None:
         super().__init__(f"spill corruption affecting {len(list(row_ids))} row(s)")
         self.row_ids = sorted(int(i) for i in row_ids)
 
@@ -413,7 +413,7 @@ class DiskArena:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def __del__(self):  # pragma: no cover - GC timing dependent
+    def __del__(self) -> None:  # pragma: no cover - GC timing dependent
         self.close()
 
 
@@ -486,7 +486,15 @@ class ResidencyManager:
         )
 
     # -- the clock/second-chance sweep (shared by every store) -----------
-    def sweep(self, n_items, need, candidates, sizes, ref_get, ref_clear):
+    def sweep(
+        self,
+        n_items: int,
+        need: int,
+        candidates: Callable[[np.ndarray], np.ndarray],
+        sizes: Callable[[np.ndarray], np.ndarray],
+        ref_get: Callable[[np.ndarray], np.ndarray],
+        ref_clear: Callable[[np.ndarray], None],
+    ) -> np.ndarray:
         """Pick victims worth >= ``need`` size units via two clock passes.
 
         Items are ids in ``[0, n_items)``; the callbacks are vectorized

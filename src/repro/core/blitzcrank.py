@@ -15,13 +15,17 @@ import contextlib
 import dataclasses
 import math
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro import telemetry
+from repro import sanitize, telemetry
+
+if TYPE_CHECKING:
+    from .plan import TablePlan
 
 from . import delayed
+from .casts import checked_asarray, checked_astype
 from .arena import (
     FRAME_OVERHEAD,
     ArenaReadError,
@@ -211,6 +215,7 @@ class TableCodec:
         stats.sample_rows = len(sample_rows)
 
         # ---- Semantic Learner step 1: structure learning on the sample ----
+        # blitzlint: waive[BL007] -- fit wall time is FitStats data returned to the caller, not a telemetry series
         t0 = time.perf_counter()
         order = [c.name for c in schema]
         parents: Dict[str, Optional[str]] = {c.name: None for c in schema}
@@ -226,17 +231,20 @@ class TableCodec:
                 rest = [c.name for c in schema if c.name not in disc]
                 order = sub_order + rest
                 parents.update(sub_parents)
+        # blitzlint: waive[BL007] -- fit wall time is FitStats data returned to the caller, not a telemetry series
         stats.structuring_s = time.perf_counter() - t0
         stats.order = tuple(order)
         stats.parents = dict(parents)
 
         # ---- Semantic Learner step 2: model generation on the full scan ----
+        # blitzlint: waive[BL007] -- fit wall time is FitStats data returned to the caller, not a telemetry series
         t0 = time.perf_counter()
         models: Dict[str, Any] = {}
         for c in schema:
             models[c.name] = fit_column_model(
                 c, rows, parents.get(c.name), block_tuples
             )
+        # blitzlint: waive[BL007] -- fit wall time is FitStats data returned to the caller, not a telemetry series
         stats.generation_s = time.perf_counter() - t0
         return cls(schema, models, order, stats, block_tuples, lam)
 
@@ -245,7 +253,7 @@ class TableCodec:
     # static slot plan once, then batch-encode/decode through the
     # vectorized codec (and the Pallas kernel for plain-table plans).
     # ------------------------------------------------------------------
-    def compile(self, force: bool = False):
+    def compile(self, force: bool = False) -> Optional["TablePlan"]:
         """Return the compiled :class:`~repro.core.plan.TablePlan` or None.
 
         Compilation is attempted once and cached; on fallback the reason is
@@ -297,6 +305,7 @@ class TableCodec:
         t0 = telemetry.clock()
         self._reset_block_state()
         enc = BlockEncoder()
+        # blitzlint: waive[BL001] -- scalar encode chains each model on the previous column value (sequential by design)
         for r in rows:
             ctx: Dict[str, Any] = {}
             for name in self.order:
@@ -304,7 +313,7 @@ class TableCodec:
                 ctx[name] = r[name]
         codes = delayed.encode_block(enc.slots, self.lam)
         _H_ENC_SCALAR.observe_since(t0)
-        return np.asarray(codes, dtype=np.uint16)
+        return checked_asarray(codes, np.uint16, where="scalar_compress codes")
 
     def compress_block(self, rows: Sequence[Dict[str, Any]]) -> np.ndarray:
         """Compress a block of rows into a uint16 code array.
@@ -344,6 +353,7 @@ class TableCodec:
         chunks: List[np.ndarray] = []
         fi = 0
         pos = 0
+        # blitzlint: waive[BL001] -- interleaves vectorized conforming blocks with per-row escape encodes
         for r in range(n):
             if fast[r]:
                 c = fcodes[foff[fi]:foff[fi + 1]]
@@ -353,8 +363,10 @@ class TableCodec:
             chunks.append(c)
             pos += len(c)
             offsets[r + 1] = pos
-        codes = (np.concatenate(chunks) if chunks else np.zeros(0, np.uint16)).astype(
-            np.uint16
+        codes = checked_astype(
+            np.concatenate(chunks) if chunks else np.zeros(0, np.uint16),
+            np.uint16,
+            where="compress_rows codes",
         )
         return codes, offsets, fast
 
@@ -375,7 +387,7 @@ class TableCodec:
         if plan is None:
             raise RuntimeError(f"codec did not compile: {self._plan_reason}")
         syms = plan.decode_select(
-            np.asarray(codes, np.uint16),
+            checked_asarray(codes, np.uint16, where="decompress_rows codes"),
             np.asarray(offsets, np.int64),
             np.asarray(indices, np.int64),
             backend=backend,
@@ -652,6 +664,44 @@ class CompressedTable:
         self._spilled_codes = 0
         self._enforce_budget()
 
+    def sanitize_boundary(self, where: str) -> None:
+        """``REPRO_SANITIZE=1`` boundary assertions (DESIGN.md §10): CSR
+        offset monotonicity, plan-version tag validity, residency
+        accounting vs ground truth, and zone-map well-formedness.  A
+        no-op (one falsy branch) when the sanitizer is off."""
+        if not sanitize.ENABLED:
+            return
+        nb = self.n_blocks
+        sanitize.check_csr_offsets(self._offsets[:nb + 1], self.used, where=where)
+        sanitize.check_plan_versions(
+            self._plan_ver[:nb], len(self._codecs), where=where
+        )
+        if self._res is not None:
+            res_mask = self._resident[:nb]
+            actual = int(self._disk_len[:nb][~res_mask].sum())
+            sanitize.check_residency(
+                self._spilled_codes,
+                actual,
+                res_mask,
+                self._disk_off[:nb],
+                where=where,
+            )
+        if self._zone_cols:
+            sanitize.check_zone_maps(self._zmin, self._zmax, where=where)
+
+    def note_repaired_rows(self, n: int) -> None:
+        """Designated entry point for repair drivers (WAL-backed stores) to
+        record ``n`` quarantined rows rebuilt from the log.  Foreign writes
+        to residency counters are confined to these note_* methods (BL004)."""
+        if self._res is not None:
+            self._res.repaired_rows += int(n)
+
+    def note_quarantined_rows(self, n: int) -> None:
+        """Record ``n`` rows quarantined by a failed checked spill read
+        (scan engine / fault-in paths)."""
+        if self._res is not None:
+            self._res.quarantined += int(n)
+
     def _init_new_blocks(self, first: int, n: int, rows: Optional[np.ndarray]) -> None:
         """Fresh blocks are resident and referenced (recently written)."""
         if self._res is None:
@@ -728,6 +778,7 @@ class CompressedTable:
         res.spills += int(blocks.size)
         _C_SPILL_BLOCKS.add(int(blocks.size))
         _H_SPILL.observe_since(t0)
+        self.sanitize_boundary("spill_blocks")
 
     def _fault_in(self, blocks: np.ndarray) -> None:
         """Promote spilled blocks: one coalesced disk read, then append the
@@ -781,6 +832,7 @@ class CompressedTable:
         res.fault_batches += 1
         _C_FAULT_BLOCKS.add(n)
         _H_FAULT.observe_since(t0)
+        self.sanitize_boundary("fault_in")
 
     def _maybe_compact_disk(self) -> None:
         res = self._res
@@ -986,6 +1038,7 @@ class CompressedTable:
             self._row2block[self._rows_stored] = self.n_blocks - 1
             self._init_new_blocks(self.n_blocks - 1, 1, np.asarray([self._rows_stored]))
         self._rows_stored += n_rows
+        self.sanitize_boundary("append_block")
 
     @property
     def block_offsets(self) -> np.ndarray:
@@ -1007,6 +1060,7 @@ class CompressedTable:
         """Bulk insert: one vectorized encode for all plan-conforming rows."""
         rows = list(rows)
         if self.codec.block_tuples != 1 or self.codec.compile() is None:
+            # blitzlint: waive[BL001] -- extend falls back to per-row append only for non-conforming rows (escape path)
             for r in rows:
                 self.append(r)
             return
@@ -1031,6 +1085,7 @@ class CompressedTable:
         self.block_rows.extend([1] * n)
         self._rows_stored += n
         self._enforce_budget()
+        self.sanitize_boundary("extend")
 
     def flush(self) -> None:
         if not self._pending:
@@ -1128,6 +1183,7 @@ class CompressedTable:
         with); the rest fall back to per-block scalar decode (each touched
         block decoded once, under its own version's codec).
         """
+        self.sanitize_boundary("get_many")
         idx_arr = np.asarray(list(indices), dtype=np.int64)
         n = idx_arr.size
         out: List[Optional[Dict[str, Any]]] = [None] * n
@@ -1169,6 +1225,7 @@ class CompressedTable:
                         blks[sel],
                         backend=self._resolve_backend(backend, sel.size, codec_v),
                     )
+                    # blitzlint: waive[BL001] -- scatters scalar-decoded escape rows back into the batched result
                     for j, r in zip(sel.tolist(), rows):
                         out[j] = r
             for j in np.nonzero(~fmask)[0].tolist():
@@ -1487,7 +1544,7 @@ class CompressedTable:
         snapshot exactly."""
         t = cls(state["codecs"][0], use_pallas=state["use_pallas"])
         t._codecs = list(state["codecs"])
-        arena = np.asarray(state["arena"], dtype=np.uint16)
+        arena = checked_asarray(state["arena"], np.uint16, where="from_state arena")
         t.arena = np.zeros(max(arena.size, 1024), dtype=np.uint16)
         t.arena[:arena.size] = arena
         t.used = int(arena.size)

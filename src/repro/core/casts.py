@@ -1,0 +1,59 @@
+"""Checked narrowing casts (blitzlint BL005 / DESIGN.md §10).
+
+The code paths that narrow to ``uint16``/``int32`` do so because the
+values are *structurally* bounded — delayed-coding emits codes below
+``TOTAL``, alias tables index symbol alphabets far below 2**31 — but a
+plain ``astype`` silently wraps when that reasoning rots.  These
+wrappers keep the fast path a plain cast while the sanitizer is off and
+validate the actual value range (raising
+:class:`~repro.sanitize.SanitizeError`) under ``REPRO_SANITIZE=1``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro import sanitize
+
+
+class NarrowingCastError(sanitize.SanitizeError):
+    """A checked narrowing cast would have wrapped or truncated."""
+
+
+def _check_bounds(arr: np.ndarray, dtype: Any, where: str) -> None:
+    info = np.iinfo(dtype)
+    if arr.size == 0:
+        return
+    lo, hi = int(arr.min()), int(arr.max())
+    if lo < info.min or hi > info.max:
+        sanitize._fail(
+            NarrowingCastError,
+            f"{where}: values span [{lo}, {hi}] outside "
+            f"{np.dtype(dtype).name} range [{info.min}, {info.max}]",
+        )
+
+
+def checked_astype(arr: np.ndarray, dtype: Any, *, where: str) -> np.ndarray:
+    """``arr.astype(dtype)`` with an opt-in bounds check.
+
+    ``where`` names the call site in the failure message (there is no
+    useful traceback once the wrapped value has flowed downstream).
+    """
+    if sanitize.ENABLED:
+        a = np.asarray(arr)
+        if a.dtype.kind in "iu":
+            _check_bounds(a, dtype, where)
+    return arr.astype(dtype)
+
+
+def checked_asarray(values: Any, dtype: Any, *, where: str) -> np.ndarray:
+    """``np.asarray(values, dtype)`` with an opt-in bounds check (for
+    call sites converting Python lists straight into a narrow dtype)."""
+    if sanitize.ENABLED:
+        a = np.asarray(values)
+        if a.dtype.kind in "iu":
+            _check_bounds(a, dtype, where)
+        return a.astype(dtype)
+    return np.asarray(values, dtype=dtype)

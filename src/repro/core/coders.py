@@ -23,6 +23,8 @@ from typing import Tuple
 
 import numpy as np
 
+from .casts import checked_astype
+
 TOTAL_BITS = 16
 TOTAL = 1 << TOTAL_BITS  # 2**16: the fixed code-space size (§5.1)
 
@@ -202,11 +204,11 @@ def build_alias(k: np.ndarray) -> AliasTables:
         m_bits=m,
         k_of=k.astype(np.uint32),
         threshold=threshold.astype(np.uint32),
-        sym_u=sym_u.astype(np.int32),
-        sym_v=sym_v.astype(np.int32),
+        sym_u=checked_astype(sym_u, np.int32, where="alias sym_u"),
+        sym_v=checked_astype(sym_v, np.int32, where="alias sym_v"),
         ja=ja,
         jb=jb,
-        seg_off=seg_off.astype(np.int32),
+        seg_off=checked_astype(seg_off, np.int32, where="alias seg_off"),
         seg_cum=np.asarray(seg_cum_l, dtype=np.int64),
         seg_start=np.asarray(seg_start_l, dtype=np.int64),
     )
@@ -225,21 +227,21 @@ class DiscreteCoder:
 
     __slots__ = ("tables", "_cdf", "_lut_sym", "_lut_a", "_lut_k")
 
-    def __init__(self, quantized: np.ndarray):
+    def __init__(self, quantized: np.ndarray) -> None:
         self.tables = build_alias(quantized)
         self._cdf = None
         self._lut_sym = None
         self._lut_a = None
         self._lut_k = None
 
-    def __getstate__(self):
+    def __getstate__(self) -> "AliasTables":
         # The cdf and 2**16-entry LUT caches are pure functions of the
         # alias tables but dominate a pickled coder ~100x once any decode
         # has built them — drop them and rebuild lazily after unpickling
         # (checkpoint shrink, DESIGN.md §8).
         return self.tables
 
-    def __setstate__(self, tables):
+    def __setstate__(self, tables: "AliasTables") -> None:
         self.tables = tables
         self._cdf = None
         self._lut_sym = None
@@ -280,7 +282,9 @@ class DiscreteCoder:
         return int(t.seg_start[r]) + (a - int(t.seg_cum[r]))
 
     # -- vectorized API ---------------------------------------------------
-    def inv_translate_batch(self, codes: np.ndarray):
+    def inv_translate_batch(
+        self, codes: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         t = self.tables
         codes = np.asarray(codes, dtype=np.int64)
         shift = TOTAL_BITS - t.m_bits
@@ -319,11 +323,11 @@ class DiscreteCoder:
         return self._cdf
 
     # -- direct 2**16 LUT (the "decoding map" variant of Fig 11) ---------
-    def build_lut(self):
+    def build_lut(self) -> Tuple[np.ndarray, np.ndarray]:
         if self._lut_sym is None:
             codes = np.arange(TOTAL, dtype=np.int64)
             sym, a, k = self.inv_translate_batch(codes)
-            self._lut_sym = sym.astype(np.int32)
+            self._lut_sym = checked_astype(sym, np.int32, where="build_lut sym")
             self._lut_a = a.astype(np.int64)
             self._lut_k = k.astype(np.int64)
         return self._lut_sym, self._lut_a
@@ -343,7 +347,7 @@ class UniformCoder:
 
     __slots__ = ("G",)
 
-    def __init__(self, G: int):
+    def __init__(self, G: int) -> None:
         if not (1 <= G <= TOTAL):
             raise ValueError(f"uniform coder arity out of range: {G}")
         self.G = int(G)
@@ -362,7 +366,9 @@ class UniformCoder:
     def code_for(self, j: int, a: int) -> int:
         return self._lo(j) + a
 
-    def inv_translate_batch(self, codes: np.ndarray):
+    def inv_translate_batch(
+        self, codes: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         codes = np.asarray(codes, dtype=np.int64)
         j = (codes * self.G) >> TOTAL_BITS
         lo = -((-j * TOTAL) // self.G)

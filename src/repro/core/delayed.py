@@ -91,7 +91,9 @@ class BlockDecoder:
 
     __slots__ = ("codes", "pos", "v_info", "v_size", "pending", "lam")
 
-    def __init__(self, codes: Sequence[int], lam: int = LAMBDA_DEFAULT):
+    def __init__(
+        self, codes: Sequence[int], lam: int = LAMBDA_DEFAULT
+    ) -> None:
         self.codes = codes
         self.pos = 0
         self.v_info = 0

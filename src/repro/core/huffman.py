@@ -23,7 +23,7 @@ MAX_LEN = 32
 class BitWriter:
     __slots__ = ("buf", "acc", "nbits")
 
-    def __init__(self):
+    def __init__(self) -> None:
         self.buf = bytearray()
         self.acc = 0
         self.nbits = 0
@@ -47,7 +47,7 @@ class BitWriter:
 class BitReader:
     __slots__ = ("data", "pos")
 
-    def __init__(self, data: bytes, bit_offset: int = 0):
+    def __init__(self, data: bytes, bit_offset: int = 0) -> None:
         self.data = data
         self.pos = bit_offset
 
@@ -66,7 +66,7 @@ class BitReader:
 class HuffmanCode:
     """Canonical Huffman code for one column."""
 
-    def __init__(self, counts: np.ndarray):
+    def __init__(self, counts: np.ndarray) -> None:
         counts = np.asarray(counts, dtype=np.float64)
         n = counts.size
         if n == 1:

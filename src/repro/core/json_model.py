@@ -43,7 +43,9 @@ def _type_of(v: Any) -> str:
 class JsonNodeModel:
     """Model for one schema-tree node, built from sample values at the path."""
 
-    def __init__(self, values: Sequence[Any], present: int, total: int):
+    def __init__(
+        self, values: Sequence[Any], present: int, total: int
+    ) -> None:
         self.optional = present < total
         if self.optional:
             self.exist = CategoricalModel(
@@ -151,12 +153,12 @@ _MISSING = _Missing()
 class JsonCodec:
     """Collection-level facade: fit on sample objects, encode/decode each."""
 
-    def __init__(self, samples: Sequence[Any]):
+    def __init__(self, samples: Sequence[Any]) -> None:
         self.root = JsonNodeModel(
             list(samples), present=len(samples), total=len(samples)
         )
 
-    def encode(self, obj: Any):
+    def encode(self, obj: Any) -> List[int]:
         from . import delayed
         enc = BlockEncoder()
         self.root.encode(obj, enc)

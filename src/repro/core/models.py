@@ -27,7 +27,7 @@ class BlockEncoder:
 
     __slots__ = ("slots",)
 
-    def __init__(self):
+    def __init__(self) -> None:
         self.slots: List[Slot] = []
 
     def add(self, coder, sym: int) -> None:
@@ -73,7 +73,9 @@ def _decode_f64(dec: BlockDecoder) -> float:
 class CategoricalModel:
     """Frequency model over observed values + escape for unseen ones."""
 
-    def __init__(self, values: Sequence[Any], esc_weight: float | None = None):
+    def __init__(
+        self, values: Sequence[Any], esc_weight: float | None = None
+    ) -> None:
         counts = Counter(values)
         self.id2value = list(counts.keys())
         self.value2id = {v: i for i, v in enumerate(self.id2value)}
@@ -216,7 +218,9 @@ class NumericModel:
             j -= d * w
             enc.add(coder, d)
 
-    def decode_value(self, dec: BlockDecoder, ctx=None):
+    def decode_value(
+        self, dec: BlockDecoder, ctx: Optional[Dict[str, Any]] = None
+    ) -> Any:
         i = dec.next_symbol(self.l1)
         if i == self.esc:
             v = _decode_f64(dec)
@@ -229,7 +233,7 @@ class NumericModel:
             return int(round(self.vmin + q * self.p))
         return self.vmin + (q + 0.5) * self.p
 
-    def roundtrip(self, v: float):
+    def roundtrip(self, v: float) -> float:
         """The value the decoder will reconstruct for input ``v``."""
         q = int(self._quantize(v))
         if not (0 <= q < self.total_steps):
@@ -268,7 +272,9 @@ class ByteMarkov:
 
     START, END = 256, 256  # state 256 = start-of-word; symbol 256 = end
 
-    def __init__(self, words: Sequence[bytes], smoothing: float = 0.1):
+    def __init__(
+        self, words: Sequence[bytes], smoothing: float = 0.1
+    ) -> None:
         trans: Dict[int, Counter] = {}
         for w in words:
             prev = self.START
@@ -522,10 +528,14 @@ class ConditionalCategoricalModel:
         pv = ctx.get(self.parent) if ctx else None
         return self.cond.get(pv, self.marginal)
 
-    def encode_value(self, v, enc, ctx=None):
+    def encode_value(
+        self, v: Any, enc: Any, ctx: Optional[Dict[str, Any]] = None
+    ) -> None:
         self._model(ctx).encode_value(v, enc)
 
-    def decode_value(self, dec, ctx=None):
+    def decode_value(
+        self, dec: Any, ctx: Optional[Dict[str, Any]] = None
+    ) -> Any:
         return self._model(ctx).decode_value(dec)
 
     def est_bits(self, v) -> float:
@@ -548,7 +558,9 @@ class TimeSeriesModel:
     random access (needs the previous row), matching the paper's caveat.
     """
 
-    def __init__(self, values: Sequence[float], precision: float = 1.0, T: int = 512):
+    def __init__(
+        self, values: Sequence[float], precision: float = 1.0, T: int = 512
+    ) -> None:
         v = np.asarray(values, dtype=np.float64)
         if v.size < 3:
             v = np.zeros(3)

@@ -33,11 +33,12 @@ import contextlib
 import math
 
 import numpy as np
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
-from repro import telemetry
+from repro import sanitize, telemetry
 
 from . import vectorized
+from .casts import checked_astype
 from .coders import TOTAL, DiscreteCoder, UniformCoder
 from .models import (
     CategoricalModel,
@@ -84,6 +85,7 @@ def _safe_get(get, v, default: int = -1) -> int:
 
 def _obj_array(values: Sequence, pad: Any = None) -> np.ndarray:
     out = np.empty(len(values) + 1, dtype=object)
+    # blitzlint: waive[BL001] -- boundary conversion of heterogeneous Python values into an object array
     for i, v in enumerate(values):
         out[i] = v
     out[len(values)] = pad  # escape symbol row (never produced by the plan)
@@ -97,7 +99,7 @@ def _obj_array(values: Sequence, pad: Any = None) -> np.ndarray:
 class _CatPlan:
     """CategoricalModel -> 1 DiscreteCoder slot; escape rows non-conforming."""
 
-    def __init__(self, model: CategoricalModel):
+    def __init__(self, model: CategoricalModel) -> None:
         self.m = model
         self.n_slots = 1
         self._values = _obj_array(model.id2value)
@@ -113,6 +115,13 @@ class _CatPlan:
         return ids[:, None], ids >= 0
 
     def decode(self, syms: np.ndarray, ctx: Dict[str, Any]) -> np.ndarray:
+        if sanitize.ENABLED:
+            # Alphabet = id2value rows + the escape-pad row appended by
+            # _obj_array; the np.minimum clamp below would silently hide
+            # a wider (corrupt) code, so check loudly first.
+            sanitize.check_code_range(
+                syms[:, 0], len(self._values), where="_CatPlan.decode", slot=0
+            )
         return self._values[np.minimum(syms[:, 0], len(self._values) - 1)]
 
     def conforms(self, v, row) -> bool:
@@ -122,7 +131,7 @@ class _CatPlan:
 class _NumPlan:
     """NumericModel -> level-1 DiscreteCoder + level-2 UniformCoder digits."""
 
-    def __init__(self, model: NumericModel):
+    def __init__(self, model: NumericModel) -> None:
         self.m = model
         self.n_slots = 1 + len(model.l2)
 
@@ -144,6 +153,7 @@ class _NumPlan:
             # Mixed-type column: convert per element so only the rows that
             # actually fail are charged (scalar `conforms` semantics).
             v = np.zeros(n, np.float64)
+            # blitzlint: waive[BL001] -- mixed-type fallback escapes non-conforming values one at a time
             for r, x in enumerate(vals):
                 try:
                     v[r] = float(x)
@@ -219,6 +229,7 @@ class _CondPlan:
         m = self.m
         pvals = ctx[m.parent]
         ids = np.empty(len(vals), np.int64)
+        # blitzlint: waive[BL001] -- conditional-slot encode keys each codebook on the row's parent value
         for r, (pv, v) in enumerate(zip(pvals, vals)):
             sub = m.cond.get(pv, m.marginal) if _hashable(pv) else m.marginal
             ids[r] = _safe_get(sub.value2id.get, v)
@@ -228,6 +239,7 @@ class _CondPlan:
         m = self.m
         pvals = ctx[m.parent]
         out = np.empty(syms.shape[0], dtype=object)
+        # blitzlint: waive[BL001] -- conditional-slot decode selects a per-row codebook from the parent symbol
         for r in range(syms.shape[0]):
             sub = m.cond.get(pvals[r], m.marginal)
             s = int(syms[r, 0])
@@ -253,7 +265,7 @@ class _StrPlan:
     escape delimiters are non-conforming.
     """
 
-    def __init__(self, model: StringModel):
+    def __init__(self, model: StringModel) -> None:
         m = model
         counts = getattr(m, "n_words_counts", None)
         if not counts:
@@ -300,6 +312,7 @@ class _StrPlan:
         wget = m.dict_model.value2id.get
         dget = m.delim_model.value2id.get
         base = 1 + self._nn
+        # blitzlint: waive[BL001] -- string tokenizer walks variable-length values on the fit/escape path
         for r, v in enumerate(vals):
             s = v if isinstance(v, str) else str(v)
             segs = m._split(s)
@@ -390,7 +403,9 @@ def _build_cond(
 class TablePlan:
     """A compiled codec: static slots + vectorized value<->symbol tables."""
 
-    def __init__(self, codec, lowerings: List[Tuple[str, Any, int]]):
+    def __init__(
+        self, codec: Any, lowerings: List[Tuple[str, Any, int]]
+    ) -> None:
         self.codec = codec
         self.order = list(codec.order)
         self.lowerings = lowerings
@@ -440,7 +455,7 @@ class TablePlan:
         self.window_rows += n
 
     @contextlib.contextmanager
-    def pause_escape_accounting(self):
+    def pause_escape_accounting(self) -> Iterator[None]:
         """Suspend counter updates for maintenance re-encodes.
 
         Migration re-encodes rows that already escaped once; charging them
@@ -501,7 +516,7 @@ class TablePlan:
         """Symbols -> CSR ``(codes uint16, offsets int64[N+1])``."""
         t0 = telemetry.clock()
         codes, offsets = vectorized.encode_batch(syms, self.coders, self.lam)
-        codes = codes.astype(np.uint16)
+        codes = checked_astype(codes, np.uint16, where="encode_batch codes")
         _C_ENCODE_ROWS.add(syms.shape[0])
         _H_ENCODE.observe_since(t0)
         return codes, offsets
@@ -573,7 +588,7 @@ class TablePlan:
         out = delayed_decode(jnp.asarray(dense), tables, m_bits)
         return np.asarray(out).astype(np.int64)
 
-    def pallas_tables(self):
+    def pallas_tables(self) -> Tuple[Any, int]:
         """Lazy ``(tables f32[S, M, 7], m_bits)`` in the kernel's layout."""
         if self._tables is None:
             t0 = telemetry.clock()
@@ -651,6 +666,7 @@ def lower_cat_ids(cp: _CatPlan, values: Sequence[Any]) -> np.ndarray:
     an in-vocabulary id, so a missing literal can never match a fast block.
     """
     ids = set()
+    # blitzlint: waive[BL001] -- fit-time categorical lowering, not the per-op hot path
     for v in values:
         i = _safe_get(cp.m.value2id.get, v)
         if i >= 0:

@@ -15,10 +15,11 @@ paper's (§5.1) and are asserted here.
 
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Any, Dict, Iterator, Sequence, Tuple
 
 import numpy as np
 
+from .casts import checked_astype
 from .coders import TOTAL, TOTAL_BITS, DiscreteCoder, UniformCoder
 from .delayed import LAMBDA_DEFAULT
 
@@ -42,7 +43,13 @@ class CondSlot:
 
     __slots__ = ("chain_slots", "bases", "by_key", "default")
 
-    def __init__(self, chain_slots, bases, by_key, default):
+    def __init__(
+        self,
+        chain_slots: Sequence[int],
+        bases: Sequence[int],
+        by_key: Dict[int, Any],
+        default: Any,
+    ) -> None:
         assert len(chain_slots) == len(bases)
         self.chain_slots = tuple(int(s) for s in chain_slots)
         self.bases = tuple(int(b) for b in bases)
@@ -55,14 +62,16 @@ class CondSlot:
             key = key * b + syms[:, s]
         return key
 
-    def groups(self, syms: np.ndarray):
+    def groups(self, syms: np.ndarray) -> Iterator[Tuple[np.ndarray, Any]]:
         """Yield ``(mask, coder)`` partitioning the batch by chain key."""
         key = self.packed_key(syms)
         for kk in np.unique(key):
             yield key == kk, self.by_key.get(int(kk), self.default)
 
 
-def _inv_translate_batch(coder, codes: np.ndarray):
+def _inv_translate_batch(
+    coder: Any, codes: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """inv_translate with the O(1) LUT (Fig 11 "decoding map") when built."""
     if isinstance(coder, DiscreteCoder) and coder._lut_sym is not None:
         return coder._lut_sym[codes], coder._lut_a[codes], coder._lut_k[codes]
@@ -129,7 +138,7 @@ def encode_batch(
             c = coders[s].code_for_batch(syms[:, s], a_i).astype(_U64)
         v = virt[:, s]
         data = np.where(v, (data << _SH16) + c, data)
-        codes_buf[:, s] = c.astype(np.uint16)
+        codes_buf[:, s] = checked_astype(c, np.uint16, where="encode_batch slot")
     assert (data == 0).all(), "virtual payload not consumed (App. D uniqueness)"
 
     phys = ~virt

@@ -10,8 +10,12 @@ claim is about, and the one ``benchmarks/bench_db_tpcc.py`` reports.
 
 from __future__ import annotations
 
+import contextlib
 import os
-from typing import Any, Dict, Iterator, List, Optional, Sequence
+from typing import TYPE_CHECKING, Any, Dict, Iterator, List, Optional, Sequence
+
+if TYPE_CHECKING:
+    from repro.durability.wal import WriteAheadLog
 
 from repro import telemetry
 
@@ -186,6 +190,42 @@ class Database:
         self._note_ops(0)  # honor a checkpoint request from the steps
         return out
 
+    # -- recovery entry points (DESIGN.md §7) -----------------------------
+    # The recovery module drives engine-private catalog and checkpoint
+    # state through these instead of reaching into ``_tables`` /
+    # ``_recovering`` directly (blitzlint BL004).
+
+    def adopt_table(self, table: Table, wal: "WriteAheadLog") -> None:
+        """Register an externally rebuilt table and wire its durability
+        hooks — the recovery-path counterpart of :meth:`create_table`."""
+        self._tables[table.name] = table
+        table.attach_wal(wal, io=self._io, on_ops=self._note_ops)
+        table.on_shards_built(self._wire_maintenance)
+        if table.shards:
+            self._wire_maintenance(table)
+
+    def discard_table(self, name: str) -> None:
+        """Drop ``name`` from the catalog without closing its files
+        (recovery replaces a corrupt snapshot with a from-log rebuild)."""
+        self._tables.pop(name, None)
+
+    @contextlib.contextmanager
+    def recovery_mode(self) -> Iterator[None]:
+        """Inhibit checkpoints while replay re-drives the batched verbs —
+        a mid-replay snapshot would pair a prefix state with a full-tail
+        LSN."""
+        self._recovering = True
+        try:
+            yield
+        finally:
+            self._recovering = False
+
+    def reset_checkpoint_clock(self) -> None:
+        """Zero the ops-since-checkpoint cadence after recovery: replayed
+        traffic must not count toward the next checkpoint trigger."""
+        self._ops_since_ckpt = 0
+        self._ckpt_requested = False
+
     # -- durability (DESIGN.md §7) ---------------------------------------
     def _attach_durability(
         self, table: Table, sample_rows: Optional[Sequence[Dict[str, Any]]]
@@ -198,7 +238,7 @@ class Database:
             fsync_every=self._dur.fsync_every,
         )
         table.attach_wal(wal, io=self._io, on_ops=self._note_ops)
-        table._on_shards_built = self._wire_maintenance
+        table.on_shards_built(self._wire_maintenance)
         if table.shards:
             self._wire_maintenance(table)
         if wal.lsn == 0:

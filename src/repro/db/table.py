@@ -161,6 +161,14 @@ class Table:
         if self._on_shards_built is not None:
             self._on_shards_built(self)
 
+    def on_shards_built(
+        self, callback: Optional[Callable[["Table"], None]]
+    ) -> None:
+        """Designated entry point for the owning engine to (re)wire the
+        shards-built hook (maintenance wiring on build/rebuild).  Foreign
+        writes to ``_on_shards_built`` are confined here (BL004)."""
+        self._on_shards_built = callback
+
     @property
     def shards(self) -> List[RowStore]:
         return list(self._shards)

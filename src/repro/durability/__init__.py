@@ -5,10 +5,15 @@ See DESIGN.md §7.  ``Database(durability=...)`` turns the layer on;
 from its checkpoint and WAL tail after a crash.
 """
 
+from typing import TYPE_CHECKING, Any
+
 from .checkpoint import load_checkpoint, write_checkpoint
 from .config import DurabilityConfig
 from .io import DurableIO, FaultInjector, SimulatedCrash
 from .wal import WalError, WalPoisonedError, WriteAheadLog
+
+if TYPE_CHECKING:
+    from repro.db.database import Database
 
 __all__ = [
     "DurabilityConfig",
@@ -24,7 +29,7 @@ __all__ = [
 ]
 
 
-def open_database(root, **kwargs):
+def open_database(root: str, **kwargs: Any) -> "Database":
     """Recover a durable database from ``root`` (lazy import of recovery)."""
     from .recovery import open_database as _open
 

@@ -237,7 +237,9 @@ def run_corruption_scenarios(seed: int = 0,
     return results
 
 
-def _durable_customer_db(root: str, rows, io=None):
+def _durable_customer_db(
+    root: str, rows: List[Dict[str, Any]], io: Optional[Any] = None
+) -> Tuple[Database, Any, TableSchema]:
     schema = _schema()
     cfg = DurabilityConfig(root=root, fsync_every=1, io=io)
     db = Database(backend="blitzcrank", memory_budget=4 * 1024,

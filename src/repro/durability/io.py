@@ -35,7 +35,7 @@ class SimulatedCrash(BaseException):
     crash-matrix harness (and tests) catch it.
     """
 
-    def __init__(self, point: str):
+    def __init__(self, point: str) -> None:
         super().__init__(f"simulated crash at {point!r}")
         self.point = point
 
@@ -50,7 +50,7 @@ class FaultInjector:
     silently skipped.
     """
 
-    def __init__(self, seed: int = 0):
+    def __init__(self, seed: int = 0) -> None:
         self.rng = random.Random(int(seed))
         self._crash: Dict[str, int] = {}
         self._faults: Dict[str, List[str]] = {op: [] for op in FAULT_OPS}
@@ -105,7 +105,7 @@ class DurableIO:
     faults and armed crash points fire deterministically.
     """
 
-    def __init__(self, injector: Optional[FaultInjector] = None):
+    def __init__(self, injector: Optional[FaultInjector] = None) -> None:
         self.injector = injector
 
     def point(self, name: str) -> None:

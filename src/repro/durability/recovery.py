@@ -49,14 +49,6 @@ def _replay(table: Table, wal: WriteAheadLog, from_lsn: int) -> int:
     return n
 
 
-def _adopt(db: Database, table: Table, wal: WriteAheadLog) -> None:
-    db._tables[table.name] = table
-    table.attach_wal(wal, io=db._io, on_ops=db._note_ops)
-    table._on_shards_built = db._wire_maintenance
-    if table.shards:
-        db._wire_maintenance(table)
-
-
 def _rebuild_from_log(db: Database, wal: WriteAheadLog) -> bool:
     """Rebuild one table from its WAL's full history, starting at the
     ``create`` record that heads every log.  Returns False when nothing
@@ -76,7 +68,7 @@ def _rebuild_from_log(db: Database, wal: WriteAheadLog) -> bool:
         store_kwargs=kwargs,
         memory_budget=meta["memory_budget"],
     )
-    _adopt(db, table, wal)
+    db.adopt_table(table, wal)
     _replay(table, wal, lsn)
     return True
 
@@ -110,8 +102,7 @@ def open_database(
         memory_budget=engine.get("memory_budget"),
         durability=cfg,
     )
-    db._recovering = True
-    try:
+    with db.recovery_mode():
         if ck:
             for name, entry in ck["tables"].items():
                 wal = WriteAheadLog(
@@ -121,7 +112,7 @@ def open_database(
                 )
                 try:
                     table = Table.from_snapshot(entry["snapshot"], spill_io=db._io)
-                    _adopt(db, table, wal)
+                    db.adopt_table(table, wal)
                     _replay(table, wal, entry["wal_lsn"])
                 except SpillCorruptionError:
                     # An extent-mode checkpoint references spill-file
@@ -129,7 +120,7 @@ def open_database(
                     # (or the crash tore).  The WAL keeps full history
                     # exactly for this: drop the snapshot and rebuild the
                     # table from its create record forward.
-                    db._tables.pop(name, None)
+                    db.discard_table(name)
                     _rebuild_from_log(db, wal)
         for fn in sorted(os.listdir(cfg.root)):
             if not fn.endswith(".wal") or fn[:-4] in db:
@@ -140,8 +131,5 @@ def open_database(
                 os.path.join(cfg.root, fn), io=db._io, fsync_every=fsync_every
             )
             _rebuild_from_log(db, wal)
-    finally:
-        db._recovering = False
-    db._ops_since_ckpt = 0
-    db._ckpt_requested = False
+    db.reset_checkpoint_clock()
     return db

@@ -29,7 +29,7 @@ import struct
 import zlib
 from typing import Any, Iterator, Optional, Tuple
 
-from repro import telemetry
+from repro import sanitize, telemetry
 from repro.core.arena import OS_IO
 
 RECORD_MAGIC = 0x57414C31  # "WAL1"
@@ -120,6 +120,12 @@ class WriteAheadLog:
         self._pending.clear()
         self._tail += len(buf)
         _C_BYTES.add(len(buf))
+        if sanitize.ENABLED:
+            # The LSN is the durable byte tail: after a group write it must
+            # equal the physical file length (shorter = torn/lost write).
+            sanitize.check_wal_lsn(
+                self._tail, os.fstat(self._fd).st_size, where=self.path
+            )
         self.io.point("wal.after_flush")
 
     def log(self, op: str, payload: Any) -> None:
@@ -132,7 +138,7 @@ class WriteAheadLog:
         _C_RECORDS.inc()
 
     @contextlib.contextmanager
-    def suspend(self):
+    def suspend(self) -> Iterator["WriteAheadLog"]:
         """No-op appends inside the block (used during recovery replay)."""
         prev = self.suspended
         self.suspended = True
@@ -182,5 +188,5 @@ class WriteAheadLog:
         except FileNotFoundError:
             pass
 
-    def __del__(self):  # pragma: no cover - GC timing dependent
+    def __del__(self) -> None:  # pragma: no cover - GC timing dependent
         self.close()

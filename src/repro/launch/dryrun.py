@@ -112,7 +112,9 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
-    ap.add_argument("--layout", default="tp", choices=["tp", "cp", "fsdp", "kvq", "noFSDP"])
+    ap.add_argument(
+        "--layout", default="tp", choices=["tp", "cp", "fsdp", "kvq", "noFSDP"]
+    )
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
@@ -121,8 +123,11 @@ def main() -> None:
     out_dir.mkdir(parents=True, exist_ok=True)
 
     archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
-    shapes = [s.name for s in SHAPES] if (args.all or args.shape is None) \
+    shapes = (
+        [s.name for s in SHAPES]
+        if (args.all or args.shape is None)
         else [args.shape]
+    )
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
 
     n_ok = n_fail = n_skip = 0

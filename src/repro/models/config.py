@@ -118,10 +118,15 @@ class ModelConfig:
             ff_mult = 3 if self.act == "swiglu" else 2
             expert = ff_mult * d * de
             n_moe = L - self.moe.first_k_dense
-            total = emb + L * (attn + 2 * d) + \
-                self.moe.first_k_dense * mlp + \
-                n_moe * ((self.moe.n_experts + self.moe.n_shared) * expert +
-                         d * self.moe.n_experts)
+            total = (
+                emb
+                + L * (attn + 2 * d)
+                + self.moe.first_k_dense * mlp
+                + n_moe * (
+                    (self.moe.n_experts + self.moe.n_shared) * expert
+                    + d * self.moe.n_experts
+                )
+            )
         if self.family == "ssm":
             # xLSTM blocks replace attn+mlp with gated recurrent projections
             total = emb + L * (8 * d * d // 2 + 2 * d)

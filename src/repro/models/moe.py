@@ -102,8 +102,9 @@ def moe_apply(p, x: jax.Array, cfg: ModelConfig
 
     # expert FFN: einsums with a leading expert axis (EP shards this)
     if cfg.act == "swiglu":
-        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["wg"])) * \
-            jnp.einsum("becd,edf->becf", buf, p["wi"])
+        h = jax.nn.silu(
+            jnp.einsum("becd,edf->becf", buf, p["wg"])
+        ) * jnp.einsum("becd,edf->becf", buf, p["wi"])
     elif cfg.act == "relu2":
         h = jnp.square(jax.nn.relu(jnp.einsum("becd,edf->becf", buf, p["wi"])))
     else:

@@ -59,8 +59,9 @@ def init_params(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
         "final_norm": jnp.zeros((d,), jnp.float32),
     }
     if not cfg.tie_embeddings:
-        params["lm_head"] = jax.random.normal(keys[1], (d, cfg.vocab), dt) \
-            * (1.0 / d) ** 0.5
+        params["lm_head"] = (
+            jax.random.normal(keys[1], (d, cfg.vocab), dt) * (1.0 / d) ** 0.5
+        )
 
     def dense_block(k):
         ks = jax.random.split(k, 2)
@@ -228,8 +229,10 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
             xc = xc + a
             h = rms_norm(xc, p_l["ln2"], cfg.norm_eps)
             xc = xc + mlp_apply(p_l["mlp"], h, cfg.act)
-            return ax(xc, "batch", "act_seq", "embed"), \
-                (kv if collect_cache else None)
+            return (
+                ax(xc, "batch", "act_seq", "embed"),
+                (kv if collect_cache else None),
+            )
         win = windows if windows is not None else np.full(
             cfg.n_layers, _BIG_WINDOW, np.int32)
         x, ys = jax.lax.scan(_remat(cfg, body), x, (params["blocks"], win))
@@ -244,8 +247,10 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
                 a, kv = _attn_branch(p_l["attn"], cfg, h, positions, None)
                 xc = xc + a
                 h = rms_norm(xc, p_l["ln2"], cfg.norm_eps)
-                return xc + mlp_apply(p_l["mlp"], h, cfg.act), \
-                    (kv if collect_cache else None)
+                return (
+                    xc + mlp_apply(p_l["mlp"], h, cfg.act),
+                    (kv if collect_cache else None),
+                )
             x, dys = jax.lax.scan(_remat(cfg, dbody), x,
                                   params["dense_blocks"])
 
@@ -256,8 +261,10 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
             xc = xc + at
             h = rms_norm(xc, p_l["ln2"], cfg.norm_eps)
             y, a = moe_apply(p_l["moe"], h, cfg)
-            return (ax(xc + y, "batch", "act_seq", "embed"), aux_c + a), \
-                (kv if collect_cache else None)
+            return (
+                (ax(xc + y, "batch", "act_seq", "embed"), aux_c + a),
+                (kv if collect_cache else None),
+            )
         (x, aux), ys = jax.lax.scan(_remat(cfg, body), (x, aux),
                                     params["blocks"])
         if collect_cache:
@@ -283,8 +290,10 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
             xc = xc + attn_output(p_l["cross"], o)
             h = rms_norm(xc, p_l["ln2"], cfg.norm_eps)
             xc = xc + mlp_apply(p_l["mlp"], h, cfg.act)
-            return ax(xc, "batch", "act_seq", "embed"), \
-                ((kv, (ck, cv)) if collect_cache else None)
+            return (
+                ax(xc, "batch", "act_seq", "embed"),
+                ((kv, (ck, cv)) if collect_cache else None),
+            )
         x, ys = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
         if collect_cache:
             (cache["k"], cache["v"]), (cache["cross_k"], cache["cross_v"]) = ys
@@ -302,8 +311,10 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
             y, sst = ssm_lib.slstm_apply(p_g["slstm"], h, cfg,
                                          return_state=True)
             xc = xc + y
-            return ax(xc, "batch", "act_seq", "embed"), \
-                ((msts, sst) if collect_cache else None)
+            return (
+                ax(xc, "batch", "act_seq", "embed"),
+                ((msts, sst) if collect_cache else None),
+            )
         x, ys = jax.lax.scan(_remat(cfg, body), x, params["blocks"])
         if collect_cache:
             cache["mlstm"], cache["slstm"] = ys
@@ -320,8 +331,10 @@ def forward(params, cfg: ModelConfig, tokens: jax.Array,
             xc = xc + fused
             h = rms_norm(xc, p_l["ln2"], cfg.norm_eps)
             xc = xc + mlp_apply(p_l["mlp"], h, cfg.act)
-            return ax(xc, "batch", "act_seq", "embed"), \
-                ((kv, hT) if collect_cache else None)
+            return (
+                ax(xc, "batch", "act_seq", "embed"),
+                ((kv, hT) if collect_cache else None),
+            )
         x, ys = jax.lax.scan(_remat(cfg, body), x, (params["blocks"], windows))
         if collect_cache:
             (cache["k"], cache["v"]), cache["mamba"] = ys
@@ -565,9 +578,11 @@ def decode_step(params, cfg: ModelConfig, state: Dict[str, Any],
         new_state["k_tail"], new_state["v_tail"] = ktn, vtn
 
     elif cfg.family == "hybrid":
-        hpages = (state["k"], state["k_scale"], state["v"],
-                  state["v_scale"]) if cfg.kv_quant else \
-            (state["k"], state["v"])
+        hpages = (
+            (state["k"], state["k_scale"], state["v"], state["v_scale"])
+            if cfg.kv_quant
+            else (state["k"], state["v"])
+        )
 
         def body(xc, scanned):
             p_l, pages, tail, hm, w = scanned

@@ -30,11 +30,12 @@ from __future__ import annotations
 import contextlib
 import json
 from collections import OrderedDict
+from types import MappingProxyType
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro import telemetry
+from repro import sanitize, telemetry
 from repro.adaptive import MaintenanceConfig, MaintenanceScheduler
 from repro.core import ColumnSpec, TableCodec
 from repro.core.arena import (
@@ -95,7 +96,9 @@ class RowStore:
 
     name = "rowstore"
 
-    def __init__(self, schema: Optional[Sequence[ColumnSpec]] = None):
+    def __init__(
+        self, schema: Optional[Sequence[ColumnSpec]] = None
+    ) -> None:
         self.schema = column_specs(schema) if schema is not None else None
 
     # -- batched protocol (override) -------------------------------------
@@ -121,6 +124,7 @@ class RowStore:
         stop = n if stop is None else min(stop, n)
         for lo in range(start, stop, batch):
             ids = range(lo, min(lo + batch, stop))
+            # blitzlint: waive[BL001] -- scan generator yields per-row dicts; get_many batches the decode underneath
             for i, r in zip(ids, self.get_many(ids)):
                 if r is not None:
                     yield i, r
@@ -209,6 +213,7 @@ class RowStore:
     ) -> Tuple[List[int], List[Dict[str, Any]]]:
         """Unique (id, row) pairs, last write wins (update_many contract)."""
         m: Dict[int, Dict[str, Any]] = {}
+        # blitzlint: waive[BL001] -- last-write-wins dedup is one ordered pass over the update batch
         for i, r in zip(indices, rows):
             m[int(i)] = r
         return list(m.keys()), list(m.values())
@@ -329,6 +334,7 @@ class _BytesRowStore(RowStore):
                     payloads = []
             else:
                 raise SpillCorruptionError(ids)
+            # blitzlint: waive[BL001] -- crash-replay fault bookkeeping frees per-row extents on the cold repair path
             for i, p in zip(ids, payloads):
                 off, ln = self._spilled.pop(i)
                 rows[i] = p
@@ -387,6 +393,7 @@ class _BytesRowStore(RowStore):
                 [self._spilled[i][0] for i in ids],
                 [framed_len(self._spilled[i][1]) for i in ids],
             )
+            # blitzlint: waive[BL001] -- disk-compaction remap rewrites per-row extent directory entries (cold path)
             for i, off in zip(ids, new_offs):
                 self._spilled[i] = (off, self._spilled[i][1])
 
@@ -397,6 +404,7 @@ class _BytesRowStore(RowStore):
         res = self._res
         payloads = [self.rows[i] for i in ids]
         offs = res.disk.write_many(payloads)
+        # blitzlint: waive[BL001] -- per-row extent directory update after one coalesced segment write
         for i, off, p in zip(ids, offs, payloads):
             ln = len(p)
             self._spilled[i] = (off, ln)
@@ -417,6 +425,7 @@ class _BytesRowStore(RowStore):
         if self.repair_fn is None:
             raise SpillCorruptionError(ids)
         fetched = self.repair_fn(list(ids))
+        # blitzlint: waive[BL001] -- WAL-driven repair is the cold corruption path, not the OLTP fast path
         for i, row in zip(ids, fetched):
             if row is None:
                 off, ln = self._spilled.pop(i)
@@ -447,6 +456,7 @@ class _BytesRowStore(RowStore):
         self, indices: Sequence[int], rows: Sequence[Dict[str, Any]]
     ) -> None:
         idxs, rows = self._dedup_last(indices, rows)
+        # blitzlint: waive[BL001] -- uncompressed silo baseline stores row dicts; per-row put is its contract
         for i, r in zip(idxs, rows):
             if not self.is_live(i):
                 raise KeyError(f"row {i} is deleted")
@@ -578,6 +588,7 @@ class _BytesRowStore(RowStore):
             ids = sorted(sp)
             if ids:
                 offs = self._res.disk.write_many([sp[i] for i in ids])
+                # blitzlint: waive[BL001] -- snapshot respill rebuilds the per-row extent directory on reopen (cold path)
                 for i, off in zip(ids, offs):
                     ln = len(sp[i])
                     self._spilled[i] = (off, ln)
@@ -765,6 +776,7 @@ class BlitzStore(RowStore):
         self, indices: Sequence[int], rows: Sequence[Dict[str, Any]]
     ) -> None:
         idxs, rows = self._dedup_last(indices, rows)
+        # blitzlint: waive[BL001] -- per-key overlay payload update; the batch was deduped just above
         for i, r in zip(idxs, rows):
             if not self.is_live(i):
                 raise KeyError(f"row {i} is deleted")
@@ -858,6 +870,10 @@ class BlitzStore(RowStore):
         if self.block_tuples != 1:
             raise ValueError("merge requires block_tuples == 1")
         t0 = telemetry.clock()
+        if sanitize.ENABLED:
+            sanitize.check_overlay(
+                self._overlay, self._tombstones, where="BlitzStore.merge"
+            )
         if self._tombstones:
             self.table.delete_many(sorted(self._tombstones))
             self._tombstones.clear()
@@ -898,8 +914,7 @@ class BlitzStore(RowStore):
             if dead:
                 self.table.delete_many(dead)
         self.repairs += len(ids)
-        if self.table._res is not None:
-            self.table._res.repaired_rows += len(ids)
+        self.table.note_repaired_rows(len(ids))
 
     def close(self, unlink: bool = False) -> None:
         self.table.close(unlink=unlink)
@@ -1190,6 +1205,7 @@ class RamanStore(_BytesRowStore):
             vals = [r[c.name] for r in rows_sample]
             uniq: Dict[Any, int] = {}
             counts: List[float] = []
+            # blitzlint: waive[BL001] -- Raman fit-time frequency estimation over the sample, not the op path
             for v in vals:
                 j = uniq.setdefault(v, len(uniq))
                 if j == len(counts):
@@ -1267,7 +1283,7 @@ class LRUFastPath(RowStore):
 
     name = "lru"
 
-    def __init__(self, store, capacity: int):
+    def __init__(self, store: "UncompressedStore", capacity: int) -> None:
         super().__init__(getattr(store, "schema", None))
         self.store = store
         self.capacity = capacity
@@ -1357,6 +1373,7 @@ class LRUFastPath(RowStore):
         self, indices: Sequence[int], rows: Sequence[Dict[str, Any]]
     ) -> None:
         idxs, rows = self._dedup_last(indices, rows)
+        # blitzlint: waive[BL001] -- baseline row-cache update maintains per-key recency (not the hot store)
         for i, r in zip(idxs, rows):
             if not self.is_live(i):
                 raise KeyError(f"row {i} is deleted")
@@ -1414,9 +1431,9 @@ class LRUFastPath(RowStore):
         return s
 
 
-STORE_KINDS = {
+STORE_KINDS = MappingProxyType({
     "silo": UncompressedStore,
     "blitzcrank": BlitzStore,
     "zstd": ZstdStore,
     "raman": RamanStore,
-}
+})

@@ -22,14 +22,15 @@ Two layers live here:
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from types import MappingProxyType
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import ColumnSpec
 from repro.db.schema import TableSchema
 
-_FIRST = [
+_FIRST = (
     "Taylor",
     "Alex",
     "Jordan",
@@ -70,8 +71,8 @@ _FIRST = [
     "Daniel",
     "Karen",
     "Lisa",
-]
-_STREET_NAME = [
+)
+_STREET_NAME = (
     "Main",
     "Oak",
     "Pine",
@@ -92,17 +93,19 @@ _STREET_NAME = [
     "Railroad",
     "Jackson",
     "River",
-]
-_STREET_KIND = ["St", "Ave", "Blvd", "Dr", "Ln", "Rd", "Way", "Ct"]
-_STATES = ["CA", "TX", "NY", "FL", "IL", "PA", "OH", "GA", "NC", "MI"]
+)
+_STREET_KIND = ("St", "Ave", "Blvd", "Dr", "Ln", "Rd", "Way", "Ct")
+_STATES = ("CA", "TX", "NY", "FL", "IL", "PA", "OH", "GA", "NC", "MI")
 # real-world hierarchy: city names are state-specific, zips city-specific
-_CITIES: Dict[str, List[str]] = {
-    st: [f"{name}{'ville' if i % 3 == 0 else (' City' if i % 3 == 1 else ' Falls')}"
-         f" {st}"
-         for i, name in enumerate(_STREET_NAME[si % 7:si % 7 + 4 + si % 4])]
+_CITIES: Mapping[str, Tuple[str, ...]] = MappingProxyType({
+    st: tuple(
+        f"{name}{'ville' if i % 3 == 0 else (' City' if i % 3 == 1 else ' Falls')}"
+        f" {st}"
+        for i, name in enumerate(_STREET_NAME[si % 7:si % 7 + 4 + si % 4])
+    )
     for si, st in enumerate(_STATES)
-}
-_CORP = [
+})
+_CORP = (
     "Acme Corp",
     "Globex LLC",
     "Initech Inc",
@@ -115,15 +118,17 @@ _CORP = [
     "Cyberdyne Systems",
     "Tyrell Corp",
     "Soylent Corp",
-]
+)
 
 
-def _zipf_choice(rng, items, size, a=1.3):
+def _zipf_choice(
+    rng: np.random.Generator, items: Sequence[Any], size: int, a: float = 1.3
+) -> List[Any]:
     r = rng.zipf(a, size=size)
     return [items[int(x - 1) % len(items)] for x in r]
 
 
-CUSTOMER_SCHEMA = [
+CUSTOMER_SCHEMA = (
     ColumnSpec("c_id", "int"),
     ColumnSpec("c_first", "cat"),
     ColumnSpec("c_street", "str"),
@@ -135,9 +140,9 @@ CUSTOMER_SCHEMA = [
     ColumnSpec("c_balance", "float", precision=0.01),
     ColumnSpec("c_discount", "float", precision=0.0001),
     ColumnSpec("c_data", "str"),
-]
+)
 
-STOCK_SCHEMA = [
+STOCK_SCHEMA = (
     ColumnSpec("s_i_id", "int"),
     ColumnSpec("s_quantity", "int"),
     ColumnSpec("s_ytd", "int"),
@@ -146,16 +151,16 @@ STOCK_SCHEMA = [
     ColumnSpec("s_dist_01", "str"),
     ColumnSpec("s_dist_02", "str"),
     ColumnSpec("s_data", "str"),
-]
+)
 
-ORDERLINE_SCHEMA = [
+ORDERLINE_SCHEMA = (
     ColumnSpec("ol_o_id", "int"),
     ColumnSpec("ol_number", "int"),
     ColumnSpec("ol_i_id", "int"),
     ColumnSpec("ol_quantity", "int"),
     ColumnSpec("ol_amount", "float", precision=0.01),
     ColumnSpec("ol_dist_info", "str"),
-]
+)
 
 
 def _zip_for(rng, state: str, city: str) -> str:
@@ -203,17 +208,19 @@ def gen_customer(n: int, seed: int = 0) -> List[Dict]:
 # A second generation of values disjoint from the load-time lexicons: names
 # and employers the fitted models have never seen, city names (and therefore
 # zips) outside the trained hierarchy, and a widening balance distribution.
-_DRIFT_FIRST = ["Zephyr", "Onyx", "Juniper", "Caspian", "Marisol", "Thaddeus",
+_DRIFT_FIRST = ("Zephyr", "Onyx", "Juniper", "Caspian", "Marisol", "Thaddeus",
                 "Isolde", "Evander", "Seraphina", "Lysander", "Ottilie",
                 "Peregrine", "Anouk", "Balthazar", "Clementine", "Dashiell",
                 "Eulalia", "Fitzgerald", "Guinevere", "Hyacinth", "Ignatius",
                 "Jessamine", "Kingsley", "Lavinia", "Montgomery", "Novalie",
-                "Octavian", "Persimmon", "Quillon", "Rosalind"]
-_DRIFT_CITIES: Dict[str, List[str]] = {
-    st: [f"New {name} Heights {st}" for name in _STREET_NAME[si % 5:si % 5 + 3]]
+                "Octavian", "Persimmon", "Quillon", "Rosalind")
+_DRIFT_CITIES: Mapping[str, Tuple[str, ...]] = MappingProxyType({
+    st: tuple(
+        f"New {name} Heights {st}" for name in _STREET_NAME[si % 5:si % 5 + 3]
+    )
     for si, st in enumerate(_STATES)
-}
-_DRIFT_CORP = [
+})
+_DRIFT_CORP = (
     "Nimbus Dynamics",
     "Quasar Holdings",
     "Vertex Biotech",
@@ -222,7 +229,7 @@ _DRIFT_CORP = [
     "Zenith Robotics",
     "Meridian Foods",
     "Polaris Media",
-]
+)
 
 
 def drifting_customer_row(rng, i: int, progress: float = 0.0) -> Dict:
@@ -293,11 +300,11 @@ def gen_orderline(n: int, seed: int = 2) -> List[Dict]:
     return rows
 
 
-TABLES = {
+TABLES = MappingProxyType({
     "customer": (CUSTOMER_SCHEMA, gen_customer),
     "stock": (STOCK_SCHEMA, gen_stock),
     "orderline": (ORDERLINE_SCHEMA, gen_orderline),
-}
+})
 
 
 def zipf_keys(rng, n_rows: int, n_ops: int, a: float = 1.1) -> np.ndarray:
@@ -449,9 +456,9 @@ def row_bytes(rows: List[Dict]) -> int:
 # orders/order_line, Payment crosses warehouse/district/customer.  The
 # single-table schemas above remain the deprecation-shim path.
 
-_ITEM_ADJ = ["Small", "Large", "Deluxe", "Rustic", "Sleek", "Durable",
-             "Gorgeous", "Practical", "Refined", "Ergonomic", "Compact"]
-_ITEM_NOUN = [
+_ITEM_ADJ = ("Small", "Large", "Deluxe", "Rustic", "Sleek", "Durable",
+             "Gorgeous", "Practical", "Refined", "Ergonomic", "Compact")
+_ITEM_NOUN = (
     "Widget",
     "Gadget",
     "Bracket",
@@ -465,8 +472,8 @@ _ITEM_NOUN = [
     "Knob",
     "Panel",
     "Valve",
-]
-_ITEM_MAT = [
+)
+_ITEM_MAT = (
     "Steel",
     "Wooden",
     "Granite",
@@ -477,13 +484,13 @@ _ITEM_MAT = [
     "Marble",
     "Plastic",
     "Linen",
-]
+)
 
 # growth=: headroom for append-mostly columns (ColumnSpec.growth) — minted
 # order ids, advancing dates and accumulating ytd counters must keep
 # conforming as the mix runs past the load-time value sets, instead of
 # escaping on every NewOrder (the §5 dynamic-value-set failure mode).
-WAREHOUSE_SCHEMA = [
+WAREHOUSE_SCHEMA = (
     ColumnSpec("w_id", "int"),
     ColumnSpec("w_name", "cat"),
     ColumnSpec("w_street", "str"),
@@ -492,9 +499,9 @@ WAREHOUSE_SCHEMA = [
     ColumnSpec("w_zip", "cat"),
     ColumnSpec("w_tax", "float", precision=0.0001),
     ColumnSpec("w_ytd", "float", precision=0.01, growth=2.0),
-]
+)
 
-DISTRICT_SCHEMA = [
+DISTRICT_SCHEMA = (
     ColumnSpec("d_w_id", "int"),
     ColumnSpec("d_id", "int"),
     ColumnSpec("d_name", "cat"),
@@ -505,30 +512,30 @@ DISTRICT_SCHEMA = [
     ColumnSpec("d_tax", "float", precision=0.0001),
     ColumnSpec("d_ytd", "float", precision=0.01, growth=2.0),
     ColumnSpec("d_next_o_id", "int", growth=8.0),
-]
+)
 
-CUSTOMER_DB_SCHEMA = ([ColumnSpec("c_w_id", "int"),
-                       ColumnSpec("c_d_id", "int")]
-                      + [ColumnSpec("c_balance", "float", precision=0.01,
-                                    growth=2.0)
-                         if c.name == "c_balance" else c
-                         for c in CUSTOMER_SCHEMA])
+CUSTOMER_DB_SCHEMA = ((ColumnSpec("c_w_id", "int"),
+                       ColumnSpec("c_d_id", "int"))
+                      + tuple(ColumnSpec("c_balance", "float", precision=0.01,
+                                         growth=2.0)
+                              if c.name == "c_balance" else c
+                              for c in CUSTOMER_SCHEMA))
 
-ITEM_SCHEMA = [
+ITEM_SCHEMA = (
     ColumnSpec("i_id", "int"),
     ColumnSpec("i_im_id", "int"),
     ColumnSpec("i_name", "str"),
     ColumnSpec("i_price", "float", precision=0.01),
     ColumnSpec("i_data", "str"),
-]
+)
 
-STOCK_DB_SCHEMA = ([ColumnSpec("s_w_id", "int")]
-                   + [ColumnSpec(c.name, c.kind, growth=4.0)
-                      if c.name in ("s_quantity", "s_ytd", "s_order_cnt")
-                      else c
-                      for c in STOCK_SCHEMA])
+STOCK_DB_SCHEMA = ((ColumnSpec("s_w_id", "int"),)
+                   + tuple(ColumnSpec(c.name, c.kind, growth=4.0)
+                           if c.name in ("s_quantity", "s_ytd", "s_order_cnt")
+                           else c
+                           for c in STOCK_SCHEMA))
 
-ORDERS_SCHEMA = [
+ORDERS_SCHEMA = (
     ColumnSpec("o_w_id", "int"),
     ColumnSpec("o_d_id", "int"),
     ColumnSpec("o_id", "int", growth=8.0),
@@ -537,9 +544,9 @@ ORDERS_SCHEMA = [
     ColumnSpec("o_carrier_id", "int"),             # 0 = undelivered
     ColumnSpec("o_ol_cnt", "int"),
     ColumnSpec("o_all_local", "int"),
-]
+)
 
-ORDER_LINE_SCHEMA = [
+ORDER_LINE_SCHEMA = (
     ColumnSpec("ol_w_id", "int"),
     ColumnSpec("ol_d_id", "int"),
     ColumnSpec("ol_o_id", "int", growth=8.0),
@@ -550,9 +557,9 @@ ORDER_LINE_SCHEMA = [
     ColumnSpec("ol_quantity", "int"),
     ColumnSpec("ol_amount", "float", precision=0.01),
     ColumnSpec("ol_dist_info", "str"),
-]
+)
 
-TPCC_TABLES: Dict[str, TableSchema] = {
+TPCC_TABLES: Mapping[str, TableSchema] = MappingProxyType({
     "warehouse": TableSchema("warehouse", WAREHOUSE_SCHEMA, "w_id"),
     "district": TableSchema("district", DISTRICT_SCHEMA,
                             ("d_w_id", "d_id")),
@@ -565,7 +572,7 @@ TPCC_TABLES: Dict[str, TableSchema] = {
     "order_line": TableSchema("order_line", ORDER_LINE_SCHEMA,
                               ("ol_w_id", "ol_d_id", "ol_o_id",
                                "ol_number")),
-}
+})
 
 ENTRY_DAY0 = 19800  # epoch day of the first order (~mid-2024)
 

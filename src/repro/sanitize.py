@@ -1,0 +1,254 @@
+"""Opt-in boundary sanitizer (DESIGN.md §10): ``REPRO_SANITIZE=1``.
+
+Structural invariants of the compressed-table machinery are cheap to
+state and expensive to debug when silently violated — a wrapped plan
+version tag or a torn CSR offset corrupts *decoded values*, far from
+the write that broke it.  This module centralizes those invariants as
+typed check functions that the hot paths call at their boundaries
+(append/flush, fault-in/spill, WAL append, overlay merge, scan entry).
+
+Cost model: every check site guards on :data:`ENABLED` first, so the
+sanitize-off hot path pays one module-attribute load and a falsy branch
+— see ``benchmarks/bench_sanitize.py`` for the measurement.  Enabled,
+each check is vectorized (numpy reductions, no per-row Python) and
+counts into ``repro.sanitize.checks`` / ``repro.sanitize.failures``.
+
+Failures raise a :class:`SanitizeError` subclass naming the broken
+invariant, the boundary that caught it, and the offending values; they
+are programming-error assertions, not recoverable I/O conditions, so
+they deliberately do NOT derive from the recoverable corruption errors
+in :mod:`repro.core.arena`.
+
+Enable by exporting ``REPRO_SANITIZE=1`` before import (CI runs the
+tier-1 suite that way), or per-test with :func:`override`.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Any, Iterator, Optional
+
+import numpy as np
+
+from repro import telemetry
+
+
+def _env_enabled() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "").strip() not in ("", "0")
+
+
+#: Read by every check site; flipped only by :func:`override` (tests).
+ENABLED: bool = _env_enabled()
+
+
+def enabled() -> bool:
+    """True when boundary checks are active."""
+    return ENABLED
+
+
+@contextlib.contextmanager
+def override(flag: bool) -> Iterator[None]:
+    """Force the sanitizer on/off within a block (test harness hook)."""
+    global ENABLED
+    prev = ENABLED
+    ENABLED = bool(flag)
+    try:
+        yield
+    finally:
+        ENABLED = prev
+
+
+# -- typed invariant errors --------------------------------------------------
+
+
+class SanitizeError(AssertionError):
+    """Base of every sanitizer failure (an invariant, not an I/O error)."""
+
+
+class CsrInvariantError(SanitizeError):
+    """CSR arena structure broken: non-monotone offsets, out-of-range
+    extents, or per-slot codes outside the coder's alphabet."""
+
+
+class ResidencyInvariantError(SanitizeError):
+    """Residency accounting disagrees with ground truth (resident mask,
+    spilled-code totals, or disk extents of non-resident blocks)."""
+
+
+class PlanVersionInvariantError(SanitizeError):
+    """A row's plan-version tag does not name a live codec version."""
+
+
+class ZoneMapInvariantError(SanitizeError):
+    """Block zone map fails to contain the codes actually stored."""
+
+
+class OverlayInvariantError(SanitizeError):
+    """Overlay/tombstone inconsistency: a key both deleted and live, or
+    an overlay row shadowing nothing."""
+
+
+class WalInvariantError(SanitizeError):
+    """WAL LSN regression: the log tail moved backwards."""
+
+
+# -- accounting --------------------------------------------------------------
+
+_C_CHECKS = telemetry.counter("repro.sanitize.checks")
+_C_FAILURES = telemetry.counter("repro.sanitize.failures")
+
+
+def _fail(exc_type: type, message: str) -> None:
+    _C_FAILURES.add(1)
+    raise exc_type(message)
+
+
+# -- check functions ----------------------------------------------------------
+# All take plain arrays/scalars so the callers (core/db/oltp/scan/
+# durability) stay the only modules that know their own layouts.
+
+
+def check_csr_offsets(
+    offsets: np.ndarray, arena_size: int, *, where: str
+) -> None:
+    """Offsets must start >= 0, be non-decreasing, and end within the
+    arena: every block's extent ``[offsets[i], offsets[i+1])`` is then a
+    valid slice."""
+    _C_CHECKS.add(1)
+    offs = np.asarray(offsets)
+    if offs.size == 0:
+        return
+    if int(offs[0]) < 0:
+        _fail(
+            CsrInvariantError,
+            f"{where}: CSR offsets start at {int(offs[0])} (< 0)",
+        )
+    if offs.size > 1:
+        deltas = np.diff(offs.astype(np.int64))
+        if deltas.size and int(deltas.min()) < 0:
+            i = int(np.argmax(deltas < 0))
+            _fail(
+                CsrInvariantError,
+                f"{where}: CSR offsets decrease at block {i} "
+                f"({int(offs[i])} -> {int(offs[i + 1])})",
+            )
+    if int(offs[-1]) > int(arena_size):
+        _fail(
+            CsrInvariantError,
+            f"{where}: CSR tail offset {int(offs[-1])} exceeds arena "
+            f"size {int(arena_size)}",
+        )
+
+
+def check_code_range(
+    codes: np.ndarray, total: int, *, where: str, slot: Optional[int] = None
+) -> None:
+    """Every stored code must lie in ``[0, total)`` — the coder's
+    alphabet; a wider value means a torn write or a wrong-plan decode."""
+    _C_CHECKS.add(1)
+    arr = np.asarray(codes)
+    if arr.size == 0:
+        return
+    hi = int(arr.max())
+    if hi >= int(total):
+        what = f"slot {slot}" if slot is not None else "codes"
+        _fail(
+            CsrInvariantError,
+            f"{where}: {what} contain {hi} >= alphabet size {int(total)}",
+        )
+
+
+def check_residency(
+    claimed_spilled_codes: int,
+    actual_spilled_codes: int,
+    resident: np.ndarray,
+    disk_off: np.ndarray,
+    *,
+    where: str,
+) -> None:
+    """Residency accounting vs ground truth: the spilled-code counter
+    must match the recomputed total, and every non-resident block must
+    have a disk extent to fault back in from."""
+    _C_CHECKS.add(1)
+    if int(claimed_spilled_codes) != int(actual_spilled_codes):
+        _fail(
+            ResidencyInvariantError,
+            f"{where}: spilled-code counter {int(claimed_spilled_codes)} "
+            f"!= ground truth {int(actual_spilled_codes)}",
+        )
+    res = np.asarray(resident, dtype=bool)
+    offs = np.asarray(disk_off)
+    n = min(res.size, offs.size)
+    lost = np.nonzero(~res[:n] & (offs[:n] < 0))[0]
+    if lost.size:
+        _fail(
+            ResidencyInvariantError,
+            f"{where}: {int(lost.size)} non-resident block(s) have no "
+            f"disk extent (first: block {int(lost[0])})",
+        )
+
+
+def check_plan_versions(
+    tags: np.ndarray, n_versions: int, *, where: str
+) -> None:
+    """Every row's plan-version tag must name a live codec version
+    (tags are uint16 — a wrapped or stale tag decodes garbage)."""
+    _C_CHECKS.add(1)
+    arr = np.asarray(tags)
+    if arr.size == 0:
+        return
+    hi = int(arr.max())
+    if hi >= int(n_versions):
+        _fail(
+            PlanVersionInvariantError,
+            f"{where}: plan-version tag {hi} out of range "
+            f"(live versions: {int(n_versions)})",
+        )
+
+
+def check_zone_maps(zmin: np.ndarray, zmax: np.ndarray, *, where: str) -> None:
+    """Zone maps must be well-formed: a finite per-chunk min must not
+    exceed its max.  (Untouched chunks are ``(+inf, -inf)`` by
+    construction and are skipped.)  An inverted pair silently prunes
+    blocks whose values actually match."""
+    _C_CHECKS.add(1)
+    lo = np.asarray(zmin, dtype=np.float64)
+    hi = np.asarray(zmax, dtype=np.float64)
+    if lo.size == 0:
+        return
+    bad = np.isfinite(lo) & np.isfinite(hi) & (lo > hi)
+    if bad.any():
+        i = int(np.argmax(bad.reshape(-1)))
+        _fail(
+            ZoneMapInvariantError,
+            f"{where}: inverted zone map entry at flat index {i} "
+            f"({lo.reshape(-1)[i]} > {hi.reshape(-1)[i]})",
+        )
+
+
+def check_overlay(
+    overlay_keys: Any, tombstones: Any, *, where: str
+) -> None:
+    """A key must not be both tombstoned and carrying an overlay row."""
+    _C_CHECKS.add(1)
+    both = set(overlay_keys) & set(tombstones)
+    if both:
+        k = next(iter(both))
+        _fail(
+            OverlayInvariantError,
+            f"{where}: {len(both)} key(s) both tombstoned and live in "
+            f"the overlay (e.g. {k!r})",
+        )
+
+
+def check_wal_lsn(prev_lsn: int, new_lsn: int, *, where: str) -> None:
+    """The log tail only moves forward; a regression means a torn or
+    reordered append."""
+    _C_CHECKS.add(1)
+    if int(new_lsn) < int(prev_lsn):
+        _fail(
+            WalInvariantError,
+            f"{where}: WAL LSN moved backwards ({int(prev_lsn)} -> "
+            f"{int(new_lsn)})",
+        )

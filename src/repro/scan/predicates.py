@@ -31,7 +31,7 @@ class In:
     column: str
     values: Tuple[Any, ...]
 
-    def __init__(self, column: str, values: Sequence[Any]):
+    def __init__(self, column: str, values: Sequence[Any]) -> None:
         object.__setattr__(self, "column", column)
         object.__setattr__(self, "values", tuple(values))
 

@@ -115,7 +115,11 @@ class _NullSpan:
 _NULL = _NullSpan()
 
 
-def span(name: str, registry: Optional[Registry] = None, log: Optional[EventLog] = None):
+def span(
+    name: str,
+    registry: Optional[Registry] = None,
+    log: Optional[EventLog] = None,
+) -> Any:
     """Context manager timing one region into histogram ``name`` and the
     event ring.  Returns a shared no-op when telemetry is disabled."""
     if not _state.enabled:

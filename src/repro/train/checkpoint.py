@@ -95,9 +95,12 @@ class CheckpointManager:
             for i, arr in enumerate(leaves):
                 rec = {"id": i, "shape": list(arr.shape),
                        "dtype": str(arr.dtype), "codec": "npy"}
-                if self.compress == "blz" and arr.size >= 4096 and \
-                        arr.dtype in (np.float32, np.dtype("bfloat16"),
-                                      np.float16):
+                if (
+                    self.compress == "blz"
+                    and arr.size >= 4096
+                    and arr.dtype
+                    in (np.float32, np.dtype("bfloat16"), np.float16)
+                ):
                     rec["codec"] = "blz"
                     self._write_blz(tmp / "arrays" / f"{i}.blz", arr, rec)
                 else:

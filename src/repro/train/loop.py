@@ -56,9 +56,13 @@ class Trainer:
             total_steps=tc.steps)
         self.rules = steps_lib.rules_for(mesh, self.shape, tc.layout)
         self._data = data
-        self.ckpt = CheckpointManager(
-            tc.ckpt_dir, compress="blz" if tc.compress_ckpt else None) \
-            if tc.ckpt_dir else None
+        self.ckpt = (
+            CheckpointManager(
+                tc.ckpt_dir, compress="blz" if tc.compress_ckpt else None
+            )
+            if tc.ckpt_dir
+            else None
+        )
         self.guard = PreemptionGuard(install=False)
         self.watchdog = StepWatchdog(tc.watchdog_s) if tc.watchdog_s else None
         self.metrics_log: list = []

@@ -150,8 +150,9 @@ class TestRefitCodec:
         from repro.core import (CategoricalModel, ColumnSpec,
                                 ConditionalCategoricalModel, FitStats)
         schema = [ColumnSpec("state", "cat"), ColumnSpec("city", "cat")]
-        old_pairs = [("CA", c) for c in ("LA", "SF", "SD")] * 10 \
-            + [("TX", c) for c in ("Austin", "Dallas")] * 10
+        old_pairs = [("CA", c) for c in ("LA", "SF", "SD")] * 10 + [
+            ("TX", c) for c in ("Austin", "Dallas")
+        ] * 10
         models = {
             "state": CategoricalModel([p for p, _ in old_pairs]),
             "city": ConditionalCategoricalModel(old_pairs, "state"),
@@ -272,8 +273,9 @@ class TestVersionedTable:
         pytest.importorskip("jax")
         table = self._table_with_two_versions()
         idx = list(range(len(table)))
-        assert table.get_many(idx, backend=backend) == \
-            [table.get(i) for i in idx]
+        assert table.get_many(idx, backend=backend) == [
+            table.get(i) for i in idx
+        ]
 
 
 class TestScheduler:

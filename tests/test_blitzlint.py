@@ -1,0 +1,142 @@
+"""blitzlint framework tests: every rule fires on its violation fixture,
+stays quiet on its clean fixture, waivers behave, and the repo itself
+lints clean (the same gate CI runs).
+
+Also pins the dynamic telemetry names: ``repro.scan.<field>`` counters
+are generated from ``ScanStats._FIELDS`` at import time, so the catalog
+must enumerate them explicitly (see the BL002 waiver in scan/engine.py).
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+import pytest
+
+from tools.blitzlint import (
+    RULES,
+    lint_paths,
+    lint_source,
+    load_catalog,
+    make_config,
+)
+from tools.blitzlint.core import NAME_RE
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = ROOT / "tools" / "blitzlint" / "fixtures"
+CFG = make_config(ROOT)
+
+# Rule -> the repo-relative path the fixture pretends to live at (rules
+# are path-scoped; this picks a path each rule applies to).
+FIXTURE_REL = {
+    "BL001": "src/repro/core/plan.py",
+    "BL002": "src/repro/db/database.py",
+    "BL003": "src/repro/core/somefile.py",
+    "BL004": "src/repro/oltp/somefile.py",
+    "BL005": "src/repro/core/somefile.py",
+    "BL006": "src/repro/db/somefile.py",
+    "BL007": "src/repro/core/somefile.py",
+}
+
+# Findings of the rule under test expected from each violation fixture.
+EXPECTED_COUNTS = {
+    "BL001": 2,  # rowish loop + range(n) with n = len(rows)
+    "BL002": 3,  # off-catalog, pattern-breaking, non-literal
+    "BL003": 3,  # dict literal, list() call, list literal
+    "BL004": 3,  # attr write, aliased handle write, mutator call
+    "BL005": 2,  # astype and asarray forms
+    "BL006": 1,
+    "BL007": 1,
+}
+
+CHECKED_RULES = sorted(FIXTURE_REL)
+
+
+def run_fixture(name: str, rel: str):
+    return lint_source((FIXTURES / name).read_text(), rel, CFG)
+
+
+def test_registry_metadata():
+    assert CHECKED_RULES == sorted(RULES), "every registered rule needs fixtures"
+    for rule in RULES.values():
+        assert rule.id.startswith("BL") and len(rule.id) == 5
+        assert rule.title, rule.id
+        assert rule.rationale, rule.id
+
+
+@pytest.mark.parametrize("rule_id", CHECKED_RULES)
+def test_violation_fixture_fires(rule_id):
+    findings = run_fixture(
+        f"{rule_id.lower()}_violation.py", FIXTURE_REL[rule_id]
+    )
+    hits = [f for f in findings if f.rule == rule_id]
+    assert len(hits) == EXPECTED_COUNTS[rule_id], [f.render() for f in findings]
+
+
+@pytest.mark.parametrize("rule_id", CHECKED_RULES)
+def test_clean_fixture_passes(rule_id):
+    findings = run_fixture(f"{rule_id.lower()}_clean.py", FIXTURE_REL[rule_id])
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_waiver_suppresses_and_is_consumed():
+    findings = run_fixture("waiver_ok.py", "src/repro/core/somefile.py")
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_reasonless_waiver_is_flagged_and_does_not_suppress():
+    findings = run_fixture("waiver_reasonless.py", "src/repro/core/somefile.py")
+    rules = sorted(f.rule for f in findings)
+    assert rules == ["BL000", "BL007"], [f.render() for f in findings]
+
+
+def test_unused_waiver_is_flagged():
+    findings = run_fixture("waiver_unused.py", "src/repro/core/somefile.py")
+    assert [f.rule for f in findings] == ["BL000"], [
+        f.render() for f in findings
+    ]
+
+
+def test_unknown_rule_waiver_is_flagged():
+    findings = run_fixture("waiver_unknown.py", "src/repro/core/somefile.py")
+    assert any(
+        f.rule == "BL000" and "unknown" in f.message for f in findings
+    ), [f.render() for f in findings]
+
+
+def test_repo_lints_clean():
+    """The CI gate: the repo itself carries zero findings."""
+    paths = [
+        ROOT / p
+        for p in ("src", "tools", "tests", "benchmarks", "examples")
+        if (ROOT / p).exists()
+    ]
+    findings = lint_paths(paths, ROOT, CFG)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_catalog_loads_without_import():
+    names = load_catalog(ROOT, CFG.catalog_rel)
+    assert names, "catalog must parse statically (stdlib-only CI job)"
+    assert len(set(names)) == len(names)
+    for n in names:
+        assert NAME_RE.match(n), n
+
+
+def test_scan_stats_fields_catalogued():
+    """Pins the BL002 waiver in scan/engine.py: the dynamically generated
+    ``repro.scan.<field>`` counters must all be enumerated in the catalog."""
+    from repro.scan.engine import ScanStats
+    from repro.telemetry.catalog import CATALOG
+
+    for field in ScanStats._FIELDS:
+        assert f"repro.scan.{field}" in CATALOG, field
+    assert "repro.scan.scan_table" in CATALOG
+
+
+def test_catalog_module_agrees_with_static_load():
+    from repro.telemetry import catalog
+
+    assert tuple(catalog.METRICS) == load_catalog(ROOT, CFG.catalog_rel)
+    assert catalog.is_catalogued("repro.core.encode")
+    assert not catalog.is_catalogued("repro.core.enc0de")

@@ -48,8 +48,9 @@ class TestSchema:
         store = BlitzStore(ORDERLINE, rows)  # TableSchema, not a list
         store.insert_many(rows[:50])
         assert store.get(3) is not None
-        assert [c.name for c in store.schema] == \
-            [c.name for c in ORDERLINE.columns]
+        assert [c.name for c in store.schema] == [
+            c.name for c in ORDERLINE.columns
+        ]
 
     def test_stable_hash_is_deterministic_and_typed(self):
         assert stable_key_hash((1, "2")) != stable_key_hash(("1", 2))
@@ -99,8 +100,10 @@ def _interleave(table, ref, rows, rng, n_steps=40):
             got = table.get_many(keys)
             for k, g in zip(keys, got):
                 if k in ref:
-                    assert g is not None and \
-                        g["ol_number"] == ref[k]["ol_number"]
+                    assert (
+                        g is not None
+                        and g["ol_number"] == ref[k]["ol_number"]
+                    )
                 else:
                     assert g is None
     return rows
@@ -129,8 +132,10 @@ class TestShardRoutingProperty:
             assert g is not None
             for c in ORDERLINE.columns:
                 if c.kind == "float":
-                    assert abs(g[c.name] - ref[k][c.name]) \
+                    assert (
+                        abs(g[c.name] - ref[k][c.name])
                         <= c.precision / 2 + 1e-9
+                    )
                 else:
                     assert g[c.name] == ref[k][c.name]
         assert table.n_live == len(ref)

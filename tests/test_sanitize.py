@@ -1,0 +1,206 @@
+"""Boundary sanitizer tests (DESIGN.md §10): seeded corruption.
+
+Each test flips one structural field the way a real bug would — a torn
+CSR offset, a drifted residency counter, a wrapped plan-version tag —
+and asserts the *next boundary crossing* raises the matching typed
+:class:`~repro.sanitize.SanitizeError` subclass.  The same corruptions
+under ``override(False)`` must stay silent: the sanitize-off hot path
+is a falsy branch, never a behaviour change.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro import sanitize
+from repro.core import TableCodec
+from repro.core.arena import OS_IO
+from repro.core.blitzcrank import CompressedTable
+from repro.core.casts import NarrowingCastError, checked_asarray, checked_astype
+from repro.durability.wal import WriteAheadLog
+from repro.oltp import tpcc
+from repro.oltp.store import BlitzStore
+
+SCHEMA, GEN = tpcc.TABLES["orderline"]
+ROWS = GEN(1500, seed=11)
+CODEC = TableCodec.fit(ROWS[:256], SCHEMA)
+TINY = 1 << 13
+
+
+def _table(budget=None):
+    t = CompressedTable(CODEC, memory_budget=budget)
+    t.extend(ROWS)
+    return t
+
+
+# -- override plumbing -------------------------------------------------------
+
+
+def test_override_restores_prior_state():
+    prev = sanitize.ENABLED
+    with sanitize.override(True):
+        assert sanitize.enabled()
+        with sanitize.override(False):
+            assert not sanitize.enabled()
+        assert sanitize.enabled()
+    assert sanitize.ENABLED is prev
+
+
+# -- seeded corruption: CSR offsets ------------------------------------------
+
+
+def test_corrupt_arena_offset_caught_at_next_boundary():
+    t = _table()
+    t._offsets[1] = -5  # a torn write: offsets decrease at block 0
+    with sanitize.override(True):
+        with pytest.raises(sanitize.CsrInvariantError, match="decrease"):
+            t.get_many([0, 1, 2])
+
+
+def test_corrupt_tail_offset_caught():
+    t = _table()
+    t._offsets[t.n_blocks] = t.used + 999  # extent runs past the arena
+    with sanitize.override(True):
+        with pytest.raises(sanitize.CsrInvariantError, match="exceeds arena"):
+            t.get_many([0])
+
+
+# -- seeded corruption: residency counter ------------------------------------
+
+
+def test_corrupt_residency_counter_caught():
+    t = _table(budget=TINY)
+    assert t.spilled_bytes > 0, "fixture must actually spill"
+    t._spilled_codes += 7  # counter drift vs recomputed ground truth
+    with sanitize.override(True):
+        with pytest.raises(sanitize.ResidencyInvariantError, match="ground truth"):
+            t.get_many([0])
+
+
+def test_corrupt_residency_counter_silent_when_off():
+    t = _table(budget=TINY)
+    with sanitize.override(False):
+        want = t.get_many([0])
+        t._spilled_codes += 7
+        assert t.get_many([0]) == want  # reads unaffected, no raise
+
+
+# -- seeded corruption: plan-version tags ------------------------------------
+
+
+def test_corrupt_plan_version_tag_caught():
+    t = _table()
+    t._plan_ver[0] = 999  # tag names a codec version that never existed
+    with sanitize.override(True):
+        with pytest.raises(sanitize.PlanVersionInvariantError, match="999"):
+            t.get_many([0])
+
+
+# -- seeded corruption: overlay/tombstones -----------------------------------
+
+
+def test_overlay_tombstone_conflict_caught_at_merge():
+    store = BlitzStore(SCHEMA, ROWS[:256], auto_merge=False)
+    store.insert_many(ROWS[:64])
+    store.update_many([3], [dict(ROWS[3], ol_quantity=9)])
+    store._tombstones.add(3)  # bug: deleted without dropping the overlay row
+    with sanitize.override(True):
+        with pytest.raises(sanitize.OverlayInvariantError, match="tombstoned"):
+            store.merge()
+
+
+# -- seeded corruption: WAL torn write ---------------------------------------
+
+
+class _TornIO:
+    """Proxy io that can drop the second half of one pwrite."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.torn = False
+
+    def pwrite(self, fd, buf, off):
+        if self.torn:
+            buf = buf[: len(buf) // 2]
+        return self._inner.pwrite(fd, buf, off)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def test_wal_torn_write_caught_at_flush(tmp_path):
+    io = _TornIO(OS_IO)
+    wal = WriteAheadLog(str(tmp_path / "t.wal"), io=io)
+    wal.log("insert", [{"k": 1}])
+    io.torn = True
+    with sanitize.override(True):
+        with pytest.raises(sanitize.WalInvariantError, match="backwards"):
+            wal.log("insert", [{"k": 2}])
+    wal.close()
+
+
+# -- checked casts -----------------------------------------------------------
+
+
+def test_checked_astype_catches_overflow():
+    wide = np.array([1, 70_000], dtype=np.int64)
+    with sanitize.override(True):
+        with pytest.raises(NarrowingCastError, match="uint16"):
+            checked_astype(wide, np.uint16, where="test")
+        with pytest.raises(NarrowingCastError):
+            checked_asarray([-1], np.uint16, where="test")
+        ok = checked_astype(np.array([0, 65_535]), np.uint16, where="test")
+        assert ok.dtype == np.uint16
+
+
+def test_checked_astype_wraps_silently_when_off():
+    wide = np.array([70_000], dtype=np.int64)
+    with sanitize.override(False):
+        out = checked_astype(wide, np.uint16, where="test")
+    assert out.dtype == np.uint16  # plain astype semantics, no check
+
+
+# -- check functions directly ------------------------------------------------
+
+
+def test_check_code_range():
+    with sanitize.override(True):
+        sanitize.check_code_range(np.array([0, 4]), 5, where="t")
+        with pytest.raises(sanitize.CsrInvariantError, match="slot 2"):
+            sanitize.check_code_range(np.array([5]), 5, where="t", slot=2)
+
+
+def test_check_zone_maps():
+    with sanitize.override(True):
+        # untouched (+inf, -inf) chunks are fine; an inverted finite pair is not
+        sanitize.check_zone_maps(
+            np.array([[np.inf, 1.0]]), np.array([[-np.inf, 2.0]]), where="t"
+        )
+        with pytest.raises(sanitize.ZoneMapInvariantError, match="inverted"):
+            sanitize.check_zone_maps(
+                np.array([[3.0]]), np.array([[2.0]]), where="t"
+            )
+
+
+def test_check_wal_lsn():
+    with sanitize.override(True):
+        sanitize.check_wal_lsn(10, 10, where="t")
+        sanitize.check_wal_lsn(10, 12, where="t")
+        with pytest.raises(sanitize.WalInvariantError):
+            sanitize.check_wal_lsn(10, 9, where="t")
+
+
+def test_failures_counter_increments():
+    from repro import telemetry
+
+    c = telemetry.counter("repro.sanitize.failures")
+    prev = telemetry.set_enabled(True)
+    try:
+        before = c.value
+        with sanitize.override(True):
+            with pytest.raises(sanitize.CsrInvariantError):
+                sanitize.check_csr_offsets(np.array([-1, 2]), 10, where="t")
+        assert c.value == before + 1
+    finally:
+        telemetry.set_enabled(prev)

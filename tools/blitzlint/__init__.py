@@ -1,0 +1,39 @@
+"""blitzlint: repo-invariant static analysis for the Blitzcrank repro.
+
+Usage::
+
+    python -m tools.blitzlint            # lint the default path set
+    python -m tools.blitzlint src tests  # lint specific paths
+    python -m tools.blitzlint --list-rules
+
+Rules are registered on import of :mod:`tools.blitzlint.rules`; the
+catalog of rule ids, rationales, and the waiver syntax lives in
+DESIGN.md §10.
+"""
+
+from . import rules as _rules  # noqa: F401  (registers the rule set)
+from .core import (
+    Finding,
+    LintConfig,
+    LintContext,
+    RULES,
+    Rule,
+    lint_file,
+    lint_paths,
+    lint_source,
+    load_catalog,
+    make_config,
+)
+
+__all__ = [
+    "Finding",
+    "LintConfig",
+    "LintContext",
+    "RULES",
+    "Rule",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+    "load_catalog",
+    "make_config",
+]

@@ -1,0 +1,46 @@
+"""CLI: ``python -m tools.blitzlint [paths...]`` — exit 1 on findings."""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import List
+
+from . import RULES, lint_paths
+
+DEFAULT_PATHS = ["src", "tools", "tests", "benchmarks", "examples"]
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="blitzlint")
+    ap.add_argument("paths", nargs="*", default=None)
+    ap.add_argument(
+        "--root",
+        default=".",
+        help="repo root (catalog + relative paths resolve against it)",
+    )
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in sorted(RULES.values(), key=lambda r: r.id):
+            print(f"{rule.id}  {rule.title}")
+            print(f"       {rule.rationale}")
+        return 0
+
+    root = pathlib.Path(args.root)
+    paths = [
+        root / p for p in (args.paths or DEFAULT_PATHS) if (root / p).exists()
+    ]
+    findings = lint_paths(paths, root)
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"blitzlint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+"""Per-rule lint fixtures (exercised by tests/test_blitzlint.py only)."""

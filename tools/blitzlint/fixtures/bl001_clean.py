@@ -1,0 +1,8 @@
+"""BL001 clean: comprehensions are boundary conversions, not control flow."""
+
+import numpy as np
+
+
+def apply(rows):
+    arr = np.asarray([r["x"] for r in rows], dtype=np.float64)
+    return float(arr.sum())

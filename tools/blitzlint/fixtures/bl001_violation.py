@@ -1,0 +1,11 @@
+"""BL001 violation: statement loops over per-row iterables."""
+
+
+def apply(rows):
+    out = []
+    for r in rows:
+        out.append(r)
+    n = len(rows)
+    for i in range(n):
+        out[i] = None
+    return out

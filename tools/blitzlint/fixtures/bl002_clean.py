@@ -1,0 +1,6 @@
+"""BL002 clean: literal catalogued names only."""
+
+from repro import telemetry
+
+H = telemetry.histogram("repro.core.encode")
+C = telemetry.counter("repro.core.encode.rows")

@@ -1,0 +1,10 @@
+"""BL002 violations: typo'd, pattern-breaking, and non-literal names."""
+
+from repro import telemetry
+
+C = telemetry.counter("repro.core.enc0de")
+H = telemetry.histogram("Repro.Core.Encode")
+
+
+def dynamic(name):
+    return telemetry.counter(f"repro.scan.{name}")

@@ -1,0 +1,7 @@
+"""BL003 clean: frozen module-level containers."""
+
+from types import MappingProxyType
+
+NAMES = ("customer", "stock")
+KINDS = frozenset({"int", "str"})
+TABLE = MappingProxyType({"customer": 1})

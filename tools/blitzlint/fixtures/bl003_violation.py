@@ -1,0 +1,5 @@
+"""BL003 violations: module-level mutable containers."""
+
+CACHE = {}
+REGISTRY = list()
+NAMES = ["customer", "stock"]

@@ -1,0 +1,13 @@
+"""BL004 clean: own state plus the owner's public entry point."""
+
+
+class Counter:
+    def __init__(self):
+        self._count = 0
+
+    def bump(self):
+        self._count += 1
+
+
+def use(table):
+    table.note_quarantined_rows(1)

@@ -1,0 +1,8 @@
+"""BL004 violations: mutating another object's private state."""
+
+
+def poke(table):
+    table._plan_ver = 3
+    res = table._res
+    res.quarantined += 1
+    table._pending.append(1)

@@ -1,0 +1,13 @@
+"""BL005 clean: checked helper or an in-function bounds guard."""
+
+import numpy as np
+
+from repro.core.casts import checked_astype
+
+
+def narrow(a):
+    return checked_astype(a, np.uint16, where="fixture")
+
+
+def clipped(a):
+    return np.clip(a, 0, 65535).astype(np.uint16)

@@ -1,0 +1,11 @@
+"""BL005 violations: unguarded narrowing casts."""
+
+import numpy as np
+
+
+def narrow(a):
+    return a.astype(np.uint16)
+
+
+def convert(vals):
+    return np.asarray(vals, dtype=np.int32)

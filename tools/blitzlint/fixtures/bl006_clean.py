@@ -1,0 +1,8 @@
+"""BL006 clean: named recoverable exceptions."""
+
+
+def risky():
+    try:
+        return 1
+    except ValueError:
+        return None

@@ -1,0 +1,8 @@
+"""BL006 violation: bare except."""
+
+
+def risky():
+    try:
+        return 1
+    except:
+        return None

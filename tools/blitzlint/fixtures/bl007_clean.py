@@ -1,0 +1,7 @@
+"""BL007 clean: the telemetry clock."""
+
+from repro import telemetry
+
+
+def stamp():
+    return telemetry.clock()

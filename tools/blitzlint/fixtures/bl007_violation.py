@@ -1,0 +1,7 @@
+"""BL007 violation: raw wall-clock read in a clocked tree."""
+
+import time
+
+
+def stamp():
+    return time.time()

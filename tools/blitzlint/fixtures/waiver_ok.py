@@ -1,0 +1,8 @@
+"""A correctly waived violation: suppressed, waiver consumed."""
+
+import time
+
+
+def stamp():
+    # blitzlint: waive[BL007] -- wall time is the fixture's return value
+    return time.time()

@@ -1,0 +1,8 @@
+"""A reasonless waiver: BL000, and the violation still fires."""
+
+import time
+
+
+def stamp():
+    # blitzlint: waive[BL007]
+    return time.time()

@@ -1,0 +1,4 @@
+"""A waiver naming an unknown rule id: BL000."""
+
+# blitzlint: waive[BL999] -- no such rule
+X = 1

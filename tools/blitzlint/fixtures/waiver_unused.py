@@ -1,0 +1,6 @@
+"""An unused waiver: BL000 (nothing on this line to suppress)."""
+
+
+def quiet():
+    # blitzlint: waive[BL006] -- stale waiver left after a refactor
+    return 1
