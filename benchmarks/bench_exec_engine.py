@@ -1,0 +1,195 @@
+"""Compiled execution engine: prepared plan/run split vs per-row verbs.
+
+The ISSUE-10 engine lowers each (table, verb, batch bucket) once and
+replays it; this bench measures what that buys on the TPC-C customer
+table (blitzcrank backend, sharded):
+
+* **prepared tps** — ``Table.prepare("get").run(batch)`` replaying one
+  lowered entry per pow2 bucket (the group-commit execution path the
+  mix uses);
+* **unprepared tps** — the scalar ``table.get(key)`` loop, i.e. one
+  plan lookup + one single-row decode per call (the pre-engine shape);
+* **plan-cache hit rate** — ``PreparedOp.cache_info()`` after the
+  replay loop: everything past the first lowering per bucket must hit;
+* **write path** — prepared batched inserts vs scalar inserts into a
+  fresh table, same rows.
+
+Acceptance: prepared reads >= ``SPEEDUP_FLOOR`` x scalar reads, hit
+rate >= ``HIT_RATE_FLOOR``, and the prepared batch returns rows
+bit-identical to the scalar loop.  Emits ``BENCH_exec_engine.json``
+and ``name,us_per_call,derived`` CSV lines.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.artifact import write_bench_json
+from repro.db.database import Database
+from repro.oltp import tpcc
+
+SPEEDUP_FLOOR = 2.0
+HIT_RATE_FLOOR = 0.9
+READ_BATCH = 256
+
+
+def _build_customer_db(population, n_shards: int) -> Database:
+    db, _ = tpcc.build_tpcc_database(backend="blitzcrank",
+                                     n_shards=n_shards,
+                                     population=population)
+    db.merge_all()
+    return db
+
+
+def _read_arms(db: Database, n_reads: int, seed: int) -> Dict:
+    customer = db["customer"]
+    keys = [k for k, _ in customer.scan()]
+    rng = np.random.default_rng(seed)
+    picks = [keys[int(i)] for i in
+             tpcc.zipf_keys(rng, len(keys), n_reads, 1.1)]
+
+    op = customer.prepare("get")
+    op.run(picks[:READ_BATCH])  # warm: lower the main bucket once
+    tail = len(picks) % READ_BATCH
+    if tail:
+        op.run(picks[:tail])  # ...and the ragged last batch's bucket
+    base = op.cache_info()
+
+    t0 = time.perf_counter()
+    prepared_rows: List = []
+    for lo in range(0, len(picks), READ_BATCH):
+        prepared_rows.extend(op.run(picks[lo:lo + READ_BATCH]))
+    prepared_s = time.perf_counter() - t0
+    info = op.cache_info()
+    delta_hits = info["hits"] - base["hits"]
+    delta_total = (info["hits"] + info["misses"]
+                   - base["hits"] - base["misses"])
+    hit_rate = delta_hits / max(1, delta_total)
+
+    # Scalar loop on a slice, scaled: one row per call is the point.
+    n_scalar = max(64, n_reads // 8)
+    t0 = time.perf_counter()
+    scalar_rows = [customer.get(k) for k in picks[:n_scalar]]
+    scalar_s = (time.perf_counter() - t0) * (len(picks) / n_scalar)
+
+    identical = prepared_rows[:n_scalar] == scalar_rows
+    return {
+        "n_reads": len(picks),
+        "read_batch": READ_BATCH,
+        "prepared_tps": round(len(picks) / prepared_s, 1),
+        "unprepared_tps": round(len(picks) / scalar_s, 1),
+        "prepared_us_per_row": round(1e6 * prepared_s / len(picks), 2),
+        "unprepared_us_per_row": round(1e6 * scalar_s / len(picks), 2),
+        "speedup": round(scalar_s / prepared_s, 2),
+        "plan_cache": info,
+        "hit_rate": round(hit_rate, 4),
+        "identical": bool(identical),
+    }
+
+
+def _write_arms(db: Database, n_writes: int, seed: int) -> Dict:
+    """Prepared batched inserts vs scalar inserts, same generated rows."""
+    rows = tpcc.generate_tpcc(
+        n_warehouses=1, districts_per_wh=1,
+        customers_per_district=max(10, n_writes), n_items=10,
+        orders_per_district=5, seed=seed)["customer"][:n_writes]
+
+    schema = db["customer"].schema
+
+    def fresh():
+        # Same fit sample for both arms: the comparison is about the
+        # execution path, so the codecs must quantize identically.
+        d = Database(backend="blitzcrank", n_shards=2)
+        return d.create_table(schema, sample_rows=rows)
+
+    t_batch = fresh()
+    op = t_batch.prepare("insert")
+    t0 = time.perf_counter()
+    for lo in range(0, len(rows), READ_BATCH):
+        op.run(rows[lo:lo + READ_BATCH])
+    prepared_s = time.perf_counter() - t0
+
+    t_scalar = fresh()
+    t0 = time.perf_counter()
+    for r in rows:
+        t_scalar.insert(r)
+    scalar_s = time.perf_counter() - t0
+
+    identical = (t_batch.get_many([t_batch.schema.key_of(r) for r in rows])
+                 == t_scalar.get_many([t_scalar.schema.key_of(r)
+                                       for r in rows]))
+    return {
+        "n_writes": len(rows),
+        "prepared_tps": round(len(rows) / prepared_s, 1),
+        "unprepared_tps": round(len(rows) / scalar_s, 1),
+        "speedup": round(scalar_s / prepared_s, 2),
+        "identical": bool(identical),
+    }
+
+
+def run(n_warehouses: int = 2, districts_per_wh: int = 10,
+        customers_per_district: int = 200, n_items: int = 1000,
+        orders_per_district: int = 50, n_shards: int = 2,
+        n_reads: int = 4000, n_writes: int = 2000, seed: int = 7) -> Dict:
+    population = tpcc.generate_tpcc(
+        n_warehouses=n_warehouses, districts_per_wh=districts_per_wh,
+        customers_per_district=customers_per_district, n_items=n_items,
+        orders_per_district=orders_per_district, seed=seed)
+    db = _build_customer_db(population, n_shards)
+    reads = _read_arms(db, n_reads, seed)
+    writes = _write_arms(db, n_writes, seed + 1)
+    identical = reads["identical"] and writes["identical"]
+    return {
+        "scale": {
+            "n_warehouses": n_warehouses,
+            "districts_per_wh": districts_per_wh,
+            "customers_per_district": customers_per_district,
+            "n_shards": n_shards, "n_reads": n_reads, "n_writes": n_writes,
+        },
+        "reads": reads,
+        "writes": writes,
+        "acceptance": {
+            "speedup_floor": SPEEDUP_FLOOR,
+            "hit_rate_floor": HIT_RATE_FLOOR,
+            "read_speedup": reads["speedup"],
+            "hit_rate": reads["hit_rate"],
+            "identical": identical,
+            "pass": bool(reads["speedup"] >= SPEEDUP_FLOOR
+                         and reads["hit_rate"] >= HIT_RATE_FLOOR
+                         and identical),
+        },
+    }
+
+
+def main(quick: bool = True, smoke: bool = False) -> Dict:
+    if smoke:
+        report = run(n_warehouses=1, districts_per_wh=2,
+                     customers_per_district=40, n_items=100,
+                     orders_per_district=10, n_reads=600, n_writes=200)
+    elif quick:
+        report = run()
+    else:
+        report = run(n_warehouses=4, customers_per_district=300,
+                     n_items=2000, n_reads=8000, n_writes=4000)
+    report["mode"] = "smoke" if smoke else ("quick" if quick else "full")
+    artifact = write_bench_json("exec_engine", report, schema="exec_engine")
+    r, w = report["reads"], report["writes"]
+    print(f"exec_engine_get_prepared,{r['prepared_us_per_row']},"
+          f"tps={r['prepared_tps']};speedup={r['speedup']};"
+          f"hit_rate={r['hit_rate']}")
+    print(f"exec_engine_get_scalar,{r['unprepared_us_per_row']},"
+          f"tps={r['unprepared_tps']}")
+    print(f"exec_engine_insert,{round(1e6 / max(w['prepared_tps'], 1e-9), 2)},"
+          f"tps={w['prepared_tps']};speedup={w['speedup']}")
+    acc = report["acceptance"]
+    print(f"exec_engine_acceptance,{acc['read_speedup']},"
+          f"hit_rate={acc['hit_rate']};identical={acc['identical']};"
+          f"pass={acc['pass']};artifact={artifact.name}")
+    return report
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -26,8 +26,8 @@ def main() -> None:
     from benchmarks import (artifact, bench_adaptive_refit, bench_archive,
                             bench_batch_decode, bench_compression,
                             bench_db_tpcc, bench_entropy_coders,
-                            bench_fastpath, bench_framework,
-                            bench_granularity, bench_htap,
+                            bench_exec_engine, bench_fastpath,
+                            bench_framework, bench_granularity, bench_htap,
                             bench_out_of_core, bench_recovery,
                             bench_sampling, bench_sanitize,
                             bench_telemetry, bench_update_merge,
@@ -42,6 +42,7 @@ def main() -> None:
         "update_merge": bench_update_merge,      # DESIGN.md §3 delta merge
         "adaptive_refit": bench_adaptive_refit,  # DESIGN.md §4 drift/refit
         "db_tpcc": bench_db_tpcc,                # DESIGN.md §5 engine, §6
+        "exec_engine": bench_exec_engine,        # DESIGN.md §11 plan/run
         "out_of_core": bench_out_of_core,        # DESIGN.md §6 cold tier
         "recovery": bench_recovery,              # DESIGN.md §7 durability
         "htap": bench_htap,                      # DESIGN.md §8 scan engine

@@ -348,6 +348,14 @@ class TableCodec:
         fcodes = foff = None
         if plan is not None:
             syms, fast = plan.encode_rows(rows)
+            if fast.all():
+                # All rows conform: the batch CSR is already the arena
+                # layout — skip the per-row interleave entirely.
+                fcodes, foff = plan.encode_batch(syms)
+                codes = checked_astype(
+                    fcodes, np.uint16, where="compress_rows codes"
+                )
+                return codes, np.asarray(foff, np.int64), fast
             if fast.any():
                 fcodes, foff = plan.encode_batch(syms[fast])
         chunks: List[np.ndarray] = []

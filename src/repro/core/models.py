@@ -38,6 +38,24 @@ class BlockEncoder:
 
 _RAW64 = UniformCoder(TOTAL)  # raw 16-bit payload slot
 _BYTE = UniformCoder(256)
+_DIGIT10 = UniformCoder(10)
+
+#: Longest run of ASCII digits encoded through the digit path.  Bounded so
+#: the per-token length symbol fits one small DiscreteCoder alphabet.
+MAX_DIGIT_LEN = 16
+
+#: Distinct-value cap for per-position word stats (StringModel.pos_words).
+_POS_WORD_CAP = 64
+
+
+def _is_digit_token(tok: str) -> bool:
+    """True iff ``tok`` is a non-empty run of ASCII ``0-9`` we digit-encode.
+
+    The rule is *value-only* and deterministic: any such token always takes
+    the digit path (never the word dictionary), so the scalar encoder, the
+    slot-plan compiler, and conformance checks agree without coordination.
+    """
+    return 0 < len(tok) <= MAX_DIGIT_LEN and all("0" <= c <= "9" for c in tok)
 
 
 def _encode_raw_bytes(enc: BlockEncoder, payload: bytes) -> None:
@@ -74,7 +92,10 @@ class CategoricalModel:
     """Frequency model over observed values + escape for unseen ones."""
 
     def __init__(
-        self, values: Sequence[Any], esc_weight: float | None = None
+        self,
+        values: Sequence[Any],
+        esc_weight: float | None = None,
+        digit_esc_weight: float | None = None,
     ) -> None:
         counts = Counter(values)
         self.id2value = list(counts.keys())
@@ -85,7 +106,14 @@ class CategoricalModel:
             # Good-Turing flavour: escape mass ~ number of singletons.
             esc_weight = max(1.0, float((freqs == 1).sum()))
         self.esc = n
-        self.coder = DiscreteCoder(quantize_freqs(np.append(freqs, esc_weight)))
+        # Optional second escape used by StringModel for all-digit tokens:
+        # the caller owns what follows the symbol in the stream.
+        self.esc_digits: int | None = None
+        tail = [esc_weight]
+        if digit_esc_weight is not None:
+            self.esc_digits = n + 1
+            tail.append(digit_esc_weight)
+        self.coder = DiscreteCoder(quantize_freqs(np.append(freqs, tail)))
         self._probs = self.coder.tables.k_of.astype(np.float64) / TOTAL
 
     def encode_value(self, v: Any, enc: BlockEncoder, ctx=None) -> None:
@@ -356,6 +384,18 @@ class StringModel:
         words_all: List[bytes] = []
         delims: List[str] = []
         nseg: List[int] = []
+        digit_lens: List[int] = []
+        # Per-(segment-count, word-position) token-kind stats: Counter keys
+        # are a digit length L >= 1 or -1 for a dictionary/Markov word.  The
+        # slot-plan compiler uses the majority kind to fix each template
+        # position's mode (plan.py).
+        self.pos_kinds: Dict[int, List[Counter]] = {}
+        # Per-position word-value stats for non-digit tokens, capped at
+        # ``_POS_WORD_CAP`` distinct values (a ``None`` key marks the
+        # position as high-cardinality).  Lets the plan compiler detect
+        # near-constant word positions and lower them to a vectorized
+        # character-matrix check.
+        self.pos_words: Dict[int, List[Counter]] = {}
         for idx, s in enumerate(values):
             if idx % max(1, block_tuples) == 0:
                 queue.clear()
@@ -367,16 +407,43 @@ class StringModel:
             else:
                 rest = s
             segs = self._split(rest)
-            nseg.append((len(segs) + 1) // 2)
+            row_n = (len(segs) + 1) // 2
+            nseg.append(row_n)
+            kinds_row = self.pos_kinds.setdefault(
+                row_n, [Counter() for _ in range(row_n)]
+            )
+            words_row = self.pos_words.setdefault(
+                row_n, [Counter() for _ in range(row_n)]
+            )
             for t, tok in enumerate(segs):
                 if t % 2 == 0:
-                    words_all.append(tok.encode("utf-8"))
+                    if _is_digit_token(tok):
+                        digit_lens.append(len(tok))
+                        kinds_row[t // 2][len(tok)] += 1
+                    else:
+                        words_all.append(tok.encode("utf-8"))
+                        kinds_row[t // 2][-1] += 1
+                        wcounter = words_row[t // 2]
+                        if None in wcounter or len(wcounter) > _POS_WORD_CAP:
+                            wcounter[None] += 1
+                        else:
+                            wcounter[tok] += 1
                 else:
                     delims.append(tok)
             queue.append(s)
         # Segment-count histogram: the slot-plan compiler (plan.py) uses it
         # to derive a fixed word/delimiter template for format-fixed columns.
         self.n_words_counts = Counter(nseg)
+        # Per-(segment-count, word-position) digit cap: the max digit-token
+        # length observed there at fit (0 = never a digit).  The digit path
+        # pads every token to the position's cap so each position costs a
+        # FIXED number of symbols — what lets the slot plan lower
+        # variable-length numbers (street/sku/phone runs) to fixed slots
+        # while staying bit-identical to this scalar coder.
+        self.pos_digit_max: Dict[int, List[int]] = {
+            W: [max((k for k in c if k >= 1), default=0) for c in counters]
+            for W, counters in self.pos_kinds.items()
+        }
         self.i_model = DiscreteCoder(
             quantize_freqs(np.bincount(i_seen, minlength=self.K + 1) + 0.5)
         )
@@ -385,11 +452,18 @@ class StringModel:
         )
         self.n_model = NumericModel(nseg or [1], precision=1, T=64, integer=True)
         self.delim_model = CategoricalModel(delims or [" "])
+        # All-digit tokens never enter the dictionary or the Markov escape:
+        # they flow through the fixed-rate digit path behind ``esc_digits``.
+        lens_arr = np.array([L - 1 for L in digit_lens], dtype=np.int64)
+        self.digit_len_model = DiscreteCoder(
+            quantize_freqs(np.bincount(lens_arr, minlength=MAX_DIGIT_LEN) + 0.5)
+        )
         wc = Counter(words_all)
         common = {w for w, c in wc.most_common(dict_cap) if c >= dict_min_count}
         self.dict_model = CategoricalModel(
             [w for w in words_all if w in common] or [b""],
             esc_weight=max(1.0, sum(c for w, c in wc.items() if w not in common)),
+            digit_esc_weight=max(1.0, float(len(digit_lens))),
         )
         self.markov = ByteMarkov([w for w in words_all if w not in common] or [b"a"])
         self._block_queue: deque = deque(maxlen=self.K)
@@ -423,6 +497,14 @@ class StringModel:
     def reset_block(self) -> None:
         self._block_queue.clear()
 
+    def digit_cap(self, n_words: int, t: int) -> int:
+        """Digit-slot budget for word position ``t`` of an ``n_words``
+        template (0 = the position never digit-encodes)."""
+        caps = self.pos_digit_max.get(n_words)
+        if caps is None or t >= len(caps):
+            return 0
+        return caps[t]
+
     def encode_value(self, v: str, enc: BlockEncoder, ctx=None) -> None:
         s = v if isinstance(v, str) else str(v)
         i, h = self._best_match(s, self._block_queue)
@@ -437,6 +519,18 @@ class StringModel:
         self.n_model.encode_value(n_words, enc)
         for t, tok in enumerate(segs):
             if t % 2 == 0:
+                cap = self.digit_cap(n_words, t // 2) if _is_digit_token(tok) else 0
+                if 0 < len(tok) <= cap:
+                    enc.add(self.dict_model.coder, self.dict_model.esc_digits)
+                    enc.add(self.digit_len_model, len(tok) - 1)
+                    for ch in tok:
+                        enc.add(_DIGIT10, ord(ch) - 48)
+                    for _ in range(cap - len(tok)):  # pad to the fixed cap
+                        enc.add(_DIGIT10, 0)
+                    continue
+                # digit tokens longer than the position's cap (or at
+                # positions never seen as digits) take the word path and
+                # escape through the Markov coder — dicts never hold them.
                 wb = tok.encode("utf-8")
                 wid = self.dict_model.value2id.get(wb)
                 if wid is None:
@@ -462,6 +556,14 @@ class StringModel:
                 parts.append(
                     self.markov.decode_word(dec).decode("utf-8", errors="replace")
                 )
+            elif sym == self.dict_model.esc_digits:
+                n_dig = dec.next_symbol(self.digit_len_model) + 1
+                parts.append(
+                    "".join(chr(48 + dec.next_symbol(_DIGIT10))
+                            for _ in range(n_dig))
+                )
+                for _ in range(self.digit_cap(n_words, t) - n_dig):
+                    dec.next_symbol(_DIGIT10)  # drain the cap padding
             else:
                 parts.append(
                     self.dict_model.id2value[sym].decode("utf-8", errors="replace")
@@ -476,8 +578,15 @@ class StringModel:
         # crude: dictionary words cheap, escapes pay per byte
         s = v if isinstance(v, str) else str(v)
         bits = 4.0
-        for t, tok in enumerate(self._split(s)):
+        segs = self._split(s)
+        nw = (len(segs) + 1) // 2
+        for t, tok in enumerate(segs):
             if t % 2 == 0:
+                if _is_digit_token(tok):
+                    cap = self.digit_cap(nw, t // 2)
+                    if 0 < len(tok) <= cap:
+                        bits += 2.0 + math.log2(10.0) * cap
+                        continue
                 wb = tok.encode("utf-8")
                 if wb in self.dict_model.value2id:
                     bits += self.dict_model.est_bits(wb)
@@ -488,9 +597,10 @@ class StringModel:
         return bits
 
     def model_bytes(self) -> int:
+        t = self.digit_len_model.tables
         return (self.dict_model.model_bytes() + self.delim_model.model_bytes() +
                 self.markov.model_bytes() + self.h_model.model_bytes() +
-                self.n_model.model_bytes() + 64)
+                self.n_model.model_bytes() + t.k_of.nbytes + 64)
 
 
 # ---------------------------------------------------------------------------

@@ -41,11 +41,13 @@ from . import vectorized
 from .casts import checked_astype
 from .coders import TOTAL, DiscreteCoder, UniformCoder
 from .models import (
+    _DIGIT10,
     CategoricalModel,
     ConditionalCategoricalModel,
     NumericModel,
     StringModel,
     TimeSeriesModel,
+    _is_digit_token,
 )
 from .vectorized import CondSlot
 
@@ -254,6 +256,9 @@ class _CondPlan:
         return v in sub.value2id
 
 
+_DIGIT_CHARS = np.array(list("0123456789"), dtype=object)
+
+
 class _StrPlan:
     """StringModel -> fixed word/delimiter template slots.
 
@@ -261,8 +266,14 @@ class _StrPlan:
     prefix queue is then always empty at encode time, so the match slot is
     the constant "no prefix" symbol and no prefix-length slots are emitted.
     The template fixes ``W`` = the modal word count of the training column;
-    rows with a different segment count, dictionary-miss words, or
-    escape delimiters are non-conforming.
+    each word position is lowered in its *modal kind*: a dictionary word
+    (one dict-coder slot) or an all-digit token of up to ``cap`` digits
+    (constant ``esc_digits`` + length slots, then ``cap`` uniform digit
+    slots — the scalar encoder's cap-padded digit path, flattened, so
+    street numbers and sku/phone runs of varying width share one layout).
+    Rows with a different segment count, a kind mismatch or over-cap digit
+    run at any position, dictionary-miss words, or escape delimiters are
+    non-conforming.
     """
 
     def __init__(self, model: StringModel) -> None:
@@ -286,18 +297,105 @@ class _StrPlan:
             n_syms.append(d)
         self._n_syms = np.asarray(n_syms, np.int64)
         self._nn = len(n_syms)
-        self.n_slots = 1 + self._nn + 2 * self.W - 1
+        # Per word-position mode: None = dictionary word (1 slot), cap >= 1
+        # = all-digit token of up to ``cap`` digits (2 constant slots + cap
+        # digit slots; the scalar coder pads every digit token to the same
+        # cap, so conforming streams stay bit-identical).  ``_digit_modal``
+        # keeps the most common length for the fixed-shape pre-pass.
+        per_pos = getattr(m, "pos_kinds", {}).get(self.W)
+        self._esc_digits = getattr(m.dict_model, "esc_digits", None)
+        self._modes: List[Optional[int]] = []
+        self._digit_modal: List[Optional[int]] = []
+        for t in range(self.W):
+            mode: Optional[int] = None
+            modal: Optional[int] = None
+            if per_pos is not None and t < len(per_pos) and per_pos[t]:
+                kind = int(per_pos[t].most_common(1)[0][0])
+                if kind >= 1 and self._esc_digits is not None:
+                    mode = int(m.digit_cap(self.W, t))
+                    modal = kind
+            self._modes.append(mode)
+            self._digit_modal.append(modal)
+        # Slot offsets (relative to the first template slot) of each word
+        # position and of the delimiter that follows it.
+        self._word_off: List[int] = []
+        self._delim_off: List[int] = []
+        off = 0
+        for t, mode in enumerate(self._modes):
+            self._word_off.append(off)
+            off += 1 if mode is None else 2 + mode
+            if t < self.W - 1:
+                self._delim_off.append(off)
+                off += 1
+        self.n_slots = 1 + self._nn + off
         self._words = _obj_array(
             [wb.decode("utf-8", errors="replace") for wb in m.dict_model.id2value],
             pad="",
         )
         self._delims = _obj_array(list(m.delim_model.id2value), pad="")
+        self._fixed = self._build_fixed_spec()
+
+    def _build_fixed_spec(self) -> Optional[Dict[str, Any]]:
+        """Character-matrix spec for fully fixed-shape templates.
+
+        When every word position is a fixed-length digit run or a
+        near-constant dictionary word, conforming strings all share one
+        exact character layout, so a whole batch lowers through vectorized
+        char-code compares with no per-row Python.  Rows failing the check
+        fall back to the exact row-wise encoder, keeping the fast mask
+        identical to :meth:`conforms`.
+        """
+        m = self.m
+        per_words = getattr(m, "pos_words", {}).get(self.W)
+        base = 1 + self._nn
+        spec: List[Tuple[str, int, int, int, Any]] = []
+        coff = 0
+        for t, mode in enumerate(self._modes):
+            if mode is not None:
+                # Fixed layout needs one exact char width: use the modal
+                # digit length; other lengths re-check through the exact
+                # row-wise encoder.
+                modal = self._digit_modal[t]
+                if modal is None or modal > mode:
+                    return None
+                spec.append(
+                    ("digit", coff, modal, base + self._word_off[t], mode)
+                )
+                coff += modal
+            else:
+                if per_words is None or t >= len(per_words) or not per_words[t]:
+                    return None
+                pw = per_words[t]
+                if None in pw:
+                    return None
+                w, c = pw.most_common(1)[0]
+                if c < 0.95 * sum(pw.values()):
+                    return None
+                wid = m.dict_model.value2id.get(w.encode("utf-8"))
+                if wid is None:
+                    return None
+                codes = np.array([ord(ch) for ch in w], np.uint32)
+                spec.append(
+                    ("word", coff, len(w), base + self._word_off[t], (codes, wid))
+                )
+                coff += len(w)
+            if t < self.W - 1:
+                spec.append(("delim", coff, 1, base + self._delim_off[t], None))
+                coff += 1
+        lut = np.full(128, -1, np.int64)
+        for d, did in m.delim_model.value2id.items():
+            if isinstance(d, str) and len(d) == 1 and ord(d) < 128:
+                lut[ord(d)] = did
+        return {"t_len": coff, "spec": spec, "lut": lut}
 
     def coders(self) -> List:
         m = self.m
         out = [m.i_model, m.n_model.l1, *m.n_model.l2]
-        for t in range(self.W):
+        for t, mode in enumerate(self._modes):
             out.append(m.dict_model.coder)
+            if mode is not None:
+                out.append(m.digit_len_model)
+                out.extend([_DIGIT10] * mode)
             if t < self.W - 1:
                 out.append(m.delim_model.coder)
         return out
@@ -305,6 +403,51 @@ class _StrPlan:
     def encode(
         self, vals: Sequence, ctx: Dict[str, Sequence]
     ) -> Tuple[np.ndarray, np.ndarray]:
+        if self._fixed is not None and len(vals):
+            return self._encode_fixed(vals)
+        return self._encode_rowwise(vals)
+
+    def _encode_fixed(self, vals: Sequence) -> Tuple[np.ndarray, np.ndarray]:
+        fixed = self._fixed
+        assert fixed is not None
+        t_len = fixed["t_len"]
+        sv = [v if isinstance(v, str) else str(v) for v in vals]
+        n = len(sv)
+        ua = np.array(sv, dtype=f"U{t_len + 1}")
+        cm = ua.view(np.uint32).reshape(n, t_len + 1)
+        ok = np.char.str_len(ua) == t_len
+        syms = np.zeros((n, self.n_slots), np.int64)
+        base = 1 + self._nn
+        syms[:, 0] = self.m.K
+        syms[:, 1:base] = self._n_syms
+        lut = fixed["lut"]
+        for kind, coff, ln, slot, payload in fixed["spec"]:
+            if kind == "digit":
+                d = cm[:, coff:coff + ln].astype(np.int64) - 48
+                ok &= ((d >= 0) & (d <= 9)).all(axis=1)
+                syms[:, slot] = self._esc_digits
+                syms[:, slot + 1] = ln - 1
+                syms[:, slot + 2:slot + 2 + ln] = d
+            elif kind == "word":
+                codes, wid = payload
+                if ln:
+                    ok &= (cm[:, coff:coff + ln] == codes).all(axis=1)
+                syms[:, slot] = wid
+            else:  # delim
+                ch = cm[:, coff].astype(np.int64)
+                did = lut[np.clip(ch, 0, 127)]
+                ok &= (ch < 128) & (did >= 0)
+                syms[:, slot] = np.maximum(did, 0)
+        bad = np.nonzero(~ok)[0]
+        if bad.size:
+            # Non-matching rows may still conform through other dictionary
+            # words — re-check them with the exact row-wise encoder.
+            sub_syms, sub_ok = self._encode_rowwise([sv[i] for i in bad])
+            syms[bad] = sub_syms
+            ok[bad] = sub_ok
+        return syms, ok
+
+    def _encode_rowwise(self, vals: Sequence) -> Tuple[np.ndarray, np.ndarray]:
         m, W = self.m, self.W
         n = len(vals)
         syms = np.zeros((n, self.n_slots), np.int64)
@@ -312,6 +455,7 @@ class _StrPlan:
         wget = m.dict_model.value2id.get
         dget = m.delim_model.value2id.get
         base = 1 + self._nn
+        modes, woff, doff = self._modes, self._word_off, self._delim_off
         # blitzlint: waive[BL001] -- string tokenizer walks variable-length values on the fit/escape path
         for r, v in enumerate(vals):
             s = v if isinstance(v, str) else str(v)
@@ -322,19 +466,57 @@ class _StrPlan:
             syms[r, 0] = m.K                      # empty queue: no prefix hit
             syms[r, 1:base] = self._n_syms
             for t, tok in enumerate(segs):
-                wid = (wget(tok.encode("utf-8")) if t % 2 == 0 else dget(tok))
-                if wid is None:
-                    ok[r] = False
-                    break
-                syms[r, base + t] = wid
+                if t % 2 == 1:
+                    did = dget(tok)
+                    if did is None:
+                        ok[r] = False
+                        break
+                    syms[r, base + doff[t // 2]] = did
+                    continue
+                mode = modes[t // 2]
+                off = base + woff[t // 2]
+                if mode is None:
+                    wid = wget(tok.encode("utf-8"))
+                    if wid is None:               # dict miss (or digit token)
+                        ok[r] = False
+                        break
+                    syms[r, off] = wid
+                else:
+                    if len(tok) > mode or not _is_digit_token(tok):
+                        ok[r] = False
+                        break
+                    syms[r, off] = self._esc_digits
+                    syms[r, off + 1] = len(tok) - 1
+                    for i, ch in enumerate(tok):
+                        syms[r, off + 2 + i] = ord(ch) - 48
+                    # slots past len(tok) stay 0 — the scalar cap padding
         return syms, ok
 
     def decode(self, syms: np.ndarray, ctx: Dict[str, Any]) -> np.ndarray:
         base = 1 + self._nn
         cols = []
-        for t in range(2 * self.W - 1):
-            tab = self._words if t % 2 == 0 else self._delims
-            cols.append(tab[np.minimum(syms[:, base + t], len(tab) - 1)])
+        for t, mode in enumerate(self._modes):
+            off = base + self._word_off[t]
+            if mode is None:
+                tab = self._words
+                cols.append(tab[np.minimum(syms[:, off], len(tab) - 1)])
+            else:
+                # variable-length digit run: grow each row's string up to
+                # its decoded length (<= mode concat passes, vectorized)
+                lens = np.minimum(syms[:, off + 1], mode - 1) + 1
+                col = _DIGIT_CHARS[np.minimum(syms[:, off + 2], 9)].copy()
+                for i in range(1, mode):
+                    live = lens > i
+                    if not live.any():
+                        break
+                    col[live] = col[live] + _DIGIT_CHARS[
+                        np.minimum(syms[live, off + 2 + i], 9)
+                    ]
+                cols.append(col)
+            if t < self.W - 1:
+                tab = self._delims
+                doff = base + self._delim_off[t]
+                cols.append(tab[np.minimum(syms[:, doff], len(tab) - 1)])
         if len(cols) == 1:
             return cols[0]
         return np.asarray(["".join(parts) for parts in zip(*cols)], dtype=object)
@@ -347,10 +529,15 @@ class _StrPlan:
         wids = self.m.dict_model.value2id
         dids = self.m.delim_model.value2id
         for t, tok in enumerate(segs):
-            if t % 2 == 0:
+            if t % 2 == 1:
+                if tok not in dids:
+                    return False
+                continue
+            mode = self._modes[t // 2]
+            if mode is None:
                 if tok.encode("utf-8") not in wids:
                     return False
-            elif tok not in dids:
+            elif len(tok) > mode or not _is_digit_token(tok):
                 return False
         return True
 
@@ -576,6 +763,13 @@ class TablePlan:
         rows = np.asarray(rows, np.int64)
         if rows.size == 0:
             return np.zeros((0, self.S), np.int64)
+        # Pad the batch to a pow2 bucket (floor 8) so jax traces one
+        # kernel per bucket instead of one per distinct batch size — the
+        # same bucketing the prepared-op cache keys on (DESIGN.md §11).
+        n = rows.size
+        padded = 1 << max(3, (n - 1).bit_length())
+        if padded != n:
+            rows = np.concatenate([rows, np.full(padded - n, rows[-1], np.int64)])
         starts = offsets[rows]
         lens = offsets[rows + 1] - starts
         cols = np.arange(self.S)[None, :]
@@ -586,7 +780,7 @@ class TablePlan:
         )
         tables, m_bits = self.pallas_tables()
         out = delayed_decode(jnp.asarray(dense), tables, m_bits)
-        return np.asarray(out).astype(np.int64)
+        return np.asarray(out).astype(np.int64)[:n]
 
     def pallas_tables(self) -> Tuple[Any, int]:
         """Lazy ``(tables f32[S, M, 7], m_bits)`` in the kernel's layout."""

@@ -142,6 +142,17 @@ class Database:
     def schemas(self) -> Dict[str, TableSchema]:
         return {n: t.schema for n, t in self._tables.items()}
 
+    # -- compiled execution surface (DESIGN.md §11) ----------------------
+    def session(self) -> Any:
+        """Open an execution session: prepared-handle cache per
+        (table, verb) plus batched verb conveniences —
+        ``ses.insert("orders", rows)``, ``ses.get("customer", keys,
+        backend="pallas")``.  Sessions are cheap; open one per worker or
+        transaction loop.  See :class:`repro.exec.Session`."""
+        from repro.exec.prepared import Session  # deferred: no cycle
+
+        return Session(self)
+
     # -- analytics entry point (DESIGN.md §8) ----------------------------
     def query(
         self,
@@ -152,6 +163,7 @@ class Database:
         aggs: Optional[Dict[str, Any]] = None,
         pushdown: bool = True,
         backend: Optional[str] = None,
+        with_stats: bool = False,
     ) -> Any:
         """One-stop OLAP entry point over a registered table.
 
@@ -161,7 +173,10 @@ class Database:
         it runs the streaming group-by aggregation instead and returns
         ``{group key tuple: {name: value}}``.  ``pushdown=False`` forces
         the decode-everything reference path on every shard (the
-        correctness oracle the scan tests diff against).
+        correctness oracle the scan tests diff against).  Both paths take
+        the same ``backend=`` / ``with_stats=`` keywords and report the
+        same ``ScanStats`` shape (DESIGN.md §8): ``with_stats=True``
+        returns ``(result, stats)``.
         """
         t = self.table(table)
         if aggs is not None or group_by:
@@ -171,9 +186,14 @@ class Database:
                 aggs=aggs,
                 pushdown=pushdown,
                 backend=backend,
+                with_stats=with_stats,
             )
         return t.scan_where(
-            predicates, columns=columns, pushdown=pushdown, backend=backend
+            predicates,
+            columns=columns,
+            pushdown=pushdown,
+            backend=backend,
+            with_stats=with_stats,
         )
 
     # -- engine-wide maintenance -----------------------------------------

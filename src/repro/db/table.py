@@ -96,6 +96,7 @@ class Table:
             )
         self._shards: List[RowStore] = []
         self._dir: Dict[Key, Tuple[int, int]] = {}
+        self._prepared: Dict[str, Any] = {}
         # Durability hooks (DESIGN.md §7), wired by a durable Database via
         # attach_wal(): the WAL gets every batch verb *before* it applies,
         # _on_ops drives the checkpoint cadence at verb end, and _io
@@ -176,6 +177,35 @@ class Table:
     def shard_of(self, key: Key) -> int:
         return stable_key_hash(key) % self.n_shards
 
+    @property
+    def plan_epoch(self) -> Tuple[int, ...]:
+        """Per-shard plan versions — the epoch component of the
+        prepared-op cache key (DESIGN.md §11).  A refit/migrate
+        ``install_codec`` bumps a shard's version and so the epoch;
+        merges that keep the plan leave it unchanged."""
+        return tuple(getattr(s, "plan_epoch", 0) for s in self._shards)
+
+    def prepare(self, verb: str, schema: Optional[TableSchema] = None) -> Any:
+        """Prepared handle for a batched verb (DESIGN.md §11).
+
+        ``verb`` is one of ``insert / get / update / delete``; the
+        returned :class:`~repro.exec.PreparedOp` lowers the verb once per
+        (plan epoch, batch bucket) and replays it via ``.run(...)``.
+        ``schema``, when given, must be this table's schema (the arg
+        exists so callers can assert the table they prepared against).
+        """
+        if schema is not None and schema is not self.schema:
+            raise ValueError(
+                f"table {self.name!r}: prepare() schema mismatch "
+                f"(got {getattr(schema, 'name', schema)!r})"
+            )
+        op = self._prepared.get(verb)
+        if op is None:
+            from repro.exec.prepared import PreparedOp  # deferred: no cycle
+
+            op = self._prepared[verb] = PreparedOp(self, verb)
+        return op
+
     def _route(self, key: Key) -> Tuple[int, int]:
         """(shard, local id) of a live key, or raise KeyError."""
         try:
@@ -185,7 +215,11 @@ class Table:
                 f"table {self.name!r}: no live row for key {key!r}"
             ) from None
 
-    # -- batched verbs (one RowStore call per touched shard) -------------
+    # -- batched verbs: compatibility shims over the prepared path -------
+    # One execution path (DESIGN.md §11): each legacy verb routes through
+    # ``prepare(verb).run(...)``, which resolves the lowered plan entry
+    # and calls the matching ``_exec_*`` body below.
+
     def insert_many(self, rows: Sequence[Dict[str, Any]]) -> List[Key]:
         """Insert rows, returning their primary keys in request order.
 
@@ -193,28 +227,48 @@ class Table:
         or earlier in the same batch) — TPC-C inserts are always fresh
         keys, and silent upsert would hide routing bugs.
         """
-        rows = list(rows)
-        if not rows:
-            return []
+        return self.prepare("insert").run(rows)
+
+    def get_many(
+        self, keys: Sequence[Key], backend: Optional[str] = None
+    ) -> List[Optional[Dict[str, Any]]]:
+        """Batched point reads in request order; ``None`` for missing keys.
+
+        ``backend`` forces the decode backend ("numpy"/"pallas"); every
+        RowStore accepts it (non-blitz backends ignore it).
+        """
+        return self.prepare("get").run(keys, backend=backend)
+
+    def update_many(self, keys: Sequence[Key], rows: Sequence[Dict[str, Any]]) -> None:
+        """In-place updates (last write wins on duplicate keys); the primary
+        key of each row must match its key — keys are immutable."""
+        return self.prepare("update").run(keys, rows)
+
+    def delete_many(self, keys: Sequence[Key]) -> int:
+        """Delete live keys, returning how many were actually deleted
+        (missing/repeated keys are no-ops, matching RowStore)."""
+        return self.prepare("delete").run(keys)
+
+    # -- verb bodies (one RowStore call per touched shard) ---------------
+    def _exec_insert(
+        self, rows: Sequence[Dict[str, Any]], keys: Sequence[Key], shards: Any
+    ) -> List[Key]:
+        """Apply a routed insert batch (keys/shards from the prepared op)."""
         t0 = telemetry.clock()
         if not self._shards:
             self._build_shards(rows)
-        keys: List[Key] = []
         batch_seen: set = set()
         per_shard: List[List[Dict[str, Any]]] = [[] for _ in self._shards]
         per_shard_keys: List[List[Key]] = [[] for _ in self._shards]
-        for r in rows:
+        for r, k, s in zip(rows, keys, shards):
             self.schema.validate_row(r)
-            k = self.schema.key_of(r)
             if k in self._dir or k in batch_seen:
                 raise ValueError(
                     f"table {self.name!r}: duplicate insert of key {k!r}"
                 )
             batch_seen.add(k)
-            s = self.shard_of(k)
             per_shard[s].append(r)
             per_shard_keys[s].append(k)
-            keys.append(k)
         self._log("insert", rows)
         for s, (grp, gkeys) in enumerate(zip(per_shard, per_shard_keys)):
             if not grp:
@@ -226,16 +280,11 @@ class Table:
         self._note_ops(len(rows))
         _C_INSERT_ROWS.add(len(rows))
         telemetry.record("repro.db.insert_many", t0)
-        return keys
+        return list(keys)
 
-    def get_many(
-        self, keys: Sequence[Key], backend: Optional[str] = None
+    def _exec_get(
+        self, keys: Sequence[Key], backend: Optional[str]
     ) -> List[Optional[Dict[str, Any]]]:
-        """Batched point reads in request order; ``None`` for missing keys.
-
-        ``backend`` forces the decode backend ("numpy"/"pallas") on shards
-        that support it (BlitzStore); leave ``None`` for other backends.
-        """
         out: List[Optional[Dict[str, Any]]] = [None] * len(keys)
         if not self._shards:
             return out
@@ -253,19 +302,16 @@ class Table:
             if not ids:
                 continue
             _C_SHARD_CALLS.inc()
-            if backend is None:
-                got = self._shards[s].get_many(ids)
-            else:
-                got = self._shards[s].get_many(ids, backend=backend)
+            got = self._shards[s].get_many(ids, backend=backend)
             for pos, row in zip(poss, got):
                 out[pos] = row
         _C_GET_ROWS.add(len(keys))
         telemetry.record("repro.db.get_many", t0)
         return out
 
-    def update_many(self, keys: Sequence[Key], rows: Sequence[Dict[str, Any]]) -> None:
-        """In-place updates (last write wins on duplicate keys); the primary
-        key of each row must match its key — keys are immutable."""
+    def _exec_update(
+        self, keys: Sequence[Key], rows: Sequence[Dict[str, Any]]
+    ) -> None:
         t0 = telemetry.clock()
         merged: Dict[Key, Dict[str, Any]] = {}
         for k, r in zip(keys, rows):
@@ -291,9 +337,7 @@ class Table:
         _C_UPDATE_ROWS.add(len(merged))
         telemetry.record("repro.db.update_many", t0)
 
-    def delete_many(self, keys: Sequence[Key]) -> int:
-        """Delete live keys, returning how many were actually deleted
-        (missing/repeated keys are no-ops, matching RowStore)."""
+    def _exec_delete(self, keys: Sequence[Key]) -> int:
         t0 = telemetry.clock()
         per_shard_ids: List[List[int]] = [[] for _ in self._shards]
         dropped: List[Key] = []
@@ -323,8 +367,12 @@ class Table:
         return self.insert_many([row])[0]
 
     def get(self, key: Key) -> Dict[str, Any]:
-        s, i = self._route(key)
-        return self._shards[s].get(i)
+        # One execution path: scalar reads replay the same prepared plan
+        # as batched reads (missing keys keep the KeyError contract).
+        row = self.get_many([key])[0]
+        if row is None:
+            raise KeyError(key)
+        return row
 
     def update(self, key: Key, row: Dict[str, Any]) -> None:
         self.update_many([key], [row])
@@ -435,7 +483,8 @@ class Table:
         aggs: Optional[Dict[str, Tuple[str, Optional[str]]]] = None,
         pushdown: bool = True,
         backend: Optional[str] = None,
-    ) -> Dict[Tuple[Any, ...], Dict[str, Any]]:
+        with_stats: bool = False,
+    ) -> Any:
         """Filtered group-by aggregation: ``{group key: {name: value}}``.
 
         ``aggs`` maps output names to ``(op, column)`` with op one of
@@ -444,19 +493,28 @@ class Table:
         out of the pushdown scan — only the group table is materialized,
         never the matching row set — and merge trivially because every
         op is decomposable (avg is carried as sum+count until finalize).
+        ``with_stats=True`` returns ``(groups, merged ScanStats)`` — the
+        same stats shape :meth:`scan_where` reports (DESIGN.md §8).
         """
+        from repro.scan import ScanStats
+
         aggs = dict(aggs or {"count": ("count", None)})
         group_by = list(group_by)
         need_cols = list(
             dict.fromkeys(group_by + [c for _, c in aggs.values() if c is not None])
         )
+        total = ScanStats()
+        matched = 0
         # state per group: [count, {name: accumulator}]
         groups: Dict[Tuple[Any, ...], List[Any]] = {}
-        for _s, k, row, _st in self._shard_scan(
+        for _s, k, row, st in self._shard_scan(
             predicates, need_cols, pushdown, backend
         ):
+            if st is not None:
+                total.merge(st)
             if k is None:
                 continue
+            matched += 1
             g = tuple(row[c] for c in group_by)
             st = groups.get(g)
             if st is None:
@@ -487,6 +545,9 @@ class Table:
                 else:
                     row_out[name] = acc[name]
             out[g] = row_out
+        if with_stats:
+            total.rows_matched = matched
+            return out, total
         return out
 
     # -- maintenance (DESIGN.md §3/§4, fanned across shards) -------------
@@ -632,6 +693,7 @@ class Table:
         self.memory_budget = state["memory_budget"]
         self._dir = dict(state["dir"])
         self._shards = []
+        self._prepared = {}
         self._wal = None
         self._io = None
         self._on_ops = None

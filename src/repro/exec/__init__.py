@@ -1,0 +1,22 @@
+"""Compiled transaction execution: plan/run split over db verbs.
+
+The engine lowers each batched table verb ONCE per (plan epoch, batch
+bucket) into a :class:`PreparedOp` entry — vectorized key router, warmed
+codec plan, packed Pallas tables — and replays it with no per-call
+re-lowering (DESIGN.md §11).  :class:`Session` is the public execution
+surface: prepared handles per (table, verb) plus convenience verbs.
+
+The legacy ``Table.insert_many / get_many / update_many / delete_many``
+signatures remain as thin compatibility shims that route through
+``Table.prepare(verb).run(...)`` — one execution path.
+"""
+
+from .prepared import PreparedOp, Session
+from .router import shard_keys, stable_key_hash_batch
+
+__all__ = [
+    "PreparedOp",
+    "Session",
+    "shard_keys",
+    "stable_key_hash_batch",
+]

@@ -1,0 +1,91 @@
+"""Vectorized primary-key routing (FNV-1a), bit-identical to
+:func:`repro.db.schema.stable_key_hash`.
+
+The scalar reference hashes each key with a per-byte Python loop; on the
+insert hot path that loop is the router's whole cost.  This module folds
+a *batch* of integer keys through the same byte sequence with numpy
+masks — byte widths vary per key, so each byte position applies only
+where that key still has data — and falls back to the scalar reference
+for any batch holding non-``int`` parts (strings, bools) or magnitudes
+near the int64 edge.  Identity against the reference is property-tested
+in ``tests/test_exec_engine.py``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.db.schema import Key, stable_key_hash
+
+_FNV_OFFSET = np.uint64(0xCBF29CE484222325)
+_FNV_PRIME = np.uint64(0x100000001B3)
+_BYTE_MASK = np.uint64(0xFF)
+_INT_TAG = np.uint64(0x69)
+
+# Keys with |part| at or above this use the scalar reference: the width
+# loop below covers <= 8 data bytes (int64 two's complement).
+_VEC_LIMIT = 1 << 62
+
+
+def _is_plain_int(v: object) -> bool:
+    return type(v) is int and -_VEC_LIMIT < v < _VEC_LIMIT
+
+
+def _fnv_byte(h: np.ndarray, b: np.ndarray | np.uint64) -> np.ndarray:
+    return (h ^ b) * _FNV_PRIME
+
+
+def _byte_widths(v: np.ndarray) -> np.ndarray:
+    """Per-value signed little-endian byte count, matching the scalar
+    reference's ``max(1, (abs(v).bit_length() + 8) // 8)``."""
+    av = np.abs(v).astype(np.uint64)
+    bl = np.zeros(v.shape, np.int64)
+    tmp = av.copy()
+    for shift in (32, 16, 8, 4, 2, 1):
+        m = tmp >= np.uint64(1 << shift)
+        bl[m] += shift
+        tmp[m] >>= np.uint64(shift)
+    bl += (tmp > 0).astype(np.int64)
+    return np.maximum(1, (bl + 8) // 8)
+
+
+def stable_key_hash_batch(keys: Sequence[Key], n_parts: int) -> np.ndarray:
+    """uint64 FNV-1a of each key, bit-identical to ``stable_key_hash``.
+
+    ``n_parts`` is the schema's primary-key arity (1 => scalar keys).
+    Vectorizes batches of plain-``int`` parts; any other part type drops
+    the whole batch to the scalar reference (correct, just slower).
+    """
+    n = len(keys)
+    if n == 0:
+        return np.zeros(0, np.uint64)
+    if n_parts == 1:
+        cols: List[Sequence] = [keys]
+    else:
+        cols = [[k[p] for k in keys] for p in range(n_parts)]  # type: ignore[index]
+    for col in cols:
+        if not all(map(_is_plain_int, col)):
+            return np.array([stable_key_hash(k) for k in keys], np.uint64)
+    h = np.full(n, _FNV_OFFSET, np.uint64)
+    for col in cols:
+        v = np.asarray(col, np.int64)
+        widths = _byte_widths(v)
+        h = _fnv_byte(h, _INT_TAG)
+        h = _fnv_byte(h, widths.astype(np.uint64) & _BYTE_MASK)
+        u = v.astype(np.uint64)  # two's-complement bit pattern
+        for i in range(int(widths.max())):
+            active = widths > i
+            b = (u >> np.uint64(8 * i)) & _BYTE_MASK
+            h = np.where(active, _fnv_byte(h, b), h)
+    return h
+
+
+def shard_keys(keys: Sequence[Key], n_parts: int, n_shards: int) -> np.ndarray:
+    """Shard index per key: ``stable_key_hash(k) % n_shards``, batched."""
+    if n_shards == 1:
+        return np.zeros(len(keys), np.int64)
+    return (
+        stable_key_hash_batch(keys, n_parts) % np.uint64(n_shards)
+    ).astype(np.int64)

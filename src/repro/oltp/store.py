@@ -105,7 +105,12 @@ class RowStore:
     def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
         raise NotImplementedError
 
-    def get_many(self, indices: Sequence[int]) -> List[Optional[Dict[str, Any]]]:
+    def get_many(
+        self, indices: Sequence[int], backend: Optional[str] = None
+    ) -> List[Optional[Dict[str, Any]]]:
+        # ``backend`` selects the decode backend where one exists
+        # (BlitzStore); every store accepts it so callers need no
+        # isinstance checks (DESIGN.md §8 unified verb signatures).
         raise NotImplementedError
 
     def update_many(
@@ -444,7 +449,9 @@ class _BytesRowStore(RowStore):
         enc = self._encode_row
         return self._append_payloads([enc(r) for r in rows])
 
-    def get_many(self, indices: Sequence[int]) -> List[Optional[Dict[str, Any]]]:
+    def get_many(
+        self, indices: Sequence[int], backend: Optional[str] = None
+    ) -> List[Optional[Dict[str, Any]]]:
         idxs = [int(j) for j in indices]
         dec = self._decode_row
         if self._res is None:
@@ -715,6 +722,13 @@ class BlitzStore(RowStore):
     def install_codec(self, codec: TableCodec) -> int:
         """Install a refit codec as the new plan version (writes use it)."""
         return self.table.install_codec(codec)
+
+    @property
+    def plan_epoch(self) -> int:
+        """Plan-version counter for the prepared-op cache (DESIGN.md §11):
+        bumps on ``install_codec`` (adaptive refit / migrate), stays put
+        across merges/rewrites that keep the plan."""
+        return self.table.current_version
 
     def migrate(self, limit: int = 1 << 12, resident_only: bool = True) -> int:
         """Re-encode up to ``limit`` stale escaped rows under the newest
@@ -1143,7 +1157,9 @@ class ZstdStore(_BytesRowStore):
             frames = [comp(p) for p in payloads]
         return self._append_payloads(frames)
 
-    def get_many(self, indices: Sequence[int]) -> List[Optional[Dict[str, Any]]]:
+    def get_many(
+        self, indices: Sequence[int], backend: Optional[str] = None
+    ) -> List[Optional[Dict[str, Any]]]:
         """Batched point gets: one ``multi_decompress_to_buffer`` C call for
         the whole batch when the library supports it."""
         idxs = [int(i) for i in indices]
@@ -1341,7 +1357,9 @@ class LRUFastPath(RowStore):
     def insert_many(self, rows: Sequence[Dict[str, Any]]) -> range:
         return self.store.insert_many(rows)
 
-    def get_many(self, indices: Sequence[int]) -> List[Optional[Dict[str, Any]]]:
+    def get_many(
+        self, indices: Sequence[int], backend: Optional[str] = None
+    ) -> List[Optional[Dict[str, Any]]]:
         idxs = [int(i) for i in indices]
         out: List[Optional[Dict[str, Any]]] = [None] * len(idxs)
         miss_pos: List[int] = []
@@ -1356,7 +1374,9 @@ class LRUFastPath(RowStore):
                 miss_pos.append(j)
         if miss_pos:
             self.misses += len(miss_pos)
-            fetched = self.store.get_many([idxs[j] for j in miss_pos])
+            fetched = self.store.get_many(
+                [idxs[j] for j in miss_pos], backend=backend
+            )
             for j, row in zip(miss_pos, fetched):
                 if row is None:
                     continue  # tombstone: never cached

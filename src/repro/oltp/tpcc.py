@@ -758,7 +758,7 @@ def run_tpcc_mix(
     n_ops: int,
     *,
     seed: int = 0,
-    batch: int = 8,
+    batch: int = 32,
     p_new_order: float = 0.45,
     p_payment: float = 0.43,
     p_order_status: float = 0.08,
@@ -784,15 +784,23 @@ def run_tpcc_mix(
       ``o_carrier_id``, stamp ``ol_delivery_d`` on its lines, credit the
       customer's balance.
 
-    Each batch of ``k`` same-shape transactions issues one batched call
-    per table touched (grouped per shard inside :class:`~repro.db.Table`),
-    keeping the compiled decode path hot.  Returns op counts;
+    Cross-transaction coalescing (group-commit idiom, DESIGN.md §11):
+    each tick draws ``batch`` i.i.d. transaction types, partitions the
+    window by type, and runs each group as ONE batched helper call — so
+    the rows per ``get_many``/``update_many`` grow with the window while
+    the type mix and the seeded key streams stay exactly the i.i.d.
+    workload.  Table verbs replay prepared plans underneath
+    (``Table.prepare(verb).run``), keeping the compiled decode path hot.
+    The schedule depends only on ``seed``, never on backend timing, so
+    every backend replays an identical workload.  Returns op counts;
     ``on_sample(ops_done)`` fires every ``sample_every`` ops.
     """
     rng = np.random.default_rng(seed)
-    warehouse, district = db["warehouse"], db["district"]
-    customer, item, stock = db["customer"], db["item"], db["stock"]
-    orders, order_line = db["orders"], db["order_line"]
+    ses = db.session()  # prepared-handle surface (DESIGN.md §11)
+    warehouse, district = ses.table("warehouse"), ses.table("district")
+    customer, item = ses.table("customer"), ses.table("item")
+    stock = ses.table("stock")
+    orders, order_line = ses.table("orders"), ses.table("order_line")
 
     dist_keys = [k for k, _ in district.scan()]
     item_ids = sorted(k for k, _ in item.scan())
@@ -827,11 +835,19 @@ def run_tpcc_mix(
     thresholds = np.cumsum([p_new_order, p_payment, p_order_status, p_delivery])
     while counts["ops"] < n_ops:
         k = min(batch, n_ops - counts["ops"])
-        u = float(rng.random())
-        if u < thresholds[0]:
+        # Coalesce: k i.i.d. type draws for this window, partitioned into
+        # one batched helper call per type present.  side="right" keeps
+        # the old `u < threshold` boundary semantics.
+        u = rng.random(k)
+        types = np.searchsorted(thresholds, u, side="right")
+        # probability mass past the four weights (zero at the default
+        # weights, which sum to 1): read-only OrderStatus traffic
+        types[types > 3] = 2
+        sizes = np.bincount(types, minlength=4)
+        if sizes[0]:
             _tpcc_new_order(
                 rng,
-                k,
+                int(sizes[0]),
                 dist_keys,
                 next_o_id,
                 district,
@@ -846,14 +862,21 @@ def run_tpcc_mix(
                 entry_day,
                 counts,
             )
-        elif u < thresholds[1]:
+        if sizes[1]:
             _tpcc_payment(
-                rng, k, dist_keys, warehouse, district, customer, zipf_customer, counts
+                rng,
+                int(sizes[1]),
+                dist_keys,
+                warehouse,
+                district,
+                customer,
+                zipf_customer,
+                counts,
             )
-        elif u < thresholds[2]:
+        if sizes[2]:
             _tpcc_order_status(
                 rng,
-                k,
+                int(sizes[2]),
                 dist_keys,
                 next_o_id,
                 customer,
@@ -862,10 +885,10 @@ def run_tpcc_mix(
                 zipf_customer,
                 counts,
             )
-        elif u < thresholds[3]:
+        if sizes[3]:
             _tpcc_delivery(
                 rng,
-                k,
+                int(sizes[3]),
                 dist_keys,
                 next_o_id,
                 first_undelivered,
@@ -875,11 +898,6 @@ def run_tpcc_mix(
                 entry_day,
                 counts,
             )
-        else:
-            # probability mass past the four weights (zero at the default
-            # weights, which sum to 1): read-only OrderStatus traffic
-            _tpcc_order_status(rng, k, dist_keys, next_o_id, customer,
-                               orders, order_line, zipf_customer, counts)
         counts["ops"] += k
         if sample_every and on_sample is not None and counts["ops"] >= next_sample:
             on_sample(counts["ops"])

@@ -54,6 +54,12 @@ METRICS: Tuple[str, ...] = (
     "repro.wal.fsync",
     "repro.wal.fsyncs",
     "repro.wal.records",
+    # -- compiled execution engine (plan/run split, DESIGN.md §11) ---------
+    "repro.exec.lower",
+    "repro.exec.plan.hit",
+    "repro.exec.plan.miss",
+    "repro.exec.replay",
+    "repro.exec.replay.rows",
     # -- db engine (batched verbs; span + rows-counter pairs) -------------
     "repro.db.delete_many",
     "repro.db.delete_many.rows",

@@ -23,7 +23,8 @@ from .spans import EVENTS, EventLog, events_snapshot
 PHASE_SOURCES: Dict[str, Tuple[str, ...]] = {
     "encode": ("repro.core.encode",),
     "decode": ("repro.core.decode",),
-    "jit_compile": ("repro.plan.compile", "repro.plan.pallas_pack"),
+    "jit_compile": ("repro.plan.compile", "repro.plan.pallas_pack",
+                    "repro.exec.lower"),
     "fsync": ("repro.wal.fsync",),
     "fault_in": ("repro.residency.fault_in",),
     "spill": ("repro.residency.spill",),
